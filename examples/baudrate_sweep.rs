@@ -1,0 +1,49 @@
+//! Channel-bandwidth exploration (the Fig 16 knob as a user-facing tool):
+//! how does validation accuracy degrade as the host-target channel slows
+//! down, and where does the futex cliff appear for your workload?
+//!
+//!     cargo run --release --example baudrate_sweep -- sssp 2
+
+use fase::bench_support::*;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench = args.first().map(|s| s.as_str()).unwrap_or("sssp").to_string();
+    let threads: u32 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(2);
+    let scale = bench_scale();
+    let trials = bench_trials();
+
+    eprintln!("[sweep] baseline ({bench}-{threads}, scale 2^{scale})...");
+    let fs = run_gapbs(&bench, &Arm::FullSys, threads, scale, trials, "rocket");
+
+    let mut tab = Table::new(&["baud", "score", "err", "futex", "uart_stall"]);
+    for baud in [57_600u64, 115_200, 230_400, 460_800, 921_600, 1_843_200] {
+        let se = run_gapbs(
+            &bench,
+            &Arm::Fase { baud, hfutex: true, ideal_latency: false },
+            threads,
+            scale,
+            trials,
+            "rocket",
+        );
+        let futexes = se
+            .result
+            .syscall_counts
+            .iter()
+            .find(|(n, _)| n == "futex")
+            .map(|(_, c)| *c)
+            .unwrap_or(0);
+        tab.row(vec![
+            baud.to_string(),
+            format!("{:.5}", se.score),
+            pct(rel_err(se.score, fs.score)),
+            futexes.to_string(),
+            secs(se.result.stall.uart_ticks as f64 / 100e6),
+        ]);
+        eprintln!("[sweep] {baud} done");
+    }
+    tab.print(&format!(
+        "Baud-rate sweep — {bench}-{threads} (full-system score {:.5})",
+        fs.score
+    ));
+}

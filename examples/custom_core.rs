@@ -1,0 +1,79 @@
+//! Early-stage design exploration — the paper's motivating workflow:
+//! evaluate a *new* core configuration on real workloads without any SoC
+//! integration, by swapping the core cost model (the piece a designer
+//! would be iterating on).
+//!
+//! Compares the stock Rocket model, CVA6, and a hypothetical "fast-div"
+//! Rocket variant on CoreMark + BFS, all under FASE.
+
+use fase::bench_support::*;
+use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
+use fase::coordinator::target::HostLatency;
+use fase::rv64::hart::CoreModel;
+use fase::rv64::inst::InstClass;
+
+fn custom_core() -> CoreModel {
+    // A designer's what-if: 8-cycle divider, better branch recovery.
+    let mut c = CoreModel::rocket();
+    c.name = "rocket-fastdiv";
+    c.base_cost[InstClass::Div as usize] = 8;
+    c.mispredict_penalty = 2;
+    c
+}
+
+fn run_with(core: CoreModel, elf: &str, argv: Vec<String>, cpus: usize, metric: &str) -> f64 {
+    let cfg = RunConfig {
+        mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+        n_cpus: cpus,
+        core,
+        echo_stdout: false,
+        max_target_seconds: 3000.0,
+        ..Default::default()
+    };
+    let res = run_elf(cfg, &guest_elf(elf), &argv, &[]);
+    if let Some(e) = res.error {
+        eprintln!("run failed: {e}");
+        std::process::exit(1);
+    }
+    res.parse_metric(metric).expect("metric")
+}
+
+fn main() {
+    let scale = bench_scale().min(11);
+    let mut tab = Table::new(&["core", "coremark s/iter", "bfs s/iter", "speedup vs rocket"]);
+    let mut base_cm = 0.0;
+    let mut base_bfs = 0.0;
+    for core in [CoreModel::rocket(), CoreModel::cva6(), custom_core()] {
+        let name = core.name;
+        let cm = run_with(
+            core.clone(),
+            "coremark",
+            vec!["coremark".into(), "2".into()],
+            1,
+            "Time per iter",
+        );
+        let bfs = run_with(
+            core,
+            "bfs",
+            vec!["bfs".into(), scale.to_string(), "1".into(), "2".into()],
+            1,
+            "Average Time",
+        );
+        if name == "rocket" {
+            base_cm = cm;
+            base_bfs = bfs;
+        }
+        tab.row(vec![
+            name.into(),
+            format!("{cm:.6}"),
+            format!("{bfs:.5}"),
+            if base_cm > 0.0 {
+                format!("{:.2}x / {:.2}x", base_cm / cm, base_bfs / bfs)
+            } else {
+                "—".into()
+            },
+        ]);
+        eprintln!("[custom_core] {name} done");
+    }
+    tab.print("Design exploration under FASE — three core models, no SoC work");
+}

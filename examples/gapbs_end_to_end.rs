@@ -1,0 +1,106 @@
+//! End-to-end validation driver (the headline experiment, small scale).
+//!
+//! Runs a real workload — GAPBS BC on a 2^12-vertex Kronecker graph, 2
+//! OpenMP-style threads, 3 timed trials — through ALL layers of the stack:
+//!
+//!   guest C benchmark (clang-compiled RV64, fase-ld linked)
+//!     -> simulated Rocket-class SMP target (fast engine)
+//!     -> FASE controller + HTP over the timed UART model      [paper §IV]
+//!     -> host runtime: scheduler / VM / I/O bypass            [paper §V]
+//!   vs the same binary under the full-system baseline,
+//!   plus the AOT Pallas/JAX timing model evaluated via PJRT over the
+//!   recorded execution windows (L1/L2 artifacts).
+//!
+//! Reports the paper's headline metric: FASE's performance-validation
+//! accuracy (GAPBS score error and user CPU-time error vs full-system).
+
+use fase::bench_support::*;
+use fase::mem::MemLatency;
+use fase::perf::window::TimingCoeffs;
+use fase::rv64::hart::CoreModel;
+
+fn main() {
+    let scale = 12;
+    let trials = 3;
+    let threads = 2;
+    eprintln!("[e2e] running BC scale=2^{scale} {threads}T x{trials} under full-system baseline...");
+    let fs = run_gapbs("bc", &Arm::FullSys, threads, scale, trials, "rocket");
+    eprintln!("[e2e] running the same workload under FASE (921600 bps, HFutex on)...");
+    let se = run_gapbs(
+        "bc",
+        &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+        threads,
+        scale,
+        trials,
+        "rocket",
+    );
+
+    let mut tab = Table::new(&["metric", "FASE", "full-system", "error"]);
+    tab.row(vec![
+        "GAPBS score (s/iter)".into(),
+        format!("{:.5}", se.score),
+        format!("{:.5}", fs.score),
+        pct(rel_err(se.score, fs.score)),
+    ]);
+    tab.row(vec![
+        "user CPU time (s)".into(),
+        format!("{:.5}", se.result.user_seconds),
+        format!("{:.5}", fs.result.user_seconds),
+        pct(rel_err(se.result.user_seconds, fs.result.user_seconds)),
+    ]);
+    tab.row(vec![
+        "instructions".into(),
+        se.result.instret.to_string(),
+        fs.result.instret.to_string(),
+        pct(rel_err(se.result.instret as f64, fs.result.instret as f64)),
+    ]);
+    tab.print("End-to-end: FASE vs full-system on GAPBS BC");
+
+    println!("\nFASE channel: {} HTP requests, {} bytes, {} filtered wakes",
+        se.result.total_requests, se.result.total_bytes, se.result.filtered_wakes);
+    println!(
+        "stall: controller {}t / uart {}t / runtime {}t",
+        se.result.stall.controller_ticks,
+        se.result.stall.uart_ticks,
+        se.result.stall.runtime_ticks
+    );
+
+    // L1/L2: evaluate the AOT Pallas/JAX timing model over execution
+    // windows collected from a dedicated instrumented run.
+    let artifact = fase::runtime::default_artifact_path();
+    if artifact.exists() {
+        eprintln!("[e2e] collecting timing-model windows (instrumented rerun)...");
+        let cfg = fase::coordinator::runtime::RunConfig {
+            mode: fase::coordinator::runtime::Mode::FullSys {
+                costs: fase::coordinator::target::KernelCosts::default(),
+            },
+            n_cpus: threads as usize,
+            collect_windows: true,
+            echo_stdout: false,
+            max_target_seconds: 3000.0,
+            ..Default::default()
+        };
+        let run = fase::coordinator::runtime::run_elf(
+            cfg,
+            &guest_elf("bc"),
+            &["bc".into(), scale.to_string(), threads.to_string(), trials.to_string()],
+            &[],
+        );
+        let coeffs = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+        let mut ev = fase::runtime::TimingEvaluator::load(&artifact, coeffs).expect("artifact");
+        let report = ev.evaluate(&run.windows).expect("evaluate");
+        println!(
+            "\nPJRT timing model: {} windows in {} batch(es); model {:.3e} cycles vs engine {:.3e} ({:+.2}% model error)",
+            report.windows,
+            ev.batches_run,
+            report.model_total(),
+            report.engine_total() as f64,
+            report.rel_error() * 100.0
+        );
+        for h in 0..threads as usize {
+            println!("  hart {h}: model IPC {:.3}", report.ipc(h));
+        }
+    } else {
+        eprintln!("[e2e] artifacts/timing_model.hlo.txt missing — run `make artifacts`");
+    }
+}

@@ -1,0 +1,40 @@
+//! Quickstart: run a multithreaded guest under full FASE emulation and
+//! print the performance report.
+//!
+//!     make guests && cargo run --release --example quickstart
+//!
+//! What happens: the guest ELF is loaded into target DRAM over the HTP
+//! channel (PageWrite streams), the main thread is dispatched with a
+//! Redirect, every Linux syscall it makes traps to the controller and is
+//! served remotely by the host runtime — thread creation, futexes, mmap,
+//! file I/O — while the performance recorder tallies target time and UART
+//! traffic.
+
+use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
+use fase::coordinator::target::HostLatency;
+
+fn main() {
+    let cfg = RunConfig {
+        mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+        n_cpus: 2,
+        echo_stdout: true,
+        ..Default::default()
+    };
+    let res = run_elf(
+        cfg,
+        std::path::Path::new("artifacts/guests/threads.elf"),
+        &["threads".into(), "2".into()],
+        &[],
+    );
+    if let Some(e) = &res.error {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+    println!("--- quickstart report ---");
+    println!("exit code      : {}", res.exit_code);
+    println!("target time    : {:.6}s", res.target_seconds);
+    println!("user time      : {:.6}s", res.user_seconds);
+    println!("UART traffic   : {} bytes over {} HTP requests", res.total_bytes, res.total_requests);
+    println!("filtered wakes : {} (HFutex)", res.filtered_wakes);
+    println!("syscalls       : {:?}", res.syscall_counts);
+}

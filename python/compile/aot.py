@@ -1,0 +1,42 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run:  cd python && python -m compile.aot --out ../artifacts/timing_model.hlo.txt
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, timing_report
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/timing_model.hlo.txt")
+    args = ap.parse_args()
+    lowered = jax.jit(timing_report).lower(*example_args())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the timing kernel (correctness reference).
+
+Must match rust/src/perf/window.rs::native_window_cycles in structure
+(same operation order up to float associativity).
+"""
+
+import jax.numpy as jnp
+
+from .timing import F_AMO, F_L2_MISS, F_LOAD, NUM_INST_CLASSES
+
+
+def window_cycles_ref(features, linear, scalars):
+    base = features @ linear
+    retired = jnp.sum(features[:, :NUM_INST_CLASSES], axis=1)
+    loads = features[:, F_LOAD] + features[:, F_AMO]
+    dens = jnp.minimum(1.0, loads / jnp.maximum(retired, 1.0))
+    mlp = 1.0 - scalars[0] * dens
+    return base + features[:, F_L2_MISS] * scalars[1] * mlp

@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: windowed cycle-cost evaluation.
+
+The FASE performance recorder turns execution into windows of
+microarchitectural event counts (21 features per window: instruction-class
+counts, branch statistics, cache/TLB misses — see
+rust/src/perf/window.rs). This kernel evaluates the cycle-cost model for a
+batch of windows:
+
+    base[b]   = features[b, :] . linear[:]
+    loads[b]  = features[b, LOAD] + features[b, AMO]
+    dens[b]   = min(1, loads[b] / retired[b])
+    mlp[b]    = 1 - mlp_discount * dens[b]
+    cycles[b] = base[b] + features[b, L2_MISS] * dram_penalty * mlp[b]
+
+Hardware adaptation (paper targets an FPGA, not a GPU): the batch dimension
+is tiled with a BlockSpec so each (TILE_B x F) block is staged into VMEM,
+and the feature contraction is expressed as a dense dot so Mosaic can map
+it onto the MXU; the nonlinear memory-stall term is fused in the same
+kernel to avoid a second HBM pass. On this CPU-only testbed the kernel
+runs under interpret=True; VMEM/MXU sizing is analyzed in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature layout — must match rust/src/perf/window.rs.
+NUM_INST_CLASSES = 14
+NUM_FEATURES = NUM_INST_CLASSES + 7
+F_LOAD = 3
+F_AMO = 10
+F_L2_MISS = NUM_INST_CLASSES + 4
+
+TILE_B = 128
+
+
+def _timing_kernel(feat_ref, lin_ref, scal_ref, out_ref):
+    """One (TILE_B, F) block -> (TILE_B,) cycles."""
+    f = feat_ref[...]  # (TILE_B, F) in VMEM
+    lin = lin_ref[...]  # (F,)
+    mlp_discount = scal_ref[0]
+    dram_penalty = scal_ref[1]
+    # Dense contraction (MXU-shaped on TPU: (TILE_B x F) . (F,)).
+    base = jnp.dot(f, lin, preferred_element_type=jnp.float32)
+    retired = jnp.sum(f[:, :NUM_INST_CLASSES], axis=1)
+    loads = f[:, F_LOAD] + f[:, F_AMO]
+    dens = jnp.minimum(1.0, loads / jnp.maximum(retired, 1.0))
+    mlp = 1.0 - mlp_discount * dens
+    out_ref[...] = base + f[:, F_L2_MISS] * dram_penalty * mlp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def window_cycles(features, linear, scalars, interpret=True):
+    """Evaluate cycle costs for a batch of windows.
+
+    features: (B, NUM_FEATURES) f32, B multiple of TILE_B
+    linear:   (NUM_FEATURES,) f32 per-feature cycle costs
+    scalars:  (2,) f32 = [mlp_discount, dram_penalty]
+    returns   (B,) f32 cycles
+    """
+    b, f = features.shape
+    assert f == NUM_FEATURES, f"feature dim {f} != {NUM_FEATURES}"
+    assert b % TILE_B == 0, f"batch {b} not a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _timing_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(features, linear, scalars)

@@ -1,0 +1,44 @@
+"""Layer-2 JAX model: the full timing-report computation graph.
+
+Composes the L1 Pallas kernel with the per-hart aggregation the
+performance recorder reports (Tick/UTick breakdowns):
+
+    cycles     = window_cycles(features, linear, scalars)     # L1 kernel
+    per_hart   = cycles @ hart_onehot                          # (C,)
+    instret    = per-hart retired-instruction totals
+
+The whole graph is lowered ONCE by aot.py to HLO text and executed from
+the rust coordinator via PJRT. Shapes are static: batches are padded to
+BATCH (padded windows carry all-zero features, contributing 0 cycles).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.timing import window_cycles, NUM_FEATURES, NUM_INST_CLASSES
+
+BATCH = 4096
+MAX_HARTS = 8
+
+
+def timing_report(features, linear, scalars, hart_onehot):
+    """features: (BATCH, F); hart_onehot: (BATCH, MAX_HARTS) f32.
+
+    Returns (cycles[BATCH], per_hart_cycles[MAX_HARTS],
+             per_hart_instret[MAX_HARTS]).
+    """
+    cycles = window_cycles(features, linear, scalars)
+    per_hart = cycles @ hart_onehot
+    retired = jnp.sum(features[:, :NUM_INST_CLASSES], axis=1)
+    per_hart_instret = retired @ hart_onehot
+    return cycles, per_hart, per_hart_instret
+
+
+def example_args():
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((BATCH, NUM_FEATURES), jnp.float32),
+        jax.ShapeDtypeStruct((NUM_FEATURES,), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH, MAX_HARTS), jnp.float32),
+    )

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps batch sizes and feature magnitudes; fixed cases pin the
+semantics the rust native mirror also implements.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import window_cycles_ref
+from compile.kernels.timing import (
+    F_L2_MISS,
+    NUM_FEATURES,
+    NUM_INST_CLASSES,
+    TILE_B,
+    window_cycles,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def coeffs():
+    linear = np.arange(1, NUM_FEATURES + 1, dtype=np.float32) / 3.0
+    scalars = np.array([0.3, 36.0], dtype=np.float32)
+    return jnp.asarray(linear), jnp.asarray(scalars)
+
+
+def random_features(b, scale=1000.0, seed=0):
+    rng = np.random.default_rng(seed)
+    f = rng.integers(0, int(scale), size=(b, NUM_FEATURES)).astype(np.float32)
+    return jnp.asarray(f)
+
+
+def test_kernel_matches_ref_basic():
+    lin, sc = coeffs()
+    f = random_features(TILE_B, seed=1)
+    got = window_cycles(f, lin, sc)
+    want = window_cycles_ref(f, lin, sc)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_zero_features_zero_cycles():
+    lin, sc = coeffs()
+    f = jnp.zeros((TILE_B, NUM_FEATURES), jnp.float32)
+    np.testing.assert_allclose(window_cycles(f, lin, sc), 0.0)
+
+
+def test_l2_miss_term_is_additive():
+    lin, sc = coeffs()
+    f = random_features(TILE_B, seed=2)
+    base = window_cycles(f, lin, sc)
+    f2 = f.at[:, F_L2_MISS].add(10.0)
+    more = window_cycles(f2, lin, sc)
+    assert np.all(np.asarray(more) > np.asarray(base))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=6),
+    scale=st.floats(min_value=1.0, max_value=1e6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_hypothesis(tiles, scale, seed):
+    lin, sc = coeffs()
+    f = random_features(tiles * TILE_B, scale=scale, seed=seed)
+    got = np.asarray(window_cycles(f, lin, sc))
+    want = np.asarray(window_cycles_ref(f, lin, sc))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_mlp_discount_bounds(seed):
+    """DRAM term is discounted by at most mlp_discount."""
+    lin, sc = coeffs()
+    f = random_features(TILE_B, seed=seed)
+    full = window_cycles(f, lin, jnp.asarray([0.0, 36.0], jnp.float32))
+    disc = window_cycles(f, lin, sc)
+    dram_full = np.asarray(full) - np.asarray(window_cycles(f, lin, jnp.asarray([0.0, 0.0], jnp.float32)))
+    dram_disc = np.asarray(disc) - np.asarray(window_cycles(f, lin, jnp.asarray([0.3, 0.0], jnp.float32)))
+    assert np.all(dram_disc <= dram_full + 1e-3)
+    assert np.all(dram_disc >= dram_full * (1.0 - 0.3) - 1e-3)
+
+
+def test_batch_must_be_tile_multiple():
+    lin, sc = coeffs()
+    f = random_features(TILE_B + 1)
+    with pytest.raises(AssertionError):
+        window_cycles(f, lin, sc)

@@ -1,0 +1,45 @@
+"""L2 model composition + AOT lowering shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import BATCH, MAX_HARTS, timing_report, example_args
+from compile.kernels.timing import NUM_FEATURES
+from compile.kernels.ref import window_cycles_ref
+
+
+def test_model_shapes():
+    f = jnp.zeros((BATCH, NUM_FEATURES), jnp.float32)
+    lin = jnp.ones((NUM_FEATURES,), jnp.float32)
+    sc = jnp.asarray([0.3, 36.0], jnp.float32)
+    oh = jnp.zeros((BATCH, MAX_HARTS), jnp.float32)
+    cycles, per_hart, instret = timing_report(f, lin, sc, oh)
+    assert cycles.shape == (BATCH,)
+    assert per_hart.shape == (MAX_HARTS,)
+    assert instret.shape == (MAX_HARTS,)
+
+
+def test_per_hart_aggregation():
+    rng = np.random.default_rng(7)
+    f = jnp.asarray(rng.integers(0, 100, size=(BATCH, NUM_FEATURES)).astype(np.float32))
+    lin = jnp.ones((NUM_FEATURES,), jnp.float32)
+    sc = jnp.asarray([0.3, 36.0], jnp.float32)
+    harts = rng.integers(0, MAX_HARTS, size=BATCH)
+    oh = np.zeros((BATCH, MAX_HARTS), np.float32)
+    oh[np.arange(BATCH), harts] = 1.0
+    cycles, per_hart, _ = timing_report(f, lin, sc, jnp.asarray(oh))
+    want = np.zeros(MAX_HARTS)
+    c = np.asarray(window_cycles_ref(f, lin, sc))
+    for i, h in enumerate(harts):
+        want[h] += c[i]
+    np.testing.assert_allclose(np.asarray(per_hart), want, rtol=1e-3)
+
+
+def test_aot_lowering_produces_hlo_text():
+    from compile.aot import to_hlo_text
+
+    lowered = jax.jit(timing_report).lower(*example_args())
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4096,21]" in text

@@ -1,0 +1,53 @@
+//! Fig 12 — GAPBS scores + user CPU time, FASE vs the full-system
+//! baseline, across 1/2/4 threads, with relative error rates.
+//!
+//! Paper shape to reproduce: single-thread score errors are small (<3.9%
+//! for four benchmarks, <8.5% for the rest); errors grow with thread count
+//! (BC/CCSV/PR/TC moderately, BFS/SSSP sharply at 4T); user CPU time error
+//! sits near -3% for most workloads.
+//!
+//! Scale knobs: FASE_BENCH_SCALE (default 11), FASE_BENCH_TRIALS (2).
+//! The paper's 2^20-vertex runs reproduce with FASE_BENCH_SCALE=20 given
+//! hours of wall-clock.
+
+use fase::bench_support::*;
+
+fn main() {
+    let scale = bench_scale();
+    let trials = bench_trials();
+    let benches = ["bc", "bfs", "cc_sv", "pr", "sssp", "tc"];
+    let threads = [1u32, 2, 4];
+    let mut score_tab = Table::new(&[
+        "bench", "T", "score_fase", "score_fs", "score_err", "utime_fase", "utime_fs",
+        "utime_err",
+    ]);
+    for b in benches {
+        for &t in &threads {
+            let fs = run_gapbs(b, &Arm::FullSys, t, scale, trials, "rocket");
+            let se = run_gapbs(
+                b,
+                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                t,
+                scale,
+                trials,
+                "rocket",
+            );
+            let u_fs = fs.result.user_seconds;
+            let u_se = se.result.user_seconds;
+            score_tab.row(vec![
+                b.into(),
+                t.to_string(),
+                format!("{:.5}", se.score),
+                format!("{:.5}", fs.score),
+                pct(rel_err(se.score, fs.score)),
+                format!("{:.5}", u_se),
+                format!("{:.5}", u_fs),
+                pct(rel_err(u_se, u_fs)),
+            ]);
+            eprintln!("[fig12] {b}-{t} done");
+        }
+    }
+    score_tab.print(&format!(
+        "Fig 12 — GAPBS score & user CPU time, FASE vs full-system (scale=2^{scale}, {trials} trials)"
+    ));
+}

@@ -1,0 +1,42 @@
+//! Fig 13 — UART traffic composition per iteration for BC/BFS/SSSP/TC,
+//! grouped (a) by HTP request kind and (b) by remote-syscall context.
+//!
+//! Paper shape to reproduce: BC and BFS move comparable volumes; SSSP is
+//! dominated by futex + clock_gettime with context-switch RegRW traffic
+//! 10-16x the futex argument traffic; TC is dominated by page-fault
+//! MemWrite (page-table sync ~60%) and PageSet zeroing (~25%).
+
+use fase::bench_support::*;
+
+fn main() {
+    let scale = bench_scale();
+    let trials = bench_trials();
+    let arm = Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false };
+    for bench in ["bc", "bfs", "sssp", "tc"] {
+        for threads in [2u32, 4] {
+            let run = run_gapbs(bench, &arm, threads, scale, trials, "rocket");
+            let per_iter = |v: u64| v as f64 / trials as f64;
+            let mut kind_tab = Table::new(&["HTP kind", "bytes/iter", "reqs/iter"]);
+            for (name, bytes, count) in &run.result.bytes_by_kind {
+                kind_tab.row(vec![
+                    name.clone(),
+                    format!("{:.0}", per_iter(*bytes)),
+                    format!("{:.1}", per_iter(*count)),
+                ]);
+            }
+            kind_tab.print(&format!(
+                "Fig 13 — {bench}-{threads}: traffic by HTP request (total {} B)",
+                run.result.total_bytes
+            ));
+            let mut ctx_tab = Table::new(&["context", "bytes/iter"]);
+            for (label, bytes) in &run.result.bytes_by_ctx {
+                ctx_tab.row(vec![label.clone(), format!("{:.0}", per_iter(*bytes))]);
+            }
+            ctx_tab.print(&format!("Fig 13 — {bench}-{threads}: traffic by syscall context"));
+            eprintln!(
+                "[fig13] {bench}-{threads}: filtered_wakes={} switches={} faults={}",
+                run.result.filtered_wakes, run.result.context_switches, run.result.page_faults
+            );
+        }
+    }
+}

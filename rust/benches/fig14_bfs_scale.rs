@@ -1,0 +1,36 @@
+//! Fig 14 — BFS score error vs graph scale (1 and 2 threads).
+//!
+//! Paper shape to reproduce: per-iteration error falls sharply as the
+//! graph grows (fixed remote-syscall overhead amortizes over longer
+//! compute), dropping below 5% at the largest scales.
+
+use fase::bench_support::*;
+
+fn main() {
+    let base = bench_scale();
+    let trials = bench_trials();
+    let scales: Vec<u32> = (base.saturating_sub(3)..=base + 1).collect();
+    let mut tab = Table::new(&["scale", "T", "score_fase", "score_fs", "err"]);
+    for &s in &scales {
+        for t in [1u32, 2] {
+            let fs = run_gapbs("bfs", &Arm::FullSys, t, s, trials, "rocket");
+            let se = run_gapbs(
+                "bfs",
+                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                t,
+                s,
+                trials,
+                "rocket",
+            );
+            tab.row(vec![
+                format!("2^{s}"),
+                t.to_string(),
+                format!("{:.5}", se.score),
+                format!("{:.5}", fs.score),
+                pct(rel_err(se.score, fs.score)),
+            ]);
+            eprintln!("[fig14] scale {s} T{t} done");
+        }
+    }
+    tab.print("Fig 14 — BFS error vs data scale");
+}

@@ -1,0 +1,50 @@
+//! Fig 15 — TC score error vs graph scale.
+//!
+//! Paper shape to reproduce: error *grows* with data size (unlike BFS)
+//! because every iteration re-allocates its workspace; the spike appears
+//! where allocations cross malloc's 128 KiB mmap threshold and page-fault
+//! lazy-initialization costs kick in (tracked here via page-fault counts
+//! and PageSet/MemWrite traffic alongside the error).
+
+use fase::bench_support::*;
+
+fn main() {
+    let base = bench_scale();
+    let trials = bench_trials();
+    let scales: Vec<u32> = (base.saturating_sub(3)..=base + 1).collect();
+    let mut tab = Table::new(&[
+        "scale", "T", "score_fase", "score_fs", "err", "faults/iter", "mmap_bytes/iter",
+    ]);
+    for &s in &scales {
+        for t in [1u32, 2] {
+            let fs = run_gapbs("tc", &Arm::FullSys, t, s, trials, "rocket");
+            let se = run_gapbs(
+                "tc",
+                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                t,
+                s,
+                trials,
+                "rocket",
+            );
+            let pf = se.result.page_faults as f64 / trials as f64;
+            let mmap_bytes: u64 = se
+                .result
+                .bytes_by_ctx
+                .iter()
+                .filter(|(l, _)| l == "mmap" || l == "page_fault" || l == "munmap" || l == "brk")
+                .map(|(_, b)| *b)
+                .sum();
+            tab.row(vec![
+                format!("2^{s}"),
+                t.to_string(),
+                format!("{:.5}", se.score),
+                format!("{:.5}", fs.score),
+                pct(rel_err(se.score, fs.score)),
+                format!("{pf:.0}"),
+                format!("{:.0}", mmap_bytes as f64 / trials as f64),
+            ]);
+            eprintln!("[fig15] scale {s} T{t} done");
+        }
+    }
+    tab.print("Fig 15 — TC error vs data scale (mmap/page-fault driven)");
+}

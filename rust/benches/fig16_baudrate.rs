@@ -1,0 +1,46 @@
+//! Fig 16 — GAPBS score error vs UART baud rate (BC/BFS/SSSP/TC).
+//!
+//! Paper shape to reproduce: error decreases roughly linearly (with a
+//! diminishing rate) as baud increases; SSSP falls off a cliff at low baud
+//! when clock_gettime latency pushes spin-sync past its timeout window
+//! (futex storm), which appears at higher baud for more threads.
+
+use fase::bench_support::*;
+
+fn main() {
+    let scale = bench_scale();
+    let trials = bench_trials();
+    let bauds = [115_200u64, 230_400, 460_800, 921_600, 1_843_200, 3_686_400];
+    let mut tab = Table::new(&["bench", "T", "baud", "score_err", "futex/iter"]);
+    for bench in ["bc", "bfs", "sssp", "tc"] {
+        for t in [1u32, 2] {
+            let fs = run_gapbs(bench, &Arm::FullSys, t, scale, trials, "rocket");
+            for &baud in &bauds {
+                let se = run_gapbs(
+                    bench,
+                    &Arm::Fase { baud, hfutex: true, ideal_latency: false },
+                    t,
+                    scale,
+                    trials,
+                    "rocket",
+                );
+                let futexes = se
+                    .result
+                    .syscall_counts
+                    .iter()
+                    .find(|(n, _)| n == "futex")
+                    .map(|(_, c)| *c)
+                    .unwrap_or(0);
+                tab.row(vec![
+                    bench.into(),
+                    t.to_string(),
+                    baud.to_string(),
+                    pct(rel_err(se.score, fs.score)),
+                    format!("{:.1}", futexes as f64 / trials as f64),
+                ]);
+                eprintln!("[fig16] {bench}-{t} @{baud} done");
+            }
+        }
+    }
+    tab.print("Fig 16 — score error vs UART baud rate");
+}

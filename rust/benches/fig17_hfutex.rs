@@ -1,0 +1,59 @@
+//! Fig 17 — HFutex on/off impact on UART traffic for BC/CCSV/PR
+//! (the three low-error workloads whose only syscalls are futex, write and
+//! clock_gettime).
+//!
+//! Paper shape to reproduce: HFutex suppresses part of the futex_wake
+//! volume (up to ~30% of wakes in BC-2, negligible in CCSV-2), cutting
+//! total traffic by 3-15% depending on the program's wake redundancy.
+
+use fase::bench_support::*;
+
+fn main() {
+    let scale = bench_scale();
+    let trials = bench_trials();
+    let mut tab = Table::new(&[
+        "bench", "T", "bytes_NHF", "bytes_HF", "reduction", "futex_NHF", "futex_HF",
+        "filtered",
+    ]);
+    for bench in ["bc", "cc_sv", "pr"] {
+        for t in [2u32, 4] {
+            let nhf = run_gapbs(
+                bench,
+                &Arm::Fase { baud: 921_600, hfutex: false, ideal_latency: false },
+                t,
+                scale,
+                trials,
+                "rocket",
+            );
+            let hf = run_gapbs(
+                bench,
+                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                t,
+                scale,
+                trials,
+                "rocket",
+            );
+            let fut = |r: &GapbsRun| {
+                r.result
+                    .syscall_counts
+                    .iter()
+                    .find(|(n, _)| n == "futex")
+                    .map(|(_, c)| *c)
+                    .unwrap_or(0)
+            };
+            let (b_n, b_h) = (nhf.result.total_bytes, hf.result.total_bytes);
+            tab.row(vec![
+                bench.into(),
+                t.to_string(),
+                b_n.to_string(),
+                b_h.to_string(),
+                pct((b_h as f64 - b_n as f64) / b_n as f64),
+                fut(&nhf).to_string(),
+                fut(&hf).to_string(),
+                hf.result.filtered_wakes.to_string(),
+            ]);
+            eprintln!("[fig17] {bench}-{t} done");
+        }
+    }
+    tab.print("Fig 17 — HFutex impact on UART traffic (NHF vs HF)");
+}

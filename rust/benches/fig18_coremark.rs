@@ -1,0 +1,39 @@
+//! Fig 18 — CoreMark single-core comparison: FASE vs full-system vs PK
+//! (Rocket), plus the CVA6 cross-microarchitecture check.
+//!
+//! Paper shape to reproduce: FASE within 1% of the full-system score
+//! (same memory model); PK roughly 2x FASE's error (its simulated DDR
+//! timing differs from the target's); CVA6 also within 1%.
+
+use fase::bench_support::*;
+
+fn main() {
+    let iters = std::env::var("FASE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10u32);
+    let mut tab = Table::new(&["core", "system", "time/iter", "err_vs_fullsys"]);
+    for core in ["rocket", "cva6"] {
+        let fs = run_coremark(&Arm::FullSys, iters, core);
+        let se = run_coremark(
+            &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+            iters,
+            core,
+        );
+        tab.row(vec![core.into(), "fullsys".into(), format!("{:.6}", fs.score), "—".into()]);
+        tab.row(vec![
+            core.into(),
+            "FASE".into(),
+            format!("{:.6}", se.score),
+            pct(rel_err(se.score, fs.score)),
+        ]);
+        if core == "rocket" {
+            let pk = run_coremark(&Arm::Pk { sim_threads: 4 }, iters, core);
+            tab.row(vec![
+                core.into(),
+                "PK(sim)".into(),
+                format!("{:.6}", pk.score),
+                pct(rel_err(pk.score, fs.score)),
+            ]);
+        }
+        eprintln!("[fig18] {core} done");
+    }
+    tab.print("Fig 18 — CoreMark time-per-iteration across systems");
+}

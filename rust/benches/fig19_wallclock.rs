@@ -1,0 +1,48 @@
+//! Fig 19 — wall-clock (real-world) time to run CoreMark end to end:
+//! PK on the RTL-grade engine across simulator threads vs FASE across
+//! UART baud rates. Time includes boot, workload loading and execution.
+//!
+//! Paper shape to reproduce: PK wall-clock scales linearly in iterations
+//! with a large slope (~10 s/iter there) and a boot-dominated intercept;
+//! 8 sim threads barely improve on 4. FASE's slope is orders of magnitude
+//! smaller and its intercept (workload loading) does not scale with baud
+//! linearly. The absolute FASE/PK ratio on this testbed reflects our
+//! scaled-down netlist (DESIGN.md §Substitutions).
+
+use fase::bench_support::*;
+
+fn main() {
+    let iter_list = [1u32, 2, 4];
+    let mut tab = Table::new(&["system", "iters", "wall_total", "wall/iter", "target_time"]);
+    for threads in [1usize, 2, 4, 8] {
+        for &it in &iter_list {
+            let r = run_coremark(&Arm::Pk { sim_threads: threads }, it, "rocket");
+            tab.row(vec![
+                format!("PK {threads} simthreads"),
+                it.to_string(),
+                secs(r.result.wall_seconds),
+                secs(r.result.wall_seconds / it as f64),
+                secs(r.result.target_seconds),
+            ]);
+            eprintln!("[fig19] pk-{threads} x{it} done");
+        }
+    }
+    for baud in [115_200u64, 921_600] {
+        for &it in &iter_list {
+            let r = run_coremark(
+                &Arm::Fase { baud, hfutex: true, ideal_latency: false },
+                it,
+                "rocket",
+            );
+            tab.row(vec![
+                format!("FASE {baud} bps"),
+                it.to_string(),
+                secs(r.result.wall_seconds),
+                secs(r.result.wall_seconds / it as f64),
+                secs(r.result.target_seconds),
+            ]);
+            eprintln!("[fig19] fase-{baud} x{it} done");
+        }
+    }
+    tab.print("Fig 19 — wall-clock comparison, PK vs FASE (boot+load+run)");
+}

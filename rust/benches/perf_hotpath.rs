@@ -1,0 +1,142 @@
+//! §Perf — hot-path microbenchmarks for the three layers:
+//!   L3 fast engine MIPS, detailed engine cycles/s, HTP transaction cost,
+//!   and PJRT timing-model batch throughput vs the native mirror.
+
+use fase::bench_support::*;
+use fase::coordinator::target::{FaseTarget, HostLatency, TargetOps};
+use fase::mem::MemLatency;
+use fase::perf::window::{TimingCoeffs, WindowSample, NUM_FEATURES};
+use fase::rv64::decode::encode;
+use fase::rv64::hart::CoreModel;
+use fase::soc::detailed::DetailedEngine;
+use fase::soc::machine::DRAM_BASE;
+use fase::soc::{Machine, MachineConfig};
+use fase::util::prng::Prng;
+use std::time::Instant;
+
+fn mk_machine(n: usize) -> Machine {
+    Machine::new(MachineConfig { n_harts: n, dram_size: 64 << 20, ..Default::default() })
+}
+
+fn tight_loop(m: &mut Machine, cpu: usize) {
+    let code = DRAM_BASE + 0x1000 + (cpu as u64) * 0x100;
+    let prog = [
+        encode::addi(5, 5, 1),
+        encode::addi(6, 5, 2),
+        encode::ld(7, 8, 0),
+        encode::sd(7, 8, 8),
+        {
+            let off: i64 = -16;
+            let v = off as u32;
+            0x6fu32
+                | (((v >> 20) & 1) << 31)
+                | (((v >> 1) & 0x3ff) << 21)
+                | (((v >> 11) & 1) << 20)
+                | (((v >> 12) & 0xff) << 12)
+        },
+    ];
+    for (i, w) in prog.iter().enumerate() {
+        m.ms.phys.write_n(code + 4 * i as u64, 4, *w as u64);
+    }
+    m.harts[cpu].regs[8] = DRAM_BASE + 0x10_0000 + (cpu as u64) * 0x1000;
+    m.harts[cpu].pc = code;
+    m.harts[cpu].stop_fetch = false;
+}
+
+fn main() {
+    let mut tab = Table::new(&["metric", "value"]);
+
+    // L3 fast engine.
+    for n in [1usize, 4] {
+        let mut m = mk_machine(n);
+        for c in 0..n {
+            tight_loop(&mut m, c);
+        }
+        let t0 = Instant::now();
+        m.run_until(40_000_000); // 0.4 target-seconds
+        let dt = t0.elapsed().as_secs_f64();
+        tab.row(vec![
+            format!("fast engine MIPS ({n} hart)"),
+            format!("{:.1}", m.instret() as f64 / dt / 1e6),
+        ]);
+    }
+
+    // Detailed engine.
+    {
+        let mut m = mk_machine(1);
+        tight_loop(&mut m, 0);
+        let mut e = DetailedEngine::new(m, 0);
+        let t0 = Instant::now();
+        e.run_until(400_000);
+        let dt = t0.elapsed().as_secs_f64();
+        tab.row(vec![
+            "detailed engine Kcycles/s".into(),
+            format!("{:.0}", e.m.now as f64 / dt / 1e3),
+        ]);
+        tab.row(vec![
+            "detailed engine KIPS".into(),
+            format!("{:.0}", e.retired as f64 / dt / 1e3),
+        ]);
+    }
+
+    // HTP transaction wall cost (host side).
+    {
+        let m = mk_machine(1);
+        let mut t = FaseTarget::new(m, 921_600, true, HostLatency::zero());
+        let t0 = Instant::now();
+        let n = 20_000;
+        for i in 0..n {
+            t.mem_w(0, DRAM_BASE + 0x2000 + (i % 64) * 8, i);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        tab.row(vec![
+            "HTP MemW transactions/s (host wall)".into(),
+            format!("{:.0}", n as f64 / dt),
+        ]);
+    }
+
+    // PJRT batch eval vs native mirror.
+    {
+        let path = fase::runtime::default_artifact_path();
+        if path.exists() {
+            let coeffs = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+            let mut ev = fase::runtime::TimingEvaluator::load(&path, coeffs).expect("artifact");
+            let mut rng = Prng::new(9);
+            let samples: Vec<WindowSample> = (0..8192)
+                .map(|i| {
+                    let mut f = [0f32; NUM_FEATURES];
+                    for v in f.iter_mut() {
+                        *v = rng.below(5000) as f32;
+                    }
+                    WindowSample { hart: (i % 4) as u32, engine_ticks: 1, retired: 1, features: f }
+                })
+                .collect();
+            let t0 = Instant::now();
+            let rep = ev.evaluate(&samples).expect("eval");
+            let dt = t0.elapsed().as_secs_f64();
+            tab.row(vec![
+                "PJRT windows/s (batch 4096)".into(),
+                format!("{:.0}", samples.len() as f64 / dt),
+            ]);
+            tab.row(vec![
+                "PJRT us/window".into(),
+                format!("{:.3}", dt * 1e6 / samples.len() as f64),
+            ]);
+            let t0 = Instant::now();
+            let native = ev.evaluate_native(&samples);
+            let dt_n = t0.elapsed().as_secs_f64();
+            tab.row(vec![
+                "native mirror windows/s".into(),
+                format!("{:.0}", native.len() as f64 / dt_n),
+            ]);
+            tab.row(vec![
+                "model windows evaluated".into(),
+                format!("{} (total cycles {:.3e})", rep.windows, rep.model_total()),
+            ]);
+        } else {
+            eprintln!("skipping PJRT bench: run `make artifacts`");
+        }
+    }
+
+    tab.print("§Perf — hot-path microbenchmarks");
+}

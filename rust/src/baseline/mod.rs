@@ -1,0 +1,15 @@
+//! Evaluation baselines.
+//!
+//! * Full-system (LiteX/Linux stand-in) — lives in
+//!   [`crate::coordinator::target::DirectTarget`]; selected with
+//!   `Mode::FullSys`.
+//! * Proxy Kernel on an RTL-grade simulator (Chipyard/Verilator stand-in)
+//!   — [`pk::PkTarget`] here: single core on the cycle-stepped
+//!   [`crate::soc::detailed::DetailedEngine`], host-proxied syscalls with
+//!   negligible target-time cost, simulated-DDR timing skew, and a
+//!   simulated boot phase (PK runs its init on the simulated CPU, which is
+//!   what gives Fig 19(a) its intercept).
+
+pub mod pk;
+
+pub use pk::{run_pk, PkConfig};

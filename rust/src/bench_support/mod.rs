@@ -1,0 +1,223 @@
+//! Shared experiment drivers for the paper-figure benches (criterion is
+//! not in the offline vendor set, so `cargo bench` targets are plain
+//! binaries built on this module: workload runners, timing helpers and
+//! aligned table printing).
+
+use crate::baseline::{run_pk, PkConfig};
+use crate::coordinator::runtime::{run_elf, Mode, RunConfig, RunResult};
+use crate::coordinator::target::{HostLatency, KernelCosts};
+use crate::rv64::hart::CoreModel;
+use std::path::PathBuf;
+
+/// Locate a guest ELF built by `make guests`.
+pub fn guest_elf(name: &str) -> PathBuf {
+    let p = PathBuf::from(format!("artifacts/guests/{name}.elf"));
+    if !p.exists() {
+        eprintln!("missing {} — run `make guests` first", p.display());
+        std::process::exit(3);
+    }
+    p
+}
+
+/// Benchmark-scale knobs, overridable from the environment so the same
+/// bench binaries reproduce paper-scale runs when given more time:
+///   FASE_BENCH_SCALE (default 11), FASE_BENCH_TRIALS (default 2).
+pub fn bench_scale() -> u32 {
+    std::env::var("FASE_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(11)
+}
+
+pub fn bench_trials() -> u32 {
+    std::env::var("FASE_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(2)
+}
+
+/// One experimental arm.
+#[derive(Debug, Clone)]
+pub enum Arm {
+    Fase { baud: u64, hfutex: bool, ideal_latency: bool },
+    FullSys,
+    Pk { sim_threads: usize },
+}
+
+impl Arm {
+    pub fn label(&self) -> String {
+        match self {
+            Arm::Fase { baud, hfutex, ideal_latency } => format!(
+                "fase@{}{}{}",
+                baud,
+                if *hfutex { "" } else { "-nohf" },
+                if *ideal_latency { "-ideal" } else { "" }
+            ),
+            Arm::FullSys => "fullsys".into(),
+            Arm::Pk { sim_threads } => format!("pk-{sim_threads}t"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GapbsRun {
+    /// "Average Time" printed by the guest (the GAPBS score), seconds of
+    /// guest-visible time.
+    pub score: f64,
+    pub result: RunResult,
+}
+
+/// Run one GAPBS-style benchmark.
+pub fn run_gapbs(
+    bench: &str,
+    arm: &Arm,
+    threads: u32,
+    scale: u32,
+    trials: u32,
+    core: &str,
+) -> GapbsRun {
+    let elf = guest_elf(bench);
+    let argv = vec![
+        bench.to_string(),
+        scale.to_string(),
+        threads.to_string(),
+        trials.to_string(),
+    ];
+    run_workload(&elf, &argv, arm, threads.max(1) as usize, core, "Average Time")
+}
+
+/// Run the CoreMark-style benchmark (single core).
+pub fn run_coremark(arm: &Arm, iterations: u32, core: &str) -> GapbsRun {
+    let elf = guest_elf("coremark");
+    let argv = vec!["coremark".to_string(), iterations.to_string()];
+    run_workload(&elf, &argv, arm, 1, core, "Time per iter")
+}
+
+fn run_workload(
+    elf: &std::path::Path,
+    argv: &[String],
+    arm: &Arm,
+    cpus: usize,
+    core: &str,
+    metric: &str,
+) -> GapbsRun {
+    let core_model = CoreModel::by_name(core).expect("core model");
+    let result = match arm {
+        Arm::Pk { sim_threads } => {
+            let pk = PkConfig {
+                core: core_model.clone(),
+                sim_threads: *sim_threads,
+                ..Default::default()
+            };
+            run_pk(pk, elf, argv, &[], 3000.0)
+        }
+        _ => {
+            let mode = match arm {
+                Arm::Fase { baud, hfutex, ideal_latency } => Mode::Fase {
+                    baud: *baud,
+                    hfutex: *hfutex,
+                    latency: if *ideal_latency {
+                        HostLatency::zero()
+                    } else {
+                        HostLatency::default()
+                    },
+                },
+                Arm::FullSys => Mode::FullSys { costs: KernelCosts::default() },
+                Arm::Pk { .. } => unreachable!(),
+            };
+            let cfg = RunConfig {
+                mode,
+                n_cpus: cpus,
+                core: core_model,
+                echo_stdout: false,
+                max_target_seconds: 3000.0,
+                ..Default::default()
+            };
+            run_elf(cfg, elf, argv, &[])
+        }
+    };
+    if let Some(err) = &result.error {
+        eprintln!("[bench] {} failed: {err}\n{}", argv.join(" "), result.stderr);
+        std::process::exit(1);
+    }
+    let score = result.parse_metric(metric).unwrap_or_else(|| {
+        eprintln!("[bench] no {metric:?} in guest output:\n{}", result.stdout);
+        std::process::exit(1);
+    });
+    GapbsRun { score, result }
+}
+
+/// Relative error, paper convention: (se - fs) / fs.
+pub fn rel_err(se: f64, fs: f64) -> f64 {
+    (se - fs) / fs
+}
+
+// ---------------- table printing ----------------
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:+.2}%", x * 100.0)
+}
+
+pub fn secs(x: f64) -> String {
+    crate::util::stats::fmt_time(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_labels() {
+        assert_eq!(Arm::FullSys.label(), "fullsys");
+        assert_eq!(
+            Arm::Fase { baud: 921600, hfutex: false, ideal_latency: false }.label(),
+            "fase@921600-nohf"
+        );
+        assert_eq!(Arm::Pk { sim_threads: 4 }.label(), "pk-4t");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print("test");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.0315), "+3.15%");
+        assert_eq!(pct(-0.02), "-2.00%");
+    }
+}

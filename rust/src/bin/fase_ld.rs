@@ -1,0 +1,64 @@
+//! fase-ld — static linker for RV64 freestanding objects.
+//!
+//! Usage: fase-ld --o out.elf in1.o [in2.o ...] [--base 0x10000] [--entry _start]
+//!
+//! This environment ships a riscv64-capable clang but no riscv linker, so
+//! guest benchmarks are linked with this tool (see guest/ and the Makefile).
+
+use fase::elfio::{link, read::Object, write::write_exec, LinkOptions};
+use fase::util::cli::{parse_u64, Args};
+
+fn main() {
+    let args = Args::from_env();
+    let out = match args.get("o").or_else(|| args.get("out")) {
+        Some(o) => o.to_string(),
+        None => {
+            eprintln!("usage: fase-ld --o out.elf in1.o [in2.o ...] [--base ADDR] [--entry SYM]");
+            std::process::exit(2);
+        }
+    };
+    let inputs: Vec<&String> = args.positional().iter().collect();
+    if inputs.is_empty() {
+        eprintln!("fase-ld: no input objects");
+        std::process::exit(2);
+    }
+    let mut opts = LinkOptions::default();
+    if let Some(b) = args.get("base") {
+        opts.base = parse_u64(b).unwrap_or_else(|| {
+            eprintln!("fase-ld: bad --base {b:?}");
+            std::process::exit(2);
+        });
+    }
+    opts.entry_symbol = args.str_or("entry", "_start");
+
+    let mut objects = Vec::new();
+    for path in &inputs {
+        match Object::load(std::path::Path::new(path.as_str())) {
+            Ok(o) => objects.push(o),
+            Err(e) => {
+                eprintln!("fase-ld: {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    match link(&objects, &opts) {
+        Ok(img) => {
+            let bytes = write_exec(&img);
+            if let Err(e) = std::fs::write(&out, bytes) {
+                eprintln!("fase-ld: writing {out}: {e}");
+                std::process::exit(1);
+            }
+            eprintln!(
+                "fase-ld: {} <- {} object(s), entry {:#x}, text {} bytes",
+                out,
+                objects.len(),
+                img.entry,
+                img.sections[0].memsz
+            );
+        }
+        Err(e) => {
+            eprintln!("fase-ld: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! I/O syscall bypass (paper §V-D): target file descriptors map to host
+//! files through a per-process descriptor table; stdout/stderr are captured
+//! (benchmark scores are parsed from them) and file access is sandboxed
+//! under a configurable guest root.
+
+use std::collections::VecDeque;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+pub enum HostFd {
+    Stdin,
+    Stdout,
+    Stderr,
+    File(std::fs::File),
+}
+
+pub struct FdTable {
+    fds: Vec<Option<HostFd>>,
+    /// Captured guest output.
+    pub stdout: Vec<u8>,
+    pub stderr: Vec<u8>,
+    /// Preloaded stdin bytes.
+    pub stdin: VecDeque<u8>,
+    /// Sandbox root for openat.
+    pub root: PathBuf,
+    /// Also echo guest stdout to the host console.
+    pub echo: bool,
+}
+
+pub const EBADF: i64 = -9;
+pub const ENOENT: i64 = -2;
+pub const EINVAL: i64 = -22;
+
+impl FdTable {
+    pub fn new(root: PathBuf, echo: bool) -> FdTable {
+        FdTable {
+            fds: vec![Some(HostFd::Stdin), Some(HostFd::Stdout), Some(HostFd::Stderr)],
+            stdout: Vec::new(),
+            stderr: Vec::new(),
+            stdin: VecDeque::new(),
+            root,
+            echo,
+        }
+    }
+
+    fn alloc_slot(&mut self) -> usize {
+        for (i, f) in self.fds.iter().enumerate() {
+            if f.is_none() {
+                return i;
+            }
+        }
+        self.fds.push(None);
+        self.fds.len() - 1
+    }
+
+    /// openat(AT_FDCWD, path) with sandboxed path resolution.
+    pub fn open(&mut self, path: &str, flags: u64) -> i64 {
+        let rel = path.trim_start_matches('/');
+        let host_path = self.root.join(rel);
+        let write = flags & 0x3 != 0;
+        let create = flags & 0o100 != 0;
+        let trunc = flags & 0o1000 != 0;
+        let mut opts = std::fs::OpenOptions::new();
+        opts.read(true);
+        if write || create {
+            opts.write(true);
+        }
+        if create {
+            opts.create(true);
+        }
+        if trunc {
+            opts.truncate(true);
+        }
+        match opts.open(&host_path) {
+            Ok(f) => {
+                let slot = self.alloc_slot();
+                self.fds[slot] = Some(HostFd::File(f));
+                slot as i64
+            }
+            Err(_) => ENOENT,
+        }
+    }
+
+    pub fn close(&mut self, fd: i64) -> i64 {
+        match self.fds.get_mut(fd as usize) {
+            Some(slot @ Some(_)) => {
+                if fd > 2 {
+                    *slot = None;
+                }
+                0
+            }
+            _ => EBADF,
+        }
+    }
+
+    pub fn write(&mut self, fd: i64, data: &[u8]) -> i64 {
+        match self.fds.get_mut(fd as usize) {
+            Some(Some(HostFd::Stdout)) => {
+                self.stdout.extend_from_slice(data);
+                if self.echo {
+                    let _ = std::io::stdout().write_all(data);
+                    let _ = std::io::stdout().flush();
+                }
+                data.len() as i64
+            }
+            Some(Some(HostFd::Stderr)) => {
+                self.stderr.extend_from_slice(data);
+                if self.echo {
+                    let _ = std::io::stderr().write_all(data);
+                }
+                data.len() as i64
+            }
+            Some(Some(HostFd::File(f))) => match f.write(data) {
+                Ok(n) => n as i64,
+                Err(_) => EINVAL,
+            },
+            Some(Some(HostFd::Stdin)) | _ => EBADF,
+        }
+    }
+
+    /// Read; returns Ok(bytes) or Err(()) when the fd would block (stdin
+    /// with no data — the runtime parks the thread on its aux path).
+    pub fn read(&mut self, fd: i64, len: usize) -> Result<Vec<u8>, i64> {
+        match self.fds.get_mut(fd as usize) {
+            Some(Some(HostFd::Stdin)) => {
+                let n = len.min(self.stdin.len());
+                Ok(self.stdin.drain(..n).collect())
+            }
+            Some(Some(HostFd::File(f))) => {
+                let mut buf = vec![0u8; len];
+                match f.read(&mut buf) {
+                    Ok(n) => {
+                        buf.truncate(n);
+                        Ok(buf)
+                    }
+                    Err(_) => Err(EINVAL),
+                }
+            }
+            _ => Err(EBADF),
+        }
+    }
+
+    pub fn lseek(&mut self, fd: i64, off: i64, whence: u64) -> i64 {
+        match self.fds.get_mut(fd as usize) {
+            Some(Some(HostFd::File(f))) => {
+                let pos = match whence {
+                    0 => SeekFrom::Start(off as u64),
+                    1 => SeekFrom::Current(off),
+                    2 => SeekFrom::End(off),
+                    _ => return EINVAL,
+                };
+                match f.seek(pos) {
+                    Ok(p) => p as i64,
+                    Err(_) => EINVAL,
+                }
+            }
+            _ => EBADF,
+        }
+    }
+
+    pub fn file_size(&mut self, fd: i64) -> i64 {
+        match self.fds.get_mut(fd as usize) {
+            Some(Some(HostFd::File(f))) => {
+                f.metadata().map(|m| m.len() as i64).unwrap_or(EINVAL)
+            }
+            Some(Some(_)) => 0,
+            _ => EBADF,
+        }
+    }
+
+    pub fn is_tty(&self, fd: i64) -> bool {
+        matches!(
+            self.fds.get(fd as usize),
+            Some(Some(HostFd::Stdin)) | Some(Some(HostFd::Stdout)) | Some(Some(HostFd::Stderr))
+        )
+    }
+
+    pub fn stdout_utf8(&self) -> String {
+        String::from_utf8_lossy(&self.stdout).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> FdTable {
+        FdTable::new(std::env::temp_dir().join("fase-io-test"), false)
+    }
+
+    #[test]
+    fn stdout_capture() {
+        let mut t = table();
+        assert_eq!(t.write(1, b"score: 42\n"), 10);
+        assert_eq!(t.write(2, b"warn\n"), 5);
+        assert_eq!(t.stdout_utf8(), "score: 42\n");
+        assert_eq!(t.stderr, b"warn\n");
+    }
+
+    #[test]
+    fn bad_fd_errors() {
+        let mut t = table();
+        assert_eq!(t.write(7, b"x"), EBADF);
+        assert_eq!(t.close(7), EBADF);
+        assert!(t.read(9, 4).is_err());
+    }
+
+    #[test]
+    fn stdin_preload_and_eof() {
+        let mut t = table();
+        t.stdin.extend(b"abc");
+        assert_eq!(t.read(0, 2).unwrap(), b"ab");
+        assert_eq!(t.read(0, 9).unwrap(), b"c");
+        assert_eq!(t.read(0, 4).unwrap(), b"");
+    }
+
+    #[test]
+    fn sandboxed_file_roundtrip() {
+        let root = std::env::temp_dir().join(format!("fase-io-{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let mut t = FdTable::new(root.clone(), false);
+        let fd = t.open("out.txt", 0o102 /* O_RDWR|O_CREAT */);
+        assert!(fd >= 3, "{fd}");
+        assert_eq!(t.write(fd, b"hello"), 5);
+        assert_eq!(t.lseek(fd, 0, 0), 0);
+        assert_eq!(t.read(fd, 16).unwrap(), b"hello");
+        assert_eq!(t.file_size(fd), 5);
+        assert_eq!(t.close(fd), 0);
+        // fd slot is reused
+        let fd2 = t.open("out.txt", 0);
+        assert_eq!(fd2, fd);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_file_is_enoent() {
+        let mut t = table();
+        assert_eq!(t.open("no/such/file", 0), ENOENT);
+    }
+}

@@ -1,0 +1,278 @@
+//! ELF workload loading (paper Fig 6 steps 1-3): build the address-space
+//! segments from PT_LOAD headers, set up the initial stack (argc/argv/envp/
+//! auxv per the Linux RV64 ABI), install the signal trampoline, and
+//! optionally preload the image eagerly (the paper's file-preloading
+//! optimization — dynamic libraries there, the static image here).
+
+use super::target::TargetOps;
+use super::vm::{AddressSpace, PageAlloc, SegKind, Segment, VmError, PAGE, PROT_EXEC, PROT_READ, PROT_WRITE, STACK_SIZE, STACK_TOP};
+use crate::elfio::read::Executable;
+use std::sync::Arc;
+
+/// Where the runtime parks the signal-return trampoline.
+pub const TRAMP_VA: u64 = 0x3e_0000_0000;
+
+#[derive(Debug)]
+pub struct LoadOut {
+    pub entry: u64,
+    pub initial_sp: u64,
+    /// Segment index of the heap (brk) region.
+    pub heap_seg: usize,
+    pub tramp_va: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error("vm: {0}")]
+    Vm(#[from] VmError),
+    #[error("bad image: {0}")]
+    BadImage(String),
+}
+
+fn prot_from_flags(flags: u32) -> u64 {
+    let mut p = 0;
+    if flags & crate::elfio::consts::PF_R != 0 {
+        p |= PROT_READ;
+    }
+    if flags & crate::elfio::consts::PF_W != 0 {
+        p |= PROT_WRITE;
+    }
+    if flags & crate::elfio::consts::PF_X != 0 {
+        p |= PROT_EXEC;
+    }
+    p
+}
+
+pub fn load_executable(
+    t: &mut dyn TargetOps,
+    alloc: &mut PageAlloc,
+    vm: &mut AddressSpace,
+    exe: &Executable,
+    argv: &[String],
+    envp: &[String],
+    preload_image: bool,
+) -> Result<LoadOut, LoadError> {
+    if exe.segments.is_empty() {
+        return Err(LoadError::BadImage("no loadable segments".into()));
+    }
+    let mut image_end = 0u64;
+    for seg in &exe.segments {
+        if seg.vaddr % PAGE != 0 {
+            return Err(LoadError::BadImage(format!(
+                "segment vaddr {:#x} not page aligned",
+                seg.vaddr
+            )));
+        }
+        let end = (seg.vaddr + seg.memsz + PAGE - 1) & !(PAGE - 1);
+        image_end = image_end.max(end);
+        vm.add_segment(Segment {
+            start: seg.vaddr,
+            end,
+            prot: prot_from_flags(seg.flags),
+            kind: SegKind::File { bytes: Arc::new(seg.data.clone()), file_off: 0 },
+            name: if seg.executable() { "text" } else if seg.writable() { "data" } else { "rodata" },
+        });
+    }
+
+    // Heap (brk) region starts above the image with a guard gap; the
+    // segment grows with brk().
+    let brk_start = image_end + (1 << 20);
+    vm.brk_start = brk_start;
+    vm.brk = brk_start;
+    vm.add_segment(Segment {
+        start: brk_start,
+        end: brk_start, // empty until first brk()
+        prot: PROT_READ | PROT_WRITE,
+        kind: SegKind::Anon,
+        name: "heap",
+    });
+    let heap_seg = vm.segments.len() - 1;
+
+    // Main stack.
+    vm.add_segment(Segment {
+        start: STACK_TOP - STACK_SIZE,
+        end: STACK_TOP,
+        prot: PROT_READ | PROT_WRITE,
+        kind: SegKind::Anon,
+        name: "stack",
+    });
+
+    // Signal trampoline: `li a7, 139 ; ecall` as an executable page.
+    let mut tramp_code = Vec::new();
+    tramp_code.extend_from_slice(&crate::rv64::decode::encode::addi(17, 0, 139).to_le_bytes());
+    tramp_code.extend_from_slice(&0x0000_0073u32.to_le_bytes()); // ecall
+    vm.add_segment(Segment {
+        start: TRAMP_VA,
+        end: TRAMP_VA + PAGE,
+        prot: PROT_READ | PROT_EXEC,
+        kind: SegKind::File { bytes: Arc::new(tramp_code), file_off: 0 },
+        name: "sigtramp",
+    });
+    vm.populate(t, 0, alloc, TRAMP_VA, PAGE)?;
+
+    // ---- initial stack image ----
+    // Layout from the top: strings (argv, envp, 16 random bytes), then
+    // auxv / envp / argv pointer vectors, then argc at a 16-aligned sp.
+    let mut strings: Vec<u8> = Vec::new();
+    let mut argv_offs = Vec::new();
+    for a in argv {
+        argv_offs.push(strings.len());
+        strings.extend_from_slice(a.as_bytes());
+        strings.push(0);
+    }
+    let mut envp_offs = Vec::new();
+    for e in envp {
+        envp_offs.push(strings.len());
+        strings.extend_from_slice(e.as_bytes());
+        strings.push(0);
+    }
+    let random_off = strings.len();
+    strings.extend_from_slice(&[0xfa, 0x5e, 0x00, 0x01, 0xde, 0xad, 0xbe, 0xef, 0x13, 0x37, 0x42, 0x42, 0x99, 0x88, 0x77, 0x66]);
+
+    let strings_base = (STACK_TOP - strings.len() as u64) & !15;
+    let n_vec_words = 1 + (argv.len() + 1) + (envp.len() + 1) + 2 * 4; // argc, argv*, NULL, envp*, NULL, 4 aux pairs
+    let mut sp = strings_base - 8 * n_vec_words as u64;
+    sp &= !15;
+
+    let mut vec_words: Vec<u64> = Vec::with_capacity(n_vec_words);
+    vec_words.push(argv.len() as u64);
+    for off in &argv_offs {
+        vec_words.push(strings_base + *off as u64);
+    }
+    vec_words.push(0);
+    for off in &envp_offs {
+        vec_words.push(strings_base + *off as u64);
+    }
+    vec_words.push(0);
+    // auxv: AT_PAGESZ, AT_CLKTCK, AT_RANDOM, AT_NULL
+    vec_words.extend_from_slice(&[6, PAGE]);
+    vec_words.extend_from_slice(&[17, 100]);
+    vec_words.extend_from_slice(&[25, strings_base + random_off as u64]);
+    vec_words.extend_from_slice(&[0, 0]);
+
+    // Fault the top stack pages in and write the image.
+    let stack_touch = sp & !(PAGE - 1);
+    vm.populate(t, 0, alloc, stack_touch, STACK_TOP - stack_touch)?;
+    let vec_bytes: Vec<u8> = vec_words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    vm.write_guest(t, 0, alloc, sp, &vec_bytes)?;
+    vm.write_guest(t, 0, alloc, strings_base, &strings)?;
+
+    if preload_image {
+        for i in 0..vm.segments.len() {
+            let (s, e, name) = {
+                let seg = &vm.segments[i];
+                (seg.start, seg.end, seg.name)
+            };
+            if name == "text" || name == "rodata" || name == "data" {
+                vm.populate(t, 0, alloc, s, e - s)?;
+            }
+        }
+        t.sync_i(0);
+    }
+
+    Ok(LoadOut { entry: exe.entry, initial_sp: sp, heap_seg, tramp_va: TRAMP_VA })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::target::{DirectTarget, KernelCosts};
+    use crate::elfio::link::{LinkedImage, OutKind, OutSection};
+    use crate::elfio::read::Executable;
+    use crate::elfio::write::write_exec;
+    use crate::soc::{Machine, MachineConfig};
+
+    fn tiny_exe() -> Executable {
+        let img = LinkedImage {
+            entry: 0x10000,
+            sections: [
+                OutSection { kind: OutKind::Text, vaddr: 0x10000, data: vec![0x13, 0, 0, 0, 0x73, 0, 0, 0], memsz: 8 },
+                OutSection { kind: OutKind::Rodata, vaddr: 0x11000, data: b"const".to_vec(), memsz: 5 },
+                OutSection { kind: OutKind::Data, vaddr: 0x12000, data: vec![1, 2, 3, 4], memsz: 4 },
+                OutSection { kind: OutKind::Bss, vaddr: 0x13000, data: Vec::new(), memsz: 0x2000 },
+            ],
+            symbols: vec![("_start".into(), 0x10000, 0)],
+        };
+        Executable::parse(&write_exec(&img)).unwrap()
+    }
+
+    fn setup() -> (DirectTarget, PageAlloc, AddressSpace) {
+        let m = Machine::new(MachineConfig { n_harts: 1, dram_size: 64 << 20, ..Default::default() });
+        let mut t = DirectTarget::new(m, KernelCosts::default());
+        t.timer_enabled = false;
+        let base = (crate::soc::machine::DRAM_BASE + (1 << 20)) >> 12;
+        let end = (crate::soc::machine::DRAM_BASE + (64 << 20)) >> 12;
+        let mut alloc = PageAlloc::new(base, end);
+        let vm = AddressSpace::new(&mut t, 0, &mut alloc).unwrap();
+        (t, alloc, vm)
+    }
+
+    #[test]
+    fn load_builds_stack_abi() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let exe = tiny_exe();
+        let out = load_executable(
+            &mut t,
+            &mut alloc,
+            &mut vm,
+            &exe,
+            &["prog".into(), "arg1".into()],
+            &["OMP_NUM_THREADS=4".into()],
+            false,
+        )
+        .unwrap();
+        assert_eq!(out.entry, 0x10000);
+        assert_eq!(out.initial_sp % 16, 0);
+        // argc
+        let argc = vm.read_guest(&mut t, 0, &mut alloc, out.initial_sp, 8).unwrap();
+        assert_eq!(u64::from_le_bytes(argc.try_into().unwrap()), 2);
+        // argv[0] -> "prog"
+        let argv0p = vm.read_guest(&mut t, 0, &mut alloc, out.initial_sp + 8, 8).unwrap();
+        let argv0 = u64::from_le_bytes(argv0p.try_into().unwrap());
+        assert_eq!(vm.read_cstr(&mut t, 0, &mut alloc, argv0, 32).unwrap(), "prog");
+        // envp[0] after argv NULL
+        let envp0p = vm
+            .read_guest(&mut t, 0, &mut alloc, out.initial_sp + 8 * 4, 8)
+            .unwrap();
+        let envp0 = u64::from_le_bytes(envp0p.try_into().unwrap());
+        assert_eq!(
+            vm.read_cstr(&mut t, 0, &mut alloc, envp0, 64).unwrap(),
+            "OMP_NUM_THREADS=4"
+        );
+    }
+
+    #[test]
+    fn text_faults_in_lazily_with_content() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let exe = tiny_exe();
+        load_executable(&mut t, &mut alloc, &mut vm, &exe, &["p".into()], &[], false).unwrap();
+        assert!(vm.translate(0x10000).is_none(), "text is lazy");
+        vm.handle_fault(&mut t, 0, &mut alloc, 0x10000, false).unwrap();
+        let (pa, _) = vm.translate(0x10000).unwrap();
+        assert_eq!(t.mem_r(0, pa) as u32, 0x13);
+    }
+
+    #[test]
+    fn preload_image_maps_text_eagerly() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let exe = tiny_exe();
+        load_executable(&mut t, &mut alloc, &mut vm, &exe, &["p".into()], &[], true).unwrap();
+        assert!(vm.translate(0x10000).is_some());
+        assert!(vm.translate(0x12000).is_some());
+    }
+
+    #[test]
+    fn heap_and_trampoline_present() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let exe = tiny_exe();
+        let out =
+            load_executable(&mut t, &mut alloc, &mut vm, &exe, &["p".into()], &[], false).unwrap();
+        assert!(vm.brk_start > 0x15000);
+        assert_eq!(vm.segments[out.heap_seg].name, "heap");
+        // trampoline executable + populated
+        let (pa, info) = vm.translate(out.tramp_va).unwrap();
+        assert!(info.flags & crate::mem::mmu::PTE_X != 0);
+        let first = t.mem_r(0, pa) as u32;
+        assert_eq!(first, crate::rv64::decode::encode::addi(17, 0, 139));
+    }
+}

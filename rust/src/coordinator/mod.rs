@@ -1,0 +1,26 @@
+//! The FASE host-side runtime — the paper's software contribution (§V).
+//!
+//! The runtime is *mode-agnostic*: all target access flows through
+//! [`target::TargetOps`], which has two implementations:
+//!
+//! * [`target::FaseTarget`] — the real FASE path: HTP requests over a
+//!   timed UART to the hardware controller, with traffic/stall recording.
+//! * [`target::DirectTarget`] — the full-system (LiteX/Linux) baseline:
+//!   syscalls serviced "on-core" with a calibrated kernel cost + pollution
+//!   model and preemptive timer ticks.
+//!
+//! Everything above that line — scheduler, virtual memory, I/O bypass,
+//! syscall handlers, ELF loading — is shared, so measured differences
+//! between modes isolate exactly what the paper measures: remote-handling
+//! latency and channel traffic.
+
+pub mod io;
+pub mod loader;
+pub mod runtime;
+pub mod sched;
+pub mod syscall;
+pub mod target;
+pub mod vm;
+
+pub use runtime::{RunConfig, RunResult, Runtime};
+pub use target::{DirectTarget, FaseTarget, TargetOps};

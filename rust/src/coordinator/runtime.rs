@@ -1,0 +1,533 @@
+//! The FASE run loop (paper Fig 6): Redirect → Next → handle → repeat,
+//! plus the public `Runtime` API used by the CLI, examples and benches.
+
+use super::io::FdTable;
+use super::loader::{self, LoadOut};
+use super::sched::{Scheduler, TState, Tid};
+use super::syscall::{self, Flow};
+use super::target::{DirectTarget, ExcInfo, FaseTarget, HostLatency, KernelCosts, TargetOps};
+use super::vm::{AddressSpace, PageAlloc, VmError};
+use crate::elfio::read::Executable;
+use crate::perf::recorder::Context;
+use crate::perf::window::WindowSample;
+use crate::perf::StallBreakdown;
+use crate::rv64::hart::CoreModel;
+use crate::soc::{Machine, MachineConfig};
+use crate::util::prng::Prng;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Execution mode: the FASE stack or the full-system baseline.
+#[derive(Debug, Clone)]
+pub enum Mode {
+    Fase { baud: u64, hfutex: bool, latency: HostLatency },
+    FullSys { costs: KernelCosts },
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub mode: Mode,
+    pub n_cpus: usize,
+    pub dram_size: u64,
+    pub core: CoreModel,
+    /// Extra pages mapped per fault (paper: 16).
+    pub preload_pages: u64,
+    /// Eagerly load the whole image up-front (file preloading).
+    pub preload_image: bool,
+    pub echo_stdout: bool,
+    pub guest_root: PathBuf,
+    /// Abort if target time exceeds this many seconds (runaway guard).
+    pub max_target_seconds: f64,
+    /// Collect timing-model window samples.
+    pub collect_windows: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+            n_cpus: 1,
+            dram_size: 1 << 31,
+            core: CoreModel::rocket(),
+            preload_pages: 16,
+            preload_image: true,
+            echo_stdout: false,
+            guest_root: PathBuf::from("."),
+            max_target_seconds: 600.0,
+            collect_windows: false,
+        }
+    }
+}
+
+/// Shared kernel state operated on by the syscall handlers.
+pub struct Kernel {
+    pub sched: Scheduler,
+    pub vm: AddressSpace,
+    pub alloc: PageAlloc,
+    pub fds: FdTable,
+    pub heap_seg: usize,
+    pub tramp_va: u64,
+    pub exit_code: Option<i32>,
+    pub hfutex_enabled: bool,
+    /// Host mirror of on-target HFutex masks: va -> cpus holding it.
+    pub hf_mirror: HashMap<u64, Vec<usize>>,
+    /// Delayed remote TLB flush flags, applied at each CPU's next trap.
+    pub pending_tlb: Vec<bool>,
+    pub pid: i32,
+    pub prng: Prng,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub exit_code: i32,
+    pub error: Option<String>,
+    pub stdout: String,
+    pub stderr: String,
+    /// Target time at exit (the paper's Tick) in cycles and seconds.
+    pub ticks: u64,
+    pub target_seconds: f64,
+    /// Per-CPU user-mode cycles (the paper's UTick).
+    pub uticks: Vec<u64>,
+    pub user_seconds: f64,
+    pub wall_seconds: f64,
+    pub instret: u64,
+    pub stall: StallBreakdown,
+    pub total_bytes: u64,
+    pub total_requests: u64,
+    pub direct_equiv_bytes: u64,
+    /// (kind name, bytes, requests)
+    pub bytes_by_kind: Vec<(String, u64, u64)>,
+    /// (context label, bytes)
+    pub bytes_by_ctx: Vec<(String, u64)>,
+    /// (syscall name, count)
+    pub syscall_counts: Vec<(String, u64)>,
+    pub filtered_wakes: u64,
+    pub context_switches: u64,
+    pub page_faults: u64,
+    pub peak_pages: u64,
+    pub windows: Vec<WindowSample>,
+}
+
+impl RunResult {
+    /// Extract `key: value` style numbers the guest printed (benchmark
+    /// scores), e.g. "Average iteration time 0.12345".
+    pub fn parse_metric(&self, prefix: &str) -> Option<f64> {
+        for line in self.stdout.lines() {
+            if let Some(rest) = line.trim().strip_prefix(prefix) {
+                let tok = rest.trim().trim_start_matches(':').trim();
+                let first = tok.split_whitespace().next()?;
+                if let Ok(v) = first.parse::<f64>() {
+                    return Some(v);
+                }
+            }
+        }
+        None
+    }
+}
+
+pub struct Runtime {
+    pub cfg: RunConfig,
+    pub target: Box<dyn TargetOps>,
+    pub k: Kernel,
+    load: Option<LoadOut>,
+    /// Per-CPU last-sample UTick for window extraction.
+    last_utick: Vec<u64>,
+    windows: Vec<WindowSample>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RunError {
+    #[error("load error: {0}")]
+    Load(#[from] loader::LoadError),
+    #[error("vm error: {0}")]
+    Vm(#[from] VmError),
+    #[error("guest fault: {0}")]
+    GuestFault(String),
+    #[error("deadlock: no runnable threads and no pending wakeups")]
+    Deadlock,
+    #[error("target time limit exceeded")]
+    Timeout,
+}
+
+impl Runtime {
+    pub fn new(cfg: RunConfig) -> Runtime {
+        let mcfg = MachineConfig {
+            n_harts: cfg.n_cpus,
+            dram_size: cfg.dram_size,
+            clock_hz: 100_000_000,
+            core: cfg.core.clone(),
+            quantum: 256,
+        };
+        let machine = Machine::new(mcfg);
+        let target: Box<dyn TargetOps> = match &cfg.mode {
+            Mode::Fase { baud, hfutex, latency } => {
+                Box::new(FaseTarget::new(machine, *baud, *hfutex, *latency))
+            }
+            Mode::FullSys { costs } => Box::new(DirectTarget::new(machine, *costs)),
+        };
+        let hfutex_enabled = matches!(cfg.mode, Mode::Fase { hfutex: true, .. });
+        Runtime::with_target(cfg, target, hfutex_enabled)
+    }
+
+    /// Build around an existing target (used by the PK baseline).
+    pub fn with_target(cfg: RunConfig, mut target: Box<dyn TargetOps>, hfutex: bool) -> Runtime {
+        // Physical pages above the first 16 MiB (image/stub space is
+        // allocated from the same pool; the first page holds the mtvec
+        // stub).
+        let dram_base = crate::soc::machine::DRAM_BASE;
+        let start_ppn = (dram_base >> 12) + 16;
+        let end_ppn = (dram_base + cfg.dram_size) >> 12;
+        let mut alloc = PageAlloc::new(start_ppn, end_ppn);
+        let vm = AddressSpace::new(target.as_mut(), 0, &mut alloc).expect("root PT alloc");
+        let n = cfg.n_cpus;
+        let k = Kernel {
+            sched: Scheduler::new(n),
+            vm,
+            alloc,
+            fds: FdTable::new(cfg.guest_root.clone(), cfg.echo_stdout),
+            heap_seg: 0,
+            tramp_va: 0,
+            exit_code: None,
+            hfutex_enabled: hfutex,
+            hf_mirror: HashMap::new(),
+            pending_tlb: vec![false; n],
+            pid: 100,
+            prng: Prng::new(0xFA5E),
+        };
+        Runtime { cfg, target, k, load: None, last_utick: vec![0; n], windows: Vec::new() }
+    }
+
+    /// Load the workload ELF and create the main thread.
+    pub fn load(&mut self, exe: &Executable, argv: &[String], envp: &[String]) -> Result<(), RunError> {
+        let t = self.target.as_mut();
+        t.set_context(Context::Load);
+        self.k.vm.preload = self.cfg.preload_pages;
+        let out = loader::load_executable(
+            t,
+            &mut self.k.alloc,
+            &mut self.k.vm,
+            exe,
+            argv,
+            envp,
+            self.cfg.preload_image,
+        )?;
+        self.k.heap_seg = out.heap_seg;
+        self.k.tramp_va = out.tramp_va;
+        let mut ctx = super::sched::ThreadCtx::zeroed();
+        ctx.pc = out.entry;
+        ctx.set_x(2, out.initial_sp);
+        let tid = self.k.sched.spawn(ctx);
+        debug_assert_eq!(tid, super::sched::MAIN_TID);
+        self.load = Some(out);
+        Ok(())
+    }
+
+    pub fn load_path(&mut self, path: &std::path::Path, argv: &[String], envp: &[String]) -> Result<(), RunError> {
+        let exe = Executable::load(path)
+            .map_err(|e| RunError::GuestFault(format!("cannot load {}: {e}", path.display())))?;
+        self.load(&exe, argv, envp)
+    }
+
+    fn satp(&self) -> u64 {
+        self.k.vm.satp()
+    }
+
+    /// Deliver one pending signal to `tid` (wrap its context so it runs
+    /// the handler and returns through the rt_sigreturn trampoline).
+    fn deliver_signal(&mut self, tid: Tid) {
+        let k = &mut self.k;
+        let tcb = k.sched.tcb_mut(tid);
+        if tcb.in_signal.is_some() || tcb.pending_signals.is_empty() {
+            return;
+        }
+        let sig = tcb.pending_signals.pop_front().unwrap();
+        let act = k.sched.sig_actions.get(&sig).copied().unwrap_or_default();
+        if act.handler == 0 {
+            // Default action: terminate on fatal signals, ignore the rest.
+            if matches!(sig, 2 | 6 | 9 | 11 | 15) {
+                k.exit_code = Some(128 + sig);
+            }
+            return;
+        }
+        let tcb = k.sched.tcb_mut(tid);
+        let saved = Box::new(tcb.ctx.clone());
+        let sp = (saved.x(2) - 256) & !15;
+        tcb.ctx.pc = act.handler;
+        tcb.ctx.set_x(10, sig as u64); // a0 = signum
+        tcb.ctx.set_x(1, k.tramp_va); // ra -> sigreturn trampoline
+        tcb.ctx.set_x(2, sp);
+        tcb.in_signal = Some(saved);
+    }
+
+    /// Dispatch ready threads onto idle CPUs (with signal delivery).
+    /// First pass honours last-CPU affinity (warm caches, matching Linux
+    /// wake-affine behaviour); the remainder go FIFO to any idle CPU.
+    fn fill_cpus(&mut self) {
+        self.target.set_context(Context::Sched);
+        let satp = self.satp();
+        // Affinity pass.
+        let mut i = 0;
+        while i < self.k.sched.ready.len() {
+            let tid = self.k.sched.ready[i];
+            let home = self.k.sched.tcb(tid).last_cpu;
+            match home {
+                Some(cpu) if self.k.sched.running[cpu].is_none() => {
+                    self.k.sched.ready.remove(i);
+                    self.deliver_signal(tid);
+                    if self.k.exit_code.is_some() {
+                        return;
+                    }
+                    self.k.sched.dispatch(self.target.as_mut(), cpu, tid, satp);
+                }
+                _ => i += 1,
+            }
+        }
+        // FIFO pass.
+        for cpu in 0..self.k.sched.running.len() {
+            if self.k.sched.running[cpu].is_none() {
+                let Some(tid) = self.k.sched.ready.pop_front() else { break };
+                self.deliver_signal(tid);
+                if self.k.exit_code.is_some() {
+                    return;
+                }
+                self.k.sched.dispatch(self.target.as_mut(), cpu, tid, satp);
+            }
+        }
+    }
+
+    /// Drain window counters for `cpu` into a timing-model sample.
+    fn sample_window(&mut self, cpu: usize) {
+        if !self.cfg.collect_windows {
+            return;
+        }
+        let m = self.target.machine_mut();
+        let ic = m.harts[cpu].take_counters();
+        if ic.retired == 0 {
+            return;
+        }
+        let me = m.ms.take_events(cpu);
+        let utick = m.harts[cpu].utick;
+        let dt = utick - self.last_utick[cpu];
+        self.last_utick[cpu] = utick;
+        self.windows.push(WindowSample::from_counters(cpu, dt, &ic, &me));
+    }
+
+    fn handle_exception(&mut self, exc: ExcInfo) -> Result<(), RunError> {
+        let cpu = exc.cpu;
+        self.sample_window(cpu);
+        // Delayed remote TLB flush (paper §V-C).
+        if self.k.pending_tlb[cpu] {
+            self.target.set_context(Context::Sched);
+            self.target.flush_tlb(cpu);
+            self.k.pending_tlb[cpu] = false;
+        }
+        if exc.is_ecall() {
+            let nr = self.target.reg_r(cpu, 17);
+            self.target.set_context(Context::Syscall(nr));
+            self.target.recorder().count_syscall(nr);
+            self.target.syscall_overhead(cpu, nr);
+            let flow = syscall::handle(&mut self.k, self.target.as_mut(), cpu, &exc, nr);
+            match flow {
+                Flow::Return(v) => {
+                    self.target.reg_w(cpu, 10, v);
+                    self.k.sched.resume_current(self.target.as_mut(), cpu, exc.epc + 4);
+                }
+                Flow::Blocked => {
+                    self.fill_cpus();
+                }
+                Flow::Yield => {
+                    let tid = self.k.sched.current(cpu).unwrap();
+                    self.k.sched.running[cpu] = None;
+                    self.k.sched.tcb_mut(tid).state = TState::Ready;
+                    self.k.sched.ready.push_back(tid);
+                    self.fill_cpus();
+                }
+                Flow::Exited => {
+                    self.fill_cpus();
+                }
+                Flow::ExitGroup => {}
+                Flow::SigReturn => {
+                    let tid = self.k.sched.current(cpu).unwrap();
+                    let saved = self
+                        .k
+                        .sched
+                        .tcb_mut(tid)
+                        .in_signal
+                        .take()
+                        .ok_or_else(|| RunError::GuestFault("sigreturn without signal".into()))?;
+                    self.k.sched.tcb_mut(tid).ctx = *saved;
+                    // Full context restore in place.
+                    self.target.set_context(Context::Signal);
+                    let ctx = self.k.sched.tcb(tid).ctx.clone();
+                    for i in 1..32u8 {
+                        self.target.reg_w(cpu, i, ctx.xregs[i as usize - 1]);
+                    }
+                    for i in 0..32u8 {
+                        self.target.reg_w(cpu, 32 + i, ctx.fregs[i as usize]);
+                    }
+                    self.target.redirect(cpu, ctx.pc, false);
+                }
+            }
+            Ok(())
+        } else if exc.is_page_fault() {
+            self.target.set_context(Context::PageFault);
+            self.target.fault_overhead(cpu);
+            let is_write = exc.cause == 15;
+            match self.k.vm.handle_fault(self.target.as_mut(), cpu, &mut self.k.alloc, exc.tval, is_write) {
+                Ok(_) => {
+                    self.k.sched.resume_current(self.target.as_mut(), cpu, exc.epc);
+                    Ok(())
+                }
+                Err(e) => Err(RunError::GuestFault(format!(
+                    "page fault at pc={:#x} addr={:#x}: {e}",
+                    exc.epc, exc.tval
+                ))),
+            }
+        } else if exc.is_timer() {
+            // Full-system preemption: rotate the ready queue.
+            self.target.set_context(Context::Sched);
+            if self.k.sched.ready.is_empty() {
+                self.k.sched.resume_current(self.target.as_mut(), cpu, exc.epc);
+            } else {
+                self.k.sched.save_context(self.target.as_mut(), cpu, exc.epc);
+                let tid = self.k.sched.current(cpu).unwrap();
+                self.k.sched.running[cpu] = None;
+                self.k.sched.tcb_mut(tid).state = TState::Ready;
+                self.k.sched.ready.push_back(tid);
+                self.fill_cpus();
+            }
+            Ok(())
+        } else {
+            Err(RunError::GuestFault(format!(
+                "unhandled exception cause={} pc={:#x} tval={:#x}",
+                exc.cause, exc.epc, exc.tval
+            )))
+        }
+    }
+
+    /// Run to completion (or error); always returns a RunResult.
+    pub fn run(&mut self) -> RunResult {
+        let wall_start = std::time::Instant::now();
+        let deadline =
+            (self.cfg.max_target_seconds * self.target.clock_hz() as f64) as u64;
+        let mut error: Option<String> = None;
+
+        // Fig 6 step 4: initial Redirect of the main thread.
+        self.fill_cpus();
+
+        loop {
+            if self.k.exit_code.is_some() {
+                break;
+            }
+            if self.k.sched.alive_count() == 0 {
+                break;
+            }
+            let now = self.target.now();
+            if now > deadline {
+                error = Some(RunError::Timeout.to_string());
+                break;
+            }
+            let chunk_end =
+                self.k.sched.next_wake().unwrap_or(now + 50_000_000).min(deadline + 1);
+            match self.target.next_exception(chunk_end) {
+                Some(exc) => {
+                    if let Err(e) = self.handle_exception(exc) {
+                        error = Some(e.to_string());
+                        break;
+                    }
+                }
+                None => {
+                    // Either the chunk expired or nothing can run.
+                    let now = self.target.now();
+                    let woke = self.k.sched.expire_sleepers(now);
+                    if woke > 0 {
+                        self.fill_cpus();
+                        continue;
+                    }
+                    if let Some(w) = self.k.sched.next_wake() {
+                        if w > now {
+                            self.target.advance(w - now);
+                        }
+                        self.k.sched.expire_sleepers(self.target.now());
+                        self.fill_cpus();
+                        continue;
+                    }
+                    let anyone_running = self.k.sched.running.iter().any(|r| r.is_some());
+                    if !anyone_running && self.k.sched.ready.is_empty() {
+                        error = Some(RunError::Deadlock.to_string());
+                        break;
+                    }
+                    // CPUs are running; loop for the next chunk.
+                }
+            }
+        }
+
+        // Final window samples.
+        for cpu in 0..self.cfg.n_cpus {
+            self.sample_window(cpu);
+        }
+        self.collect_result(wall_start.elapsed().as_secs_f64(), error)
+    }
+
+    fn collect_result(&mut self, wall: f64, error: Option<String>) -> RunResult {
+        self.target.set_context(Context::Report);
+        let ticks = self.target.now();
+        let hz = self.target.clock_hz();
+        let uticks: Vec<u64> =
+            (0..self.cfg.n_cpus).map(|c| self.target.machine().harts[c].utick).collect();
+        let instret = self.target.machine().instret();
+        let filtered = self.target.filtered_wakes();
+        let rec = self.target.recorder();
+        let bytes_by_kind = rec
+            .by_kind
+            .iter()
+            .map(|(k, s)| (k.name().to_string(), s.tx_bytes + s.rx_bytes, s.count))
+            .collect();
+        let bytes_by_ctx = rec.bytes_by_context();
+        let syscall_counts = rec
+            .syscall_counts
+            .iter()
+            .map(|(nr, c)| (crate::perf::recorder::syscall_name(*nr).to_string(), *c))
+            .collect();
+        RunResult {
+            exit_code: self.k.exit_code.unwrap_or(0),
+            error,
+            stdout: self.k.fds.stdout_utf8(),
+            stderr: String::from_utf8_lossy(&self.k.fds.stderr).into_owned(),
+            ticks,
+            target_seconds: ticks as f64 / hz as f64,
+            user_seconds: uticks.iter().sum::<u64>() as f64 / hz as f64,
+            uticks,
+            wall_seconds: wall,
+            instret,
+            stall: rec.stall,
+            total_bytes: rec.total_bytes(),
+            total_requests: rec.total_requests(),
+            direct_equiv_bytes: rec.direct_equiv_bytes,
+            bytes_by_kind,
+            bytes_by_ctx,
+            syscall_counts,
+            filtered_wakes: filtered,
+            context_switches: self.k.sched.switches,
+            page_faults: self.k.vm.faults,
+            peak_pages: self.k.alloc.peak,
+            windows: std::mem::take(&mut self.windows),
+        }
+    }
+}
+
+/// Convenience: build, load and run a guest ELF in one call.
+pub fn run_elf(
+    cfg: RunConfig,
+    elf_path: &std::path::Path,
+    argv: &[String],
+    envp: &[String],
+) -> RunResult {
+    let mut rt = Runtime::new(cfg);
+    if let Err(e) = rt.load_path(elf_path, argv, envp) {
+        let mut r = rt.collect_result(0.0, Some(e.to_string()));
+        r.exit_code = -1;
+        return r;
+    }
+    rt.run()
+}

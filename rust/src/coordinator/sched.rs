@@ -1,0 +1,413 @@
+//! Remote thread scheduling (paper §V-A): thread control blocks with full
+//! 63-register contexts, a non-preemptive ready queue, futex wait lists,
+//! sleepers, and signal state. Context save/restore moves through the
+//! `Reg` port one register at a time — the 63-register cost the paper's
+//! SSSP analysis measures against the 4-7 registers of a futex call.
+
+use super::target::TargetOps;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+
+pub type Tid = i32;
+
+pub const MAIN_TID: Tid = 1000;
+
+/// Saved user-visible context: x1..x31 + f0..f31 + pc.
+#[derive(Debug, Clone)]
+pub struct ThreadCtx {
+    pub xregs: [u64; 31],
+    pub fregs: [u64; 32],
+    pub pc: u64,
+}
+
+impl ThreadCtx {
+    pub fn zeroed() -> ThreadCtx {
+        ThreadCtx { xregs: [0; 31], fregs: [0; 32], pc: 0 }
+    }
+    pub fn x(&self, idx: usize) -> u64 {
+        if idx == 0 {
+            0
+        } else {
+            self.xregs[idx - 1]
+        }
+    }
+    pub fn set_x(&mut self, idx: usize, v: u64) {
+        if idx > 0 {
+            self.xregs[idx - 1] = v;
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TState {
+    Ready,
+    Running(usize),
+    /// Blocked in futex wait on a physical (and virtual) address.
+    FutexWait { pa: u64, va: u64 },
+    /// Sleeping until a target tick (nanosleep / blocking host op).
+    Sleep { until: u64 },
+    Exited,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SigAction {
+    pub handler: u64,
+    pub mask: u64,
+    pub flags: u64,
+}
+
+pub struct Tcb {
+    pub tid: Tid,
+    pub state: TState,
+    pub ctx: ThreadCtx,
+    /// Linux CLONE_CHILD_CLEARTID address (join protocol).
+    pub clear_child_tid: u64,
+    pub pending_signals: VecDeque<i32>,
+    /// Saved context while a signal handler runs.
+    pub in_signal: Option<Box<ThreadCtx>>,
+    pub sigmask: u64,
+    /// CPU this thread last ran on (dispatch affinity).
+    pub last_cpu: Option<usize>,
+}
+
+impl Tcb {
+    fn new(tid: Tid, ctx: ThreadCtx) -> Tcb {
+        Tcb {
+            tid,
+            state: TState::Ready,
+            ctx,
+            clear_child_tid: 0,
+            pending_signals: VecDeque::new(),
+            in_signal: None,
+            sigmask: 0,
+            last_cpu: None,
+        }
+    }
+}
+
+pub struct Scheduler {
+    pub tcbs: BTreeMap<Tid, Tcb>,
+    next_tid: Tid,
+    pub ready: VecDeque<Tid>,
+    pub running: Vec<Option<Tid>>,
+    /// futex wait queues keyed by physical address.
+    pub futex_q: HashMap<u64, VecDeque<Tid>>,
+    sleepers: BinaryHeap<std::cmp::Reverse<(u64, Tid)>>,
+    /// Process-wide signal handler table (shared by CLONE_SIGHAND).
+    pub sig_actions: HashMap<i32, SigAction>,
+    /// Per-CPU: has satp been programmed since reset?
+    pub mmu_set: Vec<bool>,
+    /// Context switches performed (reporting).
+    pub switches: u64,
+}
+
+impl Scheduler {
+    pub fn new(n_cpus: usize) -> Scheduler {
+        Scheduler {
+            tcbs: BTreeMap::new(),
+            next_tid: MAIN_TID,
+            ready: VecDeque::new(),
+            running: vec![None; n_cpus],
+            futex_q: HashMap::new(),
+            sleepers: BinaryHeap::new(),
+            sig_actions: HashMap::new(),
+            mmu_set: vec![false; n_cpus],
+            switches: 0,
+        }
+    }
+
+    pub fn spawn(&mut self, ctx: ThreadCtx) -> Tid {
+        let tid = self.next_tid;
+        self.next_tid += 1;
+        self.tcbs.insert(tid, Tcb::new(tid, ctx));
+        self.ready.push_back(tid);
+        tid
+    }
+
+    pub fn current(&self, cpu: usize) -> Option<Tid> {
+        self.running[cpu]
+    }
+
+    pub fn tcb(&self, tid: Tid) -> &Tcb {
+        &self.tcbs[&tid]
+    }
+
+    pub fn tcb_mut(&mut self, tid: Tid) -> &mut Tcb {
+        self.tcbs.get_mut(&tid).expect("unknown tid")
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.tcbs.values().filter(|t| t.state != TState::Exited).count()
+    }
+
+    /// Save the full register context of the thread on `cpu` (63 Reg-port
+    /// reads), with `pc` from the exception's mepc.
+    pub fn save_context(&mut self, t: &mut dyn TargetOps, cpu: usize, pc: u64) {
+        let tid = self.running[cpu].expect("no thread on cpu");
+        let mut ctx = ThreadCtx::zeroed();
+        for i in 1..32u8 {
+            ctx.xregs[i as usize - 1] = t.reg_r(cpu, i);
+        }
+        for i in 0..32u8 {
+            ctx.fregs[i as usize] = t.reg_r(cpu, 32 + i);
+        }
+        ctx.pc = pc;
+        self.tcbs.get_mut(&tid).unwrap().ctx = ctx;
+    }
+
+    /// Restore `tid`'s context onto `cpu` and resume it there (63 Reg-port
+    /// writes + MMU setup on first use + Redirect-with-switch).
+    pub fn dispatch(&mut self, t: &mut dyn TargetOps, cpu: usize, tid: Tid, satp: u64) {
+        debug_assert!(self.running[cpu].is_none(), "cpu busy");
+        self.switches += 1;
+        if !self.mmu_set[cpu] {
+            t.set_mmu(cpu, satp);
+            t.flush_tlb(cpu);
+            self.mmu_set[cpu] = true;
+        }
+        let ctx = self.tcbs[&tid].ctx.clone();
+        for i in 1..32u8 {
+            t.reg_w(cpu, i, ctx.xregs[i as usize - 1]);
+        }
+        for i in 0..32u8 {
+            t.reg_w(cpu, 32 + i, ctx.fregs[i as usize]);
+        }
+        let tcb = self.tcbs.get_mut(&tid).unwrap();
+        tcb.state = TState::Running(cpu);
+        tcb.last_cpu = Some(cpu);
+        self.running[cpu] = Some(tid);
+        t.redirect(cpu, ctx.pc, true);
+    }
+
+    /// Resume the current thread on `cpu` at `pc` without a context switch
+    /// (plain syscall return path — no 63-reg traffic).
+    pub fn resume_current(&mut self, t: &mut dyn TargetOps, cpu: usize, pc: u64) {
+        debug_assert!(self.running[cpu].is_some());
+        t.redirect(cpu, pc, false);
+    }
+
+    /// Take the current thread off `cpu` into `state` (context must have
+    /// been saved by the caller).
+    pub fn block_current(&mut self, cpu: usize, state: TState) -> Tid {
+        let tid = self.running[cpu].take().expect("no thread on cpu");
+        match &state {
+            TState::FutexWait { pa, .. } => {
+                self.futex_q.entry(*pa).or_default().push_back(tid);
+            }
+            TState::Sleep { until } => {
+                self.sleepers.push(std::cmp::Reverse((*until, tid)));
+            }
+            _ => {}
+        }
+        self.tcbs.get_mut(&tid).unwrap().state = state;
+        tid
+    }
+
+    /// Move a blocked thread to the ready queue.
+    pub fn make_ready(&mut self, tid: Tid) {
+        let tcb = self.tcbs.get_mut(&tid).expect("unknown tid");
+        debug_assert!(!matches!(tcb.state, TState::Running(_)));
+        if tcb.state == TState::Ready || tcb.state == TState::Exited {
+            return;
+        }
+        tcb.state = TState::Ready;
+        self.ready.push_back(tid);
+    }
+
+    /// Wake up to `n` waiters on futex `pa`; returns woken tids.
+    pub fn futex_wake(&mut self, pa: u64, n: usize) -> Vec<Tid> {
+        let mut woken = Vec::new();
+        if let Some(q) = self.futex_q.get_mut(&pa) {
+            while woken.len() < n {
+                match q.pop_front() {
+                    Some(tid) => {
+                        woken.push(tid);
+                    }
+                    None => break,
+                }
+            }
+            if q.is_empty() {
+                self.futex_q.remove(&pa);
+            }
+        }
+        for &tid in &woken {
+            self.make_ready(tid);
+        }
+        woken
+    }
+
+    pub fn waiters_on(&self, pa: u64) -> usize {
+        self.futex_q.get(&pa).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Earliest sleeper wake time, if any.
+    pub fn next_wake(&self) -> Option<u64> {
+        self.sleepers.peek().map(|std::cmp::Reverse((t, _))| *t)
+    }
+
+    /// Move sleepers due at `now` to ready.
+    pub fn expire_sleepers(&mut self, now: u64) -> usize {
+        let mut n = 0;
+        while let Some(std::cmp::Reverse((t, tid))) = self.sleepers.peek().copied() {
+            if t > now {
+                break;
+            }
+            self.sleepers.pop();
+            // Skip if it was woken by other means meanwhile.
+            if matches!(self.tcbs[&tid].state, TState::Sleep { .. }) {
+                self.make_ready(tid);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Dispatch ready threads onto idle CPUs; returns dispatch count.
+    pub fn fill_idle_cpus(&mut self, t: &mut dyn TargetOps, satp: u64) -> usize {
+        let mut n = 0;
+        for cpu in 0..self.running.len() {
+            if self.running[cpu].is_none() {
+                if let Some(tid) = self.ready.pop_front() {
+                    self.dispatch(t, cpu, tid, satp);
+                    n += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        n
+    }
+
+    /// Terminate the thread on `cpu`.
+    pub fn exit_current(&mut self, cpu: usize) -> Tid {
+        let tid = self.running[cpu].take().expect("no thread on cpu");
+        self.tcbs.get_mut(&tid).unwrap().state = TState::Exited;
+        tid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::target::{DirectTarget, KernelCosts};
+    use crate::soc::{Machine, MachineConfig};
+
+    fn target(n: usize) -> DirectTarget {
+        let m = Machine::new(MachineConfig { n_harts: n, dram_size: 8 << 20, ..Default::default() });
+        let mut t = DirectTarget::new(m, KernelCosts::default());
+        t.timer_enabled = false;
+        t
+    }
+
+    #[test]
+    fn spawn_assigns_increasing_tids() {
+        let mut s = Scheduler::new(1);
+        let a = s.spawn(ThreadCtx::zeroed());
+        let b = s.spawn(ThreadCtx::zeroed());
+        assert_eq!(b, a + 1);
+        assert_eq!(s.alive_count(), 2);
+        assert_eq!(s.ready.len(), 2);
+    }
+
+    #[test]
+    fn dispatch_restores_context() {
+        let mut t = target(1);
+        let mut s = Scheduler::new(1);
+        let mut ctx = ThreadCtx::zeroed();
+        ctx.set_x(10, 0xaaaa); // a0
+        ctx.set_x(2, 0x7000); // sp
+        ctx.fregs[1] = 0x3ff0_0000_0000_0000;
+        ctx.pc = crate::soc::machine::DRAM_BASE + 0x100;
+        let tid = s.spawn(ctx);
+        s.ready.pop_front();
+        s.dispatch(&mut t, 0, tid, 0);
+        assert_eq!(t.reg_r(0, 10), 0xaaaa);
+        assert_eq!(t.reg_r(0, 2), 0x7000);
+        assert_eq!(t.reg_r(0, 33), 0x3ff0_0000_0000_0000);
+        assert_eq!(s.current(0), Some(tid));
+        assert_eq!(s.tcb(tid).state, TState::Running(0));
+    }
+
+    #[test]
+    fn save_context_reads_regs_back() {
+        let mut t = target(1);
+        let mut s = Scheduler::new(1);
+        let tid = s.spawn(ThreadCtx::zeroed());
+        s.ready.pop_front();
+        s.dispatch(&mut t, 0, tid, 0);
+        t.reg_w(0, 5, 1234);
+        s.save_context(&mut t, 0, 0x5678);
+        assert_eq!(s.tcb(tid).ctx.x(5), 1234);
+        assert_eq!(s.tcb(tid).ctx.pc, 0x5678);
+    }
+
+    #[test]
+    fn futex_wait_wake_fifo() {
+        let mut s = Scheduler::new(2);
+        let a = s.spawn(ThreadCtx::zeroed());
+        let b = s.spawn(ThreadCtx::zeroed());
+        s.ready.clear();
+        s.running[0] = Some(a);
+        s.tcbs.get_mut(&a).unwrap().state = TState::Running(0);
+        s.running[1] = Some(b);
+        s.tcbs.get_mut(&b).unwrap().state = TState::Running(1);
+        s.block_current(0, TState::FutexWait { pa: 0x100, va: 0x100 });
+        s.block_current(1, TState::FutexWait { pa: 0x100, va: 0x100 });
+        assert_eq!(s.waiters_on(0x100), 2);
+        let woken = s.futex_wake(0x100, 1);
+        assert_eq!(woken, vec![a], "FIFO order");
+        assert_eq!(s.waiters_on(0x100), 1);
+        assert_eq!(s.tcb(a).state, TState::Ready);
+        let woken = s.futex_wake(0x100, 10);
+        assert_eq!(woken, vec![b]);
+        assert_eq!(s.futex_wake(0x100, 1).len(), 0);
+    }
+
+    #[test]
+    fn sleepers_expire_in_order() {
+        let mut s = Scheduler::new(1);
+        let a = s.spawn(ThreadCtx::zeroed());
+        let b = s.spawn(ThreadCtx::zeroed());
+        s.ready.clear();
+        s.running[0] = Some(a);
+        s.tcbs.get_mut(&a).unwrap().state = TState::Running(0);
+        s.block_current(0, TState::Sleep { until: 500 });
+        s.running[0] = Some(b);
+        s.tcbs.get_mut(&b).unwrap().state = TState::Running(0);
+        s.block_current(0, TState::Sleep { until: 200 });
+        assert_eq!(s.next_wake(), Some(200));
+        assert_eq!(s.expire_sleepers(199), 0);
+        assert_eq!(s.expire_sleepers(200), 1);
+        assert_eq!(s.ready.front(), Some(&b));
+        assert_eq!(s.expire_sleepers(1000), 1);
+    }
+
+    #[test]
+    fn fill_idle_cpus_dispatches_fifo() {
+        let mut t = target(2);
+        let mut s = Scheduler::new(2);
+        let a = s.spawn(ThreadCtx::zeroed());
+        let b = s.spawn(ThreadCtx::zeroed());
+        let c = s.spawn(ThreadCtx::zeroed());
+        let n = s.fill_idle_cpus(&mut t, 0);
+        assert_eq!(n, 2);
+        assert_eq!(s.current(0), Some(a));
+        assert_eq!(s.current(1), Some(b));
+        assert_eq!(s.ready.front(), Some(&c));
+    }
+
+    #[test]
+    fn mmu_programmed_once_per_cpu() {
+        let mut t = target(1);
+        let mut s = Scheduler::new(1);
+        let a = s.spawn(ThreadCtx::zeroed());
+        let b = s.spawn(ThreadCtx::zeroed());
+        s.ready.clear();
+        s.dispatch(&mut t, 0, a, 0x8000_0000_0000_1234);
+        assert_eq!(t.machine().harts[0].csrs.satp, 0x8000_0000_0000_1234);
+        s.save_context(&mut t, 0, 0);
+        s.block_current(0, TState::FutexWait { pa: 1, va: 1 });
+        s.dispatch(&mut t, 0, b, 0x8000_0000_0000_9999);
+        // same address space: satp untouched on later dispatches
+        assert_eq!(t.machine().harts[0].csrs.satp, 0x8000_0000_0000_1234);
+    }
+}

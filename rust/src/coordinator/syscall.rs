@@ -1,0 +1,579 @@
+//! Linux RV64 syscall emulation — the exception-handler half of the FASE
+//! runtime (paper Fig 5/6). Handlers read only the argument registers they
+//! need (each read is an HTP RegR transaction — the 4-7 registers the
+//! paper's futex cost analysis counts), perform their effect through the
+//! VM / scheduler / fd-table subsystems, and tell the run loop how to
+//! resume the thread.
+
+use super::runtime::Kernel;
+use super::sched::{TState, ThreadCtx};
+use super::target::{ExcInfo, TargetOps};
+use super::vm::{PAGE, PROT_READ, PROT_WRITE};
+use crate::fase::htp::HfOp;
+
+pub const EPERM: u64 = (-1i64) as u64;
+pub const ENOENT: u64 = (-2i64) as u64;
+pub const EINTR: u64 = (-4i64) as u64;
+pub const EBADF: u64 = (-9i64) as u64;
+pub const EAGAIN: u64 = (-11i64) as u64;
+pub const ENOMEM: u64 = (-12i64) as u64;
+pub const EFAULT: u64 = (-14i64) as u64;
+pub const EINVAL: u64 = (-22i64) as u64;
+pub const ENOTTY: u64 = (-25i64) as u64;
+pub const ENOSYS: u64 = (-38i64) as u64;
+
+const FUTEX_WAIT: u64 = 0;
+const FUTEX_WAKE: u64 = 1;
+const FUTEX_CMD_MASK: u64 = 0x7f;
+
+// clone flags
+const CLONE_PARENT_SETTID: u64 = 0x0010_0000;
+const CLONE_CHILD_CLEARTID: u64 = 0x0020_0000;
+const MAP_ANONYMOUS: u64 = 0x20;
+
+/// What the run loop should do after a handler returns.
+#[derive(Debug)]
+pub enum Flow {
+    /// Write `a0` and resume at epc+4.
+    Return(u64),
+    /// Thread blocked; context already saved. Schedule something else.
+    Blocked,
+    /// Current thread exited.
+    Exited,
+    /// Voluntary yield: context saved, thread re-queued.
+    Yield,
+    /// Whole process exited (exit_group).
+    ExitGroup,
+    /// Signal return: restore the saved context in place.
+    SigReturn,
+}
+
+pub fn handle(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    exc: &ExcInfo,
+    nr: u64,
+) -> Flow {
+    match nr {
+        29 => Flow::Return(ENOTTY), // ioctl
+        56 => sys_openat(k, t, cpu),
+        57 => {
+            let fd = t.reg_r(cpu, 10) as i64;
+            Flow::Return(k.fds.close(fd) as u64)
+        }
+        62 => {
+            let (fd, off, wh) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11) as i64, t.reg_r(cpu, 12));
+            Flow::Return(k.fds.lseek(fd, off, wh) as u64)
+        }
+        63 => sys_read(k, t, cpu),
+        64 => sys_write(k, t, cpu),
+        65 | 66 => sys_iov(k, t, cpu, nr == 66),
+        80 => sys_fstat(k, t, cpu),
+        93 => sys_exit_thread(k, t, cpu),
+        94 => {
+            k.exit_code = Some(t.reg_r(cpu, 10) as i32);
+            Flow::ExitGroup
+        }
+        96 => {
+            let tid = k.sched.current(cpu).unwrap();
+            let addr = t.reg_r(cpu, 10);
+            k.sched.tcb_mut(tid).clear_child_tid = addr;
+            Flow::Return(tid as u64)
+        }
+        98 => sys_futex(k, t, cpu, exc),
+        99 => Flow::Return(0),  // set_robust_list
+        101 => sys_nanosleep(k, t, cpu, exc),
+        113 => sys_clock_gettime(k, t, cpu),
+        124 => sys_yield(k, t, cpu, exc),
+        129 | 131 => sys_kill(k, t, cpu, nr),
+        134 => sys_rt_sigaction(k, t, cpu),
+        135 => Flow::Return(0), // rt_sigprocmask (single-process: accept)
+        139 => Flow::SigReturn,
+        160 => sys_uname(k, t, cpu),
+        169 => sys_gettimeofday(k, t, cpu),
+        172 => Flow::Return(k.pid as u64),
+        178 => Flow::Return(k.sched.current(cpu).unwrap() as u64),
+        179 => sys_sysinfo(k, t, cpu),
+        214 => sys_brk(k, t, cpu),
+        215 => sys_munmap(k, t, cpu),
+        216 => Flow::Return(ENOSYS), // mremap
+        220 => sys_clone(k, t, cpu, exc),
+        222 => sys_mmap(k, t, cpu),
+        226 => sys_mprotect(k, t, cpu),
+        233 => Flow::Return(0), // madvise
+        261 => Flow::Return(0), // prlimit64
+        278 => sys_getrandom(k, t, cpu),
+        _ => Flow::Return(ENOSYS),
+    }
+}
+
+fn sys_openat(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let path_ptr = t.reg_r(cpu, 11);
+    let flags = t.reg_r(cpu, 12);
+    let path = match k.vm.read_cstr(t, cpu, &mut k.alloc, path_ptr, 4096) {
+        Ok(p) => p,
+        Err(_) => return Flow::Return(EFAULT),
+    };
+    Flow::Return(k.fds.open(&path, flags) as u64)
+}
+
+fn sys_read(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let (fd, buf, len) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11), t.reg_r(cpu, 12) as usize);
+    match k.fds.read(fd, len) {
+        Ok(data) => {
+            if !data.is_empty() && k.vm.write_guest(t, cpu, &mut k.alloc, buf, &data).is_err() {
+                return Flow::Return(EFAULT);
+            }
+            Flow::Return(data.len() as u64)
+        }
+        Err(e) => Flow::Return(e as u64),
+    }
+}
+
+fn sys_write(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let (fd, buf, len) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11), t.reg_r(cpu, 12) as usize);
+    let data = match k.vm.read_guest(t, cpu, &mut k.alloc, buf, len) {
+        Ok(d) => d,
+        Err(_) => return Flow::Return(EFAULT),
+    };
+    Flow::Return(k.fds.write(fd, &data) as u64)
+}
+
+fn sys_iov(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, is_write: bool) -> Flow {
+    let (fd, iov, cnt) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11), t.reg_r(cpu, 12));
+    let mut total: i64 = 0;
+    for i in 0..cnt.min(64) {
+        let hdr = match k.vm.read_guest(t, cpu, &mut k.alloc, iov + i * 16, 16) {
+            Ok(h) => h,
+            Err(_) => return Flow::Return(EFAULT),
+        };
+        let base = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        if len == 0 {
+            continue;
+        }
+        if is_write {
+            let data = match k.vm.read_guest(t, cpu, &mut k.alloc, base, len) {
+                Ok(d) => d,
+                Err(_) => return Flow::Return(EFAULT),
+            };
+            let r = k.fds.write(fd, &data);
+            if r < 0 {
+                return Flow::Return(r as u64);
+            }
+            total += r;
+        } else {
+            match k.fds.read(fd, len) {
+                Ok(d) => {
+                    if k.vm.write_guest(t, cpu, &mut k.alloc, base, &d).is_err() {
+                        return Flow::Return(EFAULT);
+                    }
+                    total += d.len() as i64;
+                    if d.len() < len {
+                        break;
+                    }
+                }
+                Err(e) => return Flow::Return(e as u64),
+            }
+        }
+    }
+    Flow::Return(total as u64)
+}
+
+fn sys_fstat(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let (fd, statbuf) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11));
+    let size = k.fds.file_size(fd);
+    if size < 0 {
+        return Flow::Return(size as u64);
+    }
+    let mut st = [0u8; 128];
+    let mode: u32 = if k.fds.is_tty(fd) { 0o020620 } else { 0o100644 };
+    st[16..20].copy_from_slice(&mode.to_le_bytes());
+    st[48..56].copy_from_slice(&(size as u64).to_le_bytes());
+    st[56..60].copy_from_slice(&4096u32.to_le_bytes()); // st_blksize
+    if k.vm.write_guest(t, cpu, &mut k.alloc, statbuf, &st).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+fn sys_exit_thread(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let tid = k.sched.exit_current(cpu);
+    let ctid = k.sched.tcb(tid).clear_child_tid;
+    if ctid != 0 {
+        // CLONE_CHILD_CLEARTID: *ctid = 0; futex_wake(ctid, 1). This is
+        // what thread_join waits on.
+        if let Some((pa, _)) = k.vm.translate(ctid) {
+            let aligned = pa & !7;
+            let word = t.mem_r(cpu, aligned);
+            let mut bytes = word.to_le_bytes();
+            let off = (pa - aligned) as usize;
+            bytes[off..off + 4].copy_from_slice(&0u32.to_le_bytes());
+            t.mem_w(cpu, aligned, u64::from_le_bytes(bytes));
+            let woken = k.sched.futex_wake(pa & !3, 1);
+            if woken.is_empty() && k.hfutex_enabled {
+                // nobody waiting yet; mask future redundant wakes
+                hf_add(k, t, cpu, ctid & !3);
+            } else {
+                hf_clear(k, t, ctid & !3);
+            }
+        }
+    }
+    Flow::Exited
+}
+
+// ---- HFutex host-side mirror maintenance ----
+
+fn hf_add(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, va: u64) {
+    let cpus = k.hf_mirror.entry(va).or_default();
+    if !cpus.contains(&cpu) {
+        t.hfutex(cpu, HfOp::Add, va);
+        cpus.push(cpu);
+    }
+}
+
+fn hf_clear(k: &mut Kernel, t: &mut dyn TargetOps, va: u64) {
+    if let Some(cpus) = k.hf_mirror.remove(&va) {
+        for cpu in cpus {
+            t.hfutex(cpu, HfOp::ClearAddr, va);
+        }
+    }
+}
+
+fn sys_futex(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, exc: &ExcInfo) -> Flow {
+    let uaddr = t.reg_r(cpu, 10);
+    let op = t.reg_r(cpu, 11) & FUTEX_CMD_MASK;
+    let val = t.reg_r(cpu, 12);
+    // Resolve the futex word's physical address (fault it in if needed).
+    if k.vm.translate(uaddr).is_none()
+        && k
+            .vm
+            .handle_fault(t, cpu, &mut k.alloc, uaddr, false)
+            .is_err()
+    {
+        return Flow::Return(EFAULT);
+    }
+    let (pa, _) = k.vm.translate(uaddr).unwrap();
+    let pa_word = pa & !3;
+    match op {
+        FUTEX_WAIT => {
+            let aligned = pa & !7;
+            let word = t.mem_r(cpu, aligned);
+            let cur = if pa & 7 == 4 { (word >> 32) as u32 } else { word as u32 };
+            if cur != val as u32 {
+                return Flow::Return(EAGAIN);
+            }
+            // Block: wake-up resumes after the syscall with a0 = 0.
+            k.sched.save_context(t, cpu, exc.epc + 4);
+            let tid = k.sched.current(cpu).unwrap();
+            k.sched.tcb_mut(tid).ctx.set_x(10, 0);
+            k.sched.block_current(cpu, TState::FutexWait { pa: pa_word, va: uaddr });
+            // A real waiter exists now: redundant-wake filtering must stop.
+            if k.hfutex_enabled {
+                hf_clear(k, t, uaddr);
+            }
+            Flow::Blocked
+        }
+        FUTEX_WAKE => {
+            let woken = k.sched.futex_wake(pa_word, val as usize);
+            if k.hfutex_enabled {
+                if woken.is_empty() {
+                    // Redundant wake: teach the controller to absorb these.
+                    hf_add(k, t, cpu, uaddr);
+                } else {
+                    hf_clear(k, t, uaddr);
+                }
+            }
+            Flow::Return(woken.len() as u64)
+        }
+        _ => Flow::Return(ENOSYS),
+    }
+}
+
+fn sys_nanosleep(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, exc: &ExcInfo) -> Flow {
+    let req = t.reg_r(cpu, 10);
+    let ts = match k.vm.read_guest(t, cpu, &mut k.alloc, req, 16) {
+        Ok(b) => b,
+        Err(_) => return Flow::Return(EFAULT),
+    };
+    let sec = u64::from_le_bytes(ts[0..8].try_into().unwrap());
+    let nsec = u64::from_le_bytes(ts[8..16].try_into().unwrap());
+    let ticks = sec
+        .saturating_mul(t.clock_hz())
+        .saturating_add(nsec.saturating_mul(t.clock_hz()) / 1_000_000_000);
+    k.sched.save_context(t, cpu, exc.epc + 4);
+    let tid = k.sched.current(cpu).unwrap();
+    k.sched.tcb_mut(tid).ctx.set_x(10, 0);
+    let until = t.now() + ticks;
+    k.sched.block_current(cpu, TState::Sleep { until });
+    Flow::Blocked
+}
+
+fn sys_clock_gettime(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let ts_ptr = t.reg_r(cpu, 11);
+    let now = t.now();
+    let hz = t.clock_hz();
+    let sec = now / hz;
+    let nsec = (now % hz) * (1_000_000_000 / hz);
+    let mut buf = [0u8; 16];
+    buf[0..8].copy_from_slice(&sec.to_le_bytes());
+    buf[8..16].copy_from_slice(&nsec.to_le_bytes());
+    if k.vm.write_guest(t, cpu, &mut k.alloc, ts_ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+fn sys_gettimeofday(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let tv_ptr = t.reg_r(cpu, 10);
+    let now = t.now();
+    let hz = t.clock_hz();
+    let sec = now / hz;
+    let usec = (now % hz) / (hz / 1_000_000);
+    let mut buf = [0u8; 16];
+    buf[0..8].copy_from_slice(&sec.to_le_bytes());
+    buf[8..16].copy_from_slice(&usec.to_le_bytes());
+    if k.vm.write_guest(t, cpu, &mut k.alloc, tv_ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+fn sys_yield(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, exc: &ExcInfo) -> Flow {
+    k.sched.save_context(t, cpu, exc.epc + 4);
+    let tid = k.sched.current(cpu).unwrap();
+    k.sched.tcb_mut(tid).ctx.set_x(10, 0);
+    Flow::Yield
+}
+
+fn sys_kill(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, nr: u64) -> Flow {
+    let (target_tid, sig) = if nr == 131 {
+        // tgkill(tgid, tid, sig)
+        (t.reg_r(cpu, 11) as i32, t.reg_r(cpu, 12) as i32)
+    } else {
+        // kill(pid, sig) -> main thread
+        (super::sched::MAIN_TID, t.reg_r(cpu, 11) as i32)
+    };
+    if sig == 0 {
+        return Flow::Return(0);
+    }
+    if !k.sched.tcbs.contains_key(&target_tid) {
+        return Flow::Return(ENOENT);
+    }
+    k.sched.tcb_mut(target_tid).pending_signals.push_back(sig);
+    // Interrupt a blocked target so the signal is delivered promptly.
+    let state = k.sched.tcb(target_tid).state.clone();
+    match state {
+        TState::FutexWait { pa, .. } => {
+            if let Some(q) = k.sched.futex_q.get_mut(&pa) {
+                q.retain(|&t| t != target_tid);
+            }
+            k.sched.tcb_mut(target_tid).ctx.set_x(10, EINTR);
+            k.sched.make_ready(target_tid);
+        }
+        TState::Sleep { .. } => {
+            k.sched.tcb_mut(target_tid).ctx.set_x(10, EINTR);
+            k.sched.make_ready(target_tid);
+        }
+        _ => {}
+    }
+    Flow::Return(0)
+}
+
+fn sys_rt_sigaction(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let sig = t.reg_r(cpu, 10) as i32;
+    let act = t.reg_r(cpu, 11);
+    let oldact = t.reg_r(cpu, 12);
+    if oldact != 0 {
+        let prev = k.sched.sig_actions.get(&sig).copied().unwrap_or_default();
+        let mut buf = [0u8; 32];
+        buf[0..8].copy_from_slice(&prev.handler.to_le_bytes());
+        buf[8..16].copy_from_slice(&prev.flags.to_le_bytes());
+        buf[24..32].copy_from_slice(&prev.mask.to_le_bytes());
+        if k.vm.write_guest(t, cpu, &mut k.alloc, oldact, &buf).is_err() {
+            return Flow::Return(EFAULT);
+        }
+    }
+    if act != 0 {
+        let buf = match k.vm.read_guest(t, cpu, &mut k.alloc, act, 32) {
+            Ok(b) => b,
+            Err(_) => return Flow::Return(EFAULT),
+        };
+        let handler = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let flags = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let mask = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        k.sched
+            .sig_actions
+            .insert(sig, super::sched::SigAction { handler, mask, flags });
+    }
+    Flow::Return(0)
+}
+
+fn sys_uname(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let buf_ptr = t.reg_r(cpu, 10);
+    let mut buf = [0u8; 65 * 6];
+    for (i, s) in ["Linux", "fase-target", "5.15.0-fase", "#1 SMP FASE", "riscv64", ""]
+        .iter()
+        .enumerate()
+    {
+        buf[i * 65..i * 65 + s.len()].copy_from_slice(s.as_bytes());
+    }
+    if k.vm.write_guest(t, cpu, &mut k.alloc, buf_ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+fn sys_sysinfo(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let ptr = t.reg_r(cpu, 10);
+    let mut buf = [0u8; 112];
+    let uptime = t.now() / t.clock_hz();
+    buf[0..8].copy_from_slice(&uptime.to_le_bytes());
+    buf[32..40].copy_from_slice(&(2u64 << 30).to_le_bytes()); // totalram
+    if k.vm.write_guest(t, cpu, &mut k.alloc, ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+fn sys_brk(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let want = t.reg_r(cpu, 10);
+    if want == 0 {
+        return Flow::Return(k.vm.brk);
+    }
+    if want < k.vm.brk_start {
+        return Flow::Return(k.vm.brk);
+    }
+    let new_end = (want + PAGE - 1) & !(PAGE - 1);
+    let old_end = k.vm.segments[k.heap_seg].end;
+    if new_end < old_end {
+        // shrink: release pages
+        let start = new_end;
+        k.vm.segments[k.heap_seg].end = new_end;
+        let mut p = start;
+        while p < old_end {
+            if let Some(ppn) = k.vm.unmap_page(t, cpu, p) {
+                k.alloc.decref(ppn);
+            }
+            p += PAGE;
+        }
+        mark_tlb_stale(k, cpu);
+    } else {
+        k.vm.segments[k.heap_seg].end = new_end;
+    }
+    k.vm.brk = want;
+    Flow::Return(want)
+}
+
+fn sys_munmap(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let (addr, len) = (t.reg_r(cpu, 10), t.reg_r(cpu, 11));
+    if addr % PAGE != 0 {
+        return Flow::Return(EINVAL);
+    }
+    k.vm.munmap(t, cpu, &mut k.alloc, addr, len);
+    mark_tlb_stale(k, cpu);
+    Flow::Return(0)
+}
+
+fn sys_clone(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, exc: &ExcInfo) -> Flow {
+    let flags = t.reg_r(cpu, 10);
+    let stack = t.reg_r(cpu, 11);
+    let ptid = t.reg_r(cpu, 12);
+    let ctid = t.reg_r(cpu, 14);
+    if stack == 0 {
+        return Flow::Return(ENOSYS); // fork not supported (threads only)
+    }
+    // Child context = parent's registers at the syscall, with a0=0 and the
+    // provided stack (paper Fig 6 step 7: runtime builds the thread).
+    k.sched.save_context(t, cpu, exc.epc + 4);
+    let parent = k.sched.current(cpu).unwrap();
+    let mut child_ctx: ThreadCtx = k.sched.tcb(parent).ctx.clone();
+    child_ctx.set_x(10, 0);
+    child_ctx.set_x(2, stack);
+    if flags & 0x0008_0000 != 0 {
+        // CLONE_SETTLS
+        child_ctx.set_x(4, t.reg_r(cpu, 13));
+    }
+    let child = k.sched.spawn(child_ctx);
+    if flags & CLONE_CHILD_CLEARTID != 0 {
+        k.sched.tcb_mut(child).clear_child_tid = ctid;
+    }
+    if flags & CLONE_PARENT_SETTID != 0 && ptid != 0 {
+        let bytes = (child as u32).to_le_bytes();
+        if k.vm.write_guest(t, cpu, &mut k.alloc, ptid, &bytes).is_err() {
+            return Flow::Return(EFAULT);
+        }
+    }
+    Flow::Return(child as u64)
+}
+
+fn sys_mmap(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let len = t.reg_r(cpu, 11);
+    let prot = t.reg_r(cpu, 12) & 7;
+    let flags = t.reg_r(cpu, 13);
+    if len == 0 {
+        return Flow::Return(EINVAL);
+    }
+    if flags & MAP_ANONYMOUS != 0 {
+        let va = k.vm.mmap_anon(len, if prot == 0 { PROT_READ | PROT_WRITE } else { prot });
+        return Flow::Return(va);
+    }
+    // File-backed mapping: slurp the file and map a private copy source.
+    let fd = t.reg_r(cpu, 14) as i64;
+    let off = t.reg_r(cpu, 15);
+    let size = k.fds.file_size(fd);
+    if size < 0 {
+        return Flow::Return(EBADF);
+    }
+    let cur = k.fds.lseek(fd, 0, 1);
+    k.fds.lseek(fd, off as i64, 0);
+    let content = match k.fds.read(fd, size.saturating_sub(off as i64) as usize) {
+        Ok(c) => c,
+        Err(e) => return Flow::Return(e as u64),
+    };
+    k.fds.lseek(fd, cur, 0);
+    let va = k.vm.mmap_anon(len, prot | PROT_READ);
+    let si = k.vm.find_segment(va).unwrap();
+    k.vm.segments[si].kind = super::vm::SegKind::File {
+        bytes: std::sync::Arc::new(content),
+        file_off: 0,
+    };
+    Flow::Return(va)
+}
+
+fn sys_mprotect(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let (addr, len, prot) = (t.reg_r(cpu, 10), t.reg_r(cpu, 11), t.reg_r(cpu, 12) & 7);
+    if addr % PAGE != 0 {
+        return Flow::Return(EINVAL);
+    }
+    k.vm.mprotect(t, cpu, addr, len, prot);
+    mark_tlb_stale(k, cpu);
+    Flow::Return(0)
+}
+
+fn sys_getrandom(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize) -> Flow {
+    let (buf, len) = (t.reg_r(cpu, 10), t.reg_r(cpu, 11) as usize);
+    let len = len.min(256);
+    let mut bytes = Vec::with_capacity(len);
+    for _ in 0..len {
+        bytes.push((k.prng.next_u64() >> 32) as u8);
+    }
+    if k.vm.write_guest(t, cpu, &mut k.alloc, buf, &bytes).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(len as u64)
+}
+
+/// Page tables changed under running CPUs: the paper delays remote TLB
+/// flushes to each CPU's next exception (no IPIs on the minimal target).
+fn mark_tlb_stale(k: &mut Kernel, except_cpu: usize) {
+    for (i, p) in k.pending_tlb.iter_mut().enumerate() {
+        if i != except_cpu {
+            *p = true;
+        }
+    }
+    // The faulting CPU is stalled in M-mode; flush applied on its resume
+    // path too, cheaply, by the same mechanism.
+    k.pending_tlb[except_cpu] = true;
+}

@@ -1,0 +1,688 @@
+//! Target access abstraction: the FASE HTP channel vs the full-system
+//! baseline, with all mode-specific timing charged here.
+
+use crate::fase::controller::{Controller, NextOutcome};
+use crate::fase::htp::{HfOp, Req, Resp};
+use crate::fase::Uart;
+use crate::iface::CpuInterface;
+use crate::mem::LINE;
+use crate::perf::{Context, Recorder};
+use crate::soc::machine::CAUSE_MTIMER;
+use crate::soc::Machine;
+
+/// Exception metadata returned by `Next`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExcInfo {
+    pub cpu: usize,
+    pub cause: u64,
+    pub epc: u64,
+    pub tval: u64,
+}
+
+impl ExcInfo {
+    pub fn is_ecall(&self) -> bool {
+        self.cause == 8
+    }
+    pub fn is_page_fault(&self) -> bool {
+        matches!(self.cause, 12 | 13 | 15)
+    }
+    pub fn is_timer(&self) -> bool {
+        self.cause == CAUSE_MTIMER
+    }
+}
+
+/// Host-side latency model (target ticks are derived from microseconds at
+/// the target clock — during a remote stall, target time keeps running).
+#[derive(Debug, Clone, Copy)]
+pub struct HostLatency {
+    /// Serial-device access overhead per HTP transaction (host kernel
+    /// syscalls on the tty — the dominant §VI-D1 runtime component).
+    pub per_request_us: f64,
+    /// Additional handling time per delegated guest syscall.
+    pub per_syscall_us: f64,
+    /// Additional handling time per page fault.
+    pub per_fault_us: f64,
+}
+
+impl Default for HostLatency {
+    fn default() -> Self {
+        HostLatency { per_request_us: 55.0, per_syscall_us: 6.0, per_fault_us: 10.0 }
+    }
+}
+
+impl HostLatency {
+    pub fn zero() -> HostLatency {
+        HostLatency { per_request_us: 0.0, per_syscall_us: 0.0, per_fault_us: 0.0 }
+    }
+}
+
+/// The full runtime-facing target interface.
+pub trait TargetOps {
+    fn n_cpus(&self) -> usize;
+    fn clock_hz(&self) -> u64;
+    fn now(&self) -> u64;
+
+    /// Wait (in target time) for the next exception, up to `t_max`.
+    fn next_exception(&mut self, t_max: u64) -> Option<ExcInfo>;
+
+    fn redirect(&mut self, cpu: usize, pc: u64, switch: bool);
+    fn set_mmu(&mut self, cpu: usize, satp: u64);
+    fn flush_tlb(&mut self, cpu: usize);
+    fn sync_i(&mut self, cpu: usize);
+    fn reg_r(&mut self, cpu: usize, idx: u8) -> u64;
+    fn reg_w(&mut self, cpu: usize, idx: u8, val: u64);
+    fn mem_r(&mut self, cpu: usize, paddr: u64) -> u64;
+    fn mem_w(&mut self, cpu: usize, paddr: u64, val: u64);
+    fn page_set(&mut self, cpu: usize, ppn: u64, val: u64);
+    fn page_copy(&mut self, cpu: usize, src_ppn: u64, dst_ppn: u64);
+    fn page_read(&mut self, cpu: usize, ppn: u64) -> Box<[u8; 4096]>;
+    fn page_write(&mut self, cpu: usize, ppn: u64, data: &[u8; 4096]);
+    fn hfutex(&mut self, cpu: usize, op: HfOp, addr: u64);
+    fn interrupt(&mut self, cpu: usize);
+    fn tick(&mut self) -> u64;
+    fn utick(&mut self, cpu: usize) -> u64;
+
+    /// Mode-specific overhead charged around guest-syscall handling.
+    fn syscall_overhead(&mut self, cpu: usize, nr: u64);
+    /// Mode-specific overhead charged around page-fault handling.
+    fn fault_overhead(&mut self, cpu: usize);
+    /// Let pure target time pass (e.g. while every thread sleeps).
+    fn advance(&mut self, ticks: u64);
+
+    fn recorder(&mut self) -> &mut Recorder;
+    fn set_context(&mut self, ctx: Context);
+    /// Escape hatch for diagnostics and final report collection only.
+    fn machine_mut(&mut self) -> &mut Machine;
+    fn machine(&self) -> &Machine;
+    fn filtered_wakes(&self) -> u64;
+}
+
+// =====================================================================
+// FASE mode
+// =====================================================================
+
+pub struct FaseTarget {
+    pub m: Machine,
+    pub ctl: Controller,
+    pub uart: Uart,
+    pub lat: HostLatency,
+    pub rec: Recorder,
+}
+
+impl FaseTarget {
+    pub fn new(m: Machine, baud: u64, hfutex: bool, lat: HostLatency) -> FaseTarget {
+        let uart = Uart::new(baud, m.clock_hz);
+        let n = m.harts.len();
+        FaseTarget { m, ctl: Controller::new(n, hfutex, 8), uart, lat, rec: Recorder::new() }
+    }
+
+    fn host_ticks(&self, us: f64) -> u64 {
+        (us * 1e-6 * self.m.clock_hz as f64) as u64
+    }
+
+    /// Run one HTP transaction: request bytes in, controller execution
+    /// (overlapped with streaming payloads), response bytes out, plus the
+    /// per-request host serial overhead. Other harts keep running.
+    fn transact(&mut self, req: Req) -> Resp {
+        let t0 = self.m.now;
+        let tx = req.wire_len();
+        let tx_stream = req.streaming_len();
+        // Non-streaming part of the request must fully arrive first.
+        let head_ticks = self.uart.ticks_for_bytes(tx - tx_stream);
+        self.m.run_until(t0 + head_ticks);
+        let (resp, st) = self.ctl.execute(&mut self.m, &req);
+        // Streaming payloads overlap controller execution.
+        let body_uart = self.uart.ticks_for_bytes(tx_stream + resp.streaming_len());
+        let exec_ticks = st.cycles.max(body_uart);
+        let t1 = self.m.now + exec_ticks;
+        self.m.run_until(t1);
+        let rx = resp.wire_len();
+        let tail_ticks = self.uart.ticks_for_bytes(rx - resp.streaming_len());
+        self.m.run_until(t1 + tail_ticks);
+        // Host tty access overhead for this transaction.
+        let host = self.host_ticks(self.lat.per_request_us);
+        let t2 = self.m.now + host;
+        self.m.run_until(t2);
+        self.rec.record_request(
+            req.kind(),
+            tx,
+            rx,
+            head_ticks + body_uart.min(exec_ticks) + tail_ticks,
+            st.cycles,
+            st.reg_ops,
+            st.injects,
+        );
+        self.rec.record_runtime_stall(host);
+        resp
+    }
+}
+
+impl TargetOps for FaseTarget {
+    fn n_cpus(&self) -> usize {
+        self.m.harts.len()
+    }
+    fn clock_hz(&self) -> u64 {
+        self.m.clock_hz
+    }
+    fn now(&self) -> u64 {
+        self.m.now
+    }
+
+    fn next_exception(&mut self, t_max: u64) -> Option<ExcInfo> {
+        loop {
+            if !self.m.run_until_exception(t_max) {
+                return None;
+            }
+            // `Next` request goes out before the event is consumed.
+            let req_ticks = self.uart.ticks_for_bytes(Req::Next.wire_len());
+            match self.ctl.next_event(&mut self.m) {
+                Some(NextOutcome::Report { resp, stats }) => {
+                    let resp_ticks = self.uart.ticks_for_bytes(resp.wire_len());
+                    let host = self.host_ticks(self.lat.per_request_us);
+                    let t =
+                        self.m.now + req_ticks + stats.cycles + resp_ticks + host;
+                    self.m.run_until(t);
+                    self.rec.record_request(
+                        Req::Next.kind(),
+                        Req::Next.wire_len(),
+                        resp.wire_len(),
+                        req_ticks + resp_ticks,
+                        stats.cycles,
+                        stats.reg_ops,
+                        stats.injects,
+                    );
+                    self.rec.record_runtime_stall(host);
+                    if let Resp::Exception { cpu, cause, epc, tval } = resp {
+                        return Some(ExcInfo { cpu: cpu as usize, cause, epc, tval });
+                    }
+                    unreachable!("next_event reports only exceptions");
+                }
+                Some(NextOutcome::Filtered { stats }) => {
+                    // Handled on-target: only controller cycles, no UART.
+                    self.rec.filtered_wakes += 1;
+                    let t = self.m.now + stats.cycles;
+                    self.m.run_until(t);
+                    continue;
+                }
+                None => continue,
+            }
+        }
+    }
+
+    fn redirect(&mut self, cpu: usize, pc: u64, switch: bool) {
+        self.transact(Req::Redirect { cpu: cpu as u8, pc, switch });
+    }
+    fn set_mmu(&mut self, cpu: usize, satp: u64) {
+        self.transact(Req::SetMmu { cpu: cpu as u8, satp });
+    }
+    fn flush_tlb(&mut self, cpu: usize) {
+        self.transact(Req::FlushTlb { cpu: cpu as u8 });
+    }
+    fn sync_i(&mut self, cpu: usize) {
+        self.transact(Req::SyncI { cpu: cpu as u8 });
+    }
+    fn reg_r(&mut self, cpu: usize, idx: u8) -> u64 {
+        self.transact(Req::RegR { cpu: cpu as u8, idx }).word()
+    }
+    fn reg_w(&mut self, cpu: usize, idx: u8, val: u64) {
+        self.transact(Req::RegW { cpu: cpu as u8, idx, val });
+    }
+    fn mem_r(&mut self, cpu: usize, paddr: u64) -> u64 {
+        self.transact(Req::MemR { cpu: cpu as u8, addr: paddr }).word()
+    }
+    fn mem_w(&mut self, cpu: usize, paddr: u64, val: u64) {
+        self.transact(Req::MemW { cpu: cpu as u8, addr: paddr, val });
+    }
+    fn page_set(&mut self, cpu: usize, ppn: u64, val: u64) {
+        self.transact(Req::PageS { cpu: cpu as u8, ppn, val });
+    }
+    fn page_copy(&mut self, cpu: usize, src_ppn: u64, dst_ppn: u64) {
+        self.transact(Req::PageCp { cpu: cpu as u8, src_ppn, dst_ppn });
+    }
+    fn page_read(&mut self, cpu: usize, ppn: u64) -> Box<[u8; 4096]> {
+        match self.transact(Req::PageR { cpu: cpu as u8, ppn }) {
+            Resp::Page(p) => p,
+            other => panic!("PageR failed: {other:?}"),
+        }
+    }
+    fn page_write(&mut self, cpu: usize, ppn: u64, data: &[u8; 4096]) {
+        self.transact(Req::PageW { cpu: cpu as u8, ppn, data: Box::new(*data) });
+    }
+    fn hfutex(&mut self, cpu: usize, op: HfOp, addr: u64) {
+        self.transact(Req::HFutex { cpu: cpu as u8, op, addr });
+    }
+    fn interrupt(&mut self, cpu: usize) {
+        self.transact(Req::Interrupt { cpu: cpu as u8 });
+    }
+    fn tick(&mut self) -> u64 {
+        self.transact(Req::Tick).word()
+    }
+    fn utick(&mut self, cpu: usize) -> u64 {
+        self.transact(Req::UTick { cpu: cpu as u8 }).word()
+    }
+
+    fn syscall_overhead(&mut self, _cpu: usize, _nr: u64) {
+        let t = (self.lat.per_syscall_us * 1e-6 * self.m.clock_hz as f64) as u64;
+        let end = self.m.now + t;
+        self.m.run_until(end);
+        self.rec.record_runtime_stall(t);
+    }
+
+    fn fault_overhead(&mut self, _cpu: usize) {
+        let t = (self.lat.per_fault_us * 1e-6 * self.m.clock_hz as f64) as u64;
+        let end = self.m.now + t;
+        self.m.run_until(end);
+        self.rec.record_runtime_stall(t);
+    }
+
+    fn advance(&mut self, ticks: u64) {
+        let t = self.m.now + ticks;
+        self.m.run_until(t);
+    }
+
+    fn recorder(&mut self) -> &mut Recorder {
+        &mut self.rec
+    }
+    fn set_context(&mut self, ctx: Context) {
+        self.rec.set_context(ctx);
+    }
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+    fn filtered_wakes(&self) -> u64 {
+        self.ctl.filtered_wakes
+    }
+}
+
+// =====================================================================
+// Full-system baseline mode (LiteX/Linux stand-in)
+// =====================================================================
+
+/// Calibrated kernel-cost model for the full-system baseline: syscall
+/// handling runs *on the trapped core* in privileged mode, costing cycles
+/// and polluting caches/TLBs — the effects the paper attributes the
+/// baseline's extra user-time to.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelCosts {
+    pub trap_entry: u64,
+    pub trap_exit: u64,
+    /// Baseline syscall cost; specific syscalls add on top.
+    pub syscall_base: u64,
+    pub page_fault: u64,
+    /// Timer interrupt period in ticks (10 ms @ 100 MHz) and its cost.
+    pub timer_period: u64,
+    pub timer_cost: u64,
+    /// Kernel entry invalidates 1/N of TLB and cache entries.
+    pub pollute_denom: u32,
+}
+
+impl Default for KernelCosts {
+    fn default() -> Self {
+        KernelCosts {
+            trap_entry: 140,
+            trap_exit: 110,
+            syscall_base: 400,
+            page_fault: 1400,
+            timer_period: 1_000_000, // 10ms at 100MHz
+            timer_cost: 600,
+            pollute_denom: 16,
+        }
+    }
+}
+
+fn kernel_syscall_cycles(k: &KernelCosts, nr: u64) -> u64 {
+    // Per-syscall cost table (Linux-on-Rocket scale at 100 MHz).
+    let extra = match nr {
+        113 | 169 => 250,       // clock_gettime / gettimeofday (no vDSO on rv64 LiteX)
+        63 | 64 | 65 | 66 => 1600, // read/write family
+        98 => 700,              // futex
+        220 => 9000,            // clone
+        222 | 215 | 226 => 2500, // mmap family
+        214 => 900,             // brk
+        93 | 94 => 3000,        // exit
+        _ => 300,
+    };
+    k.syscall_base + extra
+}
+
+pub struct DirectTarget {
+    pub m: Machine,
+    pub k: KernelCosts,
+    pub rec: Recorder,
+    next_timer: u64,
+    timer_rr: usize,
+    /// Preemption only matters when threads exceed cores; the runtime
+    /// enables the timer when it dispatches.
+    pub timer_enabled: bool,
+}
+
+impl DirectTarget {
+    pub fn new(m: Machine, k: KernelCosts) -> DirectTarget {
+        let next_timer = k.timer_period;
+        DirectTarget { m, k, rec: Recorder::new(), next_timer, timer_rr: 0, timer_enabled: true }
+    }
+
+    /// Kernel work on `cpu`: cycles pass on that hart (M-mode, so UTick is
+    /// frozen) while other harts keep running.
+    fn kernel_work(&mut self, cpu: usize, cycles: u64) {
+        let h = &mut self.m.harts[cpu];
+        if h.time < self.m.now {
+            h.time = self.m.now;
+        }
+        h.charge(cycles);
+        let t = self.m.harts[cpu].time;
+        self.m.run_until(t);
+        self.rec.record_runtime_stall(cycles);
+    }
+
+    fn pollute(&mut self, cpu: usize) {
+        let d = self.k.pollute_denom;
+        self.m.ms.tlbs[cpu].pollute(1, d);
+        self.m.ms.l1d[cpu].pollute(1, d);
+        self.m.ms.l1i[cpu].pollute(1, d);
+    }
+
+    /// Deliver pending timer interrupts (round-robin across running cores).
+    fn maybe_timer(&mut self) {
+        if !self.timer_enabled {
+            return;
+        }
+        while self.m.now >= self.next_timer {
+            self.next_timer += self.k.timer_period;
+            let n = self.m.harts.len();
+            for off in 0..n {
+                let cpu = (self.timer_rr + off) % n;
+                if !self.m.harts[cpu].stop_fetch {
+                    self.m.raise_interrupt(cpu);
+                    self.timer_rr = (cpu + 1) % n;
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl TargetOps for DirectTarget {
+    fn n_cpus(&self) -> usize {
+        self.m.harts.len()
+    }
+    fn clock_hz(&self) -> u64 {
+        self.m.clock_hz
+    }
+    fn now(&self) -> u64 {
+        self.m.now
+    }
+
+    fn next_exception(&mut self, t_max: u64) -> Option<ExcInfo> {
+        loop {
+            self.maybe_timer();
+            let step_max = if self.timer_enabled {
+                t_max.min(self.next_timer)
+            } else {
+                t_max
+            };
+            if self.m.run_until_exception(step_max) {
+                let ev = self.m.pop_exception().unwrap();
+                let h = &self.m.harts[ev.cpu];
+                let info = ExcInfo {
+                    cpu: ev.cpu,
+                    cause: h.csrs.mcause,
+                    epc: h.csrs.mepc,
+                    tval: h.csrs.mtval,
+                };
+                // Kernel trap entry runs on-core.
+                self.kernel_work(ev.cpu, self.k.trap_entry);
+                self.pollute(ev.cpu);
+                return Some(info);
+            }
+            if self.m.now >= t_max {
+                return None;
+            }
+            if !self
+                .m
+                .harts
+                .iter()
+                .any(|h| !h.stop_fetch && !h.waiting)
+            {
+                return None;
+            }
+        }
+    }
+
+    fn redirect(&mut self, cpu: usize, pc: u64, _switch: bool) {
+        self.kernel_work(cpu, self.k.trap_exit);
+        let h = &mut self.m.harts[cpu];
+        h.csrs.mepc = pc;
+        h.csrs.set_mpp(0);
+        h.do_mret();
+        self.m.set_stop_fetch(cpu, false);
+    }
+
+    fn set_mmu(&mut self, cpu: usize, satp: u64) {
+        self.m.harts[cpu].csrs.satp = satp;
+        self.kernel_work(cpu, 12);
+    }
+    fn flush_tlb(&mut self, cpu: usize) {
+        self.m.ms.flush_tlb(cpu);
+        self.kernel_work(cpu, 20);
+    }
+    fn sync_i(&mut self, cpu: usize) {
+        self.m.ms.l1i[cpu].flush();
+        self.m.harts[cpu].dcache.clear();
+        self.kernel_work(cpu, 30);
+    }
+    fn reg_r(&mut self, cpu: usize, idx: u8) -> u64 {
+        CpuInterface::reg_read(&mut self.m, cpu, idx)
+    }
+    fn reg_w(&mut self, cpu: usize, idx: u8, val: u64) {
+        CpuInterface::reg_write(&mut self.m, cpu, idx, val);
+    }
+    fn mem_r(&mut self, cpu: usize, paddr: u64) -> u64 {
+        let _ = cpu;
+        self.m.ms.phys.read_u64(paddr).unwrap_or(0)
+    }
+    fn mem_w(&mut self, cpu: usize, paddr: u64, val: u64) {
+        // Kernel stores go through the cache hierarchy too.
+        let line = paddr & !(LINE - 1);
+        self.m.ms.l1d[cpu].access(line, true);
+        self.m.ms.phys.write_u64(paddr, val);
+    }
+    fn page_set(&mut self, cpu: usize, ppn: u64, val: u64) {
+        let base = ppn << 12;
+        for i in 0..512 {
+            self.m.ms.phys.write_u64(base + i * 8, val);
+        }
+        for l in 0..64 {
+            let line = base + l * LINE;
+            self.m.ms.l1d[cpu].access(line, true);
+            self.m.ms.l2.access(line, true);
+        }
+        self.kernel_work(cpu, 700); // clear_page + overhead
+    }
+    fn page_copy(&mut self, cpu: usize, src_ppn: u64, dst_ppn: u64) {
+        let (s, d) = (src_ppn << 12, dst_ppn << 12);
+        for i in 0..512 {
+            let v = self.m.ms.phys.read_u64(s + i * 8).unwrap_or(0);
+            self.m.ms.phys.write_u64(d + i * 8, v);
+        }
+        for l in 0..64 {
+            self.m.ms.l1d[cpu].access(s + l * LINE, false);
+            self.m.ms.l1d[cpu].access(d + l * LINE, true);
+        }
+        self.kernel_work(cpu, 1200);
+    }
+    fn page_read(&mut self, cpu: usize, ppn: u64) -> Box<[u8; 4096]> {
+        let _ = cpu;
+        let mut p = Box::new([0u8; 4096]);
+        p.copy_from_slice(self.m.ms.phys.slice(ppn << 12, 4096).expect("page in range"));
+        p
+    }
+    fn page_write(&mut self, cpu: usize, ppn: u64, data: &[u8; 4096]) {
+        self.m
+            .ms
+            .phys
+            .slice_mut(ppn << 12, 4096)
+            .expect("page in range")
+            .copy_from_slice(data);
+        for l in 0..64 {
+            self.m.ms.l1d[cpu].access((ppn << 12) + l * LINE, true);
+        }
+        self.kernel_work(cpu, 900);
+    }
+    fn hfutex(&mut self, _cpu: usize, _op: HfOp, _addr: u64) {
+        // No HFutex hardware in the baseline; wakes are cheap in-kernel.
+    }
+    fn interrupt(&mut self, cpu: usize) {
+        self.m.raise_interrupt(cpu);
+    }
+    fn tick(&mut self) -> u64 {
+        self.m.now
+    }
+    fn utick(&mut self, cpu: usize) -> u64 {
+        self.m.harts[cpu].utick
+    }
+
+    fn syscall_overhead(&mut self, cpu: usize, nr: u64) {
+        let c = kernel_syscall_cycles(&self.k, nr);
+        self.kernel_work(cpu, c);
+    }
+
+    fn fault_overhead(&mut self, cpu: usize) {
+        let c = self.k.page_fault;
+        self.kernel_work(cpu, c);
+    }
+
+    fn advance(&mut self, ticks: u64) {
+        let t = self.m.now + ticks;
+        self.m.run_until(t);
+    }
+
+    fn recorder(&mut self) -> &mut Recorder {
+        &mut self.rec
+    }
+    fn set_context(&mut self, ctx: Context) {
+        self.rec.set_context(ctx);
+    }
+    fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.m
+    }
+    fn machine(&self) -> &Machine {
+        &self.m
+    }
+    fn filtered_wakes(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rv64::decode::encode;
+    use crate::soc::machine::DRAM_BASE;
+    use crate::soc::MachineConfig;
+
+    fn fase_target(baud: u64) -> FaseTarget {
+        let m = Machine::new(MachineConfig { n_harts: 2, dram_size: 16 << 20, ..Default::default() });
+        FaseTarget::new(m, baud, true, HostLatency::zero())
+    }
+
+    #[test]
+    fn transact_advances_target_time_by_uart_cost() {
+        let mut t = fase_target(921_600);
+        let t0 = t.now();
+        t.mem_w(0, DRAM_BASE + 0x100, 7);
+        let dt = t.now() - t0;
+        // MemW is 18 bytes + 9 byte resp = 27 bytes ≈ 27*11/921600 s.
+        let expect = t.uart.ticks_for_bytes(27);
+        assert!(dt >= expect, "dt={dt} expect>={expect}");
+        assert!(dt < expect + 5_000, "dt={dt} unreasonably long");
+        assert_eq!(t.mem_r(0, DRAM_BASE + 0x100), 7);
+    }
+
+    #[test]
+    fn slower_baud_costs_more_target_time() {
+        let mut fast = fase_target(921_600);
+        let mut slow = fase_target(115_200);
+        let f0 = fast.now();
+        fast.mem_w(0, DRAM_BASE + 0x100, 1);
+        let fdt = fast.now() - f0;
+        let s0 = slow.now();
+        slow.mem_w(0, DRAM_BASE + 0x100, 1);
+        let sdt = slow.now() - s0;
+        assert!(sdt > fdt * 7, "{sdt} vs {fdt}");
+    }
+
+    #[test]
+    fn other_harts_run_during_transactions() {
+        let mut t = fase_target(115_200);
+        // hart 1 busy-increments while we talk to hart 0
+        let code = DRAM_BASE + 0x2000;
+        t.m.ms.phys.write_n(code, 4, encode::addi(5, 5, 1) as u64);
+        t.m.ms.phys.write_n(code + 4, 4, 0xff5ff06f_u32 as u64); // jal x0, -12
+        // use self-loop-to-start: jal x0,-4 encodes 0xffdff06f; simpler: loop of two addis
+        t.m.ms.phys.write_n(code + 4, 4, {
+            // jal x0, -4
+            let mut w = 0x0000_006fu32;
+            let off: i64 = -4;
+            let v = off as u32;
+            w |= ((v >> 20) & 1) << 31 | ((v >> 1) & 0x3ff) << 21 | ((v >> 11) & 1) << 20 | ((v >> 12) & 0xff) << 12;
+            w as u64
+        });
+        t.m.harts[1].pc = code;
+        t.m.harts[1].stop_fetch = false;
+        let r5_before = t.m.harts[1].regs[5];
+        t.page_set(0, (DRAM_BASE + 0x10_0000) >> 12, 0);
+        assert!(t.m.harts[1].regs[5] > r5_before, "hart1 should have progressed");
+    }
+
+    #[test]
+    fn recorder_sees_traffic() {
+        let mut t = fase_target(921_600);
+        t.set_context(Context::Syscall(64));
+        t.mem_w(0, DRAM_BASE + 0x100, 7);
+        t.tick();
+        let rec = t.recorder();
+        assert_eq!(rec.total_requests(), 2);
+        assert!(rec.total_bytes() >= 27);
+    }
+
+    #[test]
+    fn direct_target_charges_kernel_cycles_on_core() {
+        let m = Machine::new(MachineConfig { n_harts: 1, dram_size: 8 << 20, ..Default::default() });
+        let mut t = DirectTarget::new(m, KernelCosts::default());
+        let before = t.m.harts[0].time;
+        t.syscall_overhead(0, 113);
+        assert!(t.m.harts[0].time > before);
+        // M-mode work must not count into UTick.
+        assert_eq!(t.m.harts[0].utick, 0);
+    }
+
+    #[test]
+    fn direct_page_ops_functional() {
+        let m = Machine::new(MachineConfig { n_harts: 1, dram_size: 8 << 20, ..Default::default() });
+        let mut t = DirectTarget::new(m, KernelCosts::default());
+        let ppn = (DRAM_BASE + 0x30_0000) >> 12;
+        t.page_set(0, ppn, 0xabab_abab_abab_abab);
+        let p = t.page_read(0, ppn);
+        assert!(p.iter().all(|&b| b == 0xab));
+        t.page_copy(0, ppn, ppn + 1);
+        assert_eq!(t.mem_r(0, (ppn + 1) << 12), 0xabab_abab_abab_abab);
+    }
+
+    #[test]
+    fn fase_next_exception_reports_ecall() {
+        let mut t = fase_target(921_600);
+        let code = DRAM_BASE + 0x3000;
+        t.m.ms.phys.write_n(code, 4, encode::addi(17, 0, 93) as u64);
+        t.m.ms.phys.write_n(code + 4, 4, 0x73);
+        t.redirect(0, code, false);
+        let exc = t.next_exception(u64::MAX).expect("exception");
+        assert_eq!(exc.cpu, 0);
+        assert!(exc.is_ecall());
+        assert_eq!(exc.epc, code + 4);
+        assert_eq!(t.reg_r(0, 17), 93);
+    }
+}

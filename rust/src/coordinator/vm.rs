@@ -1,0 +1,703 @@
+//! Virtual memory management (paper §V-C): reference-counted physical page
+//! allocator, dual software/hardware page tables, lazy initialization,
+//! copy-on-write, and fault-driven preloading — all device updates issued
+//! through [`TargetOps`] so page-table sync shows up as MemWrite traffic
+//! and page zeroing as PageSet (the Fig 13(g) composition).
+
+use super::target::TargetOps;
+use crate::mem::mmu::{PTE_A, PTE_D, PTE_R, PTE_U, PTE_V, PTE_W, PTE_X};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub const PAGE: u64 = 4096;
+/// Highest user virtual address (SV39 low half).
+pub const USER_TOP: u64 = 0x3f_ffff_f000;
+/// Anonymous-mmap region grows upward from here.
+pub const MMAP_BASE: u64 = 0x20_0000_0000;
+/// Main-thread stack lives just under USER_TOP.
+pub const STACK_TOP: u64 = USER_TOP;
+pub const STACK_SIZE: u64 = 8 << 20;
+
+pub const PROT_READ: u64 = 1;
+pub const PROT_WRITE: u64 = 2;
+pub const PROT_EXEC: u64 = 4;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum VmError {
+    #[error("segmentation fault at {0:#x}")]
+    Segv(u64),
+    #[error("access violates segment protection at {0:#x}")]
+    Prot(u64),
+    #[error("out of target physical memory")]
+    Oom,
+}
+
+/// Reference-counted physical page allocator over the device DRAM window
+/// above the loaded image.
+pub struct PageAlloc {
+    free: Vec<u64>,
+    next: u64,
+    end: u64,
+    refcnt: HashMap<u64, u32>,
+    pub allocated: u64,
+    pub peak: u64,
+}
+
+impl PageAlloc {
+    pub fn new(start_ppn: u64, end_ppn: u64) -> PageAlloc {
+        PageAlloc { free: Vec::new(), next: start_ppn, end: end_ppn, refcnt: HashMap::new(), allocated: 0, peak: 0 }
+    }
+
+    pub fn alloc(&mut self) -> Result<u64, VmError> {
+        let ppn = if let Some(p) = self.free.pop() {
+            p
+        } else if self.next < self.end {
+            let p = self.next;
+            self.next += 1;
+            p
+        } else {
+            return Err(VmError::Oom);
+        };
+        self.refcnt.insert(ppn, 1);
+        self.allocated += 1;
+        self.peak = self.peak.max(self.allocated);
+        Ok(ppn)
+    }
+
+    pub fn incref(&mut self, ppn: u64) {
+        *self.refcnt.get_mut(&ppn).expect("incref of unallocated page") += 1;
+    }
+
+    pub fn refcount(&self, ppn: u64) -> u32 {
+        self.refcnt.get(&ppn).copied().unwrap_or(0)
+    }
+
+    /// Drop a reference; frees (and returns true) when it hits zero.
+    pub fn decref(&mut self, ppn: u64) -> bool {
+        let c = self.refcnt.get_mut(&ppn).expect("decref of unallocated page");
+        *c -= 1;
+        if *c == 0 {
+            self.refcnt.remove(&ppn);
+            self.free.push(ppn);
+            self.allocated -= 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum SegKind {
+    Anon,
+    /// Backed by host-resident bytes (ELF image / preloaded file) at
+    /// `file_off` within `bytes`; beyond the end reads as zero (bss).
+    File { bytes: Arc<Vec<u8>>, file_off: u64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub start: u64,
+    pub end: u64,
+    pub prot: u64,
+    pub kind: SegKind,
+    pub name: &'static str,
+}
+
+/// One mapped page in the software mirror.
+#[derive(Debug, Clone, Copy)]
+pub struct PageInfo {
+    pub ppn: u64,
+    /// PTE flag bits currently installed on the device.
+    pub flags: u64,
+    /// Write-protected only because it is shared (COW pending).
+    pub cow: bool,
+}
+
+pub struct AddressSpace {
+    pub root_ppn: u64,
+    /// vpn2 -> L1 table ppn
+    l1_tables: HashMap<u64, u64>,
+    /// (vpn2, vpn1) -> L0 table ppn
+    l0_tables: HashMap<(u64, u64), u64>,
+    /// vpn -> mapping
+    pub pages: HashMap<u64, PageInfo>,
+    pub segments: Vec<Segment>,
+    pub brk_start: u64,
+    pub brk: u64,
+    mmap_cursor: u64,
+    /// Pages mapped per fault beyond the faulting one (paper: 16).
+    pub preload: u64,
+    /// Statistics.
+    pub faults: u64,
+    pub cow_breaks: u64,
+    pub pages_mapped: u64,
+}
+
+fn leaf_flags(prot: u64, cow: bool) -> u64 {
+    let mut f = PTE_V | PTE_U | PTE_A | PTE_D;
+    if prot & PROT_READ != 0 {
+        f |= PTE_R;
+    }
+    if prot & PROT_WRITE != 0 && !cow {
+        f |= PTE_W;
+    }
+    if prot & PROT_EXEC != 0 {
+        f |= PTE_X;
+    }
+    f
+}
+
+impl AddressSpace {
+    /// Allocate the root table on-device.
+    pub fn new(t: &mut dyn TargetOps, cpu: usize, alloc: &mut PageAlloc) -> Result<AddressSpace, VmError> {
+        let root = alloc.alloc()?;
+        t.page_set(cpu, root, 0);
+        Ok(AddressSpace {
+            root_ppn: root,
+            l1_tables: HashMap::new(),
+            l0_tables: HashMap::new(),
+            pages: HashMap::new(),
+            segments: Vec::new(),
+            brk_start: 0,
+            brk: 0,
+            mmap_cursor: MMAP_BASE,
+            preload: 16,
+            faults: 0,
+            cow_breaks: 0,
+            pages_mapped: 0,
+        })
+    }
+
+    pub fn satp(&self) -> u64 {
+        (8u64 << 60) | (1 << 44) | self.root_ppn
+    }
+
+    /// Walk/extend the table hierarchy for `va`; returns the L0 table ppn.
+    fn ensure_tables(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+    ) -> Result<u64, VmError> {
+        let vpn2 = (va >> 30) & 0x1ff;
+        let vpn1 = (va >> 21) & 0x1ff;
+        let l1 = match self.l1_tables.get(&vpn2) {
+            Some(&p) => p,
+            None => {
+                let p = alloc.alloc()?;
+                t.page_set(cpu, p, 0);
+                // Parent PTE: pointer entries have only V set.
+                t.mem_w(cpu, (self.root_ppn << 12) + vpn2 * 8, (p << 10) | PTE_V);
+                self.l1_tables.insert(vpn2, p);
+                p
+            }
+        };
+        let l0 = match self.l0_tables.get(&(vpn2, vpn1)) {
+            Some(&p) => p,
+            None => {
+                let p = alloc.alloc()?;
+                t.page_set(cpu, p, 0);
+                t.mem_w(cpu, (l1 << 12) + vpn1 * 8, (p << 10) | PTE_V);
+                self.l0_tables.insert((vpn2, vpn1), p);
+                p
+            }
+        };
+        Ok(l0)
+    }
+
+    /// Install a leaf mapping (device + mirror).
+    pub fn map_page(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+        ppn: u64,
+        prot: u64,
+        cow: bool,
+    ) -> Result<(), VmError> {
+        debug_assert_eq!(va % PAGE, 0);
+        let l0 = self.ensure_tables(t, cpu, alloc, va)?;
+        let flags = leaf_flags(prot, cow);
+        let vpn0 = (va >> 12) & 0x1ff;
+        t.mem_w(cpu, (l0 << 12) + vpn0 * 8, (ppn << 10) | flags);
+        self.pages.insert(va >> 12, PageInfo { ppn, flags, cow });
+        self.pages_mapped += 1;
+        Ok(())
+    }
+
+    /// Remove a leaf mapping; returns the old ppn (caller handles decref).
+    pub fn unmap_page(&mut self, t: &mut dyn TargetOps, cpu: usize, va: u64) -> Option<u64> {
+        let info = self.pages.remove(&(va >> 12))?;
+        let vpn2 = (va >> 30) & 0x1ff;
+        let vpn1 = (va >> 21) & 0x1ff;
+        let l0 = self.l0_tables[&(vpn2, vpn1)];
+        t.mem_w(cpu, (l0 << 12) + ((va >> 12) & 0x1ff) * 8, 0);
+        Some(info.ppn)
+    }
+
+    /// Software-mirror translation.
+    pub fn translate(&self, va: u64) -> Option<(u64, PageInfo)> {
+        let info = self.pages.get(&(va >> 12))?;
+        Some(((info.ppn << 12) | (va & (PAGE - 1)), *info))
+    }
+
+    pub fn find_segment(&self, va: u64) -> Option<usize> {
+        self.segments.iter().position(|s| va >= s.start && va < s.end)
+    }
+
+    pub fn add_segment(&mut self, seg: Segment) {
+        debug_assert_eq!(seg.start % PAGE, 0);
+        debug_assert_eq!(seg.end % PAGE, 0);
+        debug_assert!(
+            !self.segments.iter().any(|s| s.start < seg.end && seg.start < s.end),
+            "overlapping segment {:#x}..{:#x}",
+            seg.start,
+            seg.end
+        );
+        self.segments.push(seg);
+    }
+
+    /// Reserve a fresh anonymous region (never reuses VA space — the
+    /// paper's non-overlapping allocation rule for delayed TLB flushes).
+    pub fn mmap_anon(&mut self, len: u64, prot: u64) -> u64 {
+        let len = (len + PAGE - 1) & !(PAGE - 1);
+        let va = self.mmap_cursor;
+        self.mmap_cursor += len + PAGE; // guard gap
+        self.add_segment(Segment { start: va, end: va + len, prot, kind: SegKind::Anon, name: "mmap" });
+        va
+    }
+
+    /// munmap: unmap + free pages, trim/split segments.
+    pub fn munmap(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+        len: u64,
+    ) -> u64 {
+        let len = (len + PAGE - 1) & !(PAGE - 1);
+        let (start, end) = (va & !(PAGE - 1), (va & !(PAGE - 1)) + len);
+        let mut freed = 0;
+        let mut p = start;
+        while p < end {
+            if let Some(ppn) = self.unmap_page(t, cpu, p) {
+                alloc.decref(ppn);
+                freed += 1;
+            }
+            p += PAGE;
+        }
+        // Adjust segments.
+        let mut new_segs = Vec::new();
+        for s in self.segments.drain(..) {
+            if s.end <= start || s.start >= end {
+                new_segs.push(s);
+                continue;
+            }
+            if s.start < start {
+                let mut left = s.clone();
+                left.end = start;
+                new_segs.push(left);
+            }
+            if s.end > end {
+                let mut right = s.clone();
+                right.start = end;
+                if let SegKind::File { bytes, file_off } = &s.kind {
+                    right.kind = SegKind::File {
+                        bytes: bytes.clone(),
+                        file_off: file_off + (end - s.start),
+                    };
+                }
+                new_segs.push(right);
+            }
+        }
+        self.segments = new_segs;
+        freed
+    }
+
+    /// mprotect over a mapped range: update segment prot + installed PTEs.
+    pub fn mprotect(&mut self, t: &mut dyn TargetOps, cpu: usize, va: u64, len: u64, prot: u64) {
+        let len = (len + PAGE - 1) & !(PAGE - 1);
+        let (start, end) = (va & !(PAGE - 1), (va & !(PAGE - 1)) + len);
+        for s in &mut self.segments {
+            if s.start >= start && s.end <= end {
+                s.prot = prot;
+            }
+        }
+        let mut p = start;
+        while p < end {
+            if let Some(info) = self.pages.get(&(p >> 12)).copied() {
+                let flags = leaf_flags(prot, info.cow);
+                let vpn2 = (p >> 30) & 0x1ff;
+                let vpn1 = (p >> 21) & 0x1ff;
+                let l0 = self.l0_tables[&(vpn2, vpn1)];
+                t.mem_w(cpu, (l0 << 12) + ((p >> 12) & 0x1ff) * 8, (info.ppn << 10) | flags);
+                self.pages.insert(p >> 12, PageInfo { ppn: info.ppn, flags, cow: info.cow });
+            }
+            p += PAGE;
+        }
+    }
+
+    /// Initialize a fresh physical page for `va` within segment `si`.
+    fn init_page(&self, t: &mut dyn TargetOps, cpu: usize, si: usize, va: u64, ppn: u64) {
+        match &self.segments[si].kind {
+            SegKind::Anon => t.page_set(cpu, ppn, 0),
+            SegKind::File { bytes, file_off } => {
+                let off = (file_off + (va - self.segments[si].start)) as usize;
+                if off >= bytes.len() {
+                    t.page_set(cpu, ppn, 0);
+                } else {
+                    let mut buf = [0u8; 4096];
+                    let n = (bytes.len() - off).min(4096);
+                    buf[..n].copy_from_slice(&bytes[off..off + n]);
+                    t.page_write(cpu, ppn, &buf);
+                }
+            }
+        }
+    }
+
+    /// Demand fault (paper Fig 6 step: validate, allocate, initialize,
+    /// map, preload). Returns pages mapped.
+    pub fn handle_fault(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+        is_write: bool,
+    ) -> Result<u64, VmError> {
+        self.faults += 1;
+        let si = self.find_segment(va).ok_or(VmError::Segv(va))?;
+        let seg_prot = self.segments[si].prot;
+        if is_write && seg_prot & PROT_WRITE == 0 {
+            return Err(VmError::Prot(va));
+        }
+        let page_va = va & !(PAGE - 1);
+
+        // COW break: mapped read-only because shared.
+        if let Some(info) = self.pages.get(&(page_va >> 12)).copied() {
+            if is_write && info.cow {
+                self.cow_breaks += 1;
+                let new_ppn = if alloc.refcount(info.ppn) > 1 {
+                    let np = alloc.alloc()?;
+                    t.page_copy(cpu, info.ppn, np);
+                    alloc.decref(info.ppn);
+                    np
+                } else {
+                    info.ppn
+                };
+                self.map_page(t, cpu, alloc, page_va, new_ppn, seg_prot, false)?;
+                return Ok(1);
+            }
+            // Spurious fault (stale TLB on another core): nothing to map.
+            return Ok(0);
+        }
+
+        // Fresh page + preload ahead within the segment.
+        let mut mapped = 0;
+        let seg_end = self.segments[si].end;
+        let mut p = page_va;
+        while p < seg_end && mapped < 1 + self.preload {
+            if !self.pages.contains_key(&(p >> 12)) {
+                let ppn = alloc.alloc()?;
+                self.init_page(t, cpu, si, p, ppn);
+                self.map_page(t, cpu, alloc, p, ppn, seg_prot, false)?;
+                mapped += 1;
+            } else if mapped > 0 {
+                break; // contiguous run ended
+            }
+            p += PAGE;
+        }
+        Ok(mapped)
+    }
+
+    /// Eagerly fault-in an address range (file preloading, stack setup).
+    pub fn populate(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        start: u64,
+        len: u64,
+    ) -> Result<(), VmError> {
+        let mut p = start & !(PAGE - 1);
+        let end = start + len;
+        while p < end {
+            if !self.pages.contains_key(&(p >> 12)) {
+                let save = self.preload;
+                self.preload = 0;
+                let r = self.handle_fault(t, cpu, alloc, p, false);
+                self.preload = save;
+                r?;
+            }
+            p += PAGE;
+        }
+        Ok(())
+    }
+
+    // ---- guest memory accessors (device I/O through MemRW/Page ops) ----
+
+    pub fn read_guest(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+        len: usize,
+    ) -> Result<Vec<u8>, VmError> {
+        let mut out = Vec::with_capacity(len);
+        let mut addr = va;
+        while out.len() < len {
+            if self.translate(addr).is_none() {
+                self.handle_fault(t, cpu, alloc, addr, false)?;
+            }
+            let (pa, _) = self.translate(addr).ok_or(VmError::Segv(addr))?;
+            let aligned = pa & !7;
+            let word = t.mem_r(cpu, aligned);
+            let bytes = word.to_le_bytes();
+            let start = (pa - aligned) as usize;
+            for &b in &bytes[start..] {
+                if out.len() == len {
+                    break;
+                }
+                out.push(b);
+                // stop at page boundary handled by loop structure
+            }
+            addr += (8 - start) as u64;
+        }
+        Ok(out)
+    }
+
+    pub fn write_guest(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+        data: &[u8],
+    ) -> Result<(), VmError> {
+        let mut i = 0usize;
+        while i < data.len() {
+            let addr = va + i as u64;
+            if self.translate(addr).is_none() {
+                self.handle_fault(t, cpu, alloc, addr, true)?;
+            }
+            let (_, info) = self.translate(addr).ok_or(VmError::Segv(addr))?;
+            if info.cow {
+                self.handle_fault(t, cpu, alloc, addr, true)?;
+            }
+            let (pa, _) = self.translate(addr).unwrap();
+            let aligned = pa & !7;
+            let start = (pa - aligned) as usize;
+            let n = (8 - start).min(data.len() - i);
+            let mut word = if start == 0 && n == 8 { 0 } else { t.mem_r(cpu, aligned) };
+            let mut bytes = word.to_le_bytes();
+            bytes[start..start + n].copy_from_slice(&data[i..i + n]);
+            word = u64::from_le_bytes(bytes);
+            t.mem_w(cpu, aligned, word);
+            i += n;
+        }
+        Ok(())
+    }
+
+    /// Read a NUL-terminated guest string (bounded).
+    pub fn read_cstr(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        va: u64,
+        max: usize,
+    ) -> Result<String, VmError> {
+        let mut s = Vec::new();
+        let mut addr = va;
+        while s.len() < max {
+            let chunk = self.read_guest(t, cpu, alloc, addr, 8)?;
+            for &b in &chunk {
+                if b == 0 {
+                    return Ok(String::from_utf8_lossy(&s).into_owned());
+                }
+                s.push(b);
+            }
+            addr += 8;
+        }
+        Ok(String::from_utf8_lossy(&s).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::target::{DirectTarget, KernelCosts};
+    use crate::soc::{Machine, MachineConfig};
+
+    fn setup() -> (DirectTarget, PageAlloc, AddressSpace) {
+        let m = Machine::new(MachineConfig { n_harts: 1, dram_size: 32 << 20, ..Default::default() });
+        let mut t = DirectTarget::new(m, KernelCosts::default());
+        t.timer_enabled = false;
+        // pages from 1MB into DRAM
+        let base_ppn = (crate::soc::machine::DRAM_BASE + (1 << 20)) >> 12;
+        let end_ppn = (crate::soc::machine::DRAM_BASE + (32 << 20)) >> 12;
+        let mut alloc = PageAlloc::new(base_ppn, end_ppn);
+        let aspace = AddressSpace::new(&mut t, 0, &mut alloc).unwrap();
+        (t, alloc, aspace)
+    }
+
+    #[test]
+    fn alloc_refcount_lifecycle() {
+        let mut a = PageAlloc::new(100, 110);
+        let p = a.alloc().unwrap();
+        a.incref(p);
+        assert_eq!(a.refcount(p), 2);
+        assert!(!a.decref(p));
+        assert!(a.decref(p));
+        assert_eq!(a.refcount(p), 0);
+        // freed page is reused
+        assert_eq!(a.alloc().unwrap(), p);
+    }
+
+    #[test]
+    fn alloc_exhaustion() {
+        let mut a = PageAlloc::new(0, 2);
+        a.alloc().unwrap();
+        a.alloc().unwrap();
+        assert_eq!(a.alloc(), Err(VmError::Oom));
+    }
+
+    #[test]
+    fn anon_fault_maps_zeroed_page() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(0x4000, PROT_READ | PROT_WRITE);
+        vm.preload = 0;
+        let n = vm.handle_fault(&mut t, 0, &mut alloc, va + 0x1000, true).unwrap();
+        assert_eq!(n, 1);
+        let (pa, info) = vm.translate(va + 0x1234).unwrap();
+        assert!(info.flags & PTE_W != 0);
+        assert_eq!(t.mem_r(0, pa & !7), 0);
+        // device page table really contains the mapping
+        let root = vm.root_ppn << 12;
+        let vpn2 = (va >> 30) & 0x1ff;
+        let l1e = t.mem_r(0, root + vpn2 * 8);
+        assert!(l1e & PTE_V != 0);
+    }
+
+    #[test]
+    fn preload_maps_extra_pages() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(64 * PAGE, PROT_READ | PROT_WRITE);
+        vm.preload = 16;
+        let n = vm.handle_fault(&mut t, 0, &mut alloc, va, false).unwrap();
+        assert_eq!(n, 17, "fault page + 16 preloaded");
+        assert!(vm.translate(va + 16 * PAGE).is_some());
+        assert!(vm.translate(va + 17 * PAGE).is_none());
+    }
+
+    #[test]
+    fn segv_outside_segments() {
+        let (mut t, mut alloc, mut vm) = setup();
+        assert_eq!(
+            vm.handle_fault(&mut t, 0, &mut alloc, 0xdead_0000, false),
+            Err(VmError::Segv(0xdead_0000))
+        );
+    }
+
+    #[test]
+    fn write_to_readonly_segment_faults() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(PAGE, PROT_READ);
+        assert_eq!(
+            vm.handle_fault(&mut t, 0, &mut alloc, va, true),
+            Err(VmError::Prot(va))
+        );
+    }
+
+    #[test]
+    fn file_segment_lazy_load_and_bss_zero() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let content = Arc::new((0u32..2000).flat_map(|i| (i as u16).to_le_bytes()).collect::<Vec<u8>>());
+        let va = 0x40_0000;
+        vm.add_segment(Segment {
+            start: va,
+            end: va + 2 * PAGE,
+            prot: PROT_READ,
+            kind: SegKind::File { bytes: content.clone(), file_off: 0 },
+            name: "test",
+        });
+        vm.preload = 0;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, false).unwrap();
+        vm.handle_fault(&mut t, 0, &mut alloc, va + PAGE, false).unwrap();
+        let (pa, _) = vm.translate(va).unwrap();
+        assert_eq!(t.mem_r(0, pa), u64::from_le_bytes(content[0..8].try_into().unwrap()));
+        // past file end (4000 bytes) the second page tail is zero
+        let (pa2, _) = vm.translate(va + PAGE).unwrap();
+        assert_eq!(t.mem_r(0, pa2 + 4000 - PAGE), 0);
+    }
+
+    #[test]
+    fn cow_break_copies_shared_page() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(PAGE, PROT_READ | PROT_WRITE);
+        // Manually install a COW mapping of a shared page.
+        let ppn = alloc.alloc().unwrap();
+        alloc.incref(ppn); // simulate another owner
+        t.page_set(0, ppn, 0x7777);
+        vm.map_page(&mut t, 0, &mut alloc, va, ppn, PROT_READ | PROT_WRITE, true).unwrap();
+        let (_, info) = vm.translate(va).unwrap();
+        assert!(info.flags & PTE_W == 0, "COW page must be write-protected");
+        vm.handle_fault(&mut t, 0, &mut alloc, va, true).unwrap();
+        let (_, info2) = vm.translate(va).unwrap();
+        assert!(info2.flags & PTE_W != 0);
+        assert_ne!(info2.ppn, ppn, "write got a private copy");
+        assert_eq!(t.mem_r(0, info2.ppn << 12), 0x7777, "copy preserves contents");
+        assert_eq!(alloc.refcount(ppn), 1, "original deref'd");
+        assert_eq!(vm.cow_breaks, 1);
+    }
+
+    #[test]
+    fn munmap_frees_and_splits() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(4 * PAGE, PROT_READ | PROT_WRITE);
+        vm.preload = 8;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, false).unwrap();
+        let before = alloc.allocated;
+        let freed = vm.munmap(&mut t, 0, &mut alloc, va + PAGE, PAGE);
+        assert_eq!(freed, 1);
+        assert_eq!(alloc.allocated, before - 1);
+        assert!(vm.translate(va).is_some());
+        assert!(vm.translate(va + PAGE).is_none());
+        assert!(vm.translate(va + 2 * PAGE).is_some());
+        // hole is outside any segment now
+        assert!(vm.find_segment(va + PAGE).is_none());
+        assert!(vm.find_segment(va).is_some());
+        assert!(vm.find_segment(va + 2 * PAGE).is_some());
+    }
+
+    #[test]
+    fn guest_read_write_roundtrip_unaligned() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(2 * PAGE, PROT_READ | PROT_WRITE);
+        let msg = b"hello across a page boundary!";
+        vm.write_guest(&mut t, 0, &mut alloc, va + PAGE - 7, msg).unwrap();
+        let back = vm.read_guest(&mut t, 0, &mut alloc, va + PAGE - 7, msg.len()).unwrap();
+        assert_eq!(&back, msg);
+        vm.write_guest(&mut t, 0, &mut alloc, va + 3, b"x\0y").unwrap();
+        let s = vm.read_cstr(&mut t, 0, &mut alloc, va + 3, 64).unwrap();
+        assert_eq!(s, "x");
+    }
+
+    #[test]
+    fn mprotect_updates_installed_ptes() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(PAGE, PROT_READ | PROT_WRITE);
+        vm.preload = 0;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, true).unwrap();
+        vm.mprotect(&mut t, 0, va, PAGE, PROT_READ);
+        let (_, info) = vm.translate(va).unwrap();
+        assert!(info.flags & PTE_W == 0);
+        let si = vm.find_segment(va).unwrap();
+        assert_eq!(vm.segments[si].prot, PROT_READ);
+    }
+}

@@ -1,0 +1,557 @@
+//! Static linker for RV64 relocatable objects (`fase-ld`).
+//!
+//! Scope: exactly what `clang --target=riscv64-unknown-elf -mcmodel=medany
+//! -mno-relax` emits for freestanding C — PROGBITS/NOBITS sections, COMMON
+//! symbols, and the psABI relocations (PCREL/absolute HI20+LO12, CALL,
+//! BRANCH/JAL, 32/64, ADD/SUB pairs). No dynamic linking, no TLS.
+
+use super::consts::*;
+use super::read::{Object, Rela};
+use super::ElfError;
+use std::collections::HashMap;
+
+pub const DEFAULT_BASE: u64 = 0x10000;
+const PAGE: u64 = 4096;
+
+#[derive(Debug, Clone)]
+pub struct LinkOptions {
+    pub base: u64,
+    pub entry_symbol: String,
+}
+
+impl Default for LinkOptions {
+    fn default() -> Self {
+        LinkOptions { base: DEFAULT_BASE, entry_symbol: "_start".into() }
+    }
+}
+
+/// Output section kinds, in layout order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OutKind {
+    Text = 0,
+    Rodata = 1,
+    Data = 2,
+    Bss = 3,
+}
+
+impl OutKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OutKind::Text => ".text",
+            OutKind::Rodata => ".rodata",
+            OutKind::Data => ".data",
+            OutKind::Bss => ".bss",
+        }
+    }
+    pub fn flags(self) -> u32 {
+        match self {
+            OutKind::Text => PF_R | PF_X,
+            OutKind::Rodata => PF_R,
+            OutKind::Data | OutKind::Bss => PF_R | PF_W,
+        }
+    }
+}
+
+/// A fully linked image (fed to [`super::write`] or loaded directly in
+/// tests).
+pub struct LinkedImage {
+    pub entry: u64,
+    pub sections: [OutSection; 4],
+    /// Resolved global symbols: name -> vaddr.
+    pub symbols: Vec<(String, u64, u64)>, // (name, addr, size)
+}
+
+pub struct OutSection {
+    pub kind: OutKind,
+    pub vaddr: u64,
+    pub data: Vec<u8>,
+    /// Total size in memory (== data.len() except .bss).
+    pub memsz: u64,
+}
+
+impl LinkedImage {
+    pub fn symbol(&self, name: &str) -> Option<u64> {
+        self.symbols.iter().find(|(n, _, _)| n == name).map(|(_, a, _)| *a)
+    }
+}
+
+fn classify(name: &str, sh_type: u32, flags: u64) -> Option<OutKind> {
+    if flags & SHF_ALLOC == 0 {
+        return None;
+    }
+    if sh_type == SHT_NOBITS {
+        return Some(OutKind::Bss);
+    }
+    if name == ".text" || name.starts_with(".text.") {
+        return Some(OutKind::Text);
+    }
+    if name.starts_with(".rodata") || name.starts_with(".srodata") {
+        return Some(OutKind::Rodata);
+    }
+    if name.starts_with(".data") || name.starts_with(".sdata") {
+        return Some(OutKind::Data);
+    }
+    if name.starts_with(".bss") || name.starts_with(".sbss") {
+        return Some(OutKind::Bss);
+    }
+    if flags & 0x4 != 0 {
+        // SHF_EXECINSTR
+        return Some(OutKind::Text);
+    }
+    // Unknown allocatable progbits: writable -> data, else rodata.
+    if flags & 0x1 != 0 {
+        Some(OutKind::Data)
+    } else {
+        Some(OutKind::Rodata)
+    }
+}
+
+fn align_up(v: u64, a: u64) -> u64 {
+    if a <= 1 {
+        v
+    } else {
+        (v + a - 1) & !(a - 1)
+    }
+}
+
+pub fn link(objects: &[Object], opts: &LinkOptions) -> Result<LinkedImage, ElfError> {
+    // ---- 1. Place every input section into an output section. ----
+    let mut out_size = [0u64; 4];
+    // (obj, sec) -> (kind, offset in out section)
+    let mut placement: HashMap<(usize, usize), (OutKind, u64)> = HashMap::new();
+    for (oi, obj) in objects.iter().enumerate() {
+        for (si, sec) in obj.sections.iter().enumerate() {
+            let Some(kind) = classify(&sec.name, sec.sh_type, sec.flags) else {
+                continue;
+            };
+            let k = kind as usize;
+            let off = align_up(out_size[k], sec.addralign.max(1));
+            placement.insert((oi, si), (kind, off));
+            out_size[k] = off + sec.size;
+        }
+    }
+
+    // ---- 2. Resolve symbols (strong/weak/COMMON). ----
+    #[derive(Clone, Copy)]
+    struct Def {
+        obj: usize,
+        shndx: u16,
+        value: u64,
+        size: u64,
+        weak: bool,
+        common: bool,
+    }
+    let mut globals: HashMap<String, Def> = HashMap::new();
+    for (oi, obj) in objects.iter().enumerate() {
+        for sym in &obj.symbols {
+            if sym.bind == STB_LOCAL || sym.name.is_empty() || sym.shndx == SHN_UNDEF {
+                continue;
+            }
+            let def = Def {
+                obj: oi,
+                shndx: sym.shndx,
+                value: sym.value,
+                size: sym.size,
+                weak: sym.bind == STB_WEAK,
+                common: sym.shndx == SHN_COMMON,
+            };
+            match globals.get(&sym.name) {
+                None => {
+                    globals.insert(sym.name.clone(), def);
+                }
+                Some(prev) => {
+                    if prev.weak && !def.weak {
+                        globals.insert(sym.name.clone(), def);
+                    } else if prev.common && !def.common && !def.weak {
+                        globals.insert(sym.name.clone(), def);
+                    } else if !prev.weak && !def.weak && !prev.common && !def.common {
+                        return Err(ElfError::Link(format!(
+                            "duplicate strong symbol {:?} ({} and {})",
+                            sym.name, objects[prev.obj].name, obj.name
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    // Allocate COMMON symbols in .bss.
+    let mut common_addr: HashMap<String, u64> = HashMap::new();
+    {
+        let k = OutKind::Bss as usize;
+        let mut names: Vec<&String> = globals
+            .iter()
+            .filter(|(_, d)| d.common)
+            .map(|(n, _)| n)
+            .collect();
+        names.sort(); // deterministic layout
+        for name in names {
+            let d = globals[name];
+            let align = d.value.max(8);
+            let off = align_up(out_size[k], align);
+            out_size[k] = off + d.size;
+            common_addr.insert(name.clone(), off);
+        }
+    }
+
+    // ---- 3. Assign output section base addresses. ----
+    let mut bases = [0u64; 4];
+    let mut cursor = opts.base;
+    for k in 0..4 {
+        cursor = align_up(cursor, PAGE);
+        bases[k] = cursor;
+        cursor += out_size[k];
+    }
+
+    let sec_addr = |oi: usize, si: usize| -> Option<u64> {
+        placement.get(&(oi, si)).map(|(k, off)| bases[*k as usize] + off)
+    };
+
+    // ---- 4. Final symbol addresses. ----
+    let bss_end = bases[3] + out_size[3];
+    let mut linker_defined: HashMap<&'static str, u64> = HashMap::new();
+    linker_defined.insert("__global_pointer$", bases[2].wrapping_add(0x800));
+    linker_defined.insert("__bss_start", bases[3]);
+    linker_defined.insert("__bss_end", bss_end);
+    linker_defined.insert("_end", bss_end);
+    linker_defined.insert("end", bss_end);
+    linker_defined.insert("__text_start", bases[0]);
+    linker_defined.insert("__executable_start", opts.base);
+
+    let resolve_global = |name: &str| -> Result<u64, ElfError> {
+        if let Some(d) = globals.get(name) {
+            if d.common {
+                return Ok(bases[3] + common_addr[name]);
+            }
+            if d.shndx == SHN_ABS {
+                return Ok(d.value);
+            }
+            let base = sec_addr(d.obj, d.shndx as usize).ok_or_else(|| {
+                ElfError::Link(format!("symbol {name:?} in non-allocated section"))
+            })?;
+            return Ok(base + d.value);
+        }
+        if let Some(v) = linker_defined.get(name) {
+            return Ok(*v);
+        }
+        Err(ElfError::Link(format!("undefined symbol {name:?}")))
+    };
+
+    // Per-object symbol-index resolver (locals resolve within the object).
+    let sym_value = |oi: usize, idx: u32| -> Result<u64, ElfError> {
+        let sym = objects[oi]
+            .symbols
+            .get(idx as usize)
+            .ok_or_else(|| ElfError::Link(format!("bad symbol index {idx}")))?;
+        if sym.bind == STB_LOCAL {
+            if sym.shndx == SHN_ABS {
+                return Ok(sym.value);
+            }
+            let base = sec_addr(oi, sym.shndx as usize).ok_or_else(|| {
+                ElfError::Link(format!(
+                    "local symbol {:?} in unplaced section (obj {})",
+                    sym.name, objects[oi].name
+                ))
+            })?;
+            Ok(base + sym.value)
+        } else if sym.shndx == SHN_UNDEF {
+            match resolve_global(&sym.name) {
+                Ok(v) => Ok(v),
+                Err(e) => {
+                    if sym.bind == STB_WEAK {
+                        Ok(0) // unresolved weak -> 0
+                    } else {
+                        Err(e)
+                    }
+                }
+            }
+        } else {
+            resolve_global(&sym.name)
+        }
+    };
+
+    // ---- 5. Copy section payloads. ----
+    let mut out_data: [Vec<u8>; 4] = [
+        vec![0u8; out_size[0] as usize],
+        vec![0u8; out_size[1] as usize],
+        vec![0u8; out_size[2] as usize],
+        Vec::new(), // .bss carries no bytes
+    ];
+    for (oi, obj) in objects.iter().enumerate() {
+        for (si, sec) in obj.sections.iter().enumerate() {
+            let Some(&(kind, off)) = placement.get(&(oi, si)) else { continue };
+            if kind == OutKind::Bss || sec.sh_type == SHT_NOBITS {
+                continue;
+            }
+            let dst = &mut out_data[kind as usize][off as usize..off as usize + sec.size as usize];
+            dst.copy_from_slice(&obj.section_data[si]);
+        }
+    }
+
+    // ---- 6. Apply relocations. ----
+    for (oi, obj) in objects.iter().enumerate() {
+        for (target_si, relas) in &obj.relas {
+            let Some(&(kind, sec_off)) = placement.get(&(oi, *target_si)) else {
+                continue; // relocations against debug/attr sections
+            };
+            if kind == OutKind::Bss {
+                return Err(ElfError::Link("relocation against .bss".into()));
+            }
+            let sec_base = bases[kind as usize] + sec_off;
+            // index PCREL_HI20 relocs by their site offset for LO12 lookups
+            let hi_by_off: HashMap<u64, &Rela> = relas
+                .iter()
+                .filter(|r| r.rtype == R_RISCV_PCREL_HI20)
+                .map(|r| (r.offset, r))
+                .collect();
+            for r in relas {
+                let p = sec_base + r.offset;
+                let buf = &mut out_data[kind as usize];
+                let at = (sec_off + r.offset) as usize;
+                match r.rtype {
+                    R_RISCV_RELAX => {}
+                    R_RISCV_64 => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64);
+                        buf[at..at + 8].copy_from_slice(&v.to_le_bytes());
+                    }
+                    R_RISCV_32 => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64);
+                        buf[at..at + 4].copy_from_slice(&(v as u32).to_le_bytes());
+                    }
+                    R_RISCV_BRANCH => {
+                        let v = sym_value(oi, r.sym)?
+                            .wrapping_add(r.addend as u64)
+                            .wrapping_sub(p) as i64;
+                        if !(-4096..4096).contains(&v) {
+                            return Err(ElfError::Link(format!("BRANCH overflow at {p:#x}")));
+                        }
+                        patch_b(buf, at, v);
+                    }
+                    R_RISCV_JAL => {
+                        let v = sym_value(oi, r.sym)?
+                            .wrapping_add(r.addend as u64)
+                            .wrapping_sub(p) as i64;
+                        if !(-(1 << 20)..(1 << 20)).contains(&v) {
+                            return Err(ElfError::Link(format!("JAL overflow at {p:#x}")));
+                        }
+                        patch_j(buf, at, v);
+                    }
+                    R_RISCV_CALL | R_RISCV_CALL_PLT => {
+                        let v = sym_value(oi, r.sym)?
+                            .wrapping_add(r.addend as u64)
+                            .wrapping_sub(p) as i64;
+                        let (hi, lo) = hi_lo(v);
+                        patch_u(buf, at, hi);
+                        patch_i(buf, at + 4, lo);
+                    }
+                    R_RISCV_PCREL_HI20 => {
+                        let v = sym_value(oi, r.sym)?
+                            .wrapping_add(r.addend as u64)
+                            .wrapping_sub(p) as i64;
+                        let (hi, _) = hi_lo(v);
+                        patch_u(buf, at, hi);
+                    }
+                    R_RISCV_PCREL_LO12_I | R_RISCV_PCREL_LO12_S => {
+                        // The symbol points at the corresponding HI20 site.
+                        let hi_site_local = sym_value(oi, r.sym)?.wrapping_sub(sec_base);
+                        let hi = hi_by_off.get(&hi_site_local).ok_or_else(|| {
+                            ElfError::Link(format!(
+                                "PCREL_LO12 at {p:#x}: no matching PCREL_HI20 at +{hi_site_local:#x}"
+                            ))
+                        })?;
+                        let target = sym_value(oi, hi.sym)?.wrapping_add(hi.addend as u64);
+                        let v = target.wrapping_sub(sec_base + hi.offset) as i64;
+                        let (_, lo) = hi_lo(v);
+                        if r.rtype == R_RISCV_PCREL_LO12_I {
+                            patch_i(buf, at, lo);
+                        } else {
+                            patch_s(buf, at, lo);
+                        }
+                    }
+                    R_RISCV_HI20 => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64) as i64;
+                        let (hi, _) = hi_lo(v);
+                        patch_u(buf, at, hi);
+                    }
+                    R_RISCV_LO12_I => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64) as i64;
+                        let (_, lo) = hi_lo(v);
+                        patch_i(buf, at, lo);
+                    }
+                    R_RISCV_LO12_S => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64) as i64;
+                        let (_, lo) = hi_lo(v);
+                        patch_s(buf, at, lo);
+                    }
+                    R_RISCV_ADD8 | R_RISCV_ADD16 | R_RISCV_ADD32 | R_RISCV_ADD64 => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64);
+                        let n = match r.rtype {
+                            R_RISCV_ADD8 => 1,
+                            R_RISCV_ADD16 => 2,
+                            R_RISCV_ADD32 => 4,
+                            _ => 8,
+                        };
+                        addsub(buf, at, n, v, false);
+                    }
+                    R_RISCV_SUB8 | R_RISCV_SUB16 | R_RISCV_SUB32 | R_RISCV_SUB64 => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64);
+                        let n = match r.rtype {
+                            R_RISCV_SUB8 => 1,
+                            R_RISCV_SUB16 => 2,
+                            R_RISCV_SUB32 => 4,
+                            _ => 8,
+                        };
+                        addsub(buf, at, n, v, true);
+                    }
+                    R_RISCV_SET6 | R_RISCV_SUB6 | R_RISCV_SET8 | R_RISCV_SET16
+                    | R_RISCV_SET32 => {
+                        let v = sym_value(oi, r.sym)?.wrapping_add(r.addend as u64);
+                        match r.rtype {
+                            R_RISCV_SET6 => buf[at] = (buf[at] & 0xc0) | (v as u8 & 0x3f),
+                            R_RISCV_SUB6 => {
+                                let old = buf[at] & 0x3f;
+                                buf[at] =
+                                    (buf[at] & 0xc0) | (old.wrapping_sub(v as u8) & 0x3f)
+                            }
+                            R_RISCV_SET8 => buf[at] = v as u8,
+                            R_RISCV_SET16 => {
+                                buf[at..at + 2].copy_from_slice(&(v as u16).to_le_bytes())
+                            }
+                            _ => buf[at..at + 4].copy_from_slice(&(v as u32).to_le_bytes()),
+                        }
+                    }
+                    other => {
+                        return Err(ElfError::Link(format!(
+                            "unsupported relocation type {other} in {} (compile with -mno-relax?)",
+                            obj.name
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- 7. Entry point + exported symbol table. ----
+    let entry = resolve_global(&opts.entry_symbol)?;
+    let mut symbols: Vec<(String, u64, u64)> = Vec::new();
+    for (name, d) in &globals {
+        let addr = resolve_global(name)?;
+        symbols.push((name.clone(), addr, d.size));
+    }
+    symbols.sort();
+
+    Ok(LinkedImage {
+        entry,
+        sections: [
+            OutSection { kind: OutKind::Text, vaddr: bases[0], memsz: out_size[0], data: out_data[0].clone() },
+            OutSection { kind: OutKind::Rodata, vaddr: bases[1], memsz: out_size[1], data: out_data[1].clone() },
+            OutSection { kind: OutKind::Data, vaddr: bases[2], memsz: out_size[2], data: out_data[2].clone() },
+            OutSection { kind: OutKind::Bss, vaddr: bases[3], memsz: out_size[3], data: Vec::new() },
+        ],
+        symbols,
+    })
+}
+
+/// Split a pcrel/absolute value into (hi20, lo12) halves per the psABI.
+fn hi_lo(v: i64) -> (u32, i32) {
+    let hi = ((v + 0x800) >> 12) as u32 & 0xf_ffff;
+    let lo = ((v << 52) >> 52) as i32;
+    (hi, lo)
+}
+
+fn patch_u(buf: &mut [u8], at: usize, hi20: u32) {
+    let mut w = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+    w = (w & 0xfff) | (hi20 << 12);
+    buf[at..at + 4].copy_from_slice(&w.to_le_bytes());
+}
+
+fn patch_i(buf: &mut [u8], at: usize, lo12: i32) {
+    let mut w = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+    w = (w & 0x000f_ffff) | ((lo12 as u32 & 0xfff) << 20);
+    buf[at..at + 4].copy_from_slice(&w.to_le_bytes());
+}
+
+fn patch_s(buf: &mut [u8], at: usize, lo12: i32) {
+    let mut w = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+    let v = lo12 as u32 & 0xfff;
+    w &= !0xfe00_0f80;
+    w |= (v >> 5) << 25;
+    w |= (v & 0x1f) << 7;
+    buf[at..at + 4].copy_from_slice(&w.to_le_bytes());
+}
+
+fn patch_b(buf: &mut [u8], at: usize, off: i64) {
+    let mut w = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+    let v = off as u32;
+    w &= !0xfe00_0f80;
+    w |= ((v >> 12) & 1) << 31;
+    w |= ((v >> 5) & 0x3f) << 25;
+    w |= ((v >> 1) & 0xf) << 8;
+    w |= ((v >> 11) & 1) << 7;
+    buf[at..at + 4].copy_from_slice(&w.to_le_bytes());
+}
+
+fn patch_j(buf: &mut [u8], at: usize, off: i64) {
+    let mut w = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+    let v = off as u32;
+    w &= 0xfff;
+    w |= ((v >> 20) & 1) << 31;
+    w |= ((v >> 1) & 0x3ff) << 21;
+    w |= ((v >> 11) & 1) << 20;
+    w |= ((v >> 12) & 0xff) << 12;
+    buf[at..at + 4].copy_from_slice(&w.to_le_bytes());
+}
+
+fn addsub(buf: &mut [u8], at: usize, n: usize, v: u64, sub: bool) {
+    let mut cur = 0u64;
+    for i in (0..n).rev() {
+        cur = (cur << 8) | buf[at + i] as u64;
+    }
+    let newv = if sub { cur.wrapping_sub(v) } else { cur.wrapping_add(v) };
+    let mut x = newv;
+    for i in 0..n {
+        buf[at + i] = x as u8;
+        x >>= 8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hi_lo_splits() {
+        for v in [0i64, 1, -1, 0x7ff, 0x800, 0xfff, 0x1000, -0x800, -0x801, 0x12345678] {
+            let (hi, lo) = hi_lo(v);
+            let recon = ((hi as i64) << 44 >> 44 << 12).wrapping_add(lo as i64);
+            assert_eq!(recon, v, "v={v:#x} hi={hi:#x} lo={lo:#x}");
+        }
+    }
+
+    #[test]
+    fn b_and_j_patch_roundtrip() {
+        use crate::rv64::decode::decode;
+        use crate::rv64::Inst;
+        // beq x0, x0, 0 placeholder
+        let mut buf = 0x0000_0063u32.to_le_bytes().to_vec();
+        patch_b(&mut buf, 0, -8);
+        match decode(u32::from_le_bytes(buf[0..4].try_into().unwrap())) {
+            Inst::Branch { imm, .. } => assert_eq!(imm, -8),
+            other => panic!("{other:?}"),
+        }
+        let mut buf = 0x0000_006fu32.to_le_bytes().to_vec(); // jal x0, 0
+        patch_j(&mut buf, 0, 0x12344);
+        match decode(u32::from_le_bytes(buf[0..4].try_into().unwrap())) {
+            Inst::Jal { imm, .. } => assert_eq!(imm, 0x12344),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn addsub_bytes() {
+        let mut buf = vec![10, 0, 0, 0];
+        addsub(&mut buf, 0, 4, 5, false);
+        assert_eq!(buf, vec![15, 0, 0, 0]);
+        addsub(&mut buf, 0, 4, 20, true);
+        assert_eq!(u32::from_le_bytes(buf[0..4].try_into().unwrap()), (15u32).wrapping_sub(20));
+    }
+}

@@ -1,0 +1,79 @@
+//! ELF64 I/O substrate.
+//!
+//! This environment has a riscv64 clang but **no riscv linker**, so FASE
+//! ships its own: [`link`] consumes ET_REL objects (clang
+//! `--target=riscv64 -mcmodel=medany -mno-relax`) and produces static
+//! ET_EXEC images (`fase-ld`). [`read`] parses both relocatable inputs and
+//! executables (the coordinator's loader uses [`read::Executable`]).
+
+pub mod link;
+pub mod read;
+pub mod write;
+
+pub use link::{link, LinkOptions};
+pub use read::{Executable, Object, Segment};
+
+/// ELF constants used across the module.
+pub mod consts {
+    pub const EM_RISCV: u16 = 243;
+    pub const ET_REL: u16 = 1;
+    pub const ET_EXEC: u16 = 2;
+    pub const SHT_PROGBITS: u32 = 1;
+    pub const SHT_SYMTAB: u32 = 2;
+    pub const SHT_STRTAB: u32 = 3;
+    pub const SHT_RELA: u32 = 4;
+    pub const SHT_NOBITS: u32 = 8;
+    pub const SHF_ALLOC: u64 = 2;
+    pub const SHN_UNDEF: u16 = 0;
+    pub const SHN_ABS: u16 = 0xfff1;
+    pub const SHN_COMMON: u16 = 0xfff2;
+    pub const STB_LOCAL: u8 = 0;
+    pub const STB_GLOBAL: u8 = 1;
+    pub const STB_WEAK: u8 = 2;
+    pub const PT_LOAD: u32 = 1;
+    pub const PF_X: u32 = 1;
+    pub const PF_W: u32 = 2;
+    pub const PF_R: u32 = 4;
+
+    // RISC-V relocation types (psABI).
+    pub const R_RISCV_32: u32 = 1;
+    pub const R_RISCV_64: u32 = 2;
+    pub const R_RISCV_BRANCH: u32 = 16;
+    pub const R_RISCV_JAL: u32 = 17;
+    pub const R_RISCV_CALL: u32 = 18;
+    pub const R_RISCV_CALL_PLT: u32 = 19;
+    pub const R_RISCV_PCREL_HI20: u32 = 23;
+    pub const R_RISCV_PCREL_LO12_I: u32 = 24;
+    pub const R_RISCV_PCREL_LO12_S: u32 = 25;
+    pub const R_RISCV_HI20: u32 = 26;
+    pub const R_RISCV_LO12_I: u32 = 27;
+    pub const R_RISCV_LO12_S: u32 = 28;
+    pub const R_RISCV_ADD8: u32 = 33;
+    pub const R_RISCV_ADD16: u32 = 34;
+    pub const R_RISCV_ADD32: u32 = 35;
+    pub const R_RISCV_ADD64: u32 = 36;
+    pub const R_RISCV_SUB8: u32 = 37;
+    pub const R_RISCV_SUB16: u32 = 38;
+    pub const R_RISCV_SUB32: u32 = 39;
+    pub const R_RISCV_SUB64: u32 = 40;
+    pub const R_RISCV_RELAX: u32 = 51;
+    pub const R_RISCV_SUB6: u32 = 52;
+    pub const R_RISCV_SET6: u32 = 53;
+    pub const R_RISCV_SET8: u32 = 54;
+    pub const R_RISCV_SET16: u32 = 55;
+    pub const R_RISCV_SET32: u32 = 56;
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ElfError {
+    #[error("not an ELF file")]
+    BadMagic,
+    #[error("unsupported ELF: {0}")]
+    Unsupported(String),
+    #[error("malformed ELF: {0}")]
+    Malformed(String),
+    #[error("link error: {0}")]
+    Link(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}

@@ -1,0 +1,301 @@
+//! ELF64 little-endian parsing: relocatable objects (linker input) and
+//! executables (coordinator loader input).
+
+use super::consts::*;
+use super::ElfError;
+
+fn rd16(b: &[u8], o: usize) -> u16 {
+    u16::from_le_bytes(b[o..o + 2].try_into().unwrap())
+}
+fn rd32(b: &[u8], o: usize) -> u32 {
+    u32::from_le_bytes(b[o..o + 4].try_into().unwrap())
+}
+fn rd64(b: &[u8], o: usize) -> u64 {
+    u64::from_le_bytes(b[o..o + 8].try_into().unwrap())
+}
+
+#[derive(Debug, Clone)]
+pub struct SectionHeader {
+    pub name: String,
+    pub sh_type: u32,
+    pub flags: u64,
+    pub addr: u64,
+    pub offset: u64,
+    pub size: u64,
+    pub link: u32,
+    pub info: u32,
+    pub addralign: u64,
+    pub entsize: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Symbol {
+    pub name: String,
+    pub value: u64,
+    pub size: u64,
+    pub bind: u8,
+    pub kind: u8,
+    pub shndx: u16,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Rela {
+    pub offset: u64,
+    pub rtype: u32,
+    pub sym: u32,
+    pub addend: i64,
+}
+
+/// A parsed relocatable object.
+pub struct Object {
+    pub sections: Vec<SectionHeader>,
+    pub section_data: Vec<Vec<u8>>,
+    pub symbols: Vec<Symbol>,
+    /// (target section index, relocations)
+    pub relas: Vec<(usize, Vec<Rela>)>,
+    pub name: String,
+}
+
+fn check_header(data: &[u8]) -> Result<(), ElfError> {
+    if data.len() < 64 || &data[0..4] != b"\x7fELF" {
+        return Err(ElfError::BadMagic);
+    }
+    if data[4] != 2 || data[5] != 1 {
+        return Err(ElfError::Unsupported("need ELF64 little-endian".into()));
+    }
+    let machine = rd16(data, 18);
+    if machine != EM_RISCV {
+        return Err(ElfError::Unsupported(format!("machine {machine}, want RISC-V")));
+    }
+    Ok(())
+}
+
+fn parse_sections(data: &[u8]) -> Result<(Vec<SectionHeader>, Vec<Vec<u8>>), ElfError> {
+    let shoff = rd64(data, 0x28) as usize;
+    let shentsize = rd16(data, 0x3a) as usize;
+    let shnum = rd16(data, 0x3c) as usize;
+    let shstrndx = rd16(data, 0x3e) as usize;
+    if shoff + shentsize * shnum > data.len() {
+        return Err(ElfError::Malformed("section headers out of range".into()));
+    }
+    let raw_at = |i: usize| &data[shoff + i * shentsize..shoff + (i + 1) * shentsize];
+    // section name string table
+    let strtab_hdr = raw_at(shstrndx);
+    let stroff = rd64(strtab_hdr, 0x18) as usize;
+    let strsize = rd64(strtab_hdr, 0x20) as usize;
+    let shstr = &data[stroff..stroff + strsize];
+    let mut sections = Vec::with_capacity(shnum);
+    let mut section_data = Vec::with_capacity(shnum);
+    for i in 0..shnum {
+        let s = raw_at(i);
+        let name_off = rd32(s, 0) as usize;
+        let name = cstr(shstr, name_off);
+        let sh_type = rd32(s, 4);
+        let offset = rd64(s, 0x18);
+        let size = rd64(s, 0x20);
+        let hdr = SectionHeader {
+            name,
+            sh_type,
+            flags: rd64(s, 8),
+            addr: rd64(s, 0x10),
+            offset,
+            size,
+            link: rd32(s, 0x28),
+            info: rd32(s, 0x2c),
+            addralign: rd64(s, 0x30),
+            entsize: rd64(s, 0x38),
+        };
+        let bytes = if sh_type == SHT_NOBITS || size == 0 {
+            Vec::new()
+        } else {
+            let (o, n) = (offset as usize, size as usize);
+            if o + n > data.len() {
+                return Err(ElfError::Malformed(format!("section {i} data out of range")));
+            }
+            data[o..o + n].to_vec()
+        };
+        sections.push(hdr);
+        section_data.push(bytes);
+    }
+    Ok((sections, section_data))
+}
+
+fn cstr(strs: &[u8], off: usize) -> String {
+    if off >= strs.len() {
+        return String::new();
+    }
+    let end = strs[off..].iter().position(|&b| b == 0).unwrap_or(0) + off;
+    String::from_utf8_lossy(&strs[off..end]).into_owned()
+}
+
+impl Object {
+    pub fn parse(data: &[u8], name: &str) -> Result<Object, ElfError> {
+        check_header(data)?;
+        let etype = rd16(data, 16);
+        if etype != ET_REL {
+            return Err(ElfError::Unsupported(format!("type {etype}, want ET_REL")));
+        }
+        let (sections, section_data) = parse_sections(data)?;
+
+        // Symbols.
+        let mut symbols = Vec::new();
+        if let Some(symtab_idx) = sections.iter().position(|s| s.sh_type == SHT_SYMTAB) {
+            let symtab = &section_data[symtab_idx];
+            let strtab = &section_data[sections[symtab_idx].link as usize];
+            let n = symtab.len() / 24;
+            for i in 0..n {
+                let e = &symtab[i * 24..(i + 1) * 24];
+                let name_off = rd32(e, 0) as usize;
+                let info = e[4];
+                symbols.push(Symbol {
+                    name: cstr(strtab, name_off),
+                    value: rd64(e, 8),
+                    size: rd64(e, 16),
+                    bind: info >> 4,
+                    kind: info & 0xf,
+                    shndx: rd16(e, 6),
+                });
+            }
+        }
+
+        // Relocations.
+        let mut relas = Vec::new();
+        for (i, s) in sections.iter().enumerate() {
+            if s.sh_type != SHT_RELA {
+                continue;
+            }
+            let target = s.info as usize;
+            let body = &section_data[i];
+            let n = body.len() / 24;
+            let mut list = Vec::with_capacity(n);
+            for j in 0..n {
+                let e = &body[j * 24..(j + 1) * 24];
+                let info = rd64(e, 8);
+                list.push(Rela {
+                    offset: rd64(e, 0),
+                    rtype: (info & 0xffff_ffff) as u32,
+                    sym: (info >> 32) as u32,
+                    addend: rd64(e, 16) as i64,
+                });
+            }
+            relas.push((target, list));
+        }
+        Ok(Object { sections, section_data, symbols, relas, name: name.to_string() })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Object, ElfError> {
+        let data = std::fs::read(path)?;
+        Object::parse(&data, &path.display().to_string())
+    }
+}
+
+/// One loadable segment of an executable.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub vaddr: u64,
+    pub memsz: u64,
+    pub flags: u32,
+    pub data: Vec<u8>, // filesz bytes; rest of memsz is zero
+}
+
+impl Segment {
+    pub fn readable(&self) -> bool {
+        self.flags & PF_R != 0
+    }
+    pub fn writable(&self) -> bool {
+        self.flags & PF_W != 0
+    }
+    pub fn executable(&self) -> bool {
+        self.flags & PF_X != 0
+    }
+}
+
+/// A parsed static executable, ready for the coordinator's loader.
+pub struct Executable {
+    pub entry: u64,
+    pub segments: Vec<Segment>,
+    /// Global symbols (diagnostics / test hooks).
+    pub symbols: Vec<Symbol>,
+}
+
+impl Executable {
+    pub fn parse(data: &[u8]) -> Result<Executable, ElfError> {
+        check_header(data)?;
+        let etype = rd16(data, 16);
+        if etype != ET_EXEC {
+            return Err(ElfError::Unsupported(format!("type {etype}, want ET_EXEC")));
+        }
+        let entry = rd64(data, 0x18);
+        let phoff = rd64(data, 0x20) as usize;
+        let phentsize = rd16(data, 0x36) as usize;
+        let phnum = rd16(data, 0x38) as usize;
+        let mut segments = Vec::new();
+        for i in 0..phnum {
+            let p = &data[phoff + i * phentsize..phoff + (i + 1) * phentsize];
+            if rd32(p, 0) != PT_LOAD {
+                continue;
+            }
+            let offset = rd64(p, 8) as usize;
+            let filesz = rd64(p, 0x20) as usize;
+            if offset + filesz > data.len() {
+                return Err(ElfError::Malformed("phdr file range".into()));
+            }
+            segments.push(Segment {
+                vaddr: rd64(p, 0x10),
+                memsz: rd64(p, 0x28),
+                flags: rd32(p, 4),
+                data: data[offset..offset + filesz].to_vec(),
+            });
+        }
+        // Optional symtab for diagnostics.
+        let mut symbols = Vec::new();
+        if let Ok((sections, section_data)) = parse_sections(data) {
+            if let Some(symtab_idx) = sections.iter().position(|s| s.sh_type == SHT_SYMTAB) {
+                let symtab = &section_data[symtab_idx];
+                let strtab = &section_data[sections[symtab_idx].link as usize];
+                for i in 0..symtab.len() / 24 {
+                    let e = &symtab[i * 24..(i + 1) * 24];
+                    symbols.push(Symbol {
+                        name: cstr(strtab, rd32(e, 0) as usize),
+                        value: rd64(e, 8),
+                        size: rd64(e, 16),
+                        bind: e[4] >> 4,
+                        kind: e[4] & 0xf,
+                        shndx: rd16(e, 6),
+                    });
+                }
+            }
+        }
+        Ok(Executable { entry, segments, symbols })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Executable, ElfError> {
+        let data = std::fs::read(path)?;
+        Executable::parse(&data)
+    }
+
+    pub fn symbol(&self, name: &str) -> Option<&Symbol> {
+        self.symbols.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_non_elf() {
+        assert!(matches!(Object::parse(b"hello world, definitely not elf....................................", "x"),
+            Err(ElfError::BadMagic)));
+    }
+
+    #[test]
+    fn rejects_wrong_machine() {
+        let mut fake = vec![0u8; 64];
+        fake[0..4].copy_from_slice(b"\x7fELF");
+        fake[4] = 2;
+        fake[5] = 1;
+        fake[18] = 62; // x86-64
+        assert!(matches!(Object::parse(&fake, "x"), Err(ElfError::Unsupported(_))));
+    }
+}

@@ -1,0 +1,249 @@
+//! ET_EXEC writer: serialize a [`LinkedImage`] into a static RV64 ELF
+//! executable with PT_LOAD program headers and a diagnostic `.symtab`.
+
+use super::consts::*;
+use super::link::{LinkedImage, OutKind};
+
+const EHSIZE: usize = 64;
+const PHENT: usize = 56;
+const SHENT: usize = 64;
+
+struct Buf(Vec<u8>);
+
+impl Buf {
+    fn w16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn w32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn w64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn pad_to(&mut self, n: usize) {
+        self.0.resize(n, 0);
+    }
+}
+
+pub fn write_exec(img: &LinkedImage) -> Vec<u8> {
+    // Loadable sections with bytes (skip empty; .bss loads zero pages).
+    let loadable: Vec<&super::link::OutSection> =
+        img.sections.iter().filter(|s| s.memsz > 0).collect();
+    let phnum = loadable.len();
+
+    // Layout: ehdr | phdrs | section payloads (vaddr-congruent) | symtab |
+    // strtab | shstrtab | shdrs
+    let mut off = EHSIZE + PHENT * phnum;
+    let mut file_off = Vec::new();
+    for s in &loadable {
+        if !s.data.is_empty() {
+            // keep offset congruent with vaddr modulo page for mmap-style loaders
+            let want = (s.vaddr as usize) & 0xfff;
+            if off % 0x1000 != want {
+                off += (0x1000 + want - off % 0x1000) % 0x1000;
+            }
+        }
+        file_off.push(off);
+        off += s.data.len();
+    }
+
+    // Symbol table.
+    let mut strtab = vec![0u8];
+    let mut symtab: Vec<u8> = vec![0u8; 24]; // null symbol
+    for (name, addr, size) in &img.symbols {
+        let name_off = strtab.len() as u32;
+        strtab.extend_from_slice(name.as_bytes());
+        strtab.push(0);
+        let mut e = Vec::with_capacity(24);
+        e.extend_from_slice(&name_off.to_le_bytes());
+        e.push((STB_GLOBAL << 4) | 0); // NOTYPE
+        e.push(0);
+        e.extend_from_slice(&1u16.to_le_bytes()); // pretend section 1
+        e.extend_from_slice(&addr.to_le_bytes());
+        e.extend_from_slice(&size.to_le_bytes());
+        symtab.extend_from_slice(&e);
+    }
+    let symtab_off = off;
+    off += symtab.len();
+    let strtab_off = off;
+    off += strtab.len();
+
+    // Section header string table.
+    let mut shstr = vec![0u8];
+    let mut shname = |n: &str| -> u32 {
+        let o = shstr.len() as u32;
+        shstr.extend_from_slice(n.as_bytes());
+        shstr.push(0);
+        o
+    };
+    let sec_names: Vec<u32> = img.sections.iter().map(|s| shname(s.kind.name())).collect();
+    let n_symtab = shname(".symtab");
+    let n_strtab = shname(".strtab");
+    let n_shstrtab = shname(".shstrtab");
+    let shstr_off = off;
+    off += shstr.len();
+    let shoff = off;
+    let shnum = 1 + img.sections.len() + 3; // null + 4 sections + symtab/strtab/shstrtab
+
+    let mut b = Buf(Vec::with_capacity(shoff + SHENT * shnum));
+    // ---- ELF header ----
+    b.0.extend_from_slice(b"\x7fELF");
+    b.0.push(2); // 64-bit
+    b.0.push(1); // LE
+    b.0.push(1); // version
+    b.0.extend_from_slice(&[0; 9]);
+    b.w16(ET_EXEC);
+    b.w16(EM_RISCV);
+    b.w32(1);
+    b.w64(img.entry);
+    b.w64(EHSIZE as u64); // phoff
+    b.w64(shoff as u64); // shoff
+    b.w32(0x4); // e_flags: double-float ABI, no RVC
+    b.w16(EHSIZE as u16);
+    b.w16(PHENT as u16);
+    b.w16(phnum as u16);
+    b.w16(SHENT as u16);
+    b.w16(shnum as u16);
+    b.w16((shnum - 1) as u16); // shstrtab index
+
+    // ---- Program headers ----
+    for (i, s) in loadable.iter().enumerate() {
+        b.w32(PT_LOAD);
+        b.w32(s.kind.flags());
+        b.w64(file_off[i] as u64);
+        b.w64(s.vaddr);
+        b.w64(s.vaddr);
+        b.w64(s.data.len() as u64);
+        b.w64(s.memsz);
+        b.w64(0x1000);
+    }
+
+    // ---- Payloads ----
+    for (i, s) in loadable.iter().enumerate() {
+        b.pad_to(file_off[i]);
+        b.0.extend_from_slice(&s.data);
+    }
+    b.pad_to(symtab_off);
+    b.0.extend_from_slice(&symtab);
+    b.pad_to(strtab_off);
+    b.0.extend_from_slice(&strtab);
+    b.pad_to(shstr_off);
+    b.0.extend_from_slice(&shstr);
+
+    // ---- Section headers ----
+    b.pad_to(shoff);
+    // null
+    b.0.extend_from_slice(&[0u8; SHENT]);
+    // the four output sections
+    let mut li = 0;
+    for (i, s) in img.sections.iter().enumerate() {
+        let is_bss = s.kind == OutKind::Bss;
+        let foff = if s.memsz > 0 {
+            let o = file_off.get(li).copied().unwrap_or(0);
+            li += 1;
+            o
+        } else {
+            0
+        };
+        b.w32(sec_names[i]);
+        b.w32(if is_bss { SHT_NOBITS } else { SHT_PROGBITS });
+        let mut fl = SHF_ALLOC;
+        if s.kind.flags() & PF_W != 0 {
+            fl |= 0x1;
+        }
+        if s.kind.flags() & PF_X != 0 {
+            fl |= 0x4;
+        }
+        b.w64(fl);
+        b.w64(s.vaddr);
+        b.w64(foff as u64);
+        b.w64(s.memsz);
+        b.w32(0);
+        b.w32(0);
+        b.w64(0x1000);
+        b.w64(0);
+    }
+    // symtab
+    b.w32(n_symtab);
+    b.w32(SHT_SYMTAB);
+    b.w64(0);
+    b.w64(0);
+    b.w64(symtab_off as u64);
+    b.w64(symtab.len() as u64);
+    b.w32(1 + img.sections.len() as u32 + 1); // link -> strtab index
+    b.w32(1); // one local symbol (null)
+    b.w64(8);
+    b.w64(24);
+    // strtab
+    b.w32(n_strtab);
+    b.w32(SHT_STRTAB);
+    b.w64(0);
+    b.w64(0);
+    b.w64(strtab_off as u64);
+    b.w64(strtab.len() as u64);
+    b.w32(0);
+    b.w32(0);
+    b.w64(1);
+    b.w64(0);
+    // shstrtab
+    b.w32(n_shstrtab);
+    b.w32(SHT_STRTAB);
+    b.w64(0);
+    b.w64(0);
+    b.w64(shstr_off as u64);
+    b.w64(shstr.len() as u64);
+    b.w32(0);
+    b.w32(0);
+    b.w64(1);
+    b.w64(0);
+
+    b.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elfio::link::{LinkedImage, OutSection};
+    use crate::elfio::read::Executable;
+
+    fn tiny_image() -> LinkedImage {
+        LinkedImage {
+            entry: 0x11000,
+            sections: [
+                OutSection {
+                    kind: OutKind::Text,
+                    vaddr: 0x11000,
+                    data: vec![0x13, 0, 0, 0],
+                    memsz: 4,
+                },
+                OutSection { kind: OutKind::Rodata, vaddr: 0x12000, data: vec![1, 2, 3], memsz: 3 },
+                OutSection { kind: OutKind::Data, vaddr: 0x13000, data: vec![9], memsz: 1 },
+                OutSection { kind: OutKind::Bss, vaddr: 0x14000, data: Vec::new(), memsz: 64 },
+            ],
+            symbols: vec![("_start".into(), 0x11000, 0), ("counter".into(), 0x14000, 8)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_reader() {
+        let bytes = write_exec(&tiny_image());
+        let exe = Executable::parse(&bytes).expect("parses");
+        assert_eq!(exe.entry, 0x11000);
+        assert_eq!(exe.segments.len(), 4);
+        let text = &exe.segments[0];
+        assert!(text.executable());
+        assert_eq!(text.data, vec![0x13, 0, 0, 0]);
+        let bss = &exe.segments[3];
+        assert_eq!(bss.memsz, 64);
+        assert!(bss.data.is_empty());
+        assert!(bss.writable());
+        assert_eq!(exe.symbol("counter").map(|s| s.value), Some(0x14000));
+    }
+
+    #[test]
+    fn file_offsets_congruent_with_vaddr() {
+        let bytes = write_exec(&tiny_image());
+        let exe = Executable::parse(&bytes).unwrap();
+        assert_eq!(exe.segments[0].vaddr & 0xfff, 0);
+    }
+}

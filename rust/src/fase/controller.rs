@@ -1,0 +1,477 @@
+//! The FASE hardware controller (paper §IV-C, Fig 4).
+//!
+//! Executes HTP requests against the target using *only* the Table-I CPU
+//! interface: staging registers through the `Reg` handshake, injecting
+//! Table-II instruction sequences through the `Inject` port, and keeping
+//! the per-core HFutex mask caches. All of its work is costed in target
+//! cycles and reported back so the channel layer can advance the timeline.
+
+use super::hfutex::HfMask;
+use super::htp::{HfOp, Req, Resp};
+use crate::iface::{CpuInterface, InjectResult};
+use crate::rv64::csr;
+use crate::rv64::decode::encode;
+use crate::soc::Machine;
+
+/// Futex syscall constants the Next-FSM filter logic recognises.
+const SYS_FUTEX: u64 = 98;
+const FUTEX_WAKE: u64 = 1;
+const FUTEX_CMD_MASK: u64 = 0x7f; // strip FUTEX_PRIVATE_FLAG
+
+/// Cost accounting for one controller operation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    /// Target cycles the controller + injected instructions consumed.
+    pub cycles: u64,
+    /// Reg-port handshakes performed.
+    pub reg_ops: u64,
+    /// Instructions injected.
+    pub injects: u64,
+}
+
+impl ExecStats {
+    /// Merge another operation's costs (multi-op FSM sequences).
+    pub fn add(&mut self, o: ExecStats) {
+        self.cycles += o.cycles;
+        self.reg_ops += o.reg_ops;
+        self.injects += o.injects;
+    }
+}
+
+/// Outcome of draining one exception event in the Next FSM.
+pub enum NextOutcome {
+    /// Exception reported to the host.
+    Report { resp: Resp, stats: ExecStats },
+    /// Redundant futex wake handled locally by HFutex — nothing sent.
+    Filtered { stats: ExecStats },
+}
+
+pub struct Controller {
+    masks: Vec<HfMask>,
+    pub hfutex_enabled: bool,
+    /// Fixed FSM cost to parse a request header.
+    pub parse_cycles: u64,
+    /// Total wakes filtered (Fig 17 metric).
+    pub filtered_wakes: u64,
+}
+
+impl Controller {
+    pub fn new(n_cpus: usize, hfutex_enabled: bool, mask_size: usize) -> Controller {
+        Controller {
+            masks: (0..n_cpus).map(|_| HfMask::new(mask_size)).collect(),
+            hfutex_enabled,
+            parse_cycles: 8,
+            filtered_wakes: 0,
+        }
+    }
+
+    // ---- Reg-port staging helpers ----
+
+    fn reg_read(&self, m: &mut Machine, cpu: usize, idx: u8, st: &mut ExecStats) -> u64 {
+        st.reg_ops += 1;
+        st.cycles += m.model.reg_handshake;
+        CpuInterface::reg_read(m, cpu, idx)
+    }
+
+    fn reg_write(&self, m: &mut Machine, cpu: usize, idx: u8, val: u64, st: &mut ExecStats) {
+        st.reg_ops += 1;
+        st.cycles += m.model.reg_handshake;
+        CpuInterface::reg_write(m, cpu, idx, val);
+    }
+
+    fn inject(
+        &self,
+        m: &mut Machine,
+        cpu: usize,
+        raw: u32,
+        st: &mut ExecStats,
+    ) -> Result<(), Resp> {
+        st.injects += 1;
+        match CpuInterface::inject(m, cpu, raw) {
+            InjectResult::Done { cycles } => {
+                st.cycles += cycles;
+                Ok(())
+            }
+            InjectResult::Fault(t) => Err(Resp::Fault(t.cause() as u8)),
+        }
+    }
+
+    /// Load a 64-bit immediate into a staged register — in hardware this is
+    /// a direct Reg-port write from **Arg Regs** (Fig 4), not an inject.
+    fn set_reg_imm(&self, m: &mut Machine, cpu: usize, idx: u8, val: u64, st: &mut ExecStats) {
+        self.reg_write(m, cpu, idx, val, st);
+    }
+
+    /// Stage (save) scratch registers; returns old values.
+    fn stage(&self, m: &mut Machine, cpu: usize, idxs: &[u8], st: &mut ExecStats) -> Vec<u64> {
+        idxs.iter().map(|&i| self.reg_read(m, cpu, i, st)).collect()
+    }
+
+    fn unstage(
+        &self,
+        m: &mut Machine,
+        cpu: usize,
+        idxs: &[u8],
+        olds: &[u64],
+        st: &mut ExecStats,
+    ) {
+        for (&i, &v) in idxs.iter().zip(olds) {
+            self.reg_write(m, cpu, i, v, st);
+        }
+    }
+
+    /// Execute a non-`Next` HTP request (Table II execution patterns).
+    pub fn execute(&mut self, m: &mut Machine, req: &Req) -> (Resp, ExecStats) {
+        let mut st = ExecStats { cycles: self.parse_cycles, ..Default::default() };
+        let resp = match self.execute_inner(m, req, &mut st) {
+            Ok(r) => r,
+            Err(fault) => fault,
+        };
+        (resp, st)
+    }
+
+    fn execute_inner(
+        &mut self,
+        m: &mut Machine,
+        req: &Req,
+        st: &mut ExecStats,
+    ) -> Result<Resp, Resp> {
+        match req {
+            Req::Next => unreachable!("Next is driven via Controller::next_event"),
+            Req::Redirect { cpu, pc, switch } => {
+                let cpu = *cpu as usize;
+                if *switch {
+                    self.masks[cpu].clear();
+                }
+                let old = self.stage(m, cpu, &[1], st);
+                // MPP <- U (csrc mstatus, 3<<11)
+                self.set_reg_imm(m, cpu, 1, 3 << 11, st);
+                self.inject(m, cpu, encode::csrrc(0, csr::MSTATUS, 1), st)?;
+                // mepc <- target pc ; restore x1 ; mret
+                self.set_reg_imm(m, cpu, 1, *pc, st);
+                self.inject(m, cpu, encode::csrrw(0, csr::MEPC, 1), st)?;
+                self.unstage(m, cpu, &[1], &old, st);
+                self.inject(m, cpu, encode::mret(), st)?;
+                m.set_stop_fetch(cpu, false);
+                Ok(Resp::Ok)
+            }
+            Req::SetMmu { cpu, satp } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1], st);
+                self.set_reg_imm(m, cpu, 1, *satp, st);
+                self.inject(m, cpu, encode::csrrw(0, csr::SATP, 1), st)?;
+                self.unstage(m, cpu, &[1], &old, st);
+                Ok(Resp::Ok)
+            }
+            Req::FlushTlb { cpu } => {
+                self.inject(m, *cpu as usize, encode::sfence_vma(), st)?;
+                Ok(Resp::Ok)
+            }
+            Req::SyncI { cpu } => {
+                self.inject(m, *cpu as usize, encode::fence_i(), st)?;
+                Ok(Resp::Ok)
+            }
+            Req::HFutex { cpu, op, addr } => {
+                let mask = &mut self.masks[*cpu as usize];
+                match op {
+                    HfOp::Add => mask.insert(*addr),
+                    HfOp::ClearAddr => mask.remove(*addr),
+                    HfOp::ClearAll => mask.clear(),
+                }
+                st.cycles += 2;
+                Ok(Resp::Ok)
+            }
+            Req::RegR { cpu, idx } => {
+                let v = self.reg_read(m, *cpu as usize, *idx, st);
+                Ok(Resp::Word(v))
+            }
+            Req::RegW { cpu, idx, val } => {
+                self.reg_write(m, *cpu as usize, *idx, *val, st);
+                Ok(Resp::Ok)
+            }
+            Req::MemR { cpu, addr } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1, 2], st);
+                self.set_reg_imm(m, cpu, 1, *addr, st);
+                self.inject(m, cpu, encode::ld(2, 1, 0), st)?;
+                let v = self.reg_read(m, cpu, 2, st);
+                self.unstage(m, cpu, &[1, 2], &old, st);
+                Ok(Resp::Word(v))
+            }
+            Req::MemW { cpu, addr, val } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1, 2], st);
+                self.set_reg_imm(m, cpu, 1, *addr, st);
+                self.set_reg_imm(m, cpu, 2, *val, st);
+                self.inject(m, cpu, encode::sd(2, 1, 0), st)?;
+                self.unstage(m, cpu, &[1, 2], &old, st);
+                Ok(Resp::Word(0)) // ack carries status word
+            }
+            Req::PageS { cpu, ppn, val } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1, 2], st);
+                self.set_reg_imm(m, cpu, 1, ppn << 12, st);
+                self.set_reg_imm(m, cpu, 2, *val, st);
+                for _ in 0..512 {
+                    self.inject(m, cpu, encode::sd(2, 1, 0), st)?;
+                    self.inject(m, cpu, encode::addi(1, 1, 8), st)?;
+                }
+                self.unstage(m, cpu, &[1, 2], &old, st);
+                Ok(Resp::Ok)
+            }
+            Req::PageCp { cpu, src_ppn, dst_ppn } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1, 2, 3], st);
+                self.set_reg_imm(m, cpu, 1, src_ppn << 12, st);
+                self.set_reg_imm(m, cpu, 2, dst_ppn << 12, st);
+                for _ in 0..512 {
+                    self.inject(m, cpu, encode::ld(3, 1, 0), st)?;
+                    self.inject(m, cpu, encode::sd(3, 2, 0), st)?;
+                    self.inject(m, cpu, encode::addi(1, 1, 8), st)?;
+                    self.inject(m, cpu, encode::addi(2, 2, 8), st)?;
+                }
+                self.unstage(m, cpu, &[1, 2, 3], &old, st);
+                Ok(Resp::Ok)
+            }
+            Req::PageR { cpu, ppn } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1, 2], st);
+                self.set_reg_imm(m, cpu, 1, ppn << 12, st);
+                let mut page = Box::new([0u8; 4096]);
+                // Batched: 8 loads per addi iteration (paper §IV-C) — the
+                // TX buffer streams words out as they arrive.
+                for blk in 0..64 {
+                    for i in 0..8u64 {
+                        self.inject(m, cpu, encode::ld(2, 1, (i * 8) as i32), st)?;
+                        let v = self.reg_read(m, cpu, 2, st);
+                        let off = (blk * 64 + i * 8) as usize;
+                        page[off..off + 8].copy_from_slice(&v.to_le_bytes());
+                    }
+                    self.inject(m, cpu, encode::addi(1, 1, 64), st)?;
+                }
+                self.unstage(m, cpu, &[1, 2], &old, st);
+                Ok(Resp::Page(page))
+            }
+            Req::PageW { cpu, ppn, data } => {
+                let cpu = *cpu as usize;
+                let old = self.stage(m, cpu, &[1, 2], st);
+                self.set_reg_imm(m, cpu, 1, ppn << 12, st);
+                for blk in 0..64usize {
+                    for i in 0..8usize {
+                        let off = blk * 64 + i * 8;
+                        let v = u64::from_le_bytes(data[off..off + 8].try_into().unwrap());
+                        self.reg_write(m, cpu, 2, v, st);
+                        self.inject(m, cpu, encode::sd(2, 1, (i * 8) as i32), st)?;
+                    }
+                    self.inject(m, cpu, encode::addi(1, 1, 64), st)?;
+                }
+                self.unstage(m, cpu, &[1, 2], &old, st);
+                Ok(Resp::Ok)
+            }
+            Req::Tick => {
+                st.cycles += 1;
+                Ok(Resp::Word(m.now))
+            }
+            Req::UTick { cpu } => {
+                st.cycles += 1;
+                Ok(Resp::Word(m.harts[*cpu as usize].utick))
+            }
+            Req::Interrupt { cpu } => {
+                m.raise_interrupt(*cpu as usize);
+                Ok(Resp::Ok)
+            }
+        }
+    }
+
+    /// Drain one exception event (the `Next` FSM body): read the cause
+    /// CSRs via injection, then either report to the host or — for a
+    /// redundant futex wake hitting the HFutex mask — finish it locally.
+    pub fn next_event(&mut self, m: &mut Machine) -> Option<NextOutcome> {
+        let ev = m.pop_exception()?;
+        let cpu = ev.cpu;
+        let mut st = ExecStats::default();
+        // csrr x1, {mcause,mepc,mtval} with x1 staged around the sequence.
+        let old = self.stage(m, cpu, &[1], &mut st);
+        let rd_csr = |this: &Controller, m: &mut Machine, c: u16, st: &mut ExecStats| {
+            this.inject(m, cpu, encode::csrrs(1, c, 0), st)
+                .expect("csr read cannot fault");
+            this.reg_read(m, cpu, 1, st)
+        };
+        let cause = rd_csr(self, m, csr::MCAUSE, &mut st);
+        let epc = rd_csr(self, m, csr::MEPC, &mut st);
+        let tval = rd_csr(self, m, csr::MTVAL, &mut st);
+        self.unstage(m, cpu, &[1], &old, &mut st);
+
+        // HFutex filter: ecall + a7==futex + wake op + address in mask.
+        if self.hfutex_enabled && cause == 8 {
+            let a7 = self.reg_read(m, cpu, 17, &mut st);
+            if a7 == SYS_FUTEX {
+                let a0 = self.reg_read(m, cpu, 10, &mut st);
+                let a1 = self.reg_read(m, cpu, 11, &mut st);
+                if a1 & FUTEX_CMD_MASK == FUTEX_WAKE && self.masks[cpu].contains(a0) {
+                    // Local completion: a0 <- 0, mepc += 4, mret.
+                    self.filtered_wakes += 1;
+                    self.masks[cpu].hits += 1;
+                    self.reg_write(m, cpu, 10, 0, &mut st);
+                    let old = self.stage(m, cpu, &[1], &mut st);
+                    self.set_reg_imm(m, cpu, 1, epc + 4, &mut st);
+                    self.inject(m, cpu, encode::csrrw(0, csr::MEPC, 1), &mut st)
+                        .expect("mepc write cannot fault");
+                    self.unstage(m, cpu, &[1], &old, &mut st);
+                    self.inject(m, cpu, encode::mret(), &mut st)
+                        .expect("mret cannot fault");
+                    m.set_stop_fetch(cpu, false);
+                    return Some(NextOutcome::Filtered { stats: st });
+                }
+            }
+        }
+        Some(NextOutcome::Report {
+            resp: Resp::Exception { cpu: cpu as u8, cause, epc, tval },
+            stats: st,
+        })
+    }
+
+    pub fn mask(&self, cpu: usize) -> &HfMask {
+        &self.masks[cpu]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{Machine, MachineConfig};
+
+    const BASE: u64 = crate::soc::machine::DRAM_BASE;
+
+    fn mk() -> (Machine, Controller) {
+        let m = Machine::new(MachineConfig { n_harts: 2, dram_size: 8 << 20, ..Default::default() });
+        let c = Controller::new(2, true, 8);
+        (m, c)
+    }
+
+    #[test]
+    fn memw_memr_roundtrip_preserves_regs() {
+        let (mut m, mut c) = mk();
+        m.reg_write(0, 1, 111);
+        m.reg_write(0, 2, 222);
+        let (r, st) = c.execute(&mut m, &Req::MemW { cpu: 0, addr: BASE + 0x900, val: 0xabcd });
+        assert_eq!(r, Resp::Word(0));
+        assert!(st.cycles > 0 && st.injects == 1 && st.reg_ops >= 4);
+        let (r, _) = c.execute(&mut m, &Req::MemR { cpu: 0, addr: BASE + 0x900 });
+        assert_eq!(r, Resp::Word(0xabcd));
+        // staged registers restored
+        assert_eq!(m.reg_read(0, 1), 111);
+        assert_eq!(m.reg_read(0, 2), 222);
+    }
+
+    #[test]
+    fn pages_set_copy_read_write() {
+        let (mut m, mut c) = mk();
+        let ppn_a = (BASE + 0x10_0000) >> 12;
+        let ppn_b = (BASE + 0x20_0000) >> 12;
+        let (r, st) = c.execute(&mut m, &Req::PageS { cpu: 0, ppn: ppn_a, val: 0x1111_2222_3333_4444 });
+        assert_eq!(r, Resp::Ok);
+        assert_eq!(st.injects, 1024);
+        assert_eq!(m.ms.phys.read_u64(ppn_a << 12), Some(0x1111_2222_3333_4444));
+        assert_eq!(m.ms.phys.read_u64((ppn_a << 12) + 4088), Some(0x1111_2222_3333_4444));
+        let (r, _) = c.execute(&mut m, &Req::PageCp { cpu: 0, src_ppn: ppn_a, dst_ppn: ppn_b });
+        assert_eq!(r, Resp::Ok);
+        assert_eq!(m.ms.phys.read_u64((ppn_b << 12) + 2048), Some(0x1111_2222_3333_4444));
+        let (r, _) = c.execute(&mut m, &Req::PageR { cpu: 0, ppn: ppn_b });
+        match r {
+            Resp::Page(p) => assert!(p.iter().all(|&b| b == 0x11 || b == 0x22 || b == 0x33 || b == 0x44)),
+            other => panic!("{other:?}"),
+        }
+        let mut data = Box::new([0u8; 4096]);
+        data[0] = 0x5a;
+        data[4095] = 0xa5;
+        let (r, _) = c.execute(&mut m, &Req::PageW { cpu: 0, ppn: ppn_a, data });
+        assert_eq!(r, Resp::Ok);
+        assert_eq!(m.ms.phys.read_u8(ppn_a << 12), Some(0x5a));
+        assert_eq!(m.ms.phys.read_u8((ppn_a << 12) + 4095), Some(0xa5));
+    }
+
+    #[test]
+    fn redirect_starts_user_execution() {
+        let (mut m, mut c) = mk();
+        let code = BASE + 0x1000;
+        m.ms.phys.write_n(code, 4, crate::rv64::decode::encode::addi(10, 0, 5) as u64);
+        m.ms.phys.write_n(code + 4, 4, 0x0000_0073); // ecall
+        let (r, _) = c.execute(&mut m, &Req::Redirect { cpu: 0, pc: code, switch: false });
+        assert_eq!(r, Resp::Ok);
+        assert!(m.run_until_exception(1_000_000));
+        match c.next_event(&mut m) {
+            Some(NextOutcome::Report { resp: Resp::Exception { cpu, cause, epc, .. }, .. }) => {
+                assert_eq!(cpu, 0);
+                assert_eq!(cause, 8);
+                assert_eq!(epc, code + 4);
+            }
+            other => panic!("unexpected: {}", matches!(other, None) as u8),
+        }
+        assert_eq!(m.reg_read(0, 10), 5);
+    }
+
+    #[test]
+    fn hfutex_filters_redundant_wake() {
+        let (mut m, mut c) = mk();
+        let code = BASE + 0x2000;
+        // a0 = futex addr; a1 = FUTEX_WAKE(1); a7 = 98; ecall; ecall again
+        let prog = [
+            encode::addi(10, 0, 0x700),
+            encode::addi(11, 0, 1),
+            encode::addi(17, 0, 98),
+            0x0000_0073u32,
+            0x0000_0073u32,
+        ];
+        for (i, w) in prog.iter().enumerate() {
+            m.ms.phys.write_n(code + 4 * i as u64, 4, *w as u64);
+        }
+        // Host marked 0x700 as a known-redundant wake address.
+        c.execute(&mut m, &Req::HFutex { cpu: 0, op: HfOp::Add, addr: 0x700 });
+        c.execute(&mut m, &Req::Redirect { cpu: 0, pc: code, switch: false });
+        assert!(m.run_until_exception(1_000_000));
+        // First wake: filtered locally, user resumes, second ecall arrives.
+        match c.next_event(&mut m).unwrap() {
+            NextOutcome::Filtered { .. } => {}
+            NextOutcome::Report { .. } => panic!("wake should have been filtered"),
+        }
+        assert_eq!(m.reg_read(0, 10), 0, "filtered wake returns 0");
+        assert!(m.run_until_exception(2_000_000));
+        match c.next_event(&mut m).unwrap() {
+            NextOutcome::Report { resp: Resp::Exception { cause, .. }, .. } => {
+                assert_eq!(cause, 8)
+            }
+            _ => panic!("second ecall must reach the host"),
+        }
+        assert_eq!(c.filtered_wakes, 1);
+    }
+
+    #[test]
+    fn redirect_with_switch_clears_mask() {
+        let (mut m, mut c) = mk();
+        c.execute(&mut m, &Req::HFutex { cpu: 1, op: HfOp::Add, addr: 0xAA });
+        assert!(c.mask(1).contains(0xAA));
+        let code = BASE + 0x3000;
+        m.ms.phys.write_n(code, 4, encode::self_loop() as u64);
+        c.execute(&mut m, &Req::Redirect { cpu: 1, pc: code, switch: true });
+        assert!(c.mask(1).is_empty());
+    }
+
+    #[test]
+    fn tick_and_utick() {
+        let (mut m, mut c) = mk();
+        m.now = 777;
+        let (r, _) = c.execute(&mut m, &Req::Tick);
+        assert_eq!(r, Resp::Word(777));
+        m.harts[1].utick = 55;
+        let (r, _) = c.execute(&mut m, &Req::UTick { cpu: 1 });
+        assert_eq!(r, Resp::Word(55));
+    }
+
+    #[test]
+    fn memr_bad_address_faults() {
+        let (mut m, mut c) = mk();
+        let (r, _) = c.execute(&mut m, &Req::MemR { cpu: 0, addr: 0x10 });
+        assert!(matches!(r, Resp::Fault(_)));
+    }
+}

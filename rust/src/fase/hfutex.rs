@@ -1,0 +1,97 @@
+//! Hardware-Assisted Futex (paper §V-B): a small per-core mask cache that
+//! lets the controller acknowledge redundant `futex_wake` syscalls locally,
+//! skipping the UART round-trip entirely.
+
+/// Per-core HFutex mask cache. Small and FIFO-replaced, like the paper's
+/// "small HFutex Mask Cache".
+#[derive(Debug, Clone)]
+pub struct HfMask {
+    entries: Vec<u64>,
+    cap: usize,
+    next: usize,
+    pub hits: u64,
+}
+
+impl HfMask {
+    pub fn new(cap: usize) -> HfMask {
+        HfMask { entries: Vec::with_capacity(cap), cap, next: 0, hits: 0 }
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        self.entries.contains(&addr)
+    }
+
+    pub fn insert(&mut self, addr: u64) {
+        if self.contains(addr) {
+            return;
+        }
+        if self.entries.len() < self.cap {
+            self.entries.push(addr);
+        } else {
+            self.entries[self.next] = addr;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn remove(&mut self, addr: u64) {
+        self.entries.retain(|&a| a != addr);
+        self.next = 0;
+    }
+
+    /// Thread switch on this core: drop everything.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.next = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut m = HfMask::new(4);
+        m.insert(0x1000);
+        assert!(m.contains(0x1000));
+        assert!(!m.contains(0x2000));
+        m.remove(0x1000);
+        assert!(!m.contains(0x1000));
+    }
+
+    #[test]
+    fn fifo_replacement_at_capacity() {
+        let mut m = HfMask::new(2);
+        m.insert(1);
+        m.insert(2);
+        m.insert(3); // evicts 1
+        assert!(!m.contains(1));
+        assert!(m.contains(2));
+        assert!(m.contains(3));
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let mut m = HfMask::new(2);
+        m.insert(1);
+        m.insert(1);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn clear_on_thread_switch() {
+        let mut m = HfMask::new(4);
+        m.insert(1);
+        m.insert(2);
+        m.clear();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,231 @@
+//! Host-Target Protocol (paper Table II): request/response types and their
+//! exact wire sizes. Byte counts are what Figs 13/16/17 and the §IV-B
+//! ">95% traffic reduction vs direct interface access" claim measure, so
+//! the encoding is defined precisely here.
+//!
+//! Wire format: requests are `[op:1][cpu:1][payload]`, responses are
+//! `[status:1][payload]`. 64-bit fields travel as 8 LE bytes, register
+//! indices as 1 byte, pages as 4096 raw bytes.
+
+/// Host-side HFutex mask maintenance operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HfOp {
+    /// Add an address to this CPU's wake-filter mask.
+    Add,
+    /// Remove an address from this CPU's mask.
+    ClearAddr,
+    /// Clear the whole mask for this CPU (thread switch).
+    ClearAll,
+}
+
+/// One HTP request (Table II). `cpu` selects the target hart; `Next` and
+/// `Tick` are global.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Req {
+    /// Resume user execution at `pc` on `cpu`. `switch` marks a thread
+    /// switch (controller clears that core's HFutex mask).
+    Redirect { cpu: u8, pc: u64, switch: bool },
+    /// Block until a CPU raises an exception; returns its metadata.
+    Next,
+    SetMmu { cpu: u8, satp: u64 },
+    FlushTlb { cpu: u8 },
+    SyncI { cpu: u8 },
+    HFutex { cpu: u8, op: HfOp, addr: u64 },
+    RegR { cpu: u8, idx: u8 },
+    RegW { cpu: u8, idx: u8, val: u64 },
+    MemR { cpu: u8, addr: u64 },
+    MemW { cpu: u8, addr: u64, val: u64 },
+    /// Fill a physical page with a 64-bit pattern (zeroing fresh pages).
+    PageS { cpu: u8, ppn: u64, val: u64 },
+    /// Copy one physical page to another (COW resolution).
+    PageCp { cpu: u8, src_ppn: u64, dst_ppn: u64 },
+    PageR { cpu: u8, ppn: u64 },
+    PageW { cpu: u8, ppn: u64, data: Box<[u8; 4096]> },
+    Tick,
+    UTick { cpu: u8 },
+    Interrupt { cpu: u8 },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Resp {
+    Ok,
+    Word(u64),
+    Exception { cpu: u8, cause: u64, epc: u64, tval: u64 },
+    Page(Box<[u8; 4096]>),
+    Fault(u8),
+}
+
+/// Stable request-kind tags for traffic accounting (Fig 13 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ReqKind {
+    Redirect,
+    Next,
+    Mmu,
+    SyncI,
+    HFutex,
+    RegRW,
+    MemRead,
+    MemWrite,
+    PageSet,
+    PageCopy,
+    PageRead,
+    PageWrite,
+    Perf,
+    Interrupt,
+}
+
+pub const REQ_KINDS: [ReqKind; 14] = [
+    ReqKind::Redirect,
+    ReqKind::Next,
+    ReqKind::Mmu,
+    ReqKind::SyncI,
+    ReqKind::HFutex,
+    ReqKind::RegRW,
+    ReqKind::MemRead,
+    ReqKind::MemWrite,
+    ReqKind::PageSet,
+    ReqKind::PageCopy,
+    ReqKind::PageRead,
+    ReqKind::PageWrite,
+    ReqKind::Perf,
+    ReqKind::Interrupt,
+];
+
+impl ReqKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReqKind::Redirect => "Redirect",
+            ReqKind::Next => "Next",
+            ReqKind::Mmu => "MMU",
+            ReqKind::SyncI => "SyncI",
+            ReqKind::HFutex => "HFutex",
+            ReqKind::RegRW => "RegRW",
+            ReqKind::MemRead => "MemRead",
+            ReqKind::MemWrite => "MemWrite",
+            ReqKind::PageSet => "PageSet",
+            ReqKind::PageCopy => "PageCopy",
+            ReqKind::PageRead => "PageRead",
+            ReqKind::PageWrite => "PageWrite",
+            ReqKind::Perf => "Tick",
+            ReqKind::Interrupt => "Interrupt",
+        }
+    }
+}
+
+impl Req {
+    pub fn kind(&self) -> ReqKind {
+        match self {
+            Req::Redirect { .. } => ReqKind::Redirect,
+            Req::Next => ReqKind::Next,
+            Req::SetMmu { .. } | Req::FlushTlb { .. } => ReqKind::Mmu,
+            Req::SyncI { .. } => ReqKind::SyncI,
+            Req::HFutex { .. } => ReqKind::HFutex,
+            Req::RegR { .. } | Req::RegW { .. } => ReqKind::RegRW,
+            Req::MemR { .. } => ReqKind::MemRead,
+            Req::MemW { .. } => ReqKind::MemWrite,
+            Req::PageS { .. } => ReqKind::PageSet,
+            Req::PageCp { .. } => ReqKind::PageCopy,
+            Req::PageR { .. } => ReqKind::PageRead,
+            Req::PageW { .. } => ReqKind::PageWrite,
+            Req::Tick | Req::UTick { .. } => ReqKind::Perf,
+            Req::Interrupt { .. } => ReqKind::Interrupt,
+        }
+    }
+
+    /// Encoded request size in bytes on the UART.
+    pub fn wire_len(&self) -> u64 {
+        const H: u64 = 2; // op + cpu
+        match self {
+            Req::Redirect { .. } => H + 8 + 1,
+            Req::Next => H,
+            Req::SetMmu { .. } => H + 8,
+            Req::FlushTlb { .. } => H,
+            Req::SyncI { .. } => H,
+            Req::HFutex { .. } => H + 1 + 8,
+            Req::RegR { .. } => H + 1,
+            Req::RegW { .. } => H + 1 + 8,
+            Req::MemR { .. } => H + 8,
+            Req::MemW { .. } => H + 8 + 8,
+            Req::PageS { .. } => H + 8 + 8,
+            Req::PageCp { .. } => H + 8 + 8,
+            Req::PageR { .. } => H + 8,
+            Req::PageW { .. } => H + 8 + 4096,
+            Req::Tick => H,
+            Req::UTick { .. } => H,
+            Req::Interrupt { .. } => H,
+        }
+    }
+
+    /// Payload bytes that stream (and therefore overlap with controller
+    /// execution) rather than being buffered before execution starts.
+    pub fn streaming_len(&self) -> u64 {
+        match self {
+            Req::PageW { .. } => 4096,
+            _ => 0,
+        }
+    }
+}
+
+impl Resp {
+    pub fn wire_len(&self) -> u64 {
+        match self {
+            Resp::Ok => 1,
+            Resp::Word(_) => 1 + 8,
+            Resp::Exception { .. } => 1 + 1 + 24,
+            Resp::Page(_) => 1 + 4096,
+            Resp::Fault(_) => 1 + 1,
+        }
+    }
+
+    pub fn streaming_len(&self) -> u64 {
+        match self {
+            Resp::Page(_) => 4096,
+            _ => 0,
+        }
+    }
+
+    pub fn word(&self) -> u64 {
+        match self {
+            Resp::Word(v) => *v,
+            other => panic!("expected Word response, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_lengths_match_format_spec() {
+        assert_eq!(Req::Next.wire_len(), 2);
+        assert_eq!(Req::Redirect { cpu: 0, pc: 0, switch: false }.wire_len(), 11);
+        assert_eq!(Req::RegR { cpu: 1, idx: 10 }.wire_len(), 3);
+        assert_eq!(Req::RegW { cpu: 1, idx: 10, val: 0 }.wire_len(), 11);
+        assert_eq!(Req::MemW { cpu: 0, addr: 0, val: 0 }.wire_len(), 18);
+        assert_eq!(Req::PageW { cpu: 0, ppn: 0, data: Box::new([0; 4096]) }.wire_len(), 4106);
+        assert_eq!(Resp::Ok.wire_len(), 1);
+        assert_eq!(Resp::Word(7).wire_len(), 9);
+        assert_eq!(Resp::Page(Box::new([0; 4096])).wire_len(), 4097);
+        assert_eq!(
+            Resp::Exception { cpu: 0, cause: 8, epc: 0, tval: 0 }.wire_len(),
+            26
+        );
+    }
+
+    #[test]
+    fn page_ops_cut_traffic_vs_word_ops() {
+        // The page-level ops exist because word-level sync of a page costs
+        // 512 * (18+1) bytes; PageS costs 18+1.
+        let word_cost = 512 * (Req::MemW { cpu: 0, addr: 0, val: 0 }.wire_len() + 1);
+        let page_cost = Req::PageS { cpu: 0, ppn: 0, val: 0 }.wire_len() + 1;
+        assert!(page_cost * 100 < word_cost, "{page_cost} vs {word_cost}");
+    }
+
+    #[test]
+    fn kinds_cover_all_requests() {
+        assert_eq!(Req::Tick.kind(), ReqKind::Perf);
+        assert_eq!(Req::FlushTlb { cpu: 0 }.kind(), ReqKind::Mmu);
+        assert_eq!(Req::PageS { cpu: 0, ppn: 0, val: 0 }.kind().name(), "PageSet");
+    }
+}

@@ -1,0 +1,13 @@
+//! FASE hardware framework (paper §IV): the Host-Target Protocol codec,
+//! the UART channel timing model, the HFutex mask cache, and the FASE
+//! hardware controller that drives the target exclusively through the
+//! Table-I CPU interface.
+
+pub mod controller;
+pub mod hfutex;
+pub mod htp;
+pub mod uart;
+
+pub use controller::{Controller, ExecStats};
+pub use htp::{HfOp, Req, Resp};
+pub use uart::Uart;

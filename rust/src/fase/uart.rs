@@ -1,0 +1,61 @@
+//! UART channel timing model (8N2 framing like the paper's setup: 1 start
+//! + 8 data + 2 stop = 11 bit-times per byte).
+//!
+//! The experiments treat UART bytes-on-the-wire as the primary overhead
+//! indicator (§VI-C), so this model converts byte counts to target ticks
+//! exactly: `ticks = bytes * 11 * clock_hz / baud`.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Uart {
+    pub baud: u64,
+    /// Bits per byte incl. framing (8N2 = 11).
+    pub frame_bits: u64,
+    pub clock_hz: u64,
+}
+
+impl Uart {
+    pub fn new(baud: u64, clock_hz: u64) -> Uart {
+        Uart { baud, frame_bits: 11, clock_hz }
+    }
+
+    /// Target ticks to move `bytes` over the wire.
+    #[inline]
+    pub fn ticks_for_bytes(&self, bytes: u64) -> u64 {
+        // (bytes * frame_bits) bit-times at `baud` bits/sec, in core ticks.
+        (bytes * self.frame_bits * self.clock_hz) / self.baud
+    }
+
+    /// Seconds per byte (reporting).
+    pub fn byte_seconds(&self) -> f64 {
+        self.frame_bits as f64 / self.baud as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_1mbps() {
+        // §VI-C: 104 bytes at 1 Mbps 8N2 take 1.144 ms.
+        let u = Uart::new(1_000_000, 100_000_000);
+        let ticks = u.ticks_for_bytes(104);
+        let secs = ticks as f64 / 100e6;
+        assert!((secs - 1.144e-3).abs() < 2e-6, "{secs}");
+    }
+
+    #[test]
+    fn baud_scales_linearly() {
+        let hi = Uart::new(921_600, 100_000_000);
+        let lo = Uart::new(115_200, 100_000_000);
+        let th = hi.ticks_for_bytes(1000);
+        let tl = lo.ticks_for_bytes(1000);
+        assert!((tl as f64 / th as f64 - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn zero_bytes_zero_ticks() {
+        let u = Uart::new(921_600, 100_000_000);
+        assert_eq!(u.ticks_for_bytes(0), 0);
+    }
+}

@@ -1,0 +1,52 @@
+//! The FASE CPU interface (paper Table I).
+//!
+//! This trait is the *only* surface the FASE controller may use to touch
+//! the target core — the paper's central hardware claim is that these three
+//! bundles (`Priv`, `Reg`, `Inject`) plus an optional `Interrupt` wire are
+//! sufficient for full remote syscall emulation, and that they map onto
+//! standard debug-interface capabilities.
+//!
+//! [`crate::soc::Machine`] implements it for the simulated Rocket-like SMP
+//! target; a mock implementation in the controller tests exercises the
+//! handshake rules independently of the real core.
+
+use crate::rv64::Trap;
+
+/// Result of driving the `Inject` handshake for one instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InjectResult {
+    /// Instruction accepted and retired; cycles the pipeline spent on it.
+    Done { cycles: u64 },
+    /// Instruction faulted inside the pipeline (e.g. bad physical address).
+    Fault(Trap),
+}
+
+/// Paper Table I — the minimal per-core control interface.
+pub trait CpuInterface {
+    /// `Priv` bundle: current hardware privilege level (0 = U, 3 = M).
+    fn priv_level(&self, cpu: usize) -> u64;
+
+    /// `Reg` bundle: read a general-purpose register (x0..x31) or an FP
+    /// register (32..63) through the valid-ready handshake.
+    fn reg_read(&mut self, cpu: usize, idx: u8) -> u64;
+
+    /// `Reg` bundle: write a register through the handshake (RegWEN=1).
+    fn reg_write(&mut self, cpu: usize, idx: u8, val: u64);
+
+    /// `Inject` bundle: assert/deassert StopFetch (clutch on fetch+decode).
+    fn set_stop_fetch(&mut self, cpu: usize, stop: bool);
+
+    /// `Inject` bundle: InjectBusy — pipeline not yet empty.
+    fn inject_busy(&self, cpu: usize) -> bool;
+
+    /// `Inject` bundle: feed one raw non-branch instruction (or `mret`)
+    /// into the back-end. Only legal while StopFetch is asserted and the
+    /// core is stalled in privileged mode.
+    fn inject(&mut self, cpu: usize, raw: u32) -> InjectResult;
+
+    /// Optional `Interrupt` wire: raise a machine interrupt on the core.
+    fn raise_interrupt(&mut self, cpu: usize);
+
+    /// Number of cores exposing this interface.
+    fn n_cpus(&self) -> usize;
+}

@@ -1,0 +1,16 @@
+//! FASE — FPGA-Assisted Syscall Emulation (reproduction).
+//!
+//! See DESIGN.md for the architecture and the hardware-substitution map.
+
+pub mod baseline;
+pub mod bench_support;
+pub mod coordinator;
+pub mod elfio;
+pub mod fase;
+pub mod iface;
+pub mod mem;
+pub mod perf;
+pub mod runtime;
+pub mod rv64;
+pub mod soc;
+pub mod util;

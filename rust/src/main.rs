@@ -1,0 +1,161 @@
+//! fase — CLI entrypoint.
+//!
+//! Subcommands:
+//!   run   — execute a guest ELF under FASE or the full-system baseline
+//!   info  — print target/ELF information
+//!
+//! Example:
+//!   fase run artifacts/guests/hello.elf --cpus 2 --baud 921600 -- arg1
+//!   fase run g.elf --mode fullsys --env OMP_NUM_THREADS=4
+
+use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
+use fase::coordinator::target::{HostLatency, KernelCosts};
+use fase::rv64::hart::CoreModel;
+use fase::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: fase <run|info> [options]");
+            eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N] [--baud N]");
+            eprintln!("           [--core rocket|cva6] [--no-hfutex] [--lazy-image]");
+            eprintln!("           [--preload N] [--env K=V]... [--quiet] [--report]");
+            eprintln!("           [--max-seconds S] [--ideal-latency] [-- guest args]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_config(args: &Args) -> RunConfig {
+    let mode = match args.str_or("mode", "fase").as_str() {
+        "fullsys" => Mode::FullSys { costs: KernelCosts::default() },
+        _ => Mode::Fase {
+            baud: args.u64_or("baud", 921_600),
+            hfutex: !args.flag("no-hfutex"),
+            latency: if args.flag("ideal-latency") {
+                HostLatency::zero()
+            } else {
+                HostLatency::default()
+            },
+        },
+    };
+    RunConfig {
+        mode,
+        n_cpus: args.usize_or("cpus", 1),
+        dram_size: args.u64_or("dram", 1 << 31),
+        core: CoreModel::by_name(&args.str_or("core", "rocket")).unwrap_or_else(|| {
+            eprintln!("unknown core model; use rocket or cva6");
+            std::process::exit(2);
+        }),
+        preload_pages: args.u64_or("preload", 16),
+        preload_image: !args.flag("lazy-image"),
+        echo_stdout: !args.flag("quiet"),
+        guest_root: PathBuf::from(args.str_or("root", ".")),
+        max_target_seconds: args.f64_or("max-seconds", 600.0),
+        collect_windows: args.flag("windows"),
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let rest = args.rest();
+    if rest.is_empty() {
+        eprintln!("fase run: missing ELF path");
+        std::process::exit(2);
+    }
+    let elf = PathBuf::from(&rest[0]);
+    let mut argv: Vec<String> = vec![rest[0].clone()];
+    argv.extend(rest[1..].iter().cloned());
+    let mut envp: Vec<String> = Vec::new();
+    if let Some(e) = args.get("env") {
+        envp.push(e.to_string());
+    }
+    let report = args.flag("report");
+    let res = if args.str_or("mode", "fase") == "pk" {
+        let pk = fase::baseline::PkConfig {
+            boot_instructions: args.u64_or("boot-insts", 2_000_000),
+            core: CoreModel::by_name(&args.str_or("core", "rocket")).unwrap(),
+            dram_size: args.u64_or("dram", 1 << 31),
+            netlist_size: args.usize_or("netlist", 2048),
+            sim_threads: args.usize_or("sim-threads", 1),
+            ..Default::default()
+        };
+        fase::baseline::run_pk(pk, &elf, &argv, &envp, args.f64_or("max-seconds", 600.0))
+    } else {
+        let cfg = build_config(args);
+        run_elf(cfg, &elf, &argv, &envp)
+    };
+    if !args.flag("quiet") {
+        print!("{}", res.stdout);
+    }
+    if let Some(err) = &res.error {
+        eprintln!("[fase] run error: {err}");
+    }
+    if report {
+        eprintln!("--- fase report ---");
+        eprintln!("exit code        : {}", res.exit_code);
+        eprintln!("target time      : {:.6}s ({} ticks)", res.target_seconds, res.ticks);
+        eprintln!("user time        : {:.6}s", res.user_seconds);
+        for (i, u) in res.uticks.iter().enumerate() {
+            eprintln!("  utick[cpu{i}]    : {u}");
+        }
+        eprintln!("wall clock       : {:.3}s", res.wall_seconds);
+        eprintln!("instructions     : {}", res.instret);
+        eprintln!(
+            "sim speed        : {:.2} MIPS",
+            res.instret as f64 / res.wall_seconds.max(1e-9) / 1e6
+        );
+        eprintln!("UART traffic     : {} bytes in {} requests", res.total_bytes, res.total_requests);
+        eprintln!("direct-equivalent: {} bytes", res.direct_equiv_bytes);
+        eprintln!(
+            "stall ticks      : ctl={} uart={} runtime={}",
+            res.stall.controller_ticks, res.stall.uart_ticks, res.stall.runtime_ticks
+        );
+        eprintln!("context switches : {}", res.context_switches);
+        eprintln!("page faults      : {}", res.page_faults);
+        eprintln!("filtered wakes   : {}", res.filtered_wakes);
+        eprintln!("peak pages       : {}", res.peak_pages);
+        eprintln!("syscalls         :");
+        for (name, count) in &res.syscall_counts {
+            eprintln!("  {name:<16} {count}");
+        }
+        eprintln!("traffic by kind  :");
+        for (name, bytes, count) in &res.bytes_by_kind {
+            eprintln!("  {name:<10} {bytes:>10} B in {count} reqs");
+        }
+    }
+    std::process::exit(if res.error.is_some() { 1 } else { res.exit_code.min(125) });
+}
+
+fn cmd_info(args: &Args) {
+    let rest = args.rest();
+    if rest.is_empty() {
+        eprintln!("fase info: missing ELF path");
+        std::process::exit(2);
+    }
+    match fase::elfio::read::Executable::load(std::path::Path::new(&rest[0])) {
+        Ok(exe) => {
+            println!("entry: {:#x}", exe.entry);
+            for (i, s) in exe.segments.iter().enumerate() {
+                println!(
+                    "  seg{}: vaddr={:#x} memsz={:#x} file={:#x} {}{}{}",
+                    i,
+                    s.vaddr,
+                    s.memsz,
+                    s.data.len(),
+                    if s.readable() { "r" } else { "-" },
+                    if s.writable() { "w" } else { "-" },
+                    if s.executable() { "x" } else { "-" },
+                );
+            }
+            println!("symbols: {}", exe.symbols.len());
+        }
+        Err(e) => {
+            eprintln!("fase info: {e}");
+            std::process::exit(1);
+        }
+    }
+}

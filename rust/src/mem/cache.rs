@@ -1,0 +1,192 @@
+//! Set-associative cache timing model (tag array + LRU only, no data).
+
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub size: usize,
+    pub ways: usize,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Way {
+    tag: u64,
+    valid: bool,
+    lru: u32,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+pub struct Cache {
+    cfg: CacheConfig,
+    sets: usize,
+    ways: Vec<Way>, // sets * cfg.ways
+    tick: u32,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Cache {
+        let sets = cfg.size / (cfg.ways * cfg.line);
+        assert!(sets.is_power_of_two(), "cache sets must be a power of two");
+        Cache {
+            cfg,
+            sets,
+            ways: vec![Way::default(); sets * cfg.ways],
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    #[inline]
+    fn index(&self, line_addr: u64) -> (usize, u64) {
+        let idx = (line_addr as usize / self.cfg.line) & (self.sets - 1);
+        let tag = line_addr / (self.cfg.line * self.sets) as u64;
+        (idx, tag)
+    }
+
+    /// Access one line; returns true on hit. On miss the line is filled
+    /// (LRU victim). `_write` reserved for write-allocate policy variants.
+    pub fn access(&mut self, line_addr: u64, _write: bool) -> bool {
+        self.tick = self.tick.wrapping_add(1);
+        let (set, tag) = self.index(line_addr);
+        let base = set * self.cfg.ways;
+        let ways = &mut self.ways[base..base + self.cfg.ways];
+        for w in ways.iter_mut() {
+            if w.valid && w.tag == tag {
+                w.lru = self.tick;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        // Miss: fill LRU victim.
+        self.stats.misses += 1;
+        let victim = ways
+            .iter_mut()
+            .min_by_key(|w| if w.valid { w.lru } else { 0 })
+            .unwrap();
+        victim.valid = true;
+        victim.tag = tag;
+        victim.lru = self.tick;
+        false
+    }
+
+    /// Probe without filling; invalidate on hit (coherence). True if the
+    /// line was present.
+    pub fn probe_invalidate(&mut self, line_addr: u64) -> bool {
+        let (set, tag) = self.index(line_addr);
+        let base = set * self.cfg.ways;
+        for w in &mut self.ways[base..base + self.cfg.ways] {
+            if w.valid && w.tag == tag {
+                w.valid = false;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Invalidate everything (fence.i on the I-cache, kernel-noise model).
+    pub fn flush(&mut self) {
+        for w in &mut self.ways {
+            w.valid = false;
+        }
+    }
+
+    /// Invalidate a deterministic fraction of lines (full-system baseline's
+    /// kernel cache-pollution model). `num`/`den` selects every n-th way.
+    pub fn pollute(&mut self, num: u32, den: u32) {
+        if num == 0 {
+            return;
+        }
+        let mut acc = 0u32;
+        for w in &mut self.ways {
+            acc += num;
+            if acc >= den {
+                acc -= den;
+                w.valid = false;
+            }
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways x 64B = 512B
+        Cache::new(CacheConfig { size: 512, ways: 2, line: 64 })
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = small();
+        assert!(!c.access(0x1000, false));
+        assert!(c.access(0x1000, false));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = small();
+        // Three distinct tags mapping to set 0 (stride = line*sets = 256).
+        c.access(0x0, false);
+        c.access(0x100, false);
+        c.access(0x0, false); // refresh tag0
+        c.access(0x200, false); // evicts 0x100
+        assert!(c.access(0x0, false), "tag0 should survive");
+        assert!(!c.access(0x100, false), "tag1 was LRU victim");
+    }
+
+    #[test]
+    fn probe_invalidate_removes_line() {
+        let mut c = small();
+        c.access(0x40, false);
+        assert!(c.probe_invalidate(0x40));
+        assert!(!c.probe_invalidate(0x40));
+        assert!(!c.access(0x40, false)); // must miss again
+    }
+
+    #[test]
+    fn flush_clears() {
+        let mut c = small();
+        c.access(0x0, false);
+        c.flush();
+        assert!(!c.access(0x0, false));
+    }
+
+    #[test]
+    fn pollute_fraction() {
+        let mut c = small();
+        for i in 0..8u64 {
+            c.access(i * 64, false);
+        }
+        c.pollute(1, 2); // invalidate ~half
+        let mut survivors = 0;
+        for i in 0..8u64 {
+            if c.access(i * 64, false) {
+                survivors += 1;
+            }
+        }
+        assert!(survivors > 0 && survivors < 8);
+    }
+
+    #[test]
+    fn distinct_sets_do_not_conflict() {
+        let mut c = small();
+        c.access(0x00, false);
+        c.access(0x40, false);
+        c.access(0x80, false);
+        c.access(0xc0, false);
+        assert!(c.access(0x00, false));
+        assert!(c.access(0x40, false));
+    }
+}

@@ -1,0 +1,257 @@
+//! SV39 address translation with hardware A/D update and a per-hart TLB.
+//!
+//! Matches the paper's target (Table III: "SV39 paged virtual memory").
+//! The page walker issues real memory reads through the cache hierarchy so
+//! PTW traffic shows up in the timing model, like Rocket's PTW does.
+
+use super::{Access, MemSys};
+use crate::rv64::Trap;
+
+pub const PAGE_SIZE: u64 = 4096;
+pub const PAGE_SHIFT: u64 = 12;
+
+// PTE flag bits.
+pub const PTE_V: u64 = 1 << 0;
+pub const PTE_R: u64 = 1 << 1;
+pub const PTE_W: u64 = 1 << 2;
+pub const PTE_X: u64 = 1 << 3;
+pub const PTE_U: u64 = 1 << 4;
+pub const PTE_G: u64 = 1 << 5;
+pub const PTE_A: u64 = 1 << 6;
+pub const PTE_D: u64 = 1 << 7;
+
+/// satp fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Satp(pub u64);
+
+impl Satp {
+    pub fn mode(&self) -> u64 {
+        self.0 >> 60
+    }
+    pub fn asid(&self) -> u64 {
+        (self.0 >> 44) & 0xffff
+    }
+    pub fn ppn(&self) -> u64 {
+        self.0 & ((1 << 44) - 1)
+    }
+    pub fn make(mode: u64, asid: u64, ppn: u64) -> Satp {
+        Satp((mode << 60) | (asid << 44) | ppn)
+    }
+    pub fn bare(&self) -> bool {
+        self.mode() != 8
+    }
+}
+
+fn fault(acc: Access, va: u64) -> Trap {
+    match acc {
+        Access::Fetch => Trap::InstPageFault(va),
+        Access::Load => Trap::LoadPageFault(va),
+        Access::Store => Trap::StorePageFault(va),
+    }
+}
+
+/// Translate `va` for `hart`. Returns (paddr, extra cycles). M-mode and
+/// bare satp pass through untranslated.
+pub fn translate(
+    ms: &mut MemSys,
+    hart: usize,
+    satp: Satp,
+    user_mode: bool,
+    va: u64,
+    acc: Access,
+) -> Result<(u64, u64), Trap> {
+    if !user_mode || satp.bare() {
+        // M-mode (controller-injected code) runs on physical addresses.
+        return Ok((va, 0));
+    }
+    // SV39 requires bits 63..39 to equal bit 38.
+    let sext = (va as i64) << 25 >> 25;
+    if sext as u64 != va {
+        return Err(fault(acc, va));
+    }
+    let vpn = va >> PAGE_SHIFT;
+    if let Some((ppn, flags)) = ms.tlbs[hart].lookup(vpn) {
+        check_perm(flags as u64, acc, va)?;
+        return Ok(((ppn << PAGE_SHIFT) | (va & (PAGE_SIZE - 1)), 0));
+    }
+    ms.evt[hart].tlb_miss += 1;
+    let (leaf_pte, leaf_level, pte_addr, mut cycles) = walk(ms, hart, satp, va, acc)?;
+    // Superpage alignment check.
+    let ppn_field = leaf_pte >> 10;
+    for lvl in 0..leaf_level {
+        if (ppn_field >> (9 * lvl)) & 0x1ff != 0 {
+            return Err(fault(acc, va));
+        }
+    }
+    check_perm(leaf_pte, acc, va)?;
+    // Hardware A/D update (Rocket-style).
+    let mut new_pte = leaf_pte | PTE_A;
+    if acc == Access::Store {
+        new_pte |= PTE_D;
+    }
+    if new_pte != leaf_pte {
+        ms.phys.write_u64(pte_addr, new_pte);
+        cycles += 1;
+    }
+    // Compose physical address (honouring superpage offset bits).
+    let off_bits = PAGE_SHIFT + 9 * leaf_level as u64;
+    let pa = ((ppn_field << PAGE_SHIFT) & !((1u64 << off_bits) - 1)) | (va & ((1u64 << off_bits) - 1));
+    // Only 4K leaves are cached in the TLB (the runtime maps 4K pages).
+    if leaf_level == 0 {
+        ms.tlbs[hart].insert(vpn, pa >> PAGE_SHIFT, (new_pte & 0xff) as u8);
+    }
+    Ok((pa, cycles))
+}
+
+fn check_perm(pte: u64, acc: Access, va: u64) -> Result<(), Trap> {
+    // User-mode access requires U; R/W/X per access type. (S-mode is not
+    // used by FASE targets — the host runtime *is* the kernel.)
+    if pte & PTE_U == 0 {
+        return Err(fault(acc, va));
+    }
+    let ok = match acc {
+        Access::Fetch => pte & PTE_X != 0,
+        Access::Load => pte & PTE_R != 0,
+        Access::Store => pte & PTE_W != 0,
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(fault(acc, va))
+    }
+}
+
+/// 3-level SV39 walk. Returns (leaf pte, level, pte paddr, cycles).
+fn walk(
+    ms: &mut MemSys,
+    hart: usize,
+    satp: Satp,
+    va: u64,
+    acc: Access,
+) -> Result<(u64, usize, u64, u64), Trap> {
+    let mut table_ppn = satp.ppn();
+    let mut cycles = 0u64;
+    for level in (0..3usize).rev() {
+        let vpn_i = (va >> (PAGE_SHIFT + 9 * level as u64)) & 0x1ff;
+        let pte_addr = (table_ppn << PAGE_SHIFT) + vpn_i * 8;
+        let pte = ms.phys.read_u64(pte_addr).ok_or_else(|| fault(acc, va))?;
+        ms.evt[hart].ptw_accesses += 1;
+        // PTW reads go through the shared L2 (Rocket's PTW port).
+        cycles += ms.lat.ptw_per_level;
+        if !ms.l2.access(pte_addr & !(super::LINE - 1), false) {
+            cycles += ms.lat.dram;
+        }
+        if pte & PTE_V == 0 || (pte & PTE_R == 0 && pte & PTE_W != 0) {
+            return Err(fault(acc, va));
+        }
+        if pte & (PTE_R | PTE_X) != 0 {
+            return Ok((pte, level, pte_addr, cycles));
+        }
+        table_ppn = pte >> 10;
+    }
+    Err(fault(acc, va))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rv64::Trap;
+
+    const BASE: u64 = 0x8000_0000;
+
+    /// Build a 3-level table mapping one 4K page va -> pa with `flags`.
+    fn setup(ms: &mut MemSys, root: u64, va: u64, pa: u64, flags: u64) {
+        let l2 = root + 0x1000;
+        let l1 = root + 0x2000;
+        let vpn2 = (va >> 30) & 0x1ff;
+        let vpn1 = (va >> 21) & 0x1ff;
+        let vpn0 = (va >> 12) & 0x1ff;
+        ms.phys.write_u64(root + vpn2 * 8, ((l2 >> 12) << 10) | PTE_V);
+        ms.phys.write_u64(l2 + vpn1 * 8, ((l1 >> 12) << 10) | PTE_V);
+        ms.phys.write_u64(l1 + vpn0 * 8, ((pa >> 12) << 10) | flags);
+    }
+
+    fn fresh() -> (MemSys, Satp) {
+        let ms = MemSys::new(1, BASE, 8 << 20);
+        let satp = Satp::make(8, 1, (BASE + 0x10_0000) >> 12);
+        (ms, satp)
+    }
+
+    #[test]
+    fn translates_mapped_page() {
+        let (mut ms, satp) = fresh();
+        let root = satp.ppn() << 12;
+        setup(&mut ms, root, 0x4000_1000, BASE + 0x20_0000, PTE_V | PTE_R | PTE_W | PTE_U);
+        let (pa, _) =
+            translate(&mut ms, 0, satp, true, 0x4000_1234, Access::Load).unwrap();
+        assert_eq!(pa, BASE + 0x20_0234);
+        // Second lookup must be a TLB hit (no more ptw accesses).
+        let before = ms.evt[0].ptw_accesses;
+        translate(&mut ms, 0, satp, true, 0x4000_1000, Access::Load).unwrap();
+        assert_eq!(ms.evt[0].ptw_accesses, before);
+    }
+
+    #[test]
+    fn store_requires_w_and_sets_ad() {
+        let (mut ms, satp) = fresh();
+        let root = satp.ppn() << 12;
+        setup(&mut ms, root, 0x5000_0000, BASE + 0x30_0000, PTE_V | PTE_R | PTE_U);
+        assert_eq!(
+            translate(&mut ms, 0, satp, true, 0x5000_0000, Access::Store),
+            Err(Trap::StorePageFault(0x5000_0000))
+        );
+        setup(&mut ms, root, 0x5000_0000, BASE + 0x30_0000, PTE_V | PTE_R | PTE_W | PTE_U);
+        ms.flush_tlb(0);
+        translate(&mut ms, 0, satp, true, 0x5000_0000, Access::Store).unwrap();
+        let l1 = root + 0x2000;
+        let vpn0 = (0x5000_0000u64 >> 12) & 0x1ff;
+        let pte = ms.phys.read_u64(l1 + vpn0 * 8).unwrap();
+        assert!(pte & PTE_A != 0 && pte & PTE_D != 0);
+    }
+
+    #[test]
+    fn unmapped_faults_by_access_kind() {
+        let (mut ms, satp) = fresh();
+        assert_eq!(
+            translate(&mut ms, 0, satp, true, 0x7000_0000, Access::Fetch),
+            Err(Trap::InstPageFault(0x7000_0000))
+        );
+        assert_eq!(
+            translate(&mut ms, 0, satp, true, 0x7000_0000, Access::Load),
+            Err(Trap::LoadPageFault(0x7000_0000))
+        );
+    }
+
+    #[test]
+    fn non_user_page_faults_in_user_mode() {
+        let (mut ms, satp) = fresh();
+        let root = satp.ppn() << 12;
+        setup(&mut ms, root, 0x4000_0000, BASE + 0x20_0000, PTE_V | PTE_R | PTE_W);
+        assert!(translate(&mut ms, 0, satp, true, 0x4000_0000, Access::Load).is_err());
+    }
+
+    #[test]
+    fn machine_mode_passthrough() {
+        let (mut ms, satp) = fresh();
+        let (pa, c) = translate(&mut ms, 0, satp, false, 0x1234, Access::Load).unwrap();
+        assert_eq!((pa, c), (0x1234, 0));
+    }
+
+    #[test]
+    fn bad_sign_extension_faults() {
+        let (mut ms, satp) = fresh();
+        assert!(translate(&mut ms, 0, satp, true, 0x0100_0000_0000_0000, Access::Load).is_err());
+    }
+
+    #[test]
+    fn tlb_flush_forces_rewalk() {
+        let (mut ms, satp) = fresh();
+        let root = satp.ppn() << 12;
+        setup(&mut ms, root, 0x4000_1000, BASE + 0x20_0000, PTE_V | PTE_R | PTE_U);
+        translate(&mut ms, 0, satp, true, 0x4000_1000, Access::Load).unwrap();
+        let before = ms.evt[0].tlb_miss;
+        ms.flush_tlb(0);
+        translate(&mut ms, 0, satp, true, 0x4000_1000, Access::Load).unwrap();
+        assert_eq!(ms.evt[0].tlb_miss, before + 1);
+    }
+}

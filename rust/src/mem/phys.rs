@@ -1,0 +1,138 @@
+//! Flat physical DRAM backing store.
+//!
+//! One contiguous allocation starting at `base` (the target's DRAM window,
+//! 0x8000_0000 like Rocket/LiteX). Allocation is virtual — untouched pages
+//! cost nothing on the host — so a paper-faithful 2 GiB target is cheap.
+
+pub struct PhysMem {
+    base: u64,
+    data: Vec<u8>,
+}
+
+impl PhysMem {
+    pub fn new(base: u64, size: u64) -> PhysMem {
+        PhysMem { base, data: vec![0u8; size as usize] }
+    }
+
+    #[inline]
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    #[inline]
+    pub fn size(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    #[inline]
+    fn off(&self, paddr: u64, len: u64) -> Option<usize> {
+        let o = paddr.checked_sub(self.base)?;
+        if o + len <= self.data.len() as u64 {
+            Some(o as usize)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn read_u8(&self, p: u64) -> Option<u8> {
+        self.off(p, 1).map(|o| self.data[o])
+    }
+
+    #[inline]
+    pub fn read_u32(&self, p: u64) -> Option<u32> {
+        let o = self.off(p, 4)?;
+        Some(u32::from_le_bytes(self.data[o..o + 4].try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn read_u64(&self, p: u64) -> Option<u64> {
+        let o = self.off(p, 8)?;
+        Some(u64::from_le_bytes(self.data[o..o + 8].try_into().unwrap()))
+    }
+
+    /// Little-endian read of 1/2/4/8 bytes (also handles misaligned).
+    #[inline]
+    pub fn read_n(&self, p: u64, n: u64) -> Option<u64> {
+        let o = self.off(p, n)?;
+        let mut v = 0u64;
+        for i in (0..n as usize).rev() {
+            v = (v << 8) | self.data[o + i] as u64;
+        }
+        Some(v)
+    }
+
+    #[inline]
+    pub fn write_n(&mut self, p: u64, n: u64, val: u64) -> bool {
+        match self.off(p, n) {
+            Some(o) => {
+                let mut v = val;
+                for i in 0..n as usize {
+                    self.data[o + i] = v as u8;
+                    v >>= 8;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, p: u64, v: u64) -> bool {
+        self.write_n(p, 8, v)
+    }
+
+    /// Borrow a byte slice (for page-level ops and the ELF loader).
+    pub fn slice(&self, p: u64, len: u64) -> Option<&[u8]> {
+        let o = self.off(p, len)?;
+        Some(&self.data[o..o + len as usize])
+    }
+
+    pub fn slice_mut(&mut self, p: u64, len: u64) -> Option<&mut [u8]> {
+        let o = self.off(p, len)?;
+        Some(&mut self.data[o..o + len as usize])
+    }
+
+    pub fn contains(&self, p: u64, len: u64) -> bool {
+        self.off(p, len).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_various_widths() {
+        let mut m = PhysMem::new(0x8000_0000, 1 << 16);
+        assert!(m.write_n(0x8000_0000, 8, 0x1122_3344_5566_7788));
+        assert_eq!(m.read_n(0x8000_0000, 8), Some(0x1122_3344_5566_7788));
+        assert_eq!(m.read_n(0x8000_0000, 4), Some(0x5566_7788));
+        assert_eq!(m.read_n(0x8000_0000, 2), Some(0x7788));
+        assert_eq!(m.read_n(0x8000_0000, 1), Some(0x88));
+        assert_eq!(m.read_n(0x8000_0006, 2), Some(0x1122));
+    }
+
+    #[test]
+    fn bounds() {
+        let m = PhysMem::new(0x8000_0000, 0x1000);
+        assert!(m.read_u64(0x7fff_ffff).is_none());
+        assert!(m.read_u64(0x8000_0ff9).is_none());
+        assert!(m.read_u64(0x8000_0ff8).is_some());
+    }
+
+    #[test]
+    fn misaligned_ok() {
+        let mut m = PhysMem::new(0, 64);
+        m.write_n(3, 8, 0xAABB_CCDD_EEFF_0011);
+        assert_eq!(m.read_n(3, 8), Some(0xAABB_CCDD_EEFF_0011));
+    }
+
+    #[test]
+    fn slices() {
+        let mut m = PhysMem::new(0x1000, 0x100);
+        m.slice_mut(0x1010, 4).unwrap().copy_from_slice(b"fase");
+        assert_eq!(m.slice(0x1010, 4).unwrap(), b"fase");
+        assert!(m.slice(0x10fd, 8).is_none());
+    }
+}

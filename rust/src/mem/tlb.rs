@@ -1,0 +1,86 @@
+//! Per-hart TLB model (direct-mapped over VPN).
+
+/// One cached translation: vpn -> ppn with PTE permission bits.
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    vpn: u64,
+    ppn: u64,
+    flags: u8,
+    valid: bool,
+}
+
+pub struct Tlb {
+    entries: Vec<Entry>,
+    mask: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Tlb {
+    pub fn new(n: usize) -> Tlb {
+        assert!(n.is_power_of_two());
+        Tlb { entries: vec![Entry::default(); n], mask: n as u64 - 1, hits: 0, misses: 0 }
+    }
+
+    #[inline]
+    pub fn lookup(&mut self, vpn: u64) -> Option<(u64, u8)> {
+        let e = &self.entries[(vpn & self.mask) as usize];
+        if e.valid && e.vpn == vpn {
+            self.hits += 1;
+            Some((e.ppn, e.flags))
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, vpn: u64, ppn: u64, flags: u8) {
+        self.entries[(vpn & self.mask) as usize] = Entry { vpn, ppn, flags, valid: true };
+    }
+
+    pub fn flush(&mut self) {
+        for e in &mut self.entries {
+            e.valid = false;
+        }
+    }
+
+    /// Invalidate a deterministic fraction (kernel-noise model for the
+    /// full-system baseline).
+    pub fn pollute(&mut self, num: u32, den: u32) {
+        let mut acc = 0u32;
+        for e in &mut self.entries {
+            acc += num;
+            if acc >= den {
+                acc -= den;
+                e.valid = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_lookup_flush() {
+        let mut t = Tlb::new(4);
+        assert!(t.lookup(0x10).is_none());
+        t.insert(0x10, 0x999, 0x1f);
+        assert_eq!(t.lookup(0x10), Some((0x999, 0x1f)));
+        t.flush();
+        assert!(t.lookup(0x10).is_none());
+        assert_eq!(t.hits, 1);
+        assert_eq!(t.misses, 2);
+    }
+
+    #[test]
+    fn conflicting_vpns_evict() {
+        let mut t = Tlb::new(4);
+        t.insert(0x0, 1, 0);
+        t.insert(0x4, 2, 0); // same index (4 & 3 == 0)
+        assert!(t.lookup(0x0).is_none());
+        assert_eq!(t.lookup(0x4), Some((2, 0)));
+    }
+}

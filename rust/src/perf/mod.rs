@@ -1,0 +1,9 @@
+//! Performance recording: UART traffic accounting by HTP request kind and
+//! by remote-syscall context (Fig 13/17), stall-time composition
+//! (Table IV), and timing-model window sampling for the PJRT evaluator.
+
+pub mod recorder;
+pub mod window;
+
+pub use recorder::{Context, Recorder, StallBreakdown};
+pub use window::{WindowSample, NUM_FEATURES};

@@ -1,0 +1,241 @@
+//! Traffic + stall recorder.
+//!
+//! Every HTP transaction is tallied under (request kind, runtime context).
+//! Contexts label *why* the runtime issued the request — which guest
+//! syscall was being serviced, a page fault, workload load, or scheduling —
+//! exactly the two groupings Fig 13 plots.
+
+use crate::fase::htp::ReqKind;
+use std::collections::BTreeMap;
+
+/// Why the runtime is currently talking to the target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Context {
+    #[default]
+    Boot,
+    Load,
+    Sched,
+    PageFault,
+    Syscall(u64),
+    Signal,
+    Report,
+}
+
+impl Context {
+    pub fn label(&self) -> String {
+        match self {
+            Context::Boot => "boot".into(),
+            Context::Load => "load".into(),
+            Context::Sched => "sched".into(),
+            Context::PageFault => "page_fault".into(),
+            Context::Syscall(nr) => syscall_name(*nr).to_string(),
+            Context::Signal => "signal".into(),
+            Context::Report => "report".into(),
+        }
+    }
+}
+
+pub fn syscall_name(nr: u64) -> &'static str {
+    match nr {
+        29 => "ioctl",
+        56 => "openat",
+        57 => "close",
+        62 => "lseek",
+        63 => "read",
+        64 => "write",
+        65 => "readv",
+        66 => "writev",
+        80 => "fstat",
+        93 => "exit",
+        94 => "exit_group",
+        96 => "set_tid_address",
+        98 => "futex",
+        99 => "set_robust_list",
+        101 => "nanosleep",
+        113 => "clock_gettime",
+        124 => "sched_yield",
+        129 => "kill",
+        131 => "tgkill",
+        134 => "rt_sigaction",
+        135 => "rt_sigprocmask",
+        139 => "rt_sigreturn",
+        160 => "uname",
+        169 => "gettimeofday",
+        172 => "getpid",
+        178 => "gettid",
+        179 => "sysinfo",
+        214 => "brk",
+        215 => "munmap",
+        216 => "mremap",
+        220 => "clone",
+        222 => "mmap",
+        226 => "mprotect",
+        233 => "madvise",
+        261 => "prlimit64",
+        278 => "getrandom",
+        _ => "unknown",
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KindStats {
+    pub count: u64,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub uart_ticks: u64,
+    pub ctl_ticks: u64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CtxStats {
+    pub requests: u64,
+    pub bytes: u64,
+    pub stall_ticks: u64,
+}
+
+/// Table IV decomposition.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StallBreakdown {
+    pub controller_ticks: u64,
+    pub uart_ticks: u64,
+    pub runtime_ticks: u64,
+}
+
+impl StallBreakdown {
+    pub fn total(&self) -> u64 {
+        self.controller_ticks + self.uart_ticks + self.runtime_ticks
+    }
+}
+
+#[derive(Default)]
+pub struct Recorder {
+    pub by_kind: BTreeMap<ReqKind, KindStats>,
+    pub by_ctx: BTreeMap<Context, CtxStats>,
+    pub stall: StallBreakdown,
+    /// Bytes a direct-interface protocol would have moved for the same
+    /// work (reg-op and inject counts) — the §IV-B ablation baseline.
+    pub direct_equiv_bytes: u64,
+    /// Count of syscalls actually delegated to the host, by number.
+    pub syscall_counts: BTreeMap<u64, u64>,
+    /// futex wakes filtered on-target by HFutex (no traffic).
+    pub filtered_wakes: u64,
+    ctx: Context,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { ctx: Context::Boot, ..Default::default() }
+    }
+
+    pub fn set_context(&mut self, ctx: Context) {
+        self.ctx = ctx;
+    }
+
+    pub fn context(&self) -> Context {
+        self.ctx
+    }
+
+    pub fn count_syscall(&mut self, nr: u64) {
+        *self.syscall_counts.entry(nr).or_default() += 1;
+    }
+
+    /// Record one HTP transaction.
+    pub fn record_request(
+        &mut self,
+        kind: ReqKind,
+        tx_bytes: u64,
+        rx_bytes: u64,
+        uart_ticks: u64,
+        ctl_ticks: u64,
+        reg_ops: u64,
+        injects: u64,
+    ) {
+        let k = self.by_kind.entry(kind).or_default();
+        k.count += 1;
+        k.tx_bytes += tx_bytes;
+        k.rx_bytes += rx_bytes;
+        k.uart_ticks += uart_ticks;
+        k.ctl_ticks += ctl_ticks;
+        let c = self.by_ctx.entry(self.ctx).or_default();
+        c.requests += 1;
+        c.bytes += tx_bytes + rx_bytes;
+        c.stall_ticks += uart_ticks + ctl_ticks;
+        self.stall.controller_ticks += ctl_ticks;
+        self.stall.uart_ticks += uart_ticks;
+        // Direct-interface equivalent: each reg op would be its own
+        // request (3-byte header + idx + 8B data + 1B ack = 13..21B) and
+        // each injected instruction its own 7-byte request + ack.
+        self.direct_equiv_bytes += reg_ops * 21 + injects * 8 + 3;
+    }
+
+    pub fn record_runtime_stall(&mut self, ticks: u64) {
+        self.stall.runtime_ticks += ticks;
+        self.by_ctx.entry(self.ctx).or_default().stall_ticks += ticks;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.by_kind.values().map(|k| k.tx_bytes + k.rx_bytes).sum()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.by_kind.values().map(|k| k.count).sum()
+    }
+
+    /// Reset the tallies (e.g. between measured iterations) keeping context.
+    pub fn reset(&mut self) {
+        let ctx = self.ctx;
+        *self = Recorder::new();
+        self.ctx = ctx;
+    }
+
+    /// Bytes grouped by syscall-context label (Fig 13 right-hand grouping).
+    pub fn bytes_by_context(&self) -> Vec<(String, u64)> {
+        self.by_ctx.iter().map(|(c, s)| (c.label(), s.bytes)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tallies_by_kind_and_context() {
+        let mut r = Recorder::new();
+        r.set_context(Context::Syscall(98));
+        r.record_request(ReqKind::RegRW, 3, 9, 100, 4, 1, 0);
+        r.record_request(ReqKind::Redirect, 11, 1, 120, 10, 3, 3);
+        r.set_context(Context::PageFault);
+        r.record_request(ReqKind::PageSet, 18, 1, 200, 1030, 4, 1024);
+        assert_eq!(r.total_requests(), 3);
+        assert_eq!(r.total_bytes(), 3 + 9 + 11 + 1 + 18 + 1);
+        assert_eq!(r.by_ctx[&Context::Syscall(98)].requests, 2);
+        assert_eq!(r.by_ctx[&Context::PageFault].bytes, 19);
+        assert_eq!(r.stall.uart_ticks, 420);
+        assert_eq!(r.stall.controller_ticks, 1044);
+    }
+
+    #[test]
+    fn direct_equiv_dwarfs_htp_for_page_ops() {
+        let mut r = Recorder::new();
+        // One PageS: 1024 injected instructions + 6 reg ops over HTP costs
+        // 19 bytes; directly it would cost thousands.
+        r.record_request(ReqKind::PageSet, 18, 1, 0, 0, 6, 1024);
+        assert!(r.direct_equiv_bytes > (18 + 1) * 20);
+    }
+
+    #[test]
+    fn runtime_stall_assigned_to_context() {
+        let mut r = Recorder::new();
+        r.set_context(Context::Syscall(64));
+        r.record_runtime_stall(500);
+        assert_eq!(r.stall.runtime_ticks, 500);
+        assert_eq!(r.by_ctx[&Context::Syscall(64)].stall_ticks, 500);
+    }
+
+    #[test]
+    fn syscall_names() {
+        assert_eq!(syscall_name(98), "futex");
+        assert_eq!(syscall_name(222), "mmap");
+        assert_eq!(syscall_name(9999), "unknown");
+    }
+}

@@ -1,0 +1,166 @@
+//! Timing-model window features — the interchange record between the L3
+//! simulator and the L1/L2 JAX/Pallas cycle model.
+//!
+//! Every `WINDOW_INSTRET` retired instructions (or at each stall boundary)
+//! the engine drains a hart's instruction-class and memory-event counters
+//! into a [`WindowSample`]. Batches of samples are evaluated by the AOT
+//! HLO timing model (`artifacts/timing_model.hlo.txt`) via PJRT, and by a
+//! native Rust mirror that must agree to float tolerance (tested).
+
+use crate::mem::MemEvents;
+use crate::rv64::hart::InstCounters;
+use crate::rv64::inst::NUM_INST_CLASSES;
+
+/// Feature vector layout (must match python/compile/kernels/timing.py).
+pub const NUM_FEATURES: usize = NUM_INST_CLASSES + 7;
+
+pub const F_BRANCH_TAKEN: usize = NUM_INST_CLASSES;
+pub const F_MISPREDICT: usize = NUM_INST_CLASSES + 1;
+pub const F_L1I_MISS: usize = NUM_INST_CLASSES + 2;
+pub const F_L1D_MISS: usize = NUM_INST_CLASSES + 3;
+pub const F_L2_MISS: usize = NUM_INST_CLASSES + 4;
+pub const F_TLB_MISS: usize = NUM_INST_CLASSES + 5;
+pub const F_PTW: usize = NUM_INST_CLASSES + 6;
+
+#[derive(Debug, Clone, Copy)]
+pub struct WindowSample {
+    pub hart: u32,
+    /// Ticks the engine actually charged for this window (ground truth).
+    pub engine_ticks: u64,
+    pub retired: u64,
+    pub features: [f32; NUM_FEATURES],
+}
+
+impl WindowSample {
+    pub fn from_counters(hart: usize, engine_ticks: u64, ic: &InstCounters, me: &MemEvents) -> WindowSample {
+        let mut f = [0f32; NUM_FEATURES];
+        for (i, c) in ic.class.iter().enumerate() {
+            f[i] = *c as f32;
+        }
+        f[F_BRANCH_TAKEN] = ic.branches_taken as f32;
+        f[F_MISPREDICT] = ic.mispredicts as f32;
+        f[F_L1I_MISS] = me.l1i_miss as f32;
+        f[F_L1D_MISS] = me.l1d_miss as f32;
+        f[F_L2_MISS] = me.l2_miss as f32;
+        f[F_TLB_MISS] = me.tlb_miss as f32;
+        f[F_PTW] = me.ptw_accesses as f32;
+        WindowSample { hart: hart as u32, engine_ticks, retired: ic.retired, features: f }
+    }
+}
+
+/// Model coefficients: per-feature cycle costs + the nonlinear memory
+/// terms. One instance per core model; serialized as an input operand to
+/// the HLO so one artifact serves every core configuration.
+#[derive(Debug, Clone)]
+pub struct TimingCoeffs {
+    /// Linear cost per feature count.
+    pub linear: [f32; NUM_FEATURES],
+    /// Memory-level-parallelism discount on DRAM stalls: effective DRAM
+    /// penalty = dram * (1 - mlp * min(1, load_density)).
+    pub mlp_discount: f32,
+    pub dram_penalty: f32,
+}
+
+impl TimingCoeffs {
+    /// Coefficients mirroring [`crate::rv64::hart::CoreModel`] + the
+    /// memory-latency table, so the analytic model tracks the engine.
+    pub fn for_core(model: &crate::rv64::hart::CoreModel, lat: &crate::mem::MemLatency) -> TimingCoeffs {
+        let mut linear = [0f32; NUM_FEATURES];
+        for i in 0..NUM_INST_CLASSES {
+            linear[i] = model.base_cost[i] as f32;
+        }
+        linear[F_BRANCH_TAKEN] = model.taken_branch_extra as f32;
+        linear[F_MISPREDICT] = model.mispredict_penalty as f32;
+        linear[F_L1I_MISS] = lat.l2_hit as f32;
+        linear[F_L1D_MISS] = lat.l2_hit as f32;
+        linear[F_TLB_MISS] = 1.0;
+        linear[F_PTW] = lat.ptw_per_level as f32;
+        // L2 misses handled by the nonlinear DRAM term.
+        linear[F_L2_MISS] = 0.0;
+        TimingCoeffs {
+            linear,
+            mlp_discount: 0.3,
+            dram_penalty: lat.dram as f32,
+        }
+    }
+
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut v = self.linear.to_vec();
+        v.push(self.mlp_discount);
+        v.push(self.dram_penalty);
+        v
+    }
+}
+
+/// Native mirror of the L2 JAX model (`python/compile/model.py`): cycles =
+/// linear dot + DRAM term with MLP discount. Kept in exact lockstep with
+/// the HLO artifact; the integration test asserts parity.
+pub fn native_window_cycles(features: &[f32; NUM_FEATURES], c: &TimingCoeffs) -> f32 {
+    let mut base = 0f32;
+    for i in 0..NUM_FEATURES {
+        base += features[i] * c.linear[i];
+    }
+    let loads = features[crate::rv64::inst::InstClass::Load as usize]
+        + features[crate::rv64::inst::InstClass::Amo as usize];
+    let retired: f32 = features[..NUM_INST_CLASSES].iter().sum();
+    let load_density = if retired > 0.0 { (loads / retired).min(1.0) } else { 0.0 };
+    let mlp = 1.0 - c.mlp_discount * load_density;
+    base + features[F_L2_MISS] * c.dram_penalty * mlp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemLatency;
+    use crate::rv64::hart::CoreModel;
+
+    #[test]
+    fn sample_from_counters() {
+        let mut ic = InstCounters::default();
+        ic.class[0] = 10;
+        ic.retired = 10;
+        ic.branches_taken = 3;
+        let mut me = MemEvents::default();
+        me.l1d_miss = 2;
+        let w = WindowSample::from_counters(1, 42, &ic, &me);
+        assert_eq!(w.hart, 1);
+        assert_eq!(w.engine_ticks, 42);
+        assert_eq!(w.features[0], 10.0);
+        assert_eq!(w.features[F_BRANCH_TAKEN], 3.0);
+        assert_eq!(w.features[F_L1D_MISS], 2.0);
+    }
+
+    #[test]
+    fn native_model_monotone_in_misses() {
+        let c = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+        let mut f = [0f32; NUM_FEATURES];
+        f[0] = 100.0;
+        let base = native_window_cycles(&f, &c);
+        f[F_L2_MISS] = 10.0;
+        let with_miss = native_window_cycles(&f, &c);
+        assert!(with_miss > base);
+    }
+
+    #[test]
+    fn mlp_discount_reduces_dram_cost() {
+        let c = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+        let mut few_loads = [0f32; NUM_FEATURES];
+        few_loads[0] = 90.0; // alu
+        few_loads[3] = 10.0; // loads
+        few_loads[F_L2_MISS] = 10.0;
+        let mut many_loads = few_loads;
+        many_loads[0] = 10.0;
+        many_loads[3] = 90.0;
+        let dram_few = native_window_cycles(&few_loads, &c)
+            - (90.0 * c.linear[0] + 10.0 * c.linear[3]);
+        let dram_many = native_window_cycles(&many_loads, &c)
+            - (10.0 * c.linear[0] + 90.0 * c.linear[3]);
+        assert!(dram_many < dram_few);
+    }
+
+    #[test]
+    fn coeffs_flatten_length() {
+        let c = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+        assert_eq!(c.flatten().len(), NUM_FEATURES + 2);
+    }
+}

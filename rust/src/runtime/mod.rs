@@ -1,0 +1,12 @@
+//! PJRT execution bridge: loads the AOT-compiled timing model
+//! (`artifacts/timing_model.hlo.txt`, produced once by
+//! `python/compile/aot.py`) and evaluates window batches from the
+//! performance recorder. Python never runs at simulation time — the HLO
+//! artifact is compiled and executed through the `xla` crate's PJRT CPU
+//! client.
+
+pub mod pjrt;
+pub mod timing_model;
+
+pub use pjrt::TimingModelExe;
+pub use timing_model::{default_artifact_path, TimingEvaluator, TimingReport};

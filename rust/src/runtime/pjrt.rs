@@ -1,0 +1,63 @@
+//! Thin wrapper over the `xla` crate PJRT CPU client for the timing-model
+//! executable (fixed static shapes: see python/compile/model.py).
+
+use anyhow::{Context, Result};
+
+/// Static shapes baked into the artifact (must match model.py).
+pub const BATCH: usize = 4096;
+pub const MAX_HARTS: usize = 8;
+pub const NUM_FEATURES: usize = crate::perf::window::NUM_FEATURES;
+
+/// A compiled timing-model executable on the PJRT CPU client.
+pub struct TimingModelExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one batch evaluation.
+#[derive(Debug, Clone)]
+pub struct BatchOut {
+    pub cycles: Vec<f32>,
+    pub per_hart_cycles: Vec<f32>,
+    pub per_hart_instret: Vec<f32>,
+}
+
+impl TimingModelExe {
+    /// Load HLO text and compile it (once per process).
+    pub fn load(path: &std::path::Path) -> Result<TimingModelExe> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(TimingModelExe { exe })
+    }
+
+    /// Evaluate one padded batch.
+    pub fn run(
+        &self,
+        features: &[f32], // BATCH * NUM_FEATURES
+        linear: &[f32],   // NUM_FEATURES
+        scalars: &[f32],  // 2
+        hart_onehot: &[f32], // BATCH * MAX_HARTS
+    ) -> Result<BatchOut> {
+        anyhow::ensure!(features.len() == BATCH * NUM_FEATURES);
+        anyhow::ensure!(linear.len() == NUM_FEATURES);
+        anyhow::ensure!(scalars.len() == 2);
+        anyhow::ensure!(hart_onehot.len() == BATCH * MAX_HARTS);
+        let f = xla::Literal::vec1(features).reshape(&[BATCH as i64, NUM_FEATURES as i64])?;
+        let l = xla::Literal::vec1(linear);
+        let s = xla::Literal::vec1(scalars);
+        let h = xla::Literal::vec1(hart_onehot).reshape(&[BATCH as i64, MAX_HARTS as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[f, l, s, h])?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        anyhow::ensure!(tuple.len() == 3, "expected 3 outputs, got {}", tuple.len());
+        Ok(BatchOut {
+            cycles: tuple[0].to_vec::<f32>()?,
+            per_hart_cycles: tuple[1].to_vec::<f32>()?,
+            per_hart_instret: tuple[2].to_vec::<f32>()?,
+        })
+    }
+}

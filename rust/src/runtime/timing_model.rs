@@ -1,0 +1,192 @@
+//! Window-batch timing evaluation: pads [`WindowSample`]s into the static
+//! BATCH shape, runs the AOT HLO model, and cross-checks against the
+//! native mirror ([`crate::perf::window::native_window_cycles`]).
+
+use super::pjrt::{BatchOut, TimingModelExe, BATCH, MAX_HARTS};
+use crate::perf::window::{TimingCoeffs, WindowSample, NUM_FEATURES};
+use anyhow::Result;
+
+pub fn default_artifact_path() -> std::path::PathBuf {
+    // Allow override for tests/deployment layouts.
+    if let Ok(p) = std::env::var("FASE_TIMING_HLO") {
+        return p.into();
+    }
+    // Relative to the repo root (cwd for the CLI and benches).
+    std::path::PathBuf::from("artifacts/timing_model.hlo.txt")
+}
+
+/// Aggregated report across all evaluated windows.
+#[derive(Debug, Clone, Default)]
+pub struct TimingReport {
+    pub windows: usize,
+    /// Model-estimated cycles per hart.
+    pub per_hart_cycles: Vec<f64>,
+    /// Retired instructions per hart.
+    pub per_hart_instret: Vec<f64>,
+    /// Ground-truth engine ticks per hart (from the samples).
+    pub per_hart_engine: Vec<u64>,
+    /// Sum of |model - engine| per window (model fidelity).
+    pub abs_err_sum: f64,
+}
+
+impl TimingReport {
+    pub fn model_total(&self) -> f64 {
+        self.per_hart_cycles.iter().sum()
+    }
+    pub fn engine_total(&self) -> u64 {
+        self.per_hart_engine.iter().sum()
+    }
+    /// Relative model-vs-engine error on total user cycles.
+    pub fn rel_error(&self) -> f64 {
+        let e = self.engine_total() as f64;
+        if e == 0.0 {
+            0.0
+        } else {
+            (self.model_total() - e) / e
+        }
+    }
+    /// Model IPC estimate per hart.
+    pub fn ipc(&self, hart: usize) -> f64 {
+        if self.per_hart_cycles[hart] == 0.0 {
+            0.0
+        } else {
+            self.per_hart_instret[hart] / self.per_hart_cycles[hart]
+        }
+    }
+}
+
+pub struct TimingEvaluator {
+    exe: TimingModelExe,
+    coeffs: TimingCoeffs,
+    /// Number of PJRT batch executions performed.
+    pub batches_run: u64,
+}
+
+impl TimingEvaluator {
+    pub fn load(path: &std::path::Path, coeffs: TimingCoeffs) -> Result<TimingEvaluator> {
+        Ok(TimingEvaluator { exe: TimingModelExe::load(path)?, coeffs, batches_run: 0 })
+    }
+
+    pub fn load_default(coeffs: TimingCoeffs) -> Result<TimingEvaluator> {
+        Self::load(&default_artifact_path(), coeffs)
+    }
+
+    fn linear_vec(&self) -> Vec<f32> {
+        self.coeffs.linear.to_vec()
+    }
+
+    fn scalars_vec(&self) -> Vec<f32> {
+        vec![self.coeffs.mlp_discount, self.coeffs.dram_penalty]
+    }
+
+    /// Evaluate all samples (padding the final batch) and aggregate.
+    pub fn evaluate(&mut self, samples: &[WindowSample]) -> Result<TimingReport> {
+        let mut report = TimingReport {
+            windows: samples.len(),
+            per_hart_cycles: vec![0.0; MAX_HARTS],
+            per_hart_instret: vec![0.0; MAX_HARTS],
+            per_hart_engine: vec![0; MAX_HARTS],
+            abs_err_sum: 0.0,
+        };
+        for s in samples {
+            report.per_hart_engine[s.hart as usize] += s.engine_ticks;
+        }
+        for chunk in samples.chunks(BATCH) {
+            let out = self.run_batch(chunk)?;
+            for h in 0..MAX_HARTS {
+                report.per_hart_cycles[h] += out.per_hart_cycles[h] as f64;
+                report.per_hart_instret[h] += out.per_hart_instret[h] as f64;
+            }
+            for (i, s) in chunk.iter().enumerate() {
+                report.abs_err_sum += (out.cycles[i] as f64 - s.engine_ticks as f64).abs();
+            }
+        }
+        Ok(report)
+    }
+
+    fn run_batch(&mut self, chunk: &[WindowSample]) -> Result<BatchOut> {
+        self.batches_run += 1;
+        let mut features = vec![0f32; BATCH * NUM_FEATURES];
+        let mut onehot = vec![0f32; BATCH * MAX_HARTS];
+        for (i, s) in chunk.iter().enumerate() {
+            features[i * NUM_FEATURES..(i + 1) * NUM_FEATURES].copy_from_slice(&s.features);
+            onehot[i * MAX_HARTS + (s.hart as usize).min(MAX_HARTS - 1)] = 1.0;
+        }
+        self.exe.run(&features, &self.linear_vec(), &self.scalars_vec(), &onehot)
+    }
+
+    /// Native mirror of one batch (perf comparisons + parity tests).
+    pub fn evaluate_native(&self, samples: &[WindowSample]) -> Vec<f32> {
+        samples
+            .iter()
+            .map(|s| crate::perf::window::native_window_cycles(&s.features, &self.coeffs))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemLatency;
+    use crate::rv64::hart::CoreModel;
+    use crate::util::prng::Prng;
+
+    fn random_samples(n: usize, seed: u64) -> Vec<WindowSample> {
+        let mut rng = Prng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut f = [0f32; NUM_FEATURES];
+                for v in f.iter_mut() {
+                    *v = rng.below(1000) as f32;
+                }
+                WindowSample {
+                    hart: (i % 4) as u32,
+                    engine_ticks: rng.below(100_000),
+                    retired: 100,
+                    features: f,
+                }
+            })
+            .collect()
+    }
+
+    fn artifact() -> std::path::PathBuf {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/timing_model.hlo.txt");
+        p
+    }
+
+    #[test]
+    fn pjrt_matches_native_mirror() {
+        let path = artifact();
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let coeffs = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+        let mut ev = TimingEvaluator::load(&path, coeffs).expect("load artifact");
+        let samples = random_samples(300, 42);
+        let native = ev.evaluate_native(&samples);
+        let report = ev.evaluate(&samples).expect("evaluate");
+        assert_eq!(report.windows, 300);
+        // Aggregate parity: sum of native == model per-hart totals.
+        let native_total: f64 = native.iter().map(|&v| v as f64).sum();
+        let model_total = report.model_total();
+        let rel = (native_total - model_total).abs() / native_total.max(1.0);
+        assert!(rel < 1e-5, "native={native_total} model={model_total}");
+    }
+
+    #[test]
+    fn multi_batch_padding() {
+        let path = artifact();
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let coeffs = TimingCoeffs::for_core(&CoreModel::rocket(), &MemLatency::default());
+        let mut ev = TimingEvaluator::load(&path, coeffs).expect("load");
+        let samples = random_samples(super::BATCH + 17, 7);
+        let report = ev.evaluate(&samples).expect("evaluate");
+        assert_eq!(ev.batches_run, 2);
+        assert_eq!(report.windows, super::BATCH + 17);
+        assert!(report.model_total() > 0.0);
+    }
+}

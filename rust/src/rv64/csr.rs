@@ -1,0 +1,202 @@
+//! The minimal CSR file FASE exercises (§VII of the paper: `satp` for page
+//! tables; `mstatus`/`mcause`/`mepc`/`mtval` for exception info; plus the
+//! float CSRs and user counters every Linux-style workload touches).
+
+use super::hart::PrivLevel;
+
+// CSR addresses.
+pub const FFLAGS: u16 = 0x001;
+pub const FRM: u16 = 0x002;
+pub const FCSR: u16 = 0x003;
+pub const SATP: u16 = 0x180;
+pub const MSTATUS: u16 = 0x300;
+pub const MISA: u16 = 0x301;
+pub const MIE: u16 = 0x304;
+pub const MTVEC: u16 = 0x305;
+pub const MSCRATCH: u16 = 0x340;
+pub const MEPC: u16 = 0x341;
+pub const MCAUSE: u16 = 0x342;
+pub const MTVAL: u16 = 0x343;
+pub const MIP: u16 = 0x344;
+pub const CYCLE: u16 = 0xc00;
+pub const TIME: u16 = 0xc01;
+pub const INSTRET: u16 = 0xc02;
+pub const MHARTID: u16 = 0xf14;
+
+// mstatus bits.
+pub const MSTATUS_MIE: u64 = 1 << 3;
+pub const MSTATUS_MPIE: u64 = 1 << 7;
+pub const MSTATUS_MPP_SHIFT: u64 = 11;
+pub const MSTATUS_MPP_MASK: u64 = 3 << MSTATUS_MPP_SHIFT;
+pub const MSTATUS_FS_DIRTY: u64 = 3 << 13;
+
+#[derive(Debug, Clone)]
+pub struct Csrs {
+    pub mstatus: u64,
+    pub mepc: u64,
+    pub mcause: u64,
+    pub mtval: u64,
+    pub mtvec: u64,
+    pub mscratch: u64,
+    pub mie: u64,
+    pub mip: u64,
+    pub satp: u64,
+    pub fcsr: u64,
+    pub mhartid: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CsrError {
+    /// Unknown CSR or insufficient privilege — raises illegal instruction.
+    Illegal,
+}
+
+impl Csrs {
+    pub fn new(hartid: u64) -> Csrs {
+        Csrs {
+            // FP unit always on (FS = dirty), like a Linux process context.
+            mstatus: MSTATUS_FS_DIRTY,
+            mepc: 0,
+            mcause: 0,
+            mtval: 0,
+            mtvec: 0,
+            mscratch: 0,
+            mie: 0,
+            mip: 0,
+            satp: 0,
+            fcsr: 0,
+            mhartid: hartid,
+        }
+    }
+
+    /// `time`/`cycle`/`instret` shadows are supplied by the hart.
+    pub fn read(
+        &self,
+        csr: u16,
+        prv: PrivLevel,
+        cycle: u64,
+        instret: u64,
+    ) -> Result<u64, CsrError> {
+        if is_machine_csr(csr) && prv != PrivLevel::M {
+            return Err(CsrError::Illegal);
+        }
+        Ok(match csr {
+            FFLAGS => self.fcsr & 0x1f,
+            FRM => (self.fcsr >> 5) & 0x7,
+            FCSR => self.fcsr & 0xff,
+            SATP => self.satp,
+            MSTATUS => self.mstatus,
+            MISA => (2u64 << 62) | misa_ext("imafd"),
+            MIE => self.mie,
+            MTVEC => self.mtvec,
+            MSCRATCH => self.mscratch,
+            MEPC => self.mepc,
+            MCAUSE => self.mcause,
+            MTVAL => self.mtval,
+            MIP => self.mip,
+            CYCLE | TIME => cycle,
+            INSTRET => instret,
+            MHARTID => self.mhartid,
+            _ => return Err(CsrError::Illegal),
+        })
+    }
+
+    pub fn write(&mut self, csr: u16, val: u64, prv: PrivLevel) -> Result<(), CsrError> {
+        if is_machine_csr(csr) && prv != PrivLevel::M {
+            return Err(CsrError::Illegal);
+        }
+        match csr {
+            FFLAGS => self.fcsr = (self.fcsr & !0x1f) | (val & 0x1f),
+            FRM => self.fcsr = (self.fcsr & !0xe0) | ((val & 7) << 5),
+            FCSR => self.fcsr = val & 0xff,
+            SATP => self.satp = val,
+            MSTATUS => self.mstatus = val | MSTATUS_FS_DIRTY,
+            MISA => {}
+            MIE => self.mie = val,
+            MTVEC => self.mtvec = val & !0b11, // direct mode only
+            MSCRATCH => self.mscratch = val,
+            MEPC => self.mepc = val & !1,
+            MCAUSE => self.mcause = val,
+            MTVAL => self.mtval = val,
+            MIP => self.mip = val,
+            CYCLE | TIME | INSTRET | MHARTID => return Err(CsrError::Illegal),
+            _ => return Err(CsrError::Illegal),
+        }
+        Ok(())
+    }
+
+    pub fn frm(&self) -> u8 {
+        ((self.fcsr >> 5) & 7) as u8
+    }
+
+    pub fn set_fflags(&mut self, flags: u64) {
+        self.fcsr |= flags & 0x1f;
+    }
+
+    pub fn mpp(&self) -> u64 {
+        (self.mstatus & MSTATUS_MPP_MASK) >> MSTATUS_MPP_SHIFT
+    }
+
+    pub fn set_mpp(&mut self, prv: u64) {
+        self.mstatus =
+            (self.mstatus & !MSTATUS_MPP_MASK) | ((prv & 3) << MSTATUS_MPP_SHIFT);
+    }
+}
+
+/// Machine-level CSRs (0x3xx, 0xFxx) plus `satp`, which is M-managed here
+/// because the target has no S-mode — the host runtime *is* the kernel.
+fn is_machine_csr(csr: u16) -> bool {
+    (0x300..0x400).contains(&csr) || csr >= 0xf00 || csr == SATP
+}
+
+fn misa_ext(s: &str) -> u64 {
+    s.bytes().fold(0u64, |acc, b| acc | 1 << (b - b'a'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn user_cannot_touch_machine_csrs() {
+        let mut c = Csrs::new(0);
+        assert_eq!(c.read(MEPC, PrivLevel::U, 0, 0), Err(CsrError::Illegal));
+        assert_eq!(c.write(SATP, 1, PrivLevel::U), Err(CsrError::Illegal));
+        assert!(c.read(FCSR, PrivLevel::U, 0, 0).is_ok());
+    }
+
+    #[test]
+    fn machine_rw() {
+        let mut c = Csrs::new(3);
+        c.write(MEPC, 0x1001, PrivLevel::M).unwrap();
+        assert_eq!(c.read(MEPC, PrivLevel::M, 0, 0).unwrap(), 0x1000); // low bit cleared
+        assert_eq!(c.read(MHARTID, PrivLevel::M, 0, 0).unwrap(), 3);
+        assert!(c.write(MHARTID, 9, PrivLevel::M).is_err());
+    }
+
+    #[test]
+    fn counters_shadow() {
+        let c = Csrs::new(0);
+        assert_eq!(c.read(CYCLE, PrivLevel::U, 1234, 99).unwrap(), 1234);
+        assert_eq!(c.read(INSTRET, PrivLevel::U, 1234, 99).unwrap(), 99);
+    }
+
+    #[test]
+    fn mpp_roundtrip() {
+        let mut c = Csrs::new(0);
+        c.set_mpp(3);
+        assert_eq!(c.mpp(), 3);
+        c.set_mpp(0);
+        assert_eq!(c.mpp(), 0);
+    }
+
+    #[test]
+    fn fflags_frm_alias_fcsr() {
+        let mut c = Csrs::new(0);
+        c.write(FCSR, 0xff, PrivLevel::U).unwrap();
+        assert_eq!(c.read(FFLAGS, PrivLevel::U, 0, 0).unwrap(), 0x1f);
+        assert_eq!(c.read(FRM, PrivLevel::U, 0, 0).unwrap(), 7);
+        c.write(FRM, 0, PrivLevel::U).unwrap();
+        assert_eq!(c.read(FCSR, PrivLevel::U, 0, 0).unwrap(), 0x1f);
+    }
+}

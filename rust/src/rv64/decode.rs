@@ -1,0 +1,554 @@
+//! RV64IMAFD + Zicsr + Zifencei + privileged-subset decoder.
+//!
+//! Guests are compiled with `-march=rv64imafd` (no C extension), so all
+//! instructions are 32-bit. Unknown encodings decode to [`Inst::Illegal`].
+
+use super::inst::*;
+
+#[inline]
+fn rd(raw: u32) -> u8 {
+    ((raw >> 7) & 0x1f) as u8
+}
+#[inline]
+fn rs1(raw: u32) -> u8 {
+    ((raw >> 15) & 0x1f) as u8
+}
+#[inline]
+fn rs2(raw: u32) -> u8 {
+    ((raw >> 20) & 0x1f) as u8
+}
+#[inline]
+fn rs3(raw: u32) -> u8 {
+    ((raw >> 27) & 0x1f) as u8
+}
+#[inline]
+fn funct3(raw: u32) -> u32 {
+    (raw >> 12) & 0x7
+}
+#[inline]
+fn funct7(raw: u32) -> u32 {
+    (raw >> 25) & 0x7f
+}
+
+#[inline]
+fn imm_i(raw: u32) -> i64 {
+    (raw as i32 >> 20) as i64
+}
+
+#[inline]
+fn imm_s(raw: u32) -> i64 {
+    let hi = (raw as i32 >> 25) as i64; // sign-extended [11:5]
+    let lo = ((raw >> 7) & 0x1f) as i64;
+    (hi << 5) | lo
+}
+
+#[inline]
+fn imm_b(raw: u32) -> i64 {
+    let sign = (raw as i32 >> 31) as i64; // bit 12
+    let b11 = ((raw >> 7) & 1) as i64;
+    let b10_5 = ((raw >> 25) & 0x3f) as i64;
+    let b4_1 = ((raw >> 8) & 0xf) as i64;
+    (sign << 12) | (b11 << 11) | (b10_5 << 5) | (b4_1 << 1)
+}
+
+#[inline]
+fn imm_u(raw: u32) -> i64 {
+    (raw & 0xffff_f000) as i32 as i64
+}
+
+#[inline]
+fn imm_j(raw: u32) -> i64 {
+    let sign = (raw as i32 >> 31) as i64; // bit 20
+    let b19_12 = ((raw >> 12) & 0xff) as i64;
+    let b11 = ((raw >> 20) & 1) as i64;
+    let b10_1 = ((raw >> 21) & 0x3ff) as i64;
+    (sign << 20) | (b19_12 << 12) | (b11 << 11) | (b10_1 << 1)
+}
+
+pub fn decode(raw: u32) -> Inst {
+    let opcode = raw & 0x7f;
+    match opcode {
+        0x37 => Inst::Lui { rd: rd(raw), imm: imm_u(raw) },
+        0x17 => Inst::Auipc { rd: rd(raw), imm: imm_u(raw) },
+        0x6f => Inst::Jal { rd: rd(raw), imm: imm_j(raw) },
+        0x67 if funct3(raw) == 0 => Inst::Jalr { rd: rd(raw), rs1: rs1(raw), imm: imm_i(raw) },
+        0x63 => {
+            let op = match funct3(raw) {
+                0 => BranchOp::Eq,
+                1 => BranchOp::Ne,
+                4 => BranchOp::Lt,
+                5 => BranchOp::Ge,
+                6 => BranchOp::Ltu,
+                7 => BranchOp::Geu,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Branch { op, rs1: rs1(raw), rs2: rs2(raw), imm: imm_b(raw) }
+        }
+        0x03 => {
+            let (width, signed) = match funct3(raw) {
+                0 => (Width::B, true),
+                1 => (Width::H, true),
+                2 => (Width::W, true),
+                3 => (Width::D, true),
+                4 => (Width::B, false),
+                5 => (Width::H, false),
+                6 => (Width::W, false),
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Load { width, signed, rd: rd(raw), rs1: rs1(raw), imm: imm_i(raw) }
+        }
+        0x23 => {
+            let width = match funct3(raw) {
+                0 => Width::B,
+                1 => Width::H,
+                2 => Width::W,
+                3 => Width::D,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Store { width, rs1: rs1(raw), rs2: rs2(raw), imm: imm_s(raw) }
+        }
+        0x13 => {
+            // OP-IMM
+            let imm = imm_i(raw);
+            let op = match funct3(raw) {
+                0 => AluOp::Add,
+                1 if funct7(raw) & 0x7e == 0 => {
+                    return Inst::OpImm {
+                        op: AluOp::Sll,
+                        rd: rd(raw),
+                        rs1: rs1(raw),
+                        imm: (raw as i64 >> 20) & 0x3f,
+                    }
+                }
+                2 => AluOp::Slt,
+                3 => AluOp::Sltu,
+                4 => AluOp::Xor,
+                5 => {
+                    let shamt = (raw >> 20) & 0x3f;
+                    let op = if (raw >> 26) & 0x3f == 0x10 { AluOp::Sra } else if (raw >> 26) == 0 { AluOp::Srl } else {
+                        return Inst::Illegal { raw };
+                    };
+                    return Inst::OpImm { op, rd: rd(raw), rs1: rs1(raw), imm: shamt as i64 };
+                }
+                6 => AluOp::Or,
+                7 => AluOp::And,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::OpImm { op, rd: rd(raw), rs1: rs1(raw), imm }
+        }
+        0x1b => {
+            // OP-IMM-32
+            match funct3(raw) {
+                0 => Inst::OpImm { op: AluOp::Addw, rd: rd(raw), rs1: rs1(raw), imm: imm_i(raw) },
+                1 if funct7(raw) == 0 => Inst::OpImm {
+                    op: AluOp::Sllw,
+                    rd: rd(raw),
+                    rs1: rs1(raw),
+                    imm: ((raw >> 20) & 0x1f) as i64,
+                },
+                5 => {
+                    let shamt = ((raw >> 20) & 0x1f) as i64;
+                    match funct7(raw) {
+                        0x00 => Inst::OpImm { op: AluOp::Srlw, rd: rd(raw), rs1: rs1(raw), imm: shamt },
+                        0x20 => Inst::OpImm { op: AluOp::Sraw, rd: rd(raw), rs1: rs1(raw), imm: shamt },
+                        _ => Inst::Illegal { raw },
+                    }
+                }
+                _ => Inst::Illegal { raw },
+            }
+        }
+        0x33 => {
+            // OP
+            let (f3, f7) = (funct3(raw), funct7(raw));
+            if f7 == 1 {
+                let op = match f3 {
+                    0 => MulOp::Mul,
+                    1 => MulOp::Mulh,
+                    2 => MulOp::Mulhsu,
+                    3 => MulOp::Mulhu,
+                    4 => MulOp::Div,
+                    5 => MulOp::Divu,
+                    6 => MulOp::Rem,
+                    7 => MulOp::Remu,
+                    _ => unreachable!(),
+                };
+                return Inst::MulDiv { op, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw) };
+            }
+            let op = match (f3, f7) {
+                (0, 0x00) => AluOp::Add,
+                (0, 0x20) => AluOp::Sub,
+                (1, 0x00) => AluOp::Sll,
+                (2, 0x00) => AluOp::Slt,
+                (3, 0x00) => AluOp::Sltu,
+                (4, 0x00) => AluOp::Xor,
+                (5, 0x00) => AluOp::Srl,
+                (5, 0x20) => AluOp::Sra,
+                (6, 0x00) => AluOp::Or,
+                (7, 0x00) => AluOp::And,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Op { op, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw) }
+        }
+        0x3b => {
+            // OP-32
+            let (f3, f7) = (funct3(raw), funct7(raw));
+            if f7 == 1 {
+                let op = match f3 {
+                    0 => MulOp::Mulw,
+                    4 => MulOp::Divw,
+                    5 => MulOp::Divuw,
+                    6 => MulOp::Remw,
+                    7 => MulOp::Remuw,
+                    _ => return Inst::Illegal { raw },
+                };
+                return Inst::MulDiv { op, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw) };
+            }
+            let op = match (f3, f7) {
+                (0, 0x00) => AluOp::Addw,
+                (0, 0x20) => AluOp::Subw,
+                (1, 0x00) => AluOp::Sllw,
+                (5, 0x00) => AluOp::Srlw,
+                (5, 0x20) => AluOp::Sraw,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Op { op, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw) }
+        }
+        0x2f => {
+            // AMO
+            let width = match funct3(raw) {
+                2 => Width::W,
+                3 => Width::D,
+                _ => return Inst::Illegal { raw },
+            };
+            let f5 = raw >> 27;
+            match f5 {
+                0x02 if rs2(raw) == 0 => Inst::Lr { width, rd: rd(raw), rs1: rs1(raw) },
+                0x03 => Inst::Sc { width, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw) },
+                _ => {
+                    let op = match f5 {
+                        0x01 => AmoOp::Swap,
+                        0x00 => AmoOp::Add,
+                        0x04 => AmoOp::Xor,
+                        0x0c => AmoOp::And,
+                        0x08 => AmoOp::Or,
+                        0x10 => AmoOp::Min,
+                        0x14 => AmoOp::Max,
+                        0x18 => AmoOp::Minu,
+                        0x1c => AmoOp::Maxu,
+                        _ => return Inst::Illegal { raw },
+                    };
+                    Inst::Amo { op, width, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw) }
+                }
+            }
+        }
+        0x07 => {
+            // FP load
+            let dbl = match funct3(raw) {
+                2 => false,
+                3 => true,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::FLoad { dbl, rd: rd(raw), rs1: rs1(raw), imm: imm_i(raw) }
+        }
+        0x27 => {
+            let dbl = match funct3(raw) {
+                2 => false,
+                3 => true,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::FStore { dbl, rs1: rs1(raw), rs2: rs2(raw), imm: imm_s(raw) }
+        }
+        0x43 | 0x47 | 0x4b | 0x4f => {
+            // FMADD/FMSUB/FNMSUB/FNMADD
+            let dbl = match (raw >> 25) & 0x3 {
+                0 => false,
+                1 => true,
+                _ => return Inst::Illegal { raw },
+            };
+            let op = match opcode {
+                0x43 => FmaOp::Madd,
+                0x47 => FmaOp::Msub,
+                0x4b => FmaOp::Nmsub,
+                _ => FmaOp::Nmadd,
+            };
+            Inst::Fma { op, dbl, rd: rd(raw), rs1: rs1(raw), rs2: rs2(raw), rs3: rs3(raw) }
+        }
+        0x53 => decode_fp(raw),
+        0x0f => match funct3(raw) {
+            0 => Inst::Fence,
+            1 => Inst::FenceI,
+            _ => Inst::Illegal { raw },
+        },
+        0x73 => {
+            let f3 = funct3(raw);
+            if f3 == 0 {
+                match raw {
+                    0x0000_0073 => Inst::Ecall,
+                    0x0010_0073 => Inst::Ebreak,
+                    0x3020_0073 => Inst::Mret,
+                    0x1050_0073 => Inst::Wfi,
+                    _ if funct7(raw) == 0x09 => {
+                        Inst::SfenceVma { rs1: rs1(raw), rs2: rs2(raw) }
+                    }
+                    _ => Inst::Illegal { raw },
+                }
+            } else {
+                let (op, imm) = match f3 {
+                    1 => (CsrOp::Rw, false),
+                    2 => (CsrOp::Rs, false),
+                    3 => (CsrOp::Rc, false),
+                    5 => (CsrOp::Rw, true),
+                    6 => (CsrOp::Rs, true),
+                    7 => (CsrOp::Rc, true),
+                    _ => return Inst::Illegal { raw },
+                };
+                Inst::Csr {
+                    op,
+                    rd: rd(raw),
+                    csr: ((raw >> 20) & 0xfff) as u16,
+                    src: rs1(raw),
+                    imm,
+                }
+            }
+        }
+        _ => Inst::Illegal { raw },
+    }
+}
+
+fn decode_fp(raw: u32) -> Inst {
+    let f7 = funct7(raw);
+    let dbl = f7 & 1 == 1;
+    let rm = funct3(raw) as u8;
+    let (rdv, r1, r2) = (rd(raw), rs1(raw), rs2(raw));
+    match f7 >> 2 {
+        0x00 => Inst::Fp { op: FpOp::Add, dbl, rd: rdv, rs1: r1, rs2: r2 },
+        0x01 => Inst::Fp { op: FpOp::Sub, dbl, rd: rdv, rs1: r1, rs2: r2 },
+        0x02 => Inst::Fp { op: FpOp::Mul, dbl, rd: rdv, rs1: r1, rs2: r2 },
+        0x03 => Inst::Fp { op: FpOp::Div, dbl, rd: rdv, rs1: r1, rs2: r2 },
+        0x0b if r2 == 0 => Inst::Fp { op: FpOp::Sqrt, dbl, rd: rdv, rs1: r1, rs2: 0 },
+        0x04 => {
+            let op = match rm {
+                0 => FpOp::SgnJ,
+                1 => FpOp::SgnJN,
+                2 => FpOp::SgnJX,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Fp { op, dbl, rd: rdv, rs1: r1, rs2: r2 }
+        }
+        0x05 => {
+            let op = match rm {
+                0 => FpOp::Min,
+                1 => FpOp::Max,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Fp { op, dbl, rd: rdv, rs1: r1, rs2: r2 }
+        }
+        0x14 => {
+            let op = match rm {
+                0 => FpOp::CmpLe,
+                1 => FpOp::CmpLt,
+                2 => FpOp::CmpEq,
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Fp { op, dbl, rd: rdv, rs1: r1, rs2: r2 }
+        }
+        0x08 => {
+            // fcvt.s.d / fcvt.d.s
+            match (dbl, r2) {
+                (false, 1) => Inst::Fcvt { kind: FcvtKind::DToS, rd: rdv, rs1: r1, rm },
+                (true, 0) => Inst::Fcvt { kind: FcvtKind::SToD, rd: rdv, rs1: r1, rm },
+                _ => Inst::Illegal { raw },
+            }
+        }
+        0x18 => {
+            // fcvt.{w,wu,l,lu}.{s,d}
+            let kind = match r2 {
+                0 => FcvtKind::FpToW { dbl, unsigned: false },
+                1 => FcvtKind::FpToW { dbl, unsigned: true },
+                2 => FcvtKind::FpToL { dbl, unsigned: false },
+                3 => FcvtKind::FpToL { dbl, unsigned: true },
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Fcvt { kind, rd: rdv, rs1: r1, rm }
+        }
+        0x1a => {
+            // fcvt.{s,d}.{w,wu,l,lu}
+            let kind = match r2 {
+                0 => FcvtKind::WToFp { dbl, unsigned: false },
+                1 => FcvtKind::WToFp { dbl, unsigned: true },
+                2 => FcvtKind::LToFp { dbl, unsigned: false },
+                3 => FcvtKind::LToFp { dbl, unsigned: true },
+                _ => return Inst::Illegal { raw },
+            };
+            Inst::Fcvt { kind, rd: rdv, rs1: r1, rm }
+        }
+        0x1c if r2 == 0 && rm == 0 => {
+            Inst::Fcvt { kind: FcvtKind::FpToBits { dbl }, rd: rdv, rs1: r1, rm }
+        }
+        0x1c if r2 == 0 && rm == 1 => Inst::Fp { op: FpOp::Class, dbl, rd: rdv, rs1: r1, rs2: 0 },
+        0x1e if r2 == 0 && rm == 0 => {
+            Inst::Fcvt { kind: FcvtKind::BitsToFp { dbl }, rd: rdv, rs1: r1, rm }
+        }
+        _ => Inst::Illegal { raw },
+    }
+}
+
+/// Instruction *encoders* — used by the FASE controller to assemble the
+/// injected sequences of Table II, and by tests. Only the encodings the
+/// controller needs are provided.
+pub mod encode {
+    /// addi rd, rs1, imm
+    pub fn addi(rd: u8, rs1: u8, imm: i32) -> u32 {
+        assert!((-2048..2048).contains(&imm));
+        ((imm as u32 & 0xfff) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0x13
+    }
+    /// lui rd, imm20 (upper 20 bits)
+    pub fn lui(rd: u8, imm20: u32) -> u32 {
+        (imm20 << 12) | ((rd as u32) << 7) | 0x37
+    }
+    /// ld rd, imm(rs1)
+    pub fn ld(rd: u8, rs1: u8, imm: i32) -> u32 {
+        assert!((-2048..2048).contains(&imm));
+        ((imm as u32 & 0xfff) << 20) | ((rs1 as u32) << 15) | (3 << 12) | ((rd as u32) << 7) | 0x03
+    }
+    /// sd rs2, imm(rs1)
+    pub fn sd(rs2: u8, rs1: u8, imm: i32) -> u32 {
+        assert!((-2048..2048).contains(&imm));
+        let imm = imm as u32 & 0xfff;
+        ((imm >> 5) << 25)
+            | ((rs2 as u32) << 20)
+            | ((rs1 as u32) << 15)
+            | (3 << 12)
+            | ((imm & 0x1f) << 7)
+            | 0x23
+    }
+    /// slli rd, rs1, shamt
+    pub fn slli(rd: u8, rs1: u8, shamt: u32) -> u32 {
+        (shamt << 20) | ((rs1 as u32) << 15) | (1 << 12) | ((rd as u32) << 7) | 0x13
+    }
+    /// csrrw rd, csr, rs1
+    pub fn csrrw(rd: u8, csr: u16, rs1: u8) -> u32 {
+        ((csr as u32) << 20) | ((rs1 as u32) << 15) | (1 << 12) | ((rd as u32) << 7) | 0x73
+    }
+    /// csrrs rd, csr, rs1
+    pub fn csrrs(rd: u8, csr: u16, rs1: u8) -> u32 {
+        ((csr as u32) << 20) | ((rs1 as u32) << 15) | (2 << 12) | ((rd as u32) << 7) | 0x73
+    }
+    /// csrrc rd, csr, rs1
+    pub fn csrrc(rd: u8, csr: u16, rs1: u8) -> u32 {
+        ((csr as u32) << 20) | ((rs1 as u32) << 15) | (3 << 12) | ((rd as u32) << 7) | 0x73
+    }
+    pub fn mret() -> u32 {
+        0x3020_0073
+    }
+    pub fn fence_i() -> u32 {
+        0x0000_100f
+    }
+    /// sfence.vma x0, x0
+    pub fn sfence_vma() -> u32 {
+        0x1200_0073
+    }
+    /// or rd, rs1, rs2
+    pub fn or(rd: u8, rs1: u8, rs2: u8) -> u32 {
+        ((0u32) << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | (6 << 12) | ((rd as u32) << 7) | 0x33
+    }
+    /// jal x0, 0 — self-loop (the paper's "interrupt vector redirected to a
+    /// simple infinite loop")
+    pub fn self_loop() -> u32 {
+        0x0000_006f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_addi() {
+        // addi x1, x2, -3
+        let raw = encode::addi(1, 2, -3);
+        assert_eq!(
+            decode(raw),
+            Inst::OpImm { op: AluOp::Add, rd: 1, rs1: 2, imm: -3 }
+        );
+    }
+
+    #[test]
+    fn decode_ld_sd_roundtrip() {
+        assert_eq!(
+            decode(encode::ld(3, 1, 8)),
+            Inst::Load { width: Width::D, signed: true, rd: 3, rs1: 1, imm: 8 }
+        );
+        assert_eq!(
+            decode(encode::sd(2, 1, -16)),
+            Inst::Store { width: Width::D, rs1: 1, rs2: 2, imm: -16 }
+        );
+    }
+
+    #[test]
+    fn decode_branch_imm() {
+        // beq x1, x2, +8  => imm_b reconstruction
+        // opcode 0x63, f3=0
+        let imm: i64 = 8;
+        let raw = {
+            let imm = imm as u32;
+            let b12 = (imm >> 12) & 1;
+            let b11 = (imm >> 11) & 1;
+            let b10_5 = (imm >> 5) & 0x3f;
+            let b4_1 = (imm >> 1) & 0xf;
+            (b12 << 31) | (b10_5 << 25) | (2 << 20) | (1 << 15) | (b4_1 << 8) | (b11 << 7) | 0x63
+        };
+        assert_eq!(
+            decode(raw),
+            Inst::Branch { op: BranchOp::Eq, rs1: 1, rs2: 2, imm: 8 }
+        );
+    }
+
+    #[test]
+    fn decode_system() {
+        assert_eq!(decode(0x0000_0073), Inst::Ecall);
+        assert_eq!(decode(0x3020_0073), Inst::Mret);
+        assert_eq!(decode(encode::fence_i()), Inst::FenceI);
+        assert!(matches!(decode(encode::sfence_vma()), Inst::SfenceVma { .. }));
+    }
+
+    #[test]
+    fn decode_csr() {
+        let raw = encode::csrrw(1, 0x341, 2); // csrrw x1, mepc, x2
+        assert_eq!(
+            decode(raw),
+            Inst::Csr { op: CsrOp::Rw, rd: 1, csr: 0x341, src: 2, imm: false }
+        );
+    }
+
+    #[test]
+    fn decode_mul_amo() {
+        // mul x5, x6, x7 : f7=1 f3=0 opcode 0x33
+        let raw = (1 << 25) | (7 << 20) | (6 << 15) | (5 << 7) | 0x33;
+        assert_eq!(decode(raw), Inst::MulDiv { op: MulOp::Mul, rd: 5, rs1: 6, rs2: 7 });
+        // amoadd.w x10, x11, (x12): f5=0, f3=2, opcode 0x2f
+        let raw = (11 << 20) | (12 << 15) | (2 << 12) | (10 << 7) | 0x2f;
+        assert_eq!(
+            decode(raw),
+            Inst::Amo { op: AmoOp::Add, width: Width::W, rd: 10, rs1: 12, rs2: 11 }
+        );
+    }
+
+    #[test]
+    fn illegal_decodes_to_illegal() {
+        assert!(matches!(decode(0xffff_ffff), Inst::Illegal { .. }));
+        assert!(matches!(decode(0), Inst::Illegal { .. }));
+    }
+
+    #[test]
+    fn self_loop_is_jal_zero() {
+        assert_eq!(decode(encode::self_loop()), Inst::Jal { rd: 0, imm: 0 });
+    }
+
+    #[test]
+    fn shift_imm_rv64_6bit_shamt() {
+        // slli x1, x1, 44
+        let raw = encode::slli(1, 1, 44);
+        assert_eq!(decode(raw), Inst::OpImm { op: AluOp::Sll, rd: 1, rs1: 1, imm: 44 });
+    }
+}

@@ -1,0 +1,838 @@
+//! Instruction execution: fetch/decode/execute step shared by the fast
+//! engine (FPGA stand-in) and the detailed engine (RTL-sim stand-in), plus
+//! the injected-instruction path used by the FASE controller.
+
+use super::csr::CsrError;
+use super::decode::decode;
+use super::fpu::{self, box_d, box_s, unbox_d, unbox_s};
+use super::hart::{CoreModel, Hart, PrivLevel};
+use super::inst::*;
+use super::Trap;
+use crate::mem::{mmu, Access, MemSys};
+
+/// Execute one instruction at `h.pc`. On success returns cycles consumed
+/// (pc/counters updated). On a trap the pc is left at the faulting
+/// instruction; the caller performs `enter_trap`.
+pub fn step(h: &mut Hart, ms: &mut MemSys, model: &CoreModel) -> Result<u64, Trap> {
+    let user = h.prv == PrivLevel::U;
+    let satp = mmu::Satp(h.csrs.satp);
+    let (ppc, c_xlat) = mmu::translate(ms, h.id, satp, user, h.pc, Access::Fetch)?;
+    // Decoded-instruction cache skips host-side decode work only; the
+    // target-timing I-cache access is charged either way.
+    let (inst, c_fetch) = match h.dcache.get(ppc) {
+        Some(i) => (i, ms.fetch_timing(h.id, ppc)),
+        None => {
+            let (raw, c) = ms.fetch(h.id, ppc)?;
+            let i = decode(raw);
+            h.dcache.put(ppc, i);
+            (i, c)
+        }
+    };
+    let (next_pc, c_exec) = exec_decoded(h, ms, model, &inst, h.pc)?;
+    h.pc = next_pc;
+    h.instret += 1;
+    let cls = inst.class();
+    h.counters.class[cls as usize] += 1;
+    h.counters.retired += 1;
+    Ok(c_xlat + c_fetch + c_exec)
+}
+
+/// Execute one controller-injected instruction (M-mode back-end injection
+/// through the `Inject` port). Non-branch instructions leave pc untouched;
+/// `mret` performs the architectural return (that is how `Redirect` starts
+/// user execution).
+pub fn exec_injected(h: &mut Hart, ms: &mut MemSys, model: &CoreModel, raw: u32) -> Result<u64, Trap> {
+    debug_assert_eq!(h.prv, PrivLevel::M, "injection only while stalled in M-mode");
+    let inst = decode(raw);
+    if let Inst::Mret = inst {
+        h.do_mret();
+        return Ok(model.base_cost[InstClass::System as usize] + model.inject_drain);
+    }
+    debug_assert!(!inst.is_control_flow(), "Inject port carries non-branch instructions only");
+    let saved_pc = h.pc;
+    let (_, cycles) = exec_decoded(h, ms, model, &inst, saved_pc)?;
+    h.pc = saved_pc;
+    Ok(cycles + model.inject_drain)
+}
+
+/// Core execute. Returns (next_pc, cycles).
+fn exec_decoded(
+    h: &mut Hart,
+    ms: &mut MemSys,
+    model: &CoreModel,
+    inst: &Inst,
+    pc: u64,
+) -> Result<(u64, u64), Trap> {
+    let user = h.prv == PrivLevel::U;
+    let satp = mmu::Satp(h.csrs.satp);
+    let cls = inst.class();
+    let mut cycles = model.base_cost[cls as usize];
+    let mut next = pc.wrapping_add(4);
+
+    macro_rules! xlate {
+        ($va:expr, $acc:expr) => {{
+            let (pa, c) = mmu::translate(ms, h.id, satp, user, $va, $acc)?;
+            cycles += c;
+            pa
+        }};
+    }
+
+    match *inst {
+        Inst::Lui { rd, imm } => h.set_reg(rd, imm as u64),
+        Inst::Auipc { rd, imm } => h.set_reg(rd, pc.wrapping_add(imm as u64)),
+        Inst::Jal { rd, imm } => {
+            h.set_reg(rd, pc.wrapping_add(4));
+            next = pc.wrapping_add(imm as u64);
+        }
+        Inst::Jalr { rd, rs1, imm } => {
+            let target = h.reg(rs1).wrapping_add(imm as u64) & !1;
+            h.set_reg(rd, pc.wrapping_add(4));
+            next = target;
+            // Returns (jalr x0, ra) hit the RAS; other indirect jumps pay a
+            // mispredict penalty.
+            if !(rd == 0 && rs1 == 1) {
+                cycles += model.mispredict_penalty;
+                h.counters.mispredicts += 1;
+            }
+        }
+        Inst::Branch { op, rs1, rs2, imm } => {
+            let (a, b) = (h.reg(rs1), h.reg(rs2));
+            let taken = match op {
+                BranchOp::Eq => a == b,
+                BranchOp::Ne => a != b,
+                BranchOp::Lt => (a as i64) < (b as i64),
+                BranchOp::Ge => (a as i64) >= (b as i64),
+                BranchOp::Ltu => a < b,
+                BranchOp::Geu => a >= b,
+            };
+            let correct = h.bp.predict_update(pc, taken);
+            if taken {
+                next = pc.wrapping_add(imm as u64);
+                cycles += model.taken_branch_extra;
+                h.counters.branches_taken += 1;
+            }
+            if !correct {
+                cycles += model.mispredict_penalty;
+                h.counters.mispredicts += 1;
+            }
+        }
+        Inst::Load { width, signed, rd, rs1, imm } => {
+            let va = h.reg(rs1).wrapping_add(imm as u64);
+            let pa = xlate!(va, Access::Load);
+            let (mut val, c) = ms.load(h.id, pa, width)?;
+            cycles += c;
+            if signed {
+                val = sign_extend(val, width);
+            }
+            h.set_reg(rd, val);
+        }
+        Inst::Store { width, rs1, rs2, imm } => {
+            let va = h.reg(rs1).wrapping_add(imm as u64);
+            let pa = xlate!(va, Access::Store);
+            cycles += ms.store(h.id, pa, width, h.reg(rs2))?;
+        }
+        Inst::OpImm { op, rd, rs1, imm } => {
+            h.set_reg(rd, alu(op, h.reg(rs1), imm as u64));
+        }
+        Inst::Op { op, rd, rs1, rs2 } => {
+            h.set_reg(rd, alu(op, h.reg(rs1), h.reg(rs2)));
+        }
+        Inst::MulDiv { op, rd, rs1, rs2 } => {
+            h.set_reg(rd, muldiv(op, h.reg(rs1), h.reg(rs2)));
+        }
+        Inst::Lr { width, rd, rs1 } => {
+            let va = h.reg(rs1);
+            if va & (width.bytes() - 1) != 0 {
+                return Err(Trap::LoadAddrMisaligned(va));
+            }
+            let pa = xlate!(va, Access::Load);
+            let (val, c) = ms.load(h.id, pa, width)?;
+            cycles += c;
+            ms.set_reservation(h.id, pa);
+            h.set_reg(rd, sign_extend(val, width));
+        }
+        Inst::Sc { width, rd, rs1, rs2 } => {
+            let va = h.reg(rs1);
+            if va & (width.bytes() - 1) != 0 {
+                return Err(Trap::StoreAddrMisaligned(va));
+            }
+            let pa = xlate!(va, Access::Store);
+            if ms.check_reservation(h.id, pa) {
+                cycles += ms.store(h.id, pa, width, h.reg(rs2))?;
+                h.set_reg(rd, 0);
+            } else {
+                h.set_reg(rd, 1);
+            }
+        }
+        Inst::Amo { op, width, rd, rs1, rs2 } => {
+            let va = h.reg(rs1);
+            if va & (width.bytes() - 1) != 0 {
+                return Err(Trap::StoreAddrMisaligned(va));
+            }
+            let pa = xlate!(va, Access::Store);
+            let (old_raw, c) = ms.load(h.id, pa, width)?;
+            cycles += c;
+            let old = sign_extend(old_raw, width);
+            let rhs = h.reg(rs2);
+            let newval = amo(op, old, rhs, width);
+            cycles += ms.store(h.id, pa, width, newval)?;
+            h.set_reg(rd, old);
+        }
+        Inst::FLoad { dbl, rd, rs1, imm } => {
+            let va = h.reg(rs1).wrapping_add(imm as u64);
+            let pa = xlate!(va, Access::Load);
+            let w = if dbl { Width::D } else { Width::W };
+            let (val, c) = ms.load(h.id, pa, w)?;
+            cycles += c;
+            h.fregs[rd as usize] = if dbl { val } else { 0xffff_ffff_0000_0000 | val };
+        }
+        Inst::FStore { dbl, rs1, rs2, imm } => {
+            let va = h.reg(rs1).wrapping_add(imm as u64);
+            let pa = xlate!(va, Access::Store);
+            let w = if dbl { Width::D } else { Width::W };
+            cycles += ms.store(h.id, pa, w, h.fregs[rs2 as usize])?;
+        }
+        Inst::Fp { op, dbl, rd, rs1, rs2 } => {
+            fp_op(h, op, dbl, rd, rs1, rs2);
+        }
+        Inst::Fma { op, dbl, rd, rs1, rs2, rs3 } => {
+            if dbl {
+                let (a, b, c) = (
+                    unbox_d(h.fregs[rs1 as usize]),
+                    unbox_d(h.fregs[rs2 as usize]),
+                    unbox_d(h.fregs[rs3 as usize]),
+                );
+                let r = match op {
+                    FmaOp::Madd => a.mul_add(b, c),
+                    FmaOp::Msub => a.mul_add(b, -c),
+                    FmaOp::Nmsub => (-a).mul_add(b, c),
+                    FmaOp::Nmadd => (-a).mul_add(b, -c),
+                };
+                h.fregs[rd as usize] = box_d(r);
+            } else {
+                let (a, b, c) = (
+                    unbox_s(h.fregs[rs1 as usize]),
+                    unbox_s(h.fregs[rs2 as usize]),
+                    unbox_s(h.fregs[rs3 as usize]),
+                );
+                let r = match op {
+                    FmaOp::Madd => a.mul_add(b, c),
+                    FmaOp::Msub => a.mul_add(b, -c),
+                    FmaOp::Nmsub => (-a).mul_add(b, c),
+                    FmaOp::Nmadd => (-a).mul_add(b, -c),
+                };
+                h.fregs[rd as usize] = box_s(r);
+            }
+        }
+        Inst::Fcvt { kind, rd, rs1, rm } => {
+            let rm = if rm == 7 { h.csrs.frm() } else { rm };
+            fcvt(h, kind, rd, rs1, rm);
+        }
+        Inst::Csr { op, rd, csr, src, imm } => {
+            let old = match h.csrs.read(csr, h.prv, h.time, h.instret) {
+                Ok(v) => v,
+                Err(CsrError::Illegal) => return Err(Trap::IllegalInst(0)),
+            };
+            let arg = if imm { src as u64 } else { h.reg(src) };
+            let newval = match op {
+                CsrOp::Rw => Some(arg),
+                CsrOp::Rs => {
+                    if src == 0 {
+                        None
+                    } else {
+                        Some(old | arg)
+                    }
+                }
+                CsrOp::Rc => {
+                    if src == 0 {
+                        None
+                    } else {
+                        Some(old & !arg)
+                    }
+                }
+            };
+            if let Some(v) = newval {
+                if h.csrs.write(csr, v, h.prv).is_err() {
+                    return Err(Trap::IllegalInst(0));
+                }
+            }
+            h.set_reg(rd, old);
+        }
+        Inst::Fence => {}
+        Inst::FenceI => {
+            // Synchronize the I-stream: flush this hart's I-cache and the
+            // host-side predecode array.
+            ms.l1i[h.id].flush();
+            h.dcache.clear();
+        }
+        Inst::Ecall => {
+            return Err(if user { Trap::EcallU } else { Trap::EcallM });
+        }
+        Inst::Ebreak => return Err(Trap::Breakpoint(pc)),
+        Inst::Mret => {
+            if user {
+                return Err(Trap::IllegalInst(0x3020_0073));
+            }
+            h.do_mret();
+            next = h.pc;
+        }
+        Inst::Wfi => {
+            if user {
+                return Err(Trap::IllegalInst(0x1050_0073));
+            }
+            h.waiting = true;
+        }
+        Inst::SfenceVma { .. } => {
+            if user {
+                return Err(Trap::IllegalInst(0));
+            }
+            ms.flush_tlb(h.id);
+        }
+        Inst::Illegal { raw } => return Err(Trap::IllegalInst(raw)),
+    }
+    Ok((next, cycles))
+}
+
+#[inline]
+fn sign_extend(val: u64, width: Width) -> u64 {
+    match width {
+        Width::B => val as u8 as i8 as i64 as u64,
+        Width::H => val as u16 as i16 as i64 as u64,
+        Width::W => val as u32 as i32 as i64 as u64,
+        Width::D => val,
+    }
+}
+
+#[inline]
+fn alu(op: AluOp, a: u64, b: u64) -> u64 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a << (b & 63),
+        AluOp::Slt => ((a as i64) < (b as i64)) as u64,
+        AluOp::Sltu => (a < b) as u64,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a >> (b & 63),
+        AluOp::Sra => ((a as i64) >> (b & 63)) as u64,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+        AluOp::Addw => (a as i32).wrapping_add(b as i32) as i64 as u64,
+        AluOp::Subw => (a as i32).wrapping_sub(b as i32) as i64 as u64,
+        AluOp::Sllw => ((a as u32) << (b & 31)) as i32 as i64 as u64,
+        AluOp::Srlw => ((a as u32) >> (b & 31)) as i32 as i64 as u64,
+        AluOp::Sraw => ((a as i32) >> (b & 31)) as i64 as u64,
+    }
+}
+
+#[inline]
+fn muldiv(op: MulOp, a: u64, b: u64) -> u64 {
+    match op {
+        MulOp::Mul => a.wrapping_mul(b),
+        MulOp::Mulh => (((a as i64 as i128) * (b as i64 as i128)) >> 64) as u64,
+        MulOp::Mulhsu => (((a as i64 as i128) * (b as u128 as i128)) >> 64) as u64,
+        MulOp::Mulhu => (((a as u128) * (b as u128)) >> 64) as u64,
+        MulOp::Div => {
+            let (a, b) = (a as i64, b as i64);
+            if b == 0 {
+                u64::MAX
+            } else if a == i64::MIN && b == -1 {
+                a as u64
+            } else {
+                (a / b) as u64
+            }
+        }
+        MulOp::Divu => {
+            if b == 0 {
+                u64::MAX
+            } else {
+                a / b
+            }
+        }
+        MulOp::Rem => {
+            let (a, b) = (a as i64, b as i64);
+            if b == 0 {
+                a as u64
+            } else if a == i64::MIN && b == -1 {
+                0
+            } else {
+                (a % b) as u64
+            }
+        }
+        MulOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+        MulOp::Mulw => (a as i32).wrapping_mul(b as i32) as i64 as u64,
+        MulOp::Divw => {
+            let (a, b) = (a as i32, b as i32);
+            if b == 0 {
+                u64::MAX
+            } else if a == i32::MIN && b == -1 {
+                a as i64 as u64
+            } else {
+                (a / b) as i64 as u64
+            }
+        }
+        MulOp::Divuw => {
+            let (a, b) = (a as u32, b as u32);
+            if b == 0 {
+                u64::MAX
+            } else {
+                (a / b) as i32 as i64 as u64
+            }
+        }
+        MulOp::Remw => {
+            let (a, b) = (a as i32, b as i32);
+            if b == 0 {
+                a as i64 as u64
+            } else if a == i32::MIN && b == -1 {
+                0
+            } else {
+                (a % b) as i64 as u64
+            }
+        }
+        MulOp::Remuw => {
+            let (a, b) = (a as u32, b as u32);
+            if b == 0 {
+                a as i32 as i64 as u64
+            } else {
+                (a % b) as i32 as i64 as u64
+            }
+        }
+    }
+}
+
+#[inline]
+fn amo(op: AmoOp, old: u64, rhs: u64, width: Width) -> u64 {
+    let r = match op {
+        AmoOp::Swap => rhs,
+        AmoOp::Add => old.wrapping_add(rhs),
+        AmoOp::Xor => old ^ rhs,
+        AmoOp::And => old & rhs,
+        AmoOp::Or => old | rhs,
+        AmoOp::Min => match width {
+            Width::W => ((old as i32).min(rhs as i32)) as u64,
+            _ => ((old as i64).min(rhs as i64)) as u64,
+        },
+        AmoOp::Max => match width {
+            Width::W => ((old as i32).max(rhs as i32)) as u64,
+            _ => ((old as i64).max(rhs as i64)) as u64,
+        },
+        AmoOp::Minu => match width {
+            Width::W => ((old as u32).min(rhs as u32)) as u64,
+            _ => old.min(rhs),
+        },
+        AmoOp::Maxu => match width {
+            Width::W => ((old as u32).max(rhs as u32)) as u64,
+            _ => old.max(rhs),
+        },
+    };
+    r
+}
+
+fn fp_op(h: &mut Hart, op: FpOp, dbl: bool, rd: u8, rs1: u8, rs2: u8) {
+    if dbl {
+        let a = unbox_d(h.fregs[rs1 as usize]);
+        let b = unbox_d(h.fregs[rs2 as usize]);
+        match op {
+            FpOp::Add => h.fregs[rd as usize] = box_d(a + b),
+            FpOp::Sub => h.fregs[rd as usize] = box_d(a - b),
+            FpOp::Mul => h.fregs[rd as usize] = box_d(a * b),
+            FpOp::Div => {
+                if b == 0.0 && !a.is_nan() {
+                    h.csrs.set_fflags(fpu::FF_DZ);
+                }
+                h.fregs[rd as usize] = box_d(a / b);
+            }
+            FpOp::Sqrt => {
+                if a < 0.0 {
+                    h.csrs.set_fflags(fpu::FF_NV);
+                }
+                h.fregs[rd as usize] = box_d(a.sqrt());
+            }
+            FpOp::SgnJ => {
+                let bits = (h.fregs[rs1 as usize] & !(1 << 63))
+                    | (h.fregs[rs2 as usize] & (1 << 63));
+                h.fregs[rd as usize] = bits;
+            }
+            FpOp::SgnJN => {
+                let bits = (h.fregs[rs1 as usize] & !(1 << 63))
+                    | (!h.fregs[rs2 as usize] & (1 << 63));
+                h.fregs[rd as usize] = bits;
+            }
+            FpOp::SgnJX => {
+                let bits =
+                    h.fregs[rs1 as usize] ^ (h.fregs[rs2 as usize] & (1 << 63));
+                h.fregs[rd as usize] = bits;
+            }
+            FpOp::Min => {
+                let (r, f) = fpu::fmin_f64(a, b);
+                h.csrs.set_fflags(f);
+                h.fregs[rd as usize] = box_d(r);
+            }
+            FpOp::Max => {
+                let (r, f) = fpu::fmax_f64(a, b);
+                h.csrs.set_fflags(f);
+                h.fregs[rd as usize] = box_d(r);
+            }
+            FpOp::CmpEq => {
+                if a.is_nan() || b.is_nan() {
+                    h.set_reg(rd, 0);
+                } else {
+                    h.set_reg(rd, (a == b) as u64);
+                }
+            }
+            FpOp::CmpLt => {
+                if a.is_nan() || b.is_nan() {
+                    h.csrs.set_fflags(fpu::FF_NV);
+                    h.set_reg(rd, 0);
+                } else {
+                    h.set_reg(rd, (a < b) as u64);
+                }
+            }
+            FpOp::CmpLe => {
+                if a.is_nan() || b.is_nan() {
+                    h.csrs.set_fflags(fpu::FF_NV);
+                    h.set_reg(rd, 0);
+                } else {
+                    h.set_reg(rd, (a <= b) as u64);
+                }
+            }
+            FpOp::Class => h.set_reg(rd, fpu::fclass_f64(a)),
+        }
+    } else {
+        let a = unbox_s(h.fregs[rs1 as usize]);
+        let b = unbox_s(h.fregs[rs2 as usize]);
+        match op {
+            FpOp::Add => h.fregs[rd as usize] = box_s(a + b),
+            FpOp::Sub => h.fregs[rd as usize] = box_s(a - b),
+            FpOp::Mul => h.fregs[rd as usize] = box_s(a * b),
+            FpOp::Div => {
+                if b == 0.0 && !a.is_nan() {
+                    h.csrs.set_fflags(fpu::FF_DZ);
+                }
+                h.fregs[rd as usize] = box_s(a / b);
+            }
+            FpOp::Sqrt => {
+                if a < 0.0 {
+                    h.csrs.set_fflags(fpu::FF_NV);
+                }
+                h.fregs[rd as usize] = box_s(a.sqrt());
+            }
+            FpOp::SgnJ => {
+                let r = f32::from_bits(
+                    (a.to_bits() & !(1 << 31)) | (b.to_bits() & (1 << 31)),
+                );
+                h.fregs[rd as usize] = box_s(r);
+            }
+            FpOp::SgnJN => {
+                let r = f32::from_bits(
+                    (a.to_bits() & !(1 << 31)) | (!b.to_bits() & (1 << 31)),
+                );
+                h.fregs[rd as usize] = box_s(r);
+            }
+            FpOp::SgnJX => {
+                let r = f32::from_bits(a.to_bits() ^ (b.to_bits() & (1 << 31)));
+                h.fregs[rd as usize] = box_s(r);
+            }
+            FpOp::Min => {
+                let r = if a.is_nan() {
+                    b
+                } else if b.is_nan() {
+                    a
+                } else if a == 0.0 && b == 0.0 {
+                    if a.is_sign_negative() {
+                        a
+                    } else {
+                        b
+                    }
+                } else {
+                    a.min(b)
+                };
+                h.fregs[rd as usize] = box_s(r);
+            }
+            FpOp::Max => {
+                let r = if a.is_nan() {
+                    b
+                } else if b.is_nan() {
+                    a
+                } else if a == 0.0 && b == 0.0 {
+                    if a.is_sign_positive() {
+                        a
+                    } else {
+                        b
+                    }
+                } else {
+                    a.max(b)
+                };
+                h.fregs[rd as usize] = box_s(r);
+            }
+            FpOp::CmpEq => {
+                h.set_reg(rd, (!a.is_nan() && !b.is_nan() && a == b) as u64)
+            }
+            FpOp::CmpLt => {
+                if a.is_nan() || b.is_nan() {
+                    h.csrs.set_fflags(fpu::FF_NV);
+                    h.set_reg(rd, 0);
+                } else {
+                    h.set_reg(rd, (a < b) as u64);
+                }
+            }
+            FpOp::CmpLe => {
+                if a.is_nan() || b.is_nan() {
+                    h.csrs.set_fflags(fpu::FF_NV);
+                    h.set_reg(rd, 0);
+                } else {
+                    h.set_reg(rd, (a <= b) as u64);
+                }
+            }
+            FpOp::Class => h.set_reg(rd, fpu::fclass_f32(a)),
+        }
+    }
+}
+
+fn fcvt(h: &mut Hart, kind: FcvtKind, rd: u8, rs1: u8, rm: u8) {
+    match kind {
+        FcvtKind::FpToW { dbl, unsigned } => {
+            let v = if dbl {
+                unbox_d(h.fregs[rs1 as usize])
+            } else {
+                unbox_s(h.fregs[rs1 as usize]) as f64
+            };
+            let (r, f) = fpu::fp_to_int(v, rm, 32, unsigned);
+            h.csrs.set_fflags(f);
+            h.set_reg(rd, r);
+        }
+        FcvtKind::FpToL { dbl, unsigned } => {
+            let v = if dbl {
+                unbox_d(h.fregs[rs1 as usize])
+            } else {
+                unbox_s(h.fregs[rs1 as usize]) as f64
+            };
+            let (r, f) = fpu::fp_to_int(v, rm, 64, unsigned);
+            h.csrs.set_fflags(f);
+            h.set_reg(rd, r);
+        }
+        FcvtKind::WToFp { dbl, unsigned } => {
+            let x = h.reg(rs1);
+            let v = if unsigned { x as u32 as f64 } else { x as i32 as f64 };
+            h.fregs[rd as usize] = if dbl { box_d(v) } else { box_s(v as f32) };
+        }
+        FcvtKind::LToFp { dbl, unsigned } => {
+            let x = h.reg(rs1);
+            let v = if unsigned { x as f64 } else { x as i64 as f64 };
+            h.fregs[rd as usize] = if dbl { box_d(v) } else { box_s(v as f32) };
+        }
+        FcvtKind::DToS => {
+            let v = unbox_d(h.fregs[rs1 as usize]);
+            h.fregs[rd as usize] = box_s(v as f32);
+        }
+        FcvtKind::SToD => {
+            let v = unbox_s(h.fregs[rs1 as usize]);
+            h.fregs[rd as usize] = box_d(v as f64);
+        }
+        FcvtKind::FpToBits { dbl } => {
+            let bits = h.fregs[rs1 as usize];
+            if dbl {
+                h.set_reg(rd, bits);
+            } else {
+                h.set_reg(rd, bits as u32 as i32 as i64 as u64);
+            }
+        }
+        FcvtKind::BitsToFp { dbl } => {
+            let x = h.reg(rs1);
+            h.fregs[rd as usize] =
+                if dbl { x } else { 0xffff_ffff_0000_0000 | (x & 0xffff_ffff) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rv64::decode::encode;
+
+    const BASE: u64 = 0x8000_0000;
+
+    fn machine() -> (Hart, MemSys, CoreModel) {
+        let mut h = Hart::new(0);
+        h.prv = PrivLevel::M; // physical addressing for simplicity
+        h.stop_fetch = false;
+        h.pc = BASE;
+        (h, MemSys::new(1, BASE, 4 << 20), CoreModel::rocket())
+    }
+
+    fn put_prog(ms: &mut MemSys, words: &[u32]) {
+        for (i, w) in words.iter().enumerate() {
+            ms.phys.write_n(BASE + 4 * i as u64, 4, *w as u64);
+        }
+    }
+
+    fn run(h: &mut Hart, ms: &mut MemSys, m: &CoreModel, n: usize) {
+        for _ in 0..n {
+            let c = step(h, ms, m).expect("no trap");
+            h.charge(c);
+        }
+    }
+
+    #[test]
+    fn addi_sequence() {
+        let (mut h, mut ms, m) = machine();
+        put_prog(&mut ms, &[encode::addi(5, 0, 7), encode::addi(5, 5, -2)]);
+        run(&mut h, &mut ms, &m, 2);
+        assert_eq!(h.reg(5), 5);
+        assert_eq!(h.pc, BASE + 8);
+        assert_eq!(h.instret, 2);
+        assert!(h.time >= 2);
+    }
+
+    #[test]
+    fn load_store_through_step() {
+        let (mut h, mut ms, m) = machine();
+        // x1 = BASE+0x1000 ; sd x2, 0(x1); ld x3, 0(x1)
+        h.set_reg(1, BASE + 0x1000);
+        h.set_reg(2, 0x1234_5678_9abc_def0);
+        put_prog(&mut ms, &[encode::sd(2, 1, 0), encode::ld(3, 1, 0)]);
+        run(&mut h, &mut ms, &m, 2);
+        assert_eq!(h.reg(3), 0x1234_5678_9abc_def0);
+    }
+
+    #[test]
+    fn ecall_traps_with_mode_cause() {
+        let (mut h, mut ms, m) = machine();
+        put_prog(&mut ms, &[0x0000_0073]);
+        assert_eq!(step(&mut h, &mut ms, &m), Err(Trap::EcallM));
+        h.prv = PrivLevel::U; // would need paging normally; bare satp passes through
+        assert_eq!(step(&mut h, &mut ms, &m), Err(Trap::EcallU));
+    }
+
+    #[test]
+    fn branch_taken_and_not() {
+        let (mut h, mut ms, m) = machine();
+        // beq x0,x0,+8 ; (skipped) ; addi x5,x0,1
+        let beq = {
+            let imm = 8u32;
+            ((imm >> 5) & 0x3f) << 25 | (0 << 20) | (0 << 15) | ((imm >> 1) & 0xf) << 8 | 0x63
+        };
+        put_prog(&mut ms, &[beq, encode::addi(5, 0, 99), encode::addi(5, 0, 1)]);
+        run(&mut h, &mut ms, &m, 2);
+        assert_eq!(h.reg(5), 1);
+    }
+
+    #[test]
+    fn muldiv_edge_cases() {
+        assert_eq!(muldiv(MulOp::Div, 10, 0), u64::MAX);
+        assert_eq!(muldiv(MulOp::Rem, 10, 0), 10);
+        assert_eq!(muldiv(MulOp::Div, i64::MIN as u64, -1i64 as u64), i64::MIN as u64);
+        assert_eq!(muldiv(MulOp::Rem, i64::MIN as u64, -1i64 as u64), 0);
+        assert_eq!(muldiv(MulOp::Mulhu, u64::MAX, u64::MAX) , 0xffff_ffff_ffff_fffe);
+        assert_eq!(muldiv(MulOp::Divw, 7, 2), 3);
+        assert_eq!(muldiv(MulOp::Divuw, u32::MAX as u64, 1), u32::MAX as i32 as i64 as u64);
+    }
+
+    #[test]
+    fn amo_add_and_swap() {
+        let (mut h, mut ms, m) = machine();
+        h.set_reg(1, BASE + 0x2000);
+        h.set_reg(2, 5);
+        ms.phys.write_n(BASE + 0x2000, 8, 37);
+        // amoadd.d x3, x2, (x1): f5=0, f3=3(D)
+        let raw = (2 << 20) | (1 << 15) | (3 << 12) | (3 << 7) | 0x2f;
+        put_prog(&mut ms, &[raw]);
+        run(&mut h, &mut ms, &m, 1);
+        assert_eq!(h.reg(3), 37);
+        assert_eq!(ms.phys.read_u64(BASE + 0x2000), Some(42));
+    }
+
+    #[test]
+    fn lr_sc_success_and_failure() {
+        let (mut h, mut ms, m) = machine();
+        h.set_reg(1, BASE + 0x3000);
+        h.set_reg(2, 0xAA);
+        // lr.d x3,(x1) ; sc.d x4, x2,(x1)
+        let lr = (0x02 << 27) | (3 << 12) | (1 << 15) | (3 << 7) | 0x2f;
+        let sc = (0x03 << 27) | (2 << 20) | (1 << 15) | (3 << 12) | (4 << 7) | 0x2f;
+        put_prog(&mut ms, &[lr, sc, lr, sc]);
+        run(&mut h, &mut ms, &m, 2);
+        assert_eq!(h.reg(4), 0, "sc must succeed after lr");
+        assert_eq!(ms.phys.read_u64(BASE + 0x3000), Some(0xAA));
+        // Second round: break the reservation from "another hart" path.
+        // (single hart here: reservation consumed by first sc; do lr then
+        // invalidate via direct store by hart 0 on same line is fine.)
+        run(&mut h, &mut ms, &m, 1); // lr again
+        ms.resv[0] = None; // simulate external invalidation
+        run(&mut h, &mut ms, &m, 1);
+        assert_eq!(h.reg(4), 1, "sc must fail without reservation");
+    }
+
+    #[test]
+    fn fp_roundtrip_double() {
+        let (mut h, mut ms, m) = machine();
+        h.fregs[1] = box_d(1.5);
+        h.fregs[2] = box_d(2.25);
+        // fadd.d f3, f1, f2 : f7=0b0000001
+        let raw = (0b0000001 << 25) | (2 << 20) | (1 << 15) | (3 << 7) | 0x53;
+        put_prog(&mut ms, &[raw]);
+        run(&mut h, &mut ms, &m, 1);
+        assert_eq!(unbox_d(h.fregs[3]), 3.75);
+    }
+
+    #[test]
+    fn injected_instructions_do_not_move_pc() {
+        let (mut h, mut ms, m) = machine();
+        h.pc = 0xdead_0000;
+        h.set_reg(1, BASE + 0x100);
+        h.set_reg(2, 77);
+        let c = exec_injected(&mut h, &mut ms, &m, encode::sd(2, 1, 0)).unwrap();
+        assert!(c > 0);
+        assert_eq!(h.pc, 0xdead_0000);
+        assert_eq!(ms.phys.read_u64(BASE + 0x100), Some(77));
+    }
+
+    #[test]
+    fn injected_mret_redirects_to_user() {
+        let (mut h, mut ms, m) = machine();
+        h.csrs.mepc = 0x4000_0000;
+        h.csrs.set_mpp(0);
+        exec_injected(&mut h, &mut ms, &m, encode::mret()).unwrap();
+        assert_eq!(h.prv, PrivLevel::U);
+        assert_eq!(h.pc, 0x4000_0000);
+    }
+
+    #[test]
+    fn user_mode_cannot_mret_or_sfence() {
+        let (mut h, mut ms, m) = machine();
+        h.prv = PrivLevel::U;
+        put_prog(&mut ms, &[encode::mret()]);
+        assert!(matches!(step(&mut h, &mut ms, &m), Err(Trap::IllegalInst(_))));
+        put_prog(&mut ms, &[encode::sfence_vma()]);
+        assert!(matches!(step(&mut h, &mut ms, &m), Err(Trap::IllegalInst(_))));
+    }
+
+    #[test]
+    fn csr_rw_through_step() {
+        let (mut h, mut ms, m) = machine();
+        h.set_reg(2, 0x8000_1000);
+        put_prog(
+            &mut ms,
+            &[encode::csrrw(0, super::super::csr::MEPC, 2), encode::csrrs(3, super::super::csr::MEPC, 0)],
+        );
+        run(&mut h, &mut ms, &m, 2);
+        assert_eq!(h.reg(3), 0x8000_1000);
+    }
+
+    #[test]
+    fn counters_track_classes() {
+        let (mut h, mut ms, m) = machine();
+        put_prog(&mut ms, &[encode::addi(1, 0, 1), encode::ld(2, 0, 0)]);
+        h.set_reg(0, 0);
+        // point x0-based load at valid memory via x3
+        ms.phys.write_n(BASE, 4, encode::addi(1, 0, 1) as u64);
+        let _ = step(&mut h, &mut ms, &m);
+        assert_eq!(h.counters.class[InstClass::IntAlu as usize], 1);
+        assert_eq!(h.counters.retired, 1);
+    }
+}

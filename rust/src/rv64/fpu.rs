@@ -1,0 +1,273 @@
+//! F/D extension semantics: NaN-boxing, comparisons, conversions with
+//! RISC-V saturation rules, and fclass.
+
+/// fflags bits.
+pub const FF_NX: u64 = 1; // inexact
+pub const FF_UF: u64 = 2; // underflow
+pub const FF_OF: u64 = 4; // overflow
+pub const FF_DZ: u64 = 8; // divide by zero
+pub const FF_NV: u64 = 16; // invalid
+
+pub const CANONICAL_NAN_F32: u32 = 0x7fc0_0000;
+pub const CANONICAL_NAN_F64: u64 = 0x7ff8_0000_0000_0000;
+
+/// Unbox a single float from a 64-bit f register (must be NaN-boxed).
+#[inline]
+pub fn unbox_s(bits: u64) -> f32 {
+    if bits >> 32 == 0xffff_ffff {
+        f32::from_bits(bits as u32)
+    } else {
+        f32::from_bits(CANONICAL_NAN_F32)
+    }
+}
+
+#[inline]
+pub fn box_s(v: f32) -> u64 {
+    0xffff_ffff_0000_0000 | v.to_bits() as u64
+}
+
+#[inline]
+pub fn unbox_d(bits: u64) -> f64 {
+    f64::from_bits(bits)
+}
+
+#[inline]
+pub fn box_d(v: f64) -> u64 {
+    v.to_bits()
+}
+
+/// Round `v` per RISC-V rounding mode `rm` (7 = dynamic, resolved by caller).
+#[inline]
+pub fn round_f64(v: f64, rm: u8) -> f64 {
+    match rm {
+        0 => v.round_ties_even(), // RNE
+        1 => v.trunc(),           // RTZ
+        2 => v.floor(),           // RDN
+        3 => v.ceil(),            // RUP
+        4 => v.round(),           // RMM (ties away)
+        _ => v.round_ties_even(),
+    }
+}
+
+/// fcvt.w[u]/l[u] saturation. Returns (result bits sign-extended, fflags).
+pub fn fp_to_int(v: f64, rm: u8, bits: u32, unsigned: bool) -> (u64, u64) {
+    if v.is_nan() {
+        let r = match (bits, unsigned) {
+            (32, false) => i32::MAX as i64 as u64,
+            (32, true) => u32::MAX as u64, // NaN -> 2^32-1, sign-extended per spec? spec: all ones for unsigned max
+            (64, false) => i64::MAX as u64,
+            _ => u64::MAX,
+        };
+        let r = if bits == 32 { r as i32 as i64 as u64 } else { r };
+        return (r, FF_NV);
+    }
+    let rounded = round_f64(v, rm);
+    let mut flags = if rounded != v { FF_NX } else { 0 };
+    let (res, clamped): (u64, bool) = match (bits, unsigned) {
+        (32, false) => {
+            let c = rounded.clamp(i32::MIN as f64, i32::MAX as f64);
+            ((c as i32) as i64 as u64, c != rounded)
+        }
+        (32, true) => {
+            let c = rounded.clamp(0.0, u32::MAX as f64);
+            ((c as u32) as i32 as i64 as u64, c != rounded)
+        }
+        (64, false) => {
+            // i64 range isn't exactly representable; be careful at the edges.
+            if rounded >= 9.223372036854776e18 {
+                (i64::MAX as u64, true)
+            } else if rounded < -9.223372036854776e18 {
+                (i64::MIN as u64, rounded != -9.223372036854776e18)
+            } else {
+                (rounded as i64 as u64, false)
+            }
+        }
+        _ => {
+            if rounded >= 1.8446744073709552e19 {
+                (u64::MAX, true)
+            } else if rounded < 0.0 {
+                (0, true)
+            } else {
+                (rounded as u64, false)
+            }
+        }
+    };
+    if clamped {
+        flags = FF_NV;
+    }
+    (res, flags)
+}
+
+/// RISC-V fclass result (10-bit one-hot).
+pub fn fclass_f64(v: f64) -> u64 {
+    let bits = v.to_bits();
+    let sign = bits >> 63 == 1;
+    if v.is_nan() {
+        // signaling = MSB of mantissa clear
+        if bits & (1 << 51) == 0 {
+            1 << 8
+        } else {
+            1 << 9
+        }
+    } else if v.is_infinite() {
+        if sign {
+            1 << 0
+        } else {
+            1 << 7
+        }
+    } else if v == 0.0 {
+        if sign {
+            1 << 3
+        } else {
+            1 << 4
+        }
+    } else if v.is_subnormal() {
+        if sign {
+            1 << 2
+        } else {
+            1 << 5
+        }
+    } else if sign {
+        1 << 1
+    } else {
+        1 << 6
+    }
+}
+
+pub fn fclass_f32(v: f32) -> u64 {
+    let bits = v.to_bits();
+    let sign = bits >> 31 == 1;
+    if v.is_nan() {
+        if bits & (1 << 22) == 0 {
+            1 << 8
+        } else {
+            1 << 9
+        }
+    } else if v.is_infinite() {
+        if sign {
+            1 << 0
+        } else {
+            1 << 7
+        }
+    } else if v == 0.0 {
+        if sign {
+            1 << 3
+        } else {
+            1 << 4
+        }
+    } else if v.is_subnormal() {
+        if sign {
+            1 << 2
+        } else {
+            1 << 5
+        }
+    } else if sign {
+        1 << 1
+    } else {
+        1 << 6
+    }
+}
+
+/// RISC-V fmin/fmax: -0 < +0; NaN inputs yield the other operand (or
+/// canonical NaN if both are NaN); signaling NaN sets NV.
+pub fn fmin_f64(a: f64, b: f64) -> (f64, u64) {
+    minmax(a, b, true)
+}
+pub fn fmax_f64(a: f64, b: f64) -> (f64, u64) {
+    minmax(a, b, false)
+}
+
+fn minmax(a: f64, b: f64, is_min: bool) -> (f64, u64) {
+    let mut flags = 0;
+    if is_snan(a) || is_snan(b) {
+        flags |= FF_NV;
+    }
+    let r = match (a.is_nan(), b.is_nan()) {
+        (true, true) => f64::from_bits(CANONICAL_NAN_F64),
+        (true, false) => b,
+        (false, true) => a,
+        (false, false) => {
+            if a == 0.0 && b == 0.0 {
+                // distinguish -0/+0
+                let a_neg = a.is_sign_negative();
+                if is_min == a_neg {
+                    a
+                } else {
+                    b
+                }
+            } else if (a < b) == is_min {
+                a
+            } else {
+                b
+            }
+        }
+    };
+    (r, flags)
+}
+
+fn is_snan(v: f64) -> bool {
+    v.is_nan() && v.to_bits() & (1 << 51) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nan_boxing() {
+        let b = box_s(1.5);
+        assert_eq!(unbox_s(b), 1.5);
+        // Improperly boxed value reads as canonical NaN.
+        assert!(unbox_s(1.5f64.to_bits()).is_nan());
+    }
+
+    #[test]
+    fn fcvt_saturates() {
+        assert_eq!(fp_to_int(3e10, 1, 32, false).0, i32::MAX as i64 as u64);
+        assert_eq!(fp_to_int(-3e10, 1, 32, false).0 as i64, i32::MIN as i64);
+        assert_eq!(fp_to_int(-1.0, 1, 32, true).0, 0);
+        assert_eq!(fp_to_int(f64::NAN, 0, 64, false).0, i64::MAX as u64);
+        assert_eq!(fp_to_int(1e20, 0, 64, false).0, i64::MAX as u64);
+    }
+
+    #[test]
+    fn fcvt_exact_and_inexact() {
+        let (v, f) = fp_to_int(5.0, 1, 32, false);
+        assert_eq!((v, f), (5, 0));
+        let (v, f) = fp_to_int(5.7, 1, 32, false);
+        assert_eq!(v, 5);
+        assert_eq!(f, FF_NX);
+        // RNE ties to even
+        assert_eq!(fp_to_int(2.5, 0, 32, false).0, 2);
+        assert_eq!(fp_to_int(3.5, 0, 32, false).0, 4);
+    }
+
+    #[test]
+    fn fclass_cases() {
+        assert_eq!(fclass_f64(f64::NEG_INFINITY), 1 << 0);
+        assert_eq!(fclass_f64(-1.0), 1 << 1);
+        assert_eq!(fclass_f64(-0.0), 1 << 3);
+        assert_eq!(fclass_f64(0.0), 1 << 4);
+        assert_eq!(fclass_f64(1.0), 1 << 6);
+        assert_eq!(fclass_f64(f64::INFINITY), 1 << 7);
+        assert_eq!(fclass_f64(f64::from_bits(CANONICAL_NAN_F64)), 1 << 9);
+    }
+
+    #[test]
+    fn minmax_zero_and_nan() {
+        assert!(fmin_f64(0.0, -0.0).0.is_sign_negative());
+        assert!(fmax_f64(0.0, -0.0).0.is_sign_positive());
+        assert_eq!(fmin_f64(f64::NAN, 2.0).0, 2.0);
+        assert!(fmin_f64(f64::NAN, f64::NAN).0.is_nan());
+    }
+
+    #[test]
+    fn rounding_modes() {
+        assert_eq!(round_f64(2.5, 0), 2.0);
+        assert_eq!(round_f64(2.5, 1), 2.0);
+        assert_eq!(round_f64(2.5, 2), 2.0);
+        assert_eq!(round_f64(2.5, 3), 3.0);
+        assert_eq!(round_f64(2.5, 4), 3.0);
+        assert_eq!(round_f64(-2.5, 2), -3.0);
+    }
+}

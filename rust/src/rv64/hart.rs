@@ -1,0 +1,368 @@
+//! Architectural state of one target CPU core plus its timing cost model.
+
+use super::csr::{self, Csrs};
+use super::inst::{Inst, InstClass, NUM_INST_CLASSES};
+use super::Trap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrivLevel {
+    U,
+    M,
+}
+
+impl PrivLevel {
+    pub fn bits(self) -> u64 {
+        match self {
+            PrivLevel::U => 0,
+            PrivLevel::M => 3,
+        }
+    }
+    pub fn from_bits(b: u64) -> PrivLevel {
+        if b == 0 {
+            PrivLevel::U
+        } else {
+            PrivLevel::M
+        }
+    }
+}
+
+/// Per-core cycle cost table. Two concrete models ship: `rocket()` (the
+/// paper's main target) and `cva6()` (Fig 18(b)'s cross-microarchitecture
+/// check — different pipeline depths and penalties).
+#[derive(Debug, Clone)]
+pub struct CoreModel {
+    pub name: &'static str,
+    /// Base cycles per instruction class (assuming L1 hit for mem ops).
+    pub base_cost: [u64; NUM_INST_CLASSES],
+    pub mispredict_penalty: u64,
+    pub taken_branch_extra: u64,
+    /// Cycles per Reg-port handshake (FASE controller register access).
+    pub reg_handshake: u64,
+    /// Pipeline drain before an injection is accepted (InjectBusy window).
+    pub inject_drain: u64,
+}
+
+impl CoreModel {
+    pub fn rocket() -> CoreModel {
+        let mut c = [1u64; NUM_INST_CLASSES];
+        c[InstClass::Mul as usize] = 4;
+        c[InstClass::Div as usize] = 33;
+        c[InstClass::Load as usize] = 2;
+        c[InstClass::Store as usize] = 1;
+        c[InstClass::Branch as usize] = 1;
+        c[InstClass::Jump as usize] = 2;
+        c[InstClass::FpAdd as usize] = 5;
+        c[InstClass::FpMul as usize] = 5;
+        c[InstClass::FpDiv as usize] = 27;
+        c[InstClass::Amo as usize] = 5;
+        c[InstClass::Csr as usize] = 3;
+        c[InstClass::Fence as usize] = 4;
+        c[InstClass::System as usize] = 4;
+        CoreModel {
+            name: "rocket",
+            base_cost: c,
+            mispredict_penalty: 3,
+            taken_branch_extra: 1,
+            reg_handshake: 2,
+            inject_drain: 4,
+        }
+    }
+
+    pub fn cva6() -> CoreModel {
+        let mut c = [1u64; NUM_INST_CLASSES];
+        c[InstClass::Mul as usize] = 2;
+        c[InstClass::Div as usize] = 21;
+        c[InstClass::Load as usize] = 3;
+        c[InstClass::Store as usize] = 2;
+        c[InstClass::Branch as usize] = 1;
+        c[InstClass::Jump as usize] = 2;
+        c[InstClass::FpAdd as usize] = 4;
+        c[InstClass::FpMul as usize] = 4;
+        c[InstClass::FpDiv as usize] = 32;
+        c[InstClass::Amo as usize] = 6;
+        c[InstClass::Csr as usize] = 4;
+        c[InstClass::Fence as usize] = 5;
+        c[InstClass::System as usize] = 5;
+        CoreModel {
+            name: "cva6",
+            base_cost: c,
+            mispredict_penalty: 5,
+            taken_branch_extra: 1,
+            reg_handshake: 2,
+            inject_drain: 6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<CoreModel> {
+        match name {
+            "rocket" => Some(CoreModel::rocket()),
+            "cva6" => Some(CoreModel::cva6()),
+            _ => None,
+        }
+    }
+}
+
+/// Direct-mapped decoded-instruction cache (host-side speedup only; it
+/// carries no target-timing semantics — I-cache timing still comes from
+/// the L1I model). Invalidated on fence.i, like a real predecode array.
+pub struct DecodeCache {
+    tags: Vec<u64>,
+    insts: Vec<Inst>,
+    mask: u64,
+}
+
+impl DecodeCache {
+    pub fn new(entries: usize) -> DecodeCache {
+        assert!(entries.is_power_of_two());
+        DecodeCache {
+            tags: vec![u64::MAX; entries],
+            insts: vec![Inst::Illegal { raw: 0 }; entries],
+            mask: entries as u64 - 1,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, paddr: u64) -> Option<Inst> {
+        let idx = ((paddr >> 2) & self.mask) as usize;
+        if self.tags[idx] == paddr {
+            Some(self.insts[idx])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn put(&mut self, paddr: u64, inst: Inst) {
+        let idx = ((paddr >> 2) & self.mask) as usize;
+        self.tags[idx] = paddr;
+        self.insts[idx] = inst;
+    }
+
+    pub fn clear(&mut self) {
+        self.tags.iter_mut().for_each(|t| *t = u64::MAX);
+    }
+}
+
+/// Bimodal 2-bit branch predictor (timing only).
+#[derive(Debug, Clone)]
+pub struct Bimodal {
+    table: Vec<u8>,
+    mask: u64,
+}
+
+impl Bimodal {
+    pub fn new(entries: usize) -> Bimodal {
+        assert!(entries.is_power_of_two());
+        Bimodal { table: vec![1u8; entries], mask: entries as u64 - 1 }
+    }
+
+    /// Returns true if the prediction was correct; updates the counter.
+    #[inline]
+    pub fn predict_update(&mut self, pc: u64, taken: bool) -> bool {
+        let idx = ((pc >> 2) & self.mask) as usize;
+        let ctr = self.table[idx];
+        let predicted = ctr >= 2;
+        self.table[idx] = if taken { (ctr + 1).min(3) } else { ctr.saturating_sub(1) };
+        predicted == taken
+    }
+}
+
+/// Instruction-class counters for one timing-model window.
+#[derive(Debug, Clone, Copy)]
+pub struct InstCounters {
+    pub class: [u64; NUM_INST_CLASSES],
+    pub retired: u64,
+    pub branches_taken: u64,
+    pub mispredicts: u64,
+}
+
+impl Default for InstCounters {
+    fn default() -> Self {
+        InstCounters {
+            class: [0; NUM_INST_CLASSES],
+            retired: 0,
+            branches_taken: 0,
+            mispredicts: 0,
+        }
+    }
+}
+
+impl InstCounters {
+    pub fn clear(&mut self) {
+        *self = InstCounters::default();
+    }
+}
+
+/// One target CPU core: architectural state + local clock.
+pub struct Hart {
+    pub id: usize,
+    pub regs: [u64; 32],
+    pub fregs: [u64; 32],
+    pub pc: u64,
+    pub prv: PrivLevel,
+    pub csrs: Csrs,
+    /// Local clock in target cycles (advanced by the engine).
+    pub time: u64,
+    /// Cycles spent in U-mode since reset (the paper's per-CPU `UTick`).
+    pub utick: u64,
+    pub instret: u64,
+    pub bp: Bimodal,
+    pub counters: InstCounters,
+    /// StopFetch asserted (FASE controller clutch) — core will not fetch.
+    pub stop_fetch: bool,
+    /// Pending async interrupt (optional Interrupt port).
+    pub interrupt_pending: bool,
+    /// Set when the hart executed WFI and waits for an event.
+    pub waiting: bool,
+    /// Host-side decoded-instruction cache (perf; see §Perf in DESIGN.md).
+    pub dcache: DecodeCache,
+}
+
+impl Hart {
+    pub fn new(id: usize) -> Hart {
+        Hart {
+            id,
+            regs: [0; 32],
+            fregs: [0; 32],
+            pc: 0,
+            prv: PrivLevel::M, // after reset all CPUs are in privileged mode (Fig 6)
+            csrs: Csrs::new(id as u64),
+            time: 0,
+            utick: 0,
+            instret: 0,
+            bp: Bimodal::new(1024),
+            counters: InstCounters::default(),
+            stop_fetch: true, // paused by StopFetch after reset (paper §V)
+            interrupt_pending: false,
+            waiting: false,
+            dcache: DecodeCache::new(8192),
+        }
+    }
+
+    #[inline]
+    pub fn reg(&self, idx: u8) -> u64 {
+        self.regs[idx as usize]
+    }
+
+    #[inline]
+    pub fn set_reg(&mut self, idx: u8, val: u64) {
+        if idx != 0 {
+            self.regs[idx as usize] = val;
+        }
+    }
+
+    /// Architectural trap entry: latch cause state, switch to M-mode, and
+    /// redirect to mtvec. Returns the previous privilege level.
+    pub fn enter_trap(&mut self, trap: Trap) -> PrivLevel {
+        let prev = self.prv;
+        self.csrs.mepc = self.pc;
+        self.csrs.mcause = trap.cause();
+        self.csrs.mtval = trap.tval();
+        self.csrs.set_mpp(prev.bits());
+        // MPIE <- MIE; MIE <- 0
+        let mie = (self.csrs.mstatus >> 3) & 1;
+        self.csrs.mstatus = (self.csrs.mstatus & !(csr::MSTATUS_MIE | csr::MSTATUS_MPIE))
+            | (mie << 7);
+        self.prv = PrivLevel::M;
+        self.pc = self.csrs.mtvec;
+        prev
+    }
+
+    /// mret: return to MPP privilege at mepc.
+    pub fn do_mret(&mut self) {
+        self.prv = PrivLevel::from_bits(self.csrs.mpp());
+        self.pc = self.csrs.mepc;
+        // MIE <- MPIE; MPIE <- 1; MPP <- U
+        let mpie = (self.csrs.mstatus >> 7) & 1;
+        self.csrs.mstatus =
+            (self.csrs.mstatus & !csr::MSTATUS_MIE) | (mpie << 3) | csr::MSTATUS_MPIE;
+        self.csrs.set_mpp(0);
+    }
+
+    /// Charge `cycles` to the local clock (and UTick when in user mode).
+    #[inline]
+    pub fn charge(&mut self, cycles: u64) {
+        self.time += cycles;
+        if self.prv == PrivLevel::U {
+            self.utick += cycles;
+        }
+    }
+
+    /// Drain window instruction counters.
+    pub fn take_counters(&mut self) -> InstCounters {
+        let c = self.counters;
+        self.counters.clear();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x0_is_hardwired() {
+        let mut h = Hart::new(0);
+        h.set_reg(0, 42);
+        assert_eq!(h.reg(0), 0);
+        h.set_reg(5, 42);
+        assert_eq!(h.reg(5), 42);
+    }
+
+    #[test]
+    fn trap_entry_and_mret_roundtrip() {
+        let mut h = Hart::new(0);
+        h.prv = PrivLevel::U;
+        h.pc = 0x1000;
+        h.csrs.mtvec = 0x8000_0000;
+        let prev = h.enter_trap(Trap::EcallU);
+        assert_eq!(prev, PrivLevel::U);
+        assert_eq!(h.prv, PrivLevel::M);
+        assert_eq!(h.pc, 0x8000_0000);
+        assert_eq!(h.csrs.mepc, 0x1000);
+        assert_eq!(h.csrs.mcause, 8);
+        assert_eq!(h.csrs.mpp(), 0);
+        h.do_mret();
+        assert_eq!(h.prv, PrivLevel::U);
+        assert_eq!(h.pc, 0x1000);
+    }
+
+    #[test]
+    fn utick_only_in_user_mode() {
+        let mut h = Hart::new(0);
+        h.prv = PrivLevel::M;
+        h.charge(10);
+        assert_eq!((h.time, h.utick), (10, 0));
+        h.prv = PrivLevel::U;
+        h.charge(7);
+        assert_eq!((h.time, h.utick), (17, 7));
+    }
+
+    #[test]
+    fn bimodal_learns_loop() {
+        let mut bp = Bimodal::new(16);
+        // Always-taken branch: after warmup it should predict correctly.
+        bp.predict_update(0x40, true);
+        bp.predict_update(0x40, true);
+        assert!(bp.predict_update(0x40, true));
+        assert!(!bp.predict_update(0x40, false)); // direction change mispredicts
+    }
+
+    #[test]
+    fn reset_state_matches_paper() {
+        // "After reset, all CPUs are in privileged mode and paused by StopFetch."
+        let h = Hart::new(1);
+        assert_eq!(h.prv, PrivLevel::M);
+        assert!(h.stop_fetch);
+        assert_eq!(h.csrs.mhartid, 1);
+    }
+
+    #[test]
+    fn core_models_differ() {
+        let r = CoreModel::rocket();
+        let c = CoreModel::cva6();
+        assert_ne!(r.mispredict_penalty, c.mispredict_penalty);
+        assert!(CoreModel::by_name("rocket").is_some());
+        assert!(CoreModel::by_name("boom").is_none());
+    }
+}

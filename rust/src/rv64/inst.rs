@@ -1,0 +1,241 @@
+//! Decoded instruction representation shared by both simulation engines.
+
+/// Integer ALU operation (register-register and register-immediate forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    // RV64 32-bit ("W") variants
+    Addw,
+    Subw,
+    Sllw,
+    Srlw,
+    Sraw,
+}
+
+/// M-extension operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+    Mulw,
+    Divw,
+    Divuw,
+    Remw,
+    Remuw,
+}
+
+/// Memory access width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Width {
+    B,
+    H,
+    W,
+    D,
+}
+
+impl Width {
+    #[inline]
+    pub fn bytes(self) -> u64 {
+        match self {
+            Width::B => 1,
+            Width::H => 2,
+            Width::W => 4,
+            Width::D => 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchOp {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// A-extension AMO function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AmoOp {
+    Swap,
+    Add,
+    Xor,
+    And,
+    Or,
+    Min,
+    Max,
+    Minu,
+    Maxu,
+}
+
+/// F/D-extension operation (S = f32, D = f64 selected by `dbl`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+    SgnJ,
+    SgnJN,
+    SgnJX,
+    Min,
+    Max,
+    /// FEQ/FLT/FLE  (result to integer rd)
+    CmpEq,
+    CmpLt,
+    CmpLe,
+    Class,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CsrOp {
+    Rw,
+    Rs,
+    Rc,
+}
+
+/// Fused multiply-add flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FmaOp {
+    Madd,
+    Msub,
+    Nmsub,
+    Nmadd,
+}
+
+/// FP <-> int conversion selector: (src, dst) operand kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FcvtKind {
+    /// fcvt.w.s/d — fp to i32
+    FpToW { dbl: bool, unsigned: bool },
+    /// fcvt.l.s/d — fp to i64
+    FpToL { dbl: bool, unsigned: bool },
+    /// fcvt.s/d.w — i32 to fp
+    WToFp { dbl: bool, unsigned: bool },
+    /// fcvt.s/d.l — i64 to fp
+    LToFp { dbl: bool, unsigned: bool },
+    /// fcvt.s.d
+    DToS,
+    /// fcvt.d.s
+    SToD,
+    /// fmv.x.w / fmv.x.d
+    FpToBits { dbl: bool },
+    /// fmv.w.x / fmv.d.x
+    BitsToFp { dbl: bool },
+}
+
+/// One decoded RV64IMAFD instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    Lui { rd: u8, imm: i64 },
+    Auipc { rd: u8, imm: i64 },
+    Jal { rd: u8, imm: i64 },
+    Jalr { rd: u8, rs1: u8, imm: i64 },
+    Branch { op: BranchOp, rs1: u8, rs2: u8, imm: i64 },
+    Load { width: Width, signed: bool, rd: u8, rs1: u8, imm: i64 },
+    Store { width: Width, rs1: u8, rs2: u8, imm: i64 },
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i64 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    MulDiv { op: MulOp, rd: u8, rs1: u8, rs2: u8 },
+    Lr { width: Width, rd: u8, rs1: u8 },
+    Sc { width: Width, rd: u8, rs1: u8, rs2: u8 },
+    Amo { op: AmoOp, width: Width, rd: u8, rs1: u8, rs2: u8 },
+    FLoad { dbl: bool, rd: u8, rs1: u8, imm: i64 },
+    FStore { dbl: bool, rs1: u8, rs2: u8, imm: i64 },
+    Fp { op: FpOp, dbl: bool, rd: u8, rs1: u8, rs2: u8 },
+    Fma { op: FmaOp, dbl: bool, rd: u8, rs1: u8, rs2: u8, rs3: u8 },
+    Fcvt { kind: FcvtKind, rd: u8, rs1: u8, rm: u8 },
+    Csr { op: CsrOp, rd: u8, csr: u16, src: u8, imm: bool },
+    Fence,
+    FenceI,
+    Ecall,
+    Ebreak,
+    Mret,
+    Wfi,
+    SfenceVma { rs1: u8, rs2: u8 },
+    /// Decoder could not match — executor raises IllegalInst.
+    Illegal { raw: u32 },
+}
+
+/// Instruction class for the timing model (feature extraction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum InstClass {
+    IntAlu = 0,
+    Mul = 1,
+    Div = 2,
+    Load = 3,
+    Store = 4,
+    Branch = 5,
+    Jump = 6,
+    FpAdd = 7,
+    FpMul = 8,
+    FpDiv = 9,
+    Amo = 10,
+    Csr = 11,
+    Fence = 12,
+    System = 13,
+}
+
+pub const NUM_INST_CLASSES: usize = 14;
+
+impl Inst {
+    /// Timing class of this instruction (for feature counting).
+    pub fn class(&self) -> InstClass {
+        match self {
+            Inst::Lui { .. } | Inst::Auipc { .. } | Inst::OpImm { .. } | Inst::Op { .. } => {
+                InstClass::IntAlu
+            }
+            Inst::MulDiv { op, .. } => match op {
+                MulOp::Div | MulOp::Divu | MulOp::Rem | MulOp::Remu | MulOp::Divw
+                | MulOp::Divuw | MulOp::Remw | MulOp::Remuw => InstClass::Div,
+                _ => InstClass::Mul,
+            },
+            Inst::Jal { .. } | Inst::Jalr { .. } => InstClass::Jump,
+            Inst::Branch { .. } => InstClass::Branch,
+            Inst::Load { .. } | Inst::FLoad { .. } | Inst::Lr { .. } => InstClass::Load,
+            Inst::Store { .. } | Inst::FStore { .. } | Inst::Sc { .. } => InstClass::Store,
+            Inst::Amo { .. } => InstClass::Amo,
+            Inst::Fp { op, .. } => match op {
+                FpOp::Mul => InstClass::FpMul,
+                FpOp::Div | FpOp::Sqrt => InstClass::FpDiv,
+                _ => InstClass::FpAdd,
+            },
+            Inst::Fma { .. } => InstClass::FpMul,
+            Inst::Fcvt { .. } => InstClass::FpAdd,
+            Inst::Csr { .. } => InstClass::Csr,
+            Inst::Fence | Inst::FenceI | Inst::SfenceVma { .. } => InstClass::Fence,
+            Inst::Ecall
+            | Inst::Ebreak
+            | Inst::Mret
+            | Inst::Wfi
+            | Inst::Illegal { .. } => InstClass::System,
+        }
+    }
+
+    /// True for control-flow instructions (the `Inject` port only accepts
+    /// non-branch instructions per Table I).
+    pub fn is_control_flow(&self) -> bool {
+        matches!(
+            self,
+            Inst::Jal { .. } | Inst::Jalr { .. } | Inst::Branch { .. } | Inst::Mret
+        )
+    }
+}

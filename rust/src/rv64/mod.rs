@@ -1,0 +1,84 @@
+//! RV64IMAFD user+machine-mode instruction-set substrate.
+//!
+//! This is the stand-in for the paper's FPGA-hosted Rocket core: a faithful
+//! functional model of the user-visible ISA plus the minimal machine-mode
+//! surface FASE needs (`mstatus/mepc/mcause/mtval/satp`, `mret`,
+//! `sfence.vma`, `fence.i` — exactly the instruction/CSR subset §VII of the
+//! paper reports FASE exercising).
+//!
+//! The decoder ([`decode`]) and executor ([`exec`]) are shared between the
+//! fast engine (FPGA stand-in) and the detailed cycle-stepped engine
+//! (RTL-simulation stand-in), so both modes run bit-identical semantics.
+
+pub mod csr;
+pub mod decode;
+pub mod exec;
+pub mod fpu;
+pub mod hart;
+pub mod inst;
+
+pub use decode::decode;
+pub use hart::{Hart, PrivLevel};
+pub use inst::Inst;
+
+/// Trap causes (mcause values) — RISC-V privileged spec encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    InstAddrMisaligned(u64),
+    InstAccessFault(u64),
+    IllegalInst(u32),
+    Breakpoint(u64),
+    LoadAddrMisaligned(u64),
+    LoadAccessFault(u64),
+    StoreAddrMisaligned(u64),
+    StoreAccessFault(u64),
+    EcallU,
+    EcallM,
+    InstPageFault(u64),
+    LoadPageFault(u64),
+    StorePageFault(u64),
+}
+
+impl Trap {
+    pub fn cause(&self) -> u64 {
+        match self {
+            Trap::InstAddrMisaligned(_) => 0,
+            Trap::InstAccessFault(_) => 1,
+            Trap::IllegalInst(_) => 2,
+            Trap::Breakpoint(_) => 3,
+            Trap::LoadAddrMisaligned(_) => 4,
+            Trap::LoadAccessFault(_) => 5,
+            Trap::StoreAddrMisaligned(_) => 6,
+            Trap::StoreAccessFault(_) => 7,
+            Trap::EcallU => 8,
+            Trap::EcallM => 11,
+            Trap::InstPageFault(_) => 12,
+            Trap::LoadPageFault(_) => 13,
+            Trap::StorePageFault(_) => 15,
+        }
+    }
+
+    pub fn tval(&self) -> u64 {
+        match self {
+            Trap::InstAddrMisaligned(a)
+            | Trap::InstAccessFault(a)
+            | Trap::Breakpoint(a)
+            | Trap::LoadAddrMisaligned(a)
+            | Trap::LoadAccessFault(a)
+            | Trap::StoreAddrMisaligned(a)
+            | Trap::StoreAccessFault(a)
+            | Trap::InstPageFault(a)
+            | Trap::LoadPageFault(a)
+            | Trap::StorePageFault(a) => *a,
+            Trap::IllegalInst(i) => *i as u64,
+            Trap::EcallU | Trap::EcallM => 0,
+        }
+    }
+
+    pub fn is_page_fault(&self) -> bool {
+        matches!(
+            self,
+            Trap::InstPageFault(_) | Trap::LoadPageFault(_) | Trap::StorePageFault(_)
+        )
+    }
+}

@@ -1,0 +1,405 @@
+//! The fast-engine target machine (FPGA stand-in).
+
+use crate::iface::{CpuInterface, InjectResult};
+use crate::mem::MemSys;
+use crate::rv64::exec;
+use crate::rv64::hart::{CoreModel, Hart, PrivLevel};
+use crate::rv64::Trap;
+use std::collections::VecDeque;
+
+pub const DRAM_BASE: u64 = 0x8000_0000;
+
+/// Machine-timer interrupt cause (interrupt bit | 7).
+pub const CAUSE_MTIMER: u64 = (1 << 63) | 7;
+
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub n_harts: usize,
+    pub dram_size: u64,
+    pub clock_hz: u64,
+    pub core: CoreModel,
+    /// Round-robin interleave quantum in cycles.
+    pub quantum: u64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        MachineConfig {
+            n_harts: 1,
+            dram_size: 1 << 31, // 2 GiB, like Table III
+            clock_hz: 100_000_000,
+            core: CoreModel::rocket(),
+            quantum: 256,
+        }
+    }
+}
+
+/// A U->M transition observed by the controller (Exception Event Queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExceptionEvent {
+    pub cpu: usize,
+    /// Global tick at which the exception was raised.
+    pub at: u64,
+}
+
+pub struct Machine {
+    pub harts: Vec<Hart>,
+    pub ms: MemSys,
+    pub model: CoreModel,
+    pub clock_hz: u64,
+    /// Global clock (the paper's `Tick`).
+    pub now: u64,
+    pub quantum: u64,
+    /// CPUs that trapped from U to M and are stalled under StopFetch.
+    pub exception_queue: VecDeque<ExceptionEvent>,
+    /// Instructions retired (whole machine, diagnostics).
+    pub total_instret: u64,
+    /// Optional cap; `run_until` panics past it (runaway guard in tests).
+    pub max_ticks: u64,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Machine {
+        let mut harts: Vec<Hart> = (0..cfg.n_harts).map(Hart::new).collect();
+        let ms = MemSys::new(cfg.n_harts, DRAM_BASE, cfg.dram_size);
+        // The paper redirects the interrupt vector to a simple infinite
+        // loop; we reserve the first DRAM word for that stub.
+        for h in &mut harts {
+            h.csrs.mtvec = DRAM_BASE;
+        }
+        let mut m = Machine {
+            harts,
+            ms,
+            model: cfg.core,
+            clock_hz: cfg.clock_hz,
+            now: 0,
+            quantum: cfg.quantum,
+            exception_queue: VecDeque::new(),
+            total_instret: 0,
+            max_ticks: u64::MAX,
+        };
+        m.ms
+            .phys
+            .write_n(DRAM_BASE, 4, crate::rv64::decode::encode::self_loop() as u64);
+        m
+    }
+
+    /// Seconds of target time elapsed.
+    pub fn seconds(&self) -> f64 {
+        self.now as f64 / self.clock_hz as f64
+    }
+
+    pub fn ticks_from_secs(&self, s: f64) -> u64 {
+        (s * self.clock_hz as f64) as u64
+    }
+
+    /// True if the hart can execute instructions right now.
+    fn runnable(&self, cpu: usize) -> bool {
+        let h = &self.harts[cpu];
+        !h.stop_fetch && !h.waiting
+    }
+
+    /// Advance the whole machine to global time `t_end`, interleaving
+    /// runnable harts in `quantum`-sized slices. Stalled harts simply let
+    /// time pass (their clocks snap forward on resume).
+    pub fn run_until(&mut self, t_end: u64) {
+        assert!(t_end <= self.max_ticks, "target time runaway (now={})", self.now);
+        while self.now < t_end {
+            let slice_end = (self.now + self.quantum).min(t_end);
+            let mut any = false;
+            for cpu in 0..self.harts.len() {
+                if !self.runnable(cpu) {
+                    continue;
+                }
+                // Late-resumed harts snap to the current slice start.
+                if self.harts[cpu].time < self.now {
+                    self.harts[cpu].time = self.now;
+                }
+                any = true;
+                while self.runnable(cpu) && self.harts[cpu].time < slice_end {
+                    self.step_hart(cpu);
+                }
+            }
+            if !any {
+                // Everything stalled: fast-forward.
+                self.now = t_end;
+                return;
+            }
+            self.now = slice_end;
+        }
+    }
+
+    /// Keep running until at least one exception event is queued (or
+    /// `t_max` is reached). Returns true if an event is available.
+    pub fn run_until_exception(&mut self, t_max: u64) -> bool {
+        while self.exception_queue.is_empty() && self.now < t_max {
+            let next = (self.now + self.quantum).min(t_max);
+            self.run_until(next);
+            if !self.harts.iter().enumerate().any(|(i, _)| self.runnable(i)) {
+                // No core can make progress; an exception can never arrive.
+                return !self.exception_queue.is_empty();
+            }
+        }
+        !self.exception_queue.is_empty()
+    }
+
+    /// Single instruction step on one hart, handling traps/interrupts.
+    fn step_hart(&mut self, cpu: usize) {
+        // Pending machine interrupt? (optional Interrupt port / timer)
+        if self.harts[cpu].interrupt_pending && self.harts[cpu].prv == PrivLevel::U {
+            self.harts[cpu].interrupt_pending = false;
+            self.trap_to_controller(cpu, None);
+            return;
+        }
+        let h = &mut self.harts[cpu];
+        match exec::step(h, &mut self.ms, &self.model) {
+            Ok(cycles) => {
+                h.charge(cycles);
+                self.total_instret += 1;
+            }
+            Err(trap) => {
+                // Trap entry costs a pipeline flush either way.
+                let flush = self.model.mispredict_penalty + 2;
+                self.harts[cpu].charge(flush);
+                self.trap_to_controller(cpu, Some(trap));
+            }
+        }
+    }
+
+    /// Architectural trap entry + StopFetch + exception event enqueue.
+    /// `None` = machine timer interrupt (cause MTIMER).
+    fn trap_to_controller(&mut self, cpu: usize, trap: Option<Trap>) {
+        let h = &mut self.harts[cpu];
+        match trap {
+            Some(t) => {
+                h.enter_trap(t);
+            }
+            None => {
+                // Interrupt entry (same latching, interrupt cause).
+                let prev = h.prv;
+                h.csrs.mepc = h.pc;
+                h.csrs.mcause = CAUSE_MTIMER;
+                h.csrs.mtval = 0;
+                h.csrs.set_mpp(prev.bits());
+                h.prv = PrivLevel::M;
+                h.pc = h.csrs.mtvec;
+            }
+        }
+        // Paper §IV: "StopFetch is invalid only during user program
+        // execution" — a U->M switch stalls the core and queues its ID.
+        h.stop_fetch = true;
+        let at = h.time;
+        self.exception_queue.push_back(ExceptionEvent { cpu, at });
+    }
+
+    /// Pop the oldest exception event (controller `Next` handling).
+    pub fn pop_exception(&mut self) -> Option<ExceptionEvent> {
+        self.exception_queue.pop_front()
+    }
+
+    /// Number of retired instructions across all harts.
+    pub fn instret(&self) -> u64 {
+        self.total_instret
+    }
+}
+
+/// Paper Table I implementation for the simulated target.
+impl CpuInterface for Machine {
+    fn priv_level(&self, cpu: usize) -> u64 {
+        self.harts[cpu].prv.bits()
+    }
+
+    fn reg_read(&mut self, cpu: usize, idx: u8) -> u64 {
+        let h = &self.harts[cpu];
+        if idx < 32 {
+            h.regs[idx as usize]
+        } else {
+            h.fregs[(idx - 32) as usize]
+        }
+    }
+
+    fn reg_write(&mut self, cpu: usize, idx: u8, val: u64) {
+        let h = &mut self.harts[cpu];
+        if idx < 32 {
+            if idx != 0 {
+                h.regs[idx as usize] = val;
+            }
+        } else {
+            h.fregs[(idx - 32) as usize] = val;
+        }
+    }
+
+    fn set_stop_fetch(&mut self, cpu: usize, stop: bool) {
+        self.harts[cpu].stop_fetch = stop;
+        if !stop {
+            self.harts[cpu].waiting = false;
+            // Resuming core re-synchronizes with global time.
+            if self.harts[cpu].time < self.now {
+                self.harts[cpu].time = self.now;
+            }
+        }
+    }
+
+    fn inject_busy(&self, cpu: usize) -> bool {
+        // The fast engine retires instructions atomically, so the pipeline
+        // is empty whenever the hart is stalled.
+        !self.harts[cpu].stop_fetch
+    }
+
+    fn inject(&mut self, cpu: usize, raw: u32) -> InjectResult {
+        debug_assert!(self.harts[cpu].stop_fetch, "inject requires StopFetch");
+        debug_assert_eq!(self.harts[cpu].prv, PrivLevel::M);
+        // Injected work happens "now" on the global timeline.
+        if self.harts[cpu].time < self.now {
+            self.harts[cpu].time = self.now;
+        }
+        let h = &mut self.harts[cpu];
+        match exec::exec_injected(h, &mut self.ms, &self.model, raw) {
+            Ok(cycles) => {
+                h.charge(cycles);
+                InjectResult::Done { cycles }
+            }
+            Err(t) => InjectResult::Fault(t),
+        }
+    }
+
+    fn raise_interrupt(&mut self, cpu: usize) {
+        self.harts[cpu].interrupt_pending = true;
+    }
+
+    fn n_cpus(&self) -> usize {
+        self.harts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rv64::decode::encode;
+
+    fn mk(n: usize) -> Machine {
+        Machine::new(MachineConfig {
+            n_harts: n,
+            dram_size: 8 << 20,
+            ..Default::default()
+        })
+    }
+
+    /// Place a tiny M-mode program and release the hart.
+    fn boot(m: &mut Machine, cpu: usize, words: &[u32], at: u64) {
+        for (i, w) in words.iter().enumerate() {
+            m.ms.phys.write_n(at + 4 * i as u64, 4, *w as u64);
+        }
+        m.harts[cpu].pc = at;
+        m.harts[cpu].stop_fetch = false;
+    }
+
+    #[test]
+    fn reset_state_stalled_in_m() {
+        let m = mk(2);
+        assert_eq!(m.priv_level(0), 3);
+        assert!(m.harts.iter().all(|h| h.stop_fetch));
+    }
+
+    #[test]
+    fn run_until_advances_program() {
+        let mut m = mk(1);
+        boot(&mut m, 0, &[
+            encode::addi(5, 0, 1),
+            encode::addi(5, 5, 1),
+            encode::addi(5, 5, 1),
+            encode::self_loop(),
+        ], DRAM_BASE + 0x100);
+        m.run_until(1000);
+        assert_eq!(m.harts[0].regs[5], 3);
+        assert_eq!(m.now, 1000);
+    }
+
+    #[test]
+    fn ecall_from_user_queues_exception_and_stalls() {
+        let mut m = mk(1);
+        // user code at a physical address (bare satp): addi; ecall
+        boot(&mut m, 0, &[encode::addi(10, 0, 42), 0x0000_0073], DRAM_BASE + 0x200);
+        m.harts[0].prv = PrivLevel::U;
+        let got = m.run_until_exception(100_000);
+        assert!(got);
+        let ev = m.pop_exception().unwrap();
+        assert_eq!(ev.cpu, 0);
+        assert_eq!(m.harts[0].csrs.mcause, 8);
+        assert!(m.harts[0].stop_fetch);
+        assert_eq!(m.reg_read(0, 10), 42);
+        // mepc points at the ecall
+        assert_eq!(m.harts[0].csrs.mepc, DRAM_BASE + 0x204);
+    }
+
+    #[test]
+    fn stalled_machine_fast_forwards() {
+        let mut m = mk(2);
+        m.run_until(1_000_000);
+        assert_eq!(m.now, 1_000_000);
+        assert_eq!(m.total_instret, 0);
+    }
+
+    #[test]
+    fn inject_and_reg_ports_roundtrip() {
+        let mut m = mk(1);
+        m.reg_write(0, 1, DRAM_BASE + 0x1000);
+        m.reg_write(0, 2, 0xfeed);
+        assert_eq!(m.reg_read(0, 2), 0xfeed);
+        let r = m.inject(0, encode::sd(2, 1, 0));
+        assert!(matches!(r, InjectResult::Done { .. }));
+        assert_eq!(m.ms.phys.read_u64(DRAM_BASE + 0x1000), Some(0xfeed));
+        // fp reg aliases 32..63
+        m.reg_write(0, 33, 0x3ff0_0000_0000_0000);
+        assert_eq!(m.reg_read(0, 33), 0x3ff0_0000_0000_0000);
+    }
+
+    #[test]
+    fn redirect_sequence_enters_user_mode() {
+        let mut m = mk(1);
+        // Controller-style Redirect: x1 = target; csrw mepc, x1; mret
+        boot(&mut m, 0, &[encode::addi(6, 0, 9), encode::self_loop()], DRAM_BASE + 0x300);
+        m.harts[0].stop_fetch = true; // undo boot release; we drive via inject
+        m.reg_write(0, 1, DRAM_BASE + 0x300);
+        m.inject(0, encode::csrrw(0, crate::rv64::csr::MEPC, 1));
+        m.inject(0, encode::mret());
+        m.set_stop_fetch(0, false);
+        m.run_until(m.now + 500);
+        assert_eq!(m.harts[0].prv, PrivLevel::U);
+        assert_eq!(m.harts[0].regs[6], 9);
+    }
+
+    #[test]
+    fn two_harts_interleave() {
+        let mut m = mk(2);
+        boot(&mut m, 0, &[encode::addi(5, 5, 1), 0xff5ff06fu32 /* jal x0,-12? */], DRAM_BASE + 0x400);
+        // simpler: both run self-incrementing then loop via self_loop
+        boot(&mut m, 0, &[encode::addi(5, 5, 1), encode::self_loop()], DRAM_BASE + 0x400);
+        boot(&mut m, 1, &[encode::addi(5, 5, 2), encode::self_loop()], DRAM_BASE + 0x500);
+        m.run_until(10_000);
+        assert_eq!(m.harts[0].regs[5], 1);
+        assert_eq!(m.harts[1].regs[5], 2);
+        assert!(m.harts[0].time >= 1 && m.harts[1].time >= 1);
+    }
+
+    #[test]
+    fn interrupt_port_traps_user_core() {
+        let mut m = mk(1);
+        boot(&mut m, 0, &[encode::addi(5, 5, 1), encode::self_loop()], DRAM_BASE + 0x600);
+        m.harts[0].prv = PrivLevel::U;
+        m.raise_interrupt(0);
+        assert!(m.run_until_exception(100_000));
+        assert_eq!(m.harts[0].csrs.mcause, CAUSE_MTIMER);
+    }
+
+    #[test]
+    fn utick_stops_while_stalled() {
+        let mut m = mk(1);
+        boot(&mut m, 0, &[encode::addi(10, 0, 1), 0x0000_0073, encode::self_loop()], DRAM_BASE + 0x700);
+        m.harts[0].prv = PrivLevel::U;
+        m.run_until_exception(100_000);
+        let u1 = m.harts[0].utick;
+        m.run_until(m.now + 100_000);
+        assert_eq!(m.harts[0].utick, u1, "UTick must freeze while stalled in M");
+    }
+}

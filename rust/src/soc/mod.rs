@@ -1,0 +1,15 @@
+//! The simulated target system ("the FPGA"): SMP harts + memory system +
+//! global clock, with two interchangeable execution engines:
+//!
+//! * [`Machine`] (fast engine) — instruction-level interpreter with cycle
+//!   cost accounting. Stands in for the FPGA prototype: fast wall-clock,
+//!   faithful target-time.
+//! * [`detailed::DetailedEngine`] — per-cycle pipeline walker standing in
+//!   for RTL simulation (Verilator/PK baseline). Same ISA semantics, two to
+//!   three orders of magnitude slower wall-clock, which is the property the
+//!   Fig 18/19 efficiency comparison measures.
+
+pub mod detailed;
+pub mod machine;
+
+pub use machine::{ExceptionEvent, Machine, MachineConfig};

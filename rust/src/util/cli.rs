@@ -1,0 +1,169 @@
+//! Minimal argv parser: `--key value`, `--key=value`, boolean flags and
+//! positionals. No external deps (clap is not in the offline vendor set).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+    /// Keys the program actually looked up — for unknown-option diagnostics.
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--" {
+                // separator: everything after is positional (guest argv)
+                a.pos.extend(it);
+                break;
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.pos.push(arg);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn note(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.note(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| parse_u64(v).unwrap_or_else(|| die(key, v)))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.u64_or(key, default as u64) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse::<f64>().unwrap_or_else(|_| die(key, v)))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.note(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// Remaining positionals after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.pos.is_empty() {
+            &self.pos
+        } else {
+            &self.pos[1..]
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.pos.first().map(|s| s.as_str())
+    }
+}
+
+/// Accepts decimal, hex (0x..), and size suffixes k/m/g (binary).
+pub fn parse_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16).ok();
+    }
+    let (num, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1u64 << 20),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    num.parse::<u64>().ok().map(|v| v * mult)
+}
+
+fn die(key: &str, v: &str) -> ! {
+    eprintln!("invalid value for --{key}: {v:?}");
+    std::process::exit(2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = args(&["run", "--threads", "4", "--scale=16", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.u64_or("threads", 1), 4);
+        assert_eq!(a.u64_or("scale", 1), 16);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positionals_and_rest() {
+        let a = args(&["run", "prog.elf", "--x", "1", "arg2"]);
+        assert_eq!(a.positional(), &["run", "prog.elf", "arg2"]);
+        assert_eq!(a.rest(), &["prog.elf", "arg2"]);
+    }
+
+    #[test]
+    fn size_suffixes_and_hex() {
+        assert_eq!(parse_u64("0x10"), Some(16));
+        assert_eq!(parse_u64("4k"), Some(4096));
+        assert_eq!(parse_u64("2M"), Some(2 << 20));
+        assert_eq!(parse_u64("1g"), Some(1 << 30));
+        assert_eq!(parse_u64("nope"), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&["x"]);
+        assert_eq!(a.u64_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 1.5), 1.5);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny config-file reader: `[section]` headers and `key = value` lines,
+//! `#`/`;` comments. A strict subset of TOML sufficient for experiment
+//! configuration files (serde is not in the offline vendor set).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// section -> key -> raw string value
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    BadLine(usize, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::BadLine(i + 1, raw.to_string()))?;
+            let val = v.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, ConfigError> {
+        Ok(Config::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key)
+            .and_then(super::cli::parse_u64)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Don't strip inside quotes; values here never contain # in practice.
+    match line.find(['#', ';']) {
+        Some(idx) => &line[..idx],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = Config::parse(
+            "# comment\n[target]\nclock_hz = 100000000\nname = \"rocket\"\n\n[uart]\nbaud = 921600 ; inline\n",
+        )
+        .unwrap();
+        assert_eq!(c.u64_or("target", "clock_hz", 0), 100_000_000);
+        assert_eq!(c.get("target", "name"), Some("rocket"));
+        assert_eq!(c.u64_or("uart", "baud", 0), 921_600);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Config::parse("[x]\nnot a kv line\n").is_err());
+    }
+
+    #[test]
+    fn defaults_and_bools() {
+        let c = Config::parse("[a]\nhf = on\n").unwrap();
+        assert!(c.bool_or("a", "hf", false));
+        assert!(!c.bool_or("a", "missing", false));
+        assert_eq!(c.f64_or("a", "missing", 2.5), 2.5);
+    }
+
+    #[test]
+    fn top_level_keys() {
+        let c = Config::parse("x = 1\n").unwrap();
+        assert_eq!(c.u64_or("", "x", 0), 1);
+    }
+}

@@ -1,0 +1,79 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set). Runs a property against many PRNG-derived cases and reports the
+//! seed of the first failing case so it can be replayed deterministically.
+
+use super::prng::Prng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // FASE_PROP_CASES / FASE_PROP_SEED allow widening or replaying runs.
+        let cases = std::env::var("FASE_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("FASE_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xFA5E_0001);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random cases; panic with the replay seed on
+/// the first failure.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Prng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} \
+                 (replay with FASE_PROP_SEED={case_seed} FASE_PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quick("addition commutes", |rng| {
+            let a = rng.next_u32() as u64;
+            let b = rng.next_u32() as u64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with")]
+    fn failing_property_reports_seed() {
+        check(
+            "always fails",
+            PropConfig { cases: 3, seed: 1 },
+            |_| Err("nope".into()),
+        );
+    }
+}

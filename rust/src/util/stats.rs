@@ -1,0 +1,123 @@
+//! Summary statistics for the bench harness (median / MAD / percentiles).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize() on empty sample set");
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let median = percentile_sorted(&v, 50.0);
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut dev: Vec<f64> = v.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        median,
+        min: v[0],
+        max: v[n - 1],
+        stddev: var.sqrt(),
+        mad: percentile_sorted(&dev, 50.0),
+        p95: percentile_sorted(&v, 95.0),
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, p in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Relative error `e = (t_se - t_fs) / t_fs` as used throughout the paper.
+pub fn rel_error(t_se: f64, t_fs: f64) -> f64 {
+    (t_se - t_fs) / t_fs
+}
+
+/// Pretty time formatting for reports.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3}ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3}us", seconds * 1e6)
+    } else {
+        format!("{:.1}ns", seconds * 1e9)
+    }
+}
+
+/// Pretty byte-count formatting.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.2}MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2}KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_summary() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mad - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_sign() {
+        assert!((rel_error(103.0, 100.0) - 0.03).abs() < 1e-12);
+        assert!((rel_error(97.0, 100.0) + 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0025), "2.500ms");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[4.2]);
+        assert_eq!(s.median, 4.2);
+        assert_eq!(s.p95, 4.2);
+    }
+}

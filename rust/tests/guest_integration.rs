@@ -1,0 +1,166 @@
+//! Integration tests over real guest ELFs (built by `make guests`).
+//! Each test runs a cross-compiled RV64 binary through the full stack in
+//! one or both modes and checks guest-visible semantics plus runtime
+//! accounting. Tests are skipped (with a notice) if artifacts are missing.
+
+use fase::coordinator::runtime::{run_elf, Mode, RunConfig, RunResult};
+use fase::coordinator::target::{HostLatency, KernelCosts};
+use std::path::PathBuf;
+
+fn guest(name: &str) -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("artifacts/guests/{name}.elf"));
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: {} missing (run `make guests`)", p.display());
+        None
+    }
+}
+
+fn fase_cfg(cpus: usize) -> RunConfig {
+    RunConfig {
+        mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+        n_cpus: cpus,
+        echo_stdout: false,
+        max_target_seconds: 120.0,
+        ..Default::default()
+    }
+}
+
+fn fullsys_cfg(cpus: usize) -> RunConfig {
+    RunConfig {
+        mode: Mode::FullSys { costs: KernelCosts::default() },
+        n_cpus: cpus,
+        echo_stdout: false,
+        max_target_seconds: 120.0,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: RunConfig, elf: &PathBuf, args: &[&str], env: &[&str]) -> RunResult {
+    let mut argv = vec![elf.display().to_string()];
+    argv.extend(args.iter().map(|s| s.to_string()));
+    let envp: Vec<String> = env.iter().map(|s| s.to_string()).collect();
+    run_elf(cfg, elf, &argv, &envp)
+}
+
+#[test]
+fn hello_argv_env_exit_code() {
+    let Some(elf) = guest("hello") else { return };
+    for cfg in [fase_cfg(1), fullsys_cfg(1)] {
+        let mut c = cfg;
+        c.guest_root = std::env::temp_dir();
+        let res = run(c, &elf, &["alpha", "beta"], &["FASE_TEST_ENV=visible"]);
+        assert_eq!(res.error, None);
+        assert_eq!(res.exit_code, 42);
+        assert!(res.stdout.contains("argc=3"), "{}", res.stdout);
+        assert!(res.stdout.contains("argv[2]=beta"));
+        assert!(res.stdout.contains("FASE_TEST_ENV=visible"));
+    }
+}
+
+#[test]
+fn threads_full_stack_both_modes() {
+    let Some(elf) = guest("threads") else { return };
+    for (label, cfg) in [("fase", fase_cfg(4)), ("fullsys", fullsys_cfg(4))] {
+        let res = run(cfg, &elf, &["3"], &[]);
+        assert_eq!(res.error, None, "{label}: {:?}", res.error);
+        assert_eq!(res.exit_code, 0, "{label} stdout:\n{}", res.stdout);
+        assert!(res.stdout.contains("threads OK"));
+        assert!(res.context_switches >= 1);
+        // clone must have been used for the 3 workers + pool
+        let clones = res.syscall_counts.iter().find(|(n, _)| n == "clone").map(|(_, c)| *c);
+        assert!(clones.unwrap_or(0) >= 3, "{label}: {:?}", res.syscall_counts);
+    }
+}
+
+#[test]
+fn crash_reports_guest_fault() {
+    let Some(elf) = guest("crash") else { return };
+    let res = run(fase_cfg(1), &elf, &[], &[]);
+    let err = res.error.expect("crash must produce an error");
+    assert!(err.contains("page fault") || err.contains("segmentation"), "{err}");
+}
+
+#[test]
+fn deadlock_detected_not_hung() {
+    let Some(elf) = guest("deadlock") else { return };
+    let t0 = std::time::Instant::now();
+    let res = run(fase_cfg(1), &elf, &[], &[]);
+    assert!(res.error.unwrap_or_default().contains("deadlock"));
+    assert!(t0.elapsed().as_secs() < 60, "deadlock detection must not hang");
+}
+
+#[test]
+fn stress_syscall_surface() {
+    let Some(elf) = guest("stress") else { return };
+    for cfg in [fase_cfg(1), fullsys_cfg(2)] {
+        let mut c = cfg;
+        c.guest_root = std::env::temp_dir();
+        let res = run(c, &elf, &[], &[]);
+        assert_eq!(res.error, None);
+        assert_eq!(res.exit_code, 0, "stdout:\n{}\nstderr:\n{}", res.stdout, res.stderr);
+        assert!(res.stdout.contains("signal delivered"));
+        assert!(res.stdout.contains("stress OK"));
+    }
+}
+
+#[test]
+fn timeout_guard_fires() {
+    let Some(elf) = guest("coremark") else { return };
+    let mut cfg = fullsys_cfg(1);
+    cfg.max_target_seconds = 0.001; // absurdly small
+    let res = run(cfg, &elf, &["1000"], &[]);
+    assert!(res.error.unwrap_or_default().contains("time limit"));
+}
+
+#[test]
+fn fase_and_fullsys_agree_functionally() {
+    // Same guest computation must produce identical stdout content lines
+    // (modulo timing numbers) in both modes — the syscall-emulation
+    // correctness claim.
+    let Some(elf) = guest("bfs") else { return };
+    let a = run(fase_cfg(2), &elf, &["10", "2", "1"], &[]);
+    let b = run(fullsys_cfg(2), &elf, &["10", "2", "1"], &[]);
+    assert_eq!(a.error, None);
+    assert_eq!(b.error, None);
+    fn line_with<'a>(s: &'a str, p: &str) -> Option<&'a str> {
+        s.lines().find(|l| l.starts_with(p))
+    }
+    assert_eq!(line_with(&a.stdout, "graph"), line_with(&b.stdout, "graph"));
+    assert_eq!(line_with(&a.stdout, "reached"), line_with(&b.stdout, "reached"));
+}
+
+#[test]
+fn hfutex_reduces_traffic_on_threads() {
+    let Some(elf) = guest("threads") else { return };
+    let mut on = fase_cfg(4);
+    on.mode = Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::zero() };
+    let mut off = fase_cfg(4);
+    off.mode = Mode::Fase { baud: 921_600, hfutex: false, latency: HostLatency::zero() };
+    let r_on = run(on, &elf, &["3"], &[]);
+    let r_off = run(off, &elf, &["3"], &[]);
+    assert_eq!(r_on.error, None);
+    assert_eq!(r_off.error, None);
+    assert!(r_on.filtered_wakes > 0, "HFutex should filter mutex eager wakes");
+    assert_eq!(r_off.filtered_wakes, 0);
+    assert!(
+        r_on.total_bytes < r_off.total_bytes,
+        "HF {} vs NHF {}",
+        r_on.total_bytes,
+        r_off.total_bytes
+    );
+}
+
+#[test]
+fn baud_rate_changes_target_time_not_results() {
+    let Some(elf) = guest("hello") else { return };
+    let mut slow = fase_cfg(1);
+    slow.mode = Mode::Fase { baud: 115_200, hfutex: true, latency: HostLatency::zero() };
+    let fast = fase_cfg(1);
+    let r_slow = run(slow, &elf, &[], &[]);
+    let r_fast = run(fast, &elf, &[], &[]);
+    assert_eq!(r_slow.exit_code, 42);
+    assert_eq!(r_fast.exit_code, 42);
+    assert!(r_slow.ticks > r_fast.ticks, "slower channel => more target time");
+}

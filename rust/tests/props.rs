@@ -1,0 +1,346 @@
+//! Property-based tests on coordinator invariants (scheduler routing,
+//! futex queues, VM state/device-page-table coherence, controller batching
+//! equivalence, machine determinism) using the in-repo propcheck harness.
+//! Widen with FASE_PROP_CASES=512, replay with FASE_PROP_SEED=<seed>.
+
+use fase::coordinator::sched::{Scheduler, TState, ThreadCtx};
+use fase::coordinator::target::{DirectTarget, KernelCosts, TargetOps};
+use fase::coordinator::vm::{AddressSpace, PageAlloc, PAGE, PROT_READ, PROT_WRITE};
+use fase::fase::controller::Controller;
+use fase::fase::htp::Req;
+use fase::rv64::decode::encode;
+use fase::soc::machine::DRAM_BASE;
+use fase::soc::{Machine, MachineConfig};
+use fase::util::propcheck::quick;
+use fase::util::prng::Prng;
+
+fn direct(n: usize, mb: u64) -> DirectTarget {
+    let m = Machine::new(MachineConfig { n_harts: n, dram_size: mb << 20, ..Default::default() });
+    let mut t = DirectTarget::new(m, KernelCosts::default());
+    t.timer_enabled = false;
+    t
+}
+
+/// Scheduler: after any sequence of spawn/dispatch/block/wake/exit
+/// operations, (a) no tid occupies two CPUs, (b) ready and running are
+/// disjoint, (c) every alive thread is in exactly one place.
+#[test]
+fn prop_scheduler_state_machine() {
+    quick("scheduler state machine", |rng: &mut Prng| {
+        let n_cpus = 1 + rng.below(4) as usize;
+        let mut t = direct(n_cpus, 8);
+        let mut s = Scheduler::new(n_cpus);
+        for _ in 0..1 + rng.below(4) {
+            s.spawn(ThreadCtx::zeroed());
+        }
+        for _step in 0..200 {
+            match rng.below(6) {
+                0 => {
+                    if s.tcbs.len() < 12 {
+                        s.spawn(ThreadCtx::zeroed());
+                    }
+                }
+                1 => {
+                    s.fill_idle_cpus(&mut t, 0);
+                }
+                2 => {
+                    // block a running thread on a random futex
+                    let cpu = rng.below(n_cpus as u64) as usize;
+                    if s.current(cpu).is_some() {
+                        s.save_context(&mut t, cpu, 0x1000);
+                        let pa = 0x100 * (1 + rng.below(4));
+                        s.block_current(cpu, TState::FutexWait { pa, va: pa });
+                    }
+                }
+                3 => {
+                    let pa = 0x100 * (1 + rng.below(4));
+                    s.futex_wake(pa, 1 + rng.below(3) as usize);
+                }
+                4 => {
+                    let cpu = rng.below(n_cpus as u64) as usize;
+                    if s.current(cpu).is_some() {
+                        s.exit_current(cpu);
+                    }
+                }
+                _ => {
+                    let cpu = rng.below(n_cpus as u64) as usize;
+                    if s.current(cpu).is_some() {
+                        s.save_context(&mut t, cpu, 0x2000);
+                        let until = 1000 + rng.below(1000);
+                        s.block_current(cpu, TState::Sleep { until });
+                    }
+                    s.expire_sleepers(3000);
+                }
+            }
+            // ---- invariants ----
+            let mut seen = std::collections::HashSet::new();
+            for cpu in 0..n_cpus {
+                if let Some(tid) = s.current(cpu) {
+                    if !seen.insert(tid) {
+                        return Err(format!("tid {tid} on two cpus"));
+                    }
+                    if s.tcb(tid).state != TState::Running(cpu) {
+                        return Err(format!("tid {tid} running[{cpu}] but state {:?}", s.tcb(tid).state));
+                    }
+                }
+            }
+            for &tid in &s.ready {
+                if seen.contains(&tid) {
+                    return Err(format!("tid {tid} both ready and running"));
+                }
+                if s.tcb(tid).state != TState::Ready {
+                    return Err(format!("ready tid {tid} state {:?}", s.tcb(tid).state));
+                }
+            }
+            // every alive thread is accounted for exactly once
+            for (tid, tcb) in &s.tcbs {
+                let places = [
+                    matches!(tcb.state, TState::Running(_)) as u32,
+                    s.ready.contains(tid) as u32,
+                    s.futex_q.values().any(|q| q.contains(tid)) as u32,
+                    matches!(tcb.state, TState::Sleep { .. }) as u32,
+                    matches!(tcb.state, TState::Exited) as u32,
+                ];
+                if places.iter().sum::<u32>() != 1 {
+                    return Err(format!("tid {tid} in {places:?} places (state {:?})", tcb.state));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// VM: after random mmap/fault/munmap sequences, the software mirror and
+/// the on-device SV39 page table agree for every address, and refcounts
+/// stay consistent.
+#[test]
+fn prop_vm_mirror_matches_device_page_table() {
+    quick("vm mirror == device PT", |rng: &mut Prng| {
+        let mut t = direct(1, 64);
+        let base_ppn = (DRAM_BASE + (1 << 20)) >> 12;
+        let end_ppn = (DRAM_BASE + (64 << 20)) >> 12;
+        let mut alloc = PageAlloc::new(base_ppn, end_ppn);
+        let mut vm = AddressSpace::new(&mut t, 0, &mut alloc).map_err(|e| e.to_string())?;
+        vm.preload = rng.below(8);
+        let mut regions: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..40 {
+            match rng.below(4) {
+                0 => {
+                    let pages = 1 + rng.below(8);
+                    let va = vm.mmap_anon(pages * PAGE, PROT_READ | PROT_WRITE);
+                    regions.push((va, pages * PAGE));
+                }
+                1 => {
+                    if let Some(&(va, len)) = regions.last() {
+                        let off = rng.below(len / PAGE) * PAGE;
+                        vm.handle_fault(&mut t, 0, &mut alloc, va + off, rng.bool())
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+                2 => {
+                    if !regions.is_empty() {
+                        let i = rng.below(regions.len() as u64) as usize;
+                        let (va, len) = regions.swap_remove(i);
+                        vm.munmap(&mut t, 0, &mut alloc, va, len);
+                    }
+                }
+                _ => {
+                    if let Some(&(va, len)) = regions.first() {
+                        let data = [rng.next_u64() as u8; 24];
+                        let off = rng.below(len.saturating_sub(32).max(1));
+                        vm.write_guest(&mut t, 0, &mut alloc, va + off, &data)
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+        }
+        // Walk the DEVICE page table for every mirror entry and compare.
+        for (&vpn, info) in vm.pages.iter() {
+            let va = vpn << 12;
+            let root = vm.root_ppn << 12;
+            let l2e = t.mem_r(0, root + ((va >> 30) & 0x1ff) * 8);
+            if l2e & 1 == 0 {
+                return Err(format!("va {va:#x}: L2 entry invalid"));
+            }
+            let l1 = (l2e >> 10) << 12;
+            let l1e = t.mem_r(0, l1 + ((va >> 21) & 0x1ff) * 8);
+            if l1e & 1 == 0 {
+                return Err(format!("va {va:#x}: L1 entry invalid"));
+            }
+            let l0 = (l1e >> 10) << 12;
+            let l0e = t.mem_r(0, l0 + ((va >> 12) & 0x1ff) * 8);
+            if l0e & 1 == 0 {
+                return Err(format!("va {va:#x}: leaf invalid but mirrored"));
+            }
+            let dev_ppn = l0e >> 10;
+            if dev_ppn != info.ppn {
+                return Err(format!("va {va:#x}: mirror ppn {:#x} != device {dev_ppn:#x}", info.ppn));
+            }
+            if alloc.refcount(info.ppn) == 0 {
+                return Err(format!("va {va:#x}: mapped page has refcount 0"));
+            }
+        }
+        // Segments never overlap.
+        let mut segs: Vec<(u64, u64)> = vm.segments.iter().map(|s| (s.start, s.end)).collect();
+        segs.sort();
+        for w in segs.windows(2) {
+            if w[0].1 > w[1].0 {
+                return Err(format!("overlapping segments {w:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Controller page operations are byte-equivalent to direct physical
+/// memory manipulation, and always restore staged registers.
+#[test]
+fn prop_controller_page_ops_equivalence() {
+    quick("controller page ops == direct writes", |rng: &mut Prng| {
+        let mut m = Machine::new(MachineConfig { n_harts: 1, dram_size: 16 << 20, ..Default::default() });
+        let mut c = Controller::new(1, true, 8);
+        // random pre-existing register state must survive
+        let regs: Vec<u64> = (0..32).map(|_| rng.next_u64()).collect();
+        for i in 1..32 {
+            use fase::iface::CpuInterface;
+            m.reg_write(0, i as u8, regs[i]);
+        }
+        let ppn_a = (DRAM_BASE >> 12) + 100 + rng.below(50);
+        let ppn_b = ppn_a + 60 + rng.below(50);
+        let val = rng.next_u64();
+        c.execute(&mut m, &Req::PageS { cpu: 0, ppn: ppn_a, val });
+        for off in [0u64, 8, 2048, 4088] {
+            let got = m.ms.phys.read_u64((ppn_a << 12) + off).unwrap();
+            if got != val {
+                return Err(format!("PageS: off {off}: {got:#x} != {val:#x}"));
+            }
+        }
+        c.execute(&mut m, &Req::PageCp { cpu: 0, src_ppn: ppn_a, dst_ppn: ppn_b });
+        let a = m.ms.phys.slice(ppn_a << 12, 4096).unwrap().to_vec();
+        let b = m.ms.phys.slice(ppn_b << 12, 4096).unwrap().to_vec();
+        if a != b {
+            return Err("PageCp mismatch".into());
+        }
+        // PageR equals direct read
+        let (resp, _) = c.execute(&mut m, &Req::PageR { cpu: 0, ppn: ppn_b });
+        match resp {
+            fase::fase::htp::Resp::Page(p) => {
+                if p.as_slice() != b.as_slice() {
+                    return Err("PageR mismatch".into());
+                }
+            }
+            other => return Err(format!("PageR: {other:?}")),
+        }
+        // staged registers restored
+        use fase::iface::CpuInterface;
+        for i in 1..32 {
+            let got = m.reg_read(0, i as u8);
+            if got != regs[i as usize] {
+                return Err(format!("reg x{i} clobbered: {got:#x} != {:#x}", regs[i as usize]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The machine is deterministic: identical programs produce identical
+/// tick/instret/register outcomes.
+#[test]
+fn prop_machine_determinism() {
+    quick("machine determinism", |rng: &mut Prng| {
+        let words: Vec<u32> = (0..20)
+            .map(|_| match rng.below(4) {
+                0 => encode::addi(5, 5, (rng.below(100) as i32) - 50),
+                1 => encode::slli(6, 5, (rng.below(16)) as u32),
+                2 => encode::or(7, 5, 6),
+                _ => encode::addi(8, 7, 1),
+            })
+            .chain(std::iter::once(encode::self_loop()))
+            .collect();
+        let run = |words: &[u32]| {
+            let mut m = Machine::new(MachineConfig { n_harts: 1, dram_size: 4 << 20, ..Default::default() });
+            for (i, w) in words.iter().enumerate() {
+                m.ms.phys.write_n(DRAM_BASE + 0x100 + 4 * i as u64, 4, *w as u64);
+            }
+            m.harts[0].pc = DRAM_BASE + 0x100;
+            m.harts[0].stop_fetch = false;
+            m.run_until(50_000);
+            (m.harts[0].time, m.harts[0].instret, m.harts[0].regs)
+        };
+        let a = run(&words);
+        let b = run(&words);
+        if a != b {
+            return Err("non-deterministic machine state".into());
+        }
+        Ok(())
+    });
+}
+
+/// Futex wake ordering is FIFO and wake counts are exact.
+#[test]
+fn prop_futex_fifo_exact_counts() {
+    quick("futex FIFO + exact wake counts", |rng: &mut Prng| {
+        let mut s = Scheduler::new(8);
+        let n = 2 + rng.below(6) as usize;
+        let mut order = Vec::new();
+        for i in 0..n {
+            let tid = s.spawn(ThreadCtx::zeroed());
+            s.ready.pop_back();
+            s.running[i] = Some(tid);
+            s.tcbs.get_mut(&tid).unwrap().state = TState::Running(i);
+            s.block_current(i, TState::FutexWait { pa: 0x500, va: 0x500 });
+            order.push(tid);
+        }
+        let k = 1 + rng.below(n as u64) as usize;
+        let woken = s.futex_wake(0x500, k);
+        if woken.len() != k.min(n) {
+            return Err(format!("woke {} expected {}", woken.len(), k.min(n)));
+        }
+        if woken != order[..k.min(n)] {
+            return Err(format!("order {woken:?} != {:?}", &order[..k.min(n)]));
+        }
+        let rest = s.futex_wake(0x500, usize::MAX >> 1);
+        if rest.len() != n - k.min(n) {
+            return Err("remaining wake count wrong".into());
+        }
+        Ok(())
+    });
+}
+
+/// PageAlloc never double-allocates and refcounting round-trips.
+#[test]
+fn prop_page_alloc_unique_and_refcounted() {
+    quick("page alloc uniqueness", |rng: &mut Prng| {
+        let mut a = PageAlloc::new(1000, 1200);
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..300 {
+            match rng.below(3) {
+                0 => {
+                    if let Ok(p) = a.alloc() {
+                        if live.contains(&p) {
+                            return Err(format!("double alloc of {p}"));
+                        }
+                        live.push(p);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        a.incref(live[i]);
+                        a.decref(live[i]);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let p = live.swap_remove(i);
+                        if !a.decref(p) {
+                            return Err(format!("page {p} not freed at refcount 0"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
