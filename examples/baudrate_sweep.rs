@@ -16,11 +16,11 @@ fn main() {
     eprintln!("[sweep] baseline ({bench}-{threads}, scale 2^{scale})...");
     let fs = run_gapbs(&bench, &Arm::FullSys, threads, scale, trials, "rocket");
 
-    let mut tab = Table::new(&["baud", "score", "err", "futex", "uart_stall"]);
+    let mut tab = Table::new(&["baud", "score", "err", "futex", "chan_stall"]);
     for baud in [57_600u64, 115_200, 230_400, 460_800, 921_600, 1_843_200] {
         let se = run_gapbs(
             &bench,
-            &Arm::Fase { baud, hfutex: true, ideal_latency: false },
+            &Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false },
             threads,
             scale,
             trials,
@@ -38,7 +38,7 @@ fn main() {
             format!("{:.5}", se.score),
             pct(rel_err(se.score, fs.score)),
             futexes.to_string(),
-            secs(se.result.stall.uart_ticks as f64 / 100e6),
+            secs(se.result.stall.channel_ticks as f64 / 100e6),
         ]);
         eprintln!("[sweep] {baud} done");
     }

@@ -23,7 +23,11 @@ fn custom_core() -> CoreModel {
 
 fn run_with(core: CoreModel, elf: &str, argv: Vec<String>, cpus: usize, metric: &str) -> f64 {
     let cfg = RunConfig {
-        mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+        mode: Mode::Fase {
+            transport: TransportSpec::uart(921_600),
+            hfutex: true,
+            latency: HostLatency::default(),
+        },
         n_cpus: cpus,
         core,
         echo_stdout: false,

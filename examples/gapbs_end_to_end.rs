@@ -28,7 +28,7 @@ fn main() {
     eprintln!("[e2e] running the same workload under FASE (921600 bps, HFutex on)...");
     let se = run_gapbs(
         "bc",
-        &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+        &Arm::fase_uart(921_600),
         threads,
         scale,
         trials,
@@ -59,9 +59,9 @@ fn main() {
     println!("\nFASE channel: {} HTP requests, {} bytes, {} filtered wakes",
         se.result.total_requests, se.result.total_bytes, se.result.filtered_wakes);
     println!(
-        "stall: controller {}t / uart {}t / runtime {}t",
+        "stall: controller {}t / channel {}t / runtime {}t",
         se.result.stall.controller_ticks,
-        se.result.stall.uart_ticks,
+        se.result.stall.channel_ticks,
         se.result.stall.runtime_ticks
     );
 

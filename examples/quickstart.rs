@@ -7,15 +7,21 @@
 //! channel (PageWrite streams), the main thread is dispatched with a
 //! Redirect, every Linux syscall it makes traps to the controller and is
 //! served remotely by the host runtime — thread creation, futexes, mmap,
-//! file I/O — while the performance recorder tallies target time and UART
-//! traffic.
+//! file I/O — while the performance recorder tallies target time and
+//! channel traffic. Swap the transport spec for `TransportSpec::Xdma` or
+//! `TransportSpec::Loopback` to explore other physical layers.
 
 use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
 use fase::coordinator::target::HostLatency;
+use fase::fase::transport::TransportSpec;
 
 fn main() {
     let cfg = RunConfig {
-        mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+        mode: Mode::Fase {
+            transport: TransportSpec::uart(921_600),
+            hfutex: true,
+            latency: HostLatency::default(),
+        },
         n_cpus: 2,
         echo_stdout: true,
         ..Default::default()
@@ -34,7 +40,14 @@ fn main() {
     println!("exit code      : {}", res.exit_code);
     println!("target time    : {:.6}s", res.target_seconds);
     println!("user time      : {:.6}s", res.user_seconds);
-    println!("UART traffic   : {} bytes over {} HTP requests", res.total_bytes, res.total_requests);
+    println!(
+        "channel traffic: {} bytes, {} HTP requests in {} transactions ({})",
+        res.total_bytes, res.total_requests, res.transactions, res.transport
+    );
+    println!(
+        "HTP batching   : {} frames carrying {} requests",
+        res.batch_frames, res.batch_reqs
+    );
     println!("filtered wakes : {} (HFutex)", res.filtered_wakes);
     println!("syscalls       : {:?}", res.syscall_counts);
 }

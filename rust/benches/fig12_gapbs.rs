@@ -26,7 +26,7 @@ fn main() {
             let fs = run_gapbs(b, &Arm::FullSys, t, scale, trials, "rocket");
             let se = run_gapbs(
                 b,
-                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                &Arm::fase_uart(921_600),
                 t,
                 scale,
                 trials,

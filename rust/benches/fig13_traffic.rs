@@ -11,7 +11,7 @@ use fase::bench_support::*;
 fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
-    let arm = Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false };
+    let arm = Arm::fase_uart(921_600);
     for bench in ["bc", "bfs", "sssp", "tc"] {
         for threads in [2u32, 4] {
             let run = run_gapbs(bench, &arm, threads, scale, trials, "rocket");

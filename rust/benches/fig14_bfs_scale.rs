@@ -16,7 +16,7 @@ fn main() {
             let fs = run_gapbs("bfs", &Arm::FullSys, t, s, trials, "rocket");
             let se = run_gapbs(
                 "bfs",
-                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                &Arm::fase_uart(921_600),
                 t,
                 s,
                 trials,

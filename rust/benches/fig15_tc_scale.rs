@@ -20,7 +20,7 @@ fn main() {
             let fs = run_gapbs("tc", &Arm::FullSys, t, s, trials, "rocket");
             let se = run_gapbs(
                 "tc",
-                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                &Arm::fase_uart(921_600),
                 t,
                 s,
                 trials,

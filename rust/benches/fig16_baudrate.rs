@@ -18,7 +18,7 @@ fn main() {
             for &baud in &bauds {
                 let se = run_gapbs(
                     bench,
-                    &Arm::Fase { baud, hfutex: true, ideal_latency: false },
+                    &Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false },
                     t,
                     scale,
                     trials,

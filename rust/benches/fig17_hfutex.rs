@@ -19,7 +19,7 @@ fn main() {
         for t in [2u32, 4] {
             let nhf = run_gapbs(
                 bench,
-                &Arm::Fase { baud: 921_600, hfutex: false, ideal_latency: false },
+                &Arm::Fase { transport: TransportSpec::uart(921_600), hfutex: false, ideal_latency: false },
                 t,
                 scale,
                 trials,
@@ -27,7 +27,7 @@ fn main() {
             );
             let hf = run_gapbs(
                 bench,
-                &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+                &Arm::fase_uart(921_600),
                 t,
                 scale,
                 trials,

@@ -13,7 +13,7 @@ fn main() {
     for core in ["rocket", "cva6"] {
         let fs = run_coremark(&Arm::FullSys, iters, core);
         let se = run_coremark(
-            &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+            &Arm::fase_uart(921_600),
             iters,
             core,
         );

@@ -30,7 +30,7 @@ fn main() {
     for baud in [115_200u64, 921_600] {
         for &it in &iter_list {
             let r = run_coremark(
-                &Arm::Fase { baud, hfutex: true, ideal_latency: false },
+                &Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false },
                 it,
                 "rocket",
             );

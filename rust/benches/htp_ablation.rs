@@ -1,9 +1,13 @@
-//! §IV-B ablation — HTP vs direct CPU-interface protocol.
+//! §IV-B ablation — HTP vs direct CPU-interface protocol, plus the
+//! transport sweep the pluggable channel layer enables.
 //!
-//! Paper claim to reproduce: HTP cuts UART traffic by >95% overall vs a
-//! protocol where every Reg-port access and every injected instruction is
-//! its own transaction, and page-level operations reduce page-table /
-//! copy-on-write traffic to below 1% of the direct approach.
+//! Paper claims to reproduce: HTP cuts channel traffic by >95% overall vs
+//! a protocol where every Reg-port access and every injected instruction
+//! is its own transaction, and page-level operations reduce page-table /
+//! copy-on-write traffic to below 1% of the direct approach. The sweep
+//! then mirrors the Fig 16 axis across physical layers: UART at several
+//! baud rates vs PCIe-XDMA vs loopback, reporting target-time error
+//! against the full-system baseline and host wall-clock.
 
 use fase::bench_support::*;
 
@@ -13,7 +17,7 @@ fn main() {
     let mut tab = Table::new(&[
         "workload", "HTP bytes", "direct-equiv bytes", "reduction",
     ]);
-    let arm = Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false };
+    let arm = Arm::fase_uart(921_600);
     for (bench, threads) in [("bc", 2u32), ("tc", 2), ("sssp", 2)] {
         let r = run_gapbs(bench, &arm, threads, scale, trials, "rocket");
         let htp = r.result.total_bytes;
@@ -47,4 +51,37 @@ fn main() {
         );
     }
     tab.print("HTP ablation — traffic vs direct CPU-interface protocol (>95% reduction expected)");
+
+    // ---- transport sweep (Fig 16 axis, generalized to physical layers) ----
+    let (bench, threads) = ("bfs", 2u32);
+    eprintln!("[htp] transport sweep baseline ({bench}-{threads})...");
+    let fs = run_gapbs(bench, &Arm::FullSys, threads, scale, trials, "rocket");
+    let mut sweep = Table::new(&[
+        "transport", "score_err", "target_s", "wall_s", "bytes", "txns", "frames",
+    ]);
+    let specs = [
+        TransportSpec::uart(115_200),
+        TransportSpec::uart(921_600),
+        TransportSpec::uart(1_000_000),
+        TransportSpec::Xdma,
+        TransportSpec::Loopback,
+    ];
+    for spec in specs {
+        let arm = Arm::Fase { transport: spec.clone(), hfutex: true, ideal_latency: false };
+        let r = run_gapbs(bench, &arm, threads, scale, trials, "rocket");
+        sweep.row(vec![
+            spec.label(),
+            pct(rel_err(r.score, fs.score)),
+            secs(r.result.target_seconds),
+            secs(r.result.wall_seconds),
+            r.result.total_bytes.to_string(),
+            r.result.transactions.to_string(),
+            r.result.batch_frames.to_string(),
+        ]);
+        eprintln!("[htp] {} done", spec.label());
+    }
+    sweep.print(&format!(
+        "Transport sweep — {bench}-{threads} score error vs full-system ({:.5})",
+        fs.score
+    ));
 }

@@ -79,10 +79,10 @@ fn main() {
         ]);
     }
 
-    // HTP transaction wall cost (host side).
-    {
+    // HTP transaction wall cost (host side), per transport.
+    for spec in [TransportSpec::uart(921_600), TransportSpec::Xdma, TransportSpec::Loopback] {
         let m = mk_machine(1);
-        let mut t = FaseTarget::new(m, 921_600, true, HostLatency::zero());
+        let mut t = FaseTarget::new(m, &spec, true, HostLatency::zero());
         let t0 = Instant::now();
         let n = 20_000;
         for i in 0..n {
@@ -90,7 +90,7 @@ fn main() {
         }
         let dt = t0.elapsed().as_secs_f64();
         tab.row(vec![
-            "HTP MemW transactions/s (host wall)".into(),
+            format!("HTP MemW transactions/s ({}, host wall)", spec.label()),
             format!("{:.0}", n as f64 / dt),
         ]);
     }

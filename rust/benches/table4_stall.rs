@@ -13,13 +13,13 @@ fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
     let mut tab = Table::new(&[
-        "workload", "controller", "uart", "runtime", "total_stall", "score",
+        "workload", "controller", "channel", "runtime", "total_stall", "score",
     ]);
     let mut ideal_tab = Table::new(&["workload", "controller(ideal)", "delta", "futex", "futex(ideal)"]);
     for t in [1u32, 2, 4] {
         let real = run_gapbs(
             "bc",
-            &Arm::Fase { baud: 921_600, hfutex: true, ideal_latency: false },
+            &Arm::fase_uart(921_600),
             t,
             scale,
             trials,
@@ -30,19 +30,17 @@ fn main() {
         tab.row(vec![
             format!("BC-{t}"),
             per_iter(real.result.stall.controller_ticks),
-            per_iter(real.result.stall.uart_ticks),
+            per_iter(real.result.stall.channel_ticks),
             per_iter(real.result.stall.runtime_ticks),
             per_iter(real.result.stall.total()),
             format!("{:.5}", real.score),
         ]);
-        // Ideal transmission: requests effective immediately (zero host
-        // latency; UART still carries bytes but Table IV's sim variant
-        // isolates controller work).
-        // Ideal transmission: effectively infinite baud + zero host
-        // latency, i.e. HTP requests become effective immediately.
+        // Ideal transmission: the loopback transport + zero host latency,
+        // i.e. HTP requests become effective immediately — Table IV's sim
+        // variant that isolates controller work.
         let ideal = run_gapbs(
             "bc",
-            &Arm::Fase { baud: 500_000_000, hfutex: true, ideal_latency: true },
+            &Arm::Fase { transport: TransportSpec::Loopback, hfutex: true, ideal_latency: true },
             t,
             scale,
             trials,

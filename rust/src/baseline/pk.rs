@@ -256,6 +256,7 @@ pub fn run_pk(
         guest_root: std::path::PathBuf::from("."),
         max_target_seconds,
         collect_windows: false,
+        htp_batching: true,
     };
     let target = Box::new(PkTarget::new(&pk));
     let mut rt = Runtime::with_target(cfg, target, false);
@@ -282,6 +283,11 @@ fn empty_result() -> RunResult {
         stall: Default::default(),
         total_bytes: 0,
         total_requests: 0,
+        transactions: 0,
+        transport: "none".into(),
+        batch_frames: 0,
+        batch_reqs: 0,
+        batch_saved_bytes: 0,
         direct_equiv_bytes: 0,
         bytes_by_kind: Vec::new(),
         bytes_by_ctx: Vec::new(),

@@ -9,6 +9,8 @@ use crate::coordinator::target::{HostLatency, KernelCosts};
 use crate::rv64::hart::CoreModel;
 use std::path::PathBuf;
 
+pub use crate::fase::transport::TransportSpec;
+
 /// Locate a guest ELF built by `make guests`.
 pub fn guest_elf(name: &str) -> PathBuf {
     let p = PathBuf::from(format!("artifacts/guests/{name}.elf"));
@@ -33,17 +35,22 @@ pub fn bench_trials() -> u32 {
 /// One experimental arm.
 #[derive(Debug, Clone)]
 pub enum Arm {
-    Fase { baud: u64, hfutex: bool, ideal_latency: bool },
+    Fase { transport: TransportSpec, hfutex: bool, ideal_latency: bool },
     FullSys,
     Pk { sim_threads: usize },
 }
 
 impl Arm {
+    /// The paper's standard FASE arm at a given UART baud rate.
+    pub fn fase_uart(baud: u64) -> Arm {
+        Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false }
+    }
+
     pub fn label(&self) -> String {
         match self {
-            Arm::Fase { baud, hfutex, ideal_latency } => format!(
+            Arm::Fase { transport, hfutex, ideal_latency } => format!(
                 "fase@{}{}{}",
-                baud,
+                transport.label(),
                 if *hfutex { "" } else { "-nohf" },
                 if *ideal_latency { "-ideal" } else { "" }
             ),
@@ -107,8 +114,8 @@ fn run_workload(
         }
         _ => {
             let mode = match arm {
-                Arm::Fase { baud, hfutex, ideal_latency } => Mode::Fase {
-                    baud: *baud,
+                Arm::Fase { transport, hfutex, ideal_latency } => Mode::Fase {
+                    transport: transport.clone(),
                     hfutex: *hfutex,
                     latency: if *ideal_latency {
                         HostLatency::zero()
@@ -202,8 +209,19 @@ mod tests {
     fn arm_labels() {
         assert_eq!(Arm::FullSys.label(), "fullsys");
         assert_eq!(
-            Arm::Fase { baud: 921600, hfutex: false, ideal_latency: false }.label(),
-            "fase@921600-nohf"
+            Arm::Fase {
+                transport: TransportSpec::uart(921_600),
+                hfutex: false,
+                ideal_latency: false
+            }
+            .label(),
+            "fase@uart:921600-nohf"
+        );
+        assert_eq!(Arm::fase_uart(921_600).label(), "fase@uart:921600");
+        assert_eq!(
+            Arm::Fase { transport: TransportSpec::Xdma, hfutex: true, ideal_latency: true }
+                .label(),
+            "fase@xdma-ideal"
         );
         assert_eq!(Arm::Pk { sim_threads: 4 }.label(), "pk-4t");
     }

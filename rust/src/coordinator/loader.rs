@@ -21,12 +21,27 @@ pub struct LoadOut {
     pub tramp_va: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LoadError {
-    #[error("vm: {0}")]
-    Vm(#[from] VmError),
-    #[error("bad image: {0}")]
+    Vm(VmError),
     BadImage(String),
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Vm(e) => write!(f, "vm: {e}"),
+            LoadError::BadImage(s) => write!(f, "bad image: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+impl From<VmError> for LoadError {
+    fn from(e: VmError) -> LoadError {
+        LoadError::Vm(e)
+    }
 }
 
 fn prot_from_flags(flags: u32) -> u64 {

@@ -3,8 +3,10 @@
 //! The runtime is *mode-agnostic*: all target access flows through
 //! [`target::TargetOps`], which has two implementations:
 //!
-//! * [`target::FaseTarget`] — the real FASE path: HTP requests over a
-//!   timed UART to the hardware controller, with traffic/stall recording.
+//! * [`target::FaseTarget`] — the real FASE path: HTP requests (batched
+//!   into coalesced frames where possible) over a timed transport — UART,
+//!   PCIe-XDMA or loopback — to the hardware controller, with
+//!   traffic/stall recording per kind, context, transport and frame.
 //! * [`target::DirectTarget`] — the full-system (LiteX/Linux) baseline:
 //!   syscalls serviced "on-core" with a calibrated kernel cost + pollution
 //!   model and preemptive timer ticks.

@@ -8,6 +8,7 @@ use super::syscall::{self, Flow};
 use super::target::{DirectTarget, ExcInfo, FaseTarget, HostLatency, KernelCosts, TargetOps};
 use super::vm::{AddressSpace, PageAlloc, VmError};
 use crate::elfio::read::Executable;
+use crate::fase::transport::TransportSpec;
 use crate::perf::recorder::Context;
 use crate::perf::window::WindowSample;
 use crate::perf::StallBreakdown;
@@ -20,7 +21,7 @@ use std::path::PathBuf;
 /// Execution mode: the FASE stack or the full-system baseline.
 #[derive(Debug, Clone)]
 pub enum Mode {
-    Fase { baud: u64, hfutex: bool, latency: HostLatency },
+    Fase { transport: TransportSpec, hfutex: bool, latency: HostLatency },
     FullSys { costs: KernelCosts },
 }
 
@@ -40,12 +41,19 @@ pub struct RunConfig {
     pub max_target_seconds: f64,
     /// Collect timing-model window samples.
     pub collect_windows: bool,
+    /// Coalesce multi-request operations into HTP batch frames (FASE
+    /// mode; `--no-batch` disables it to model the unbatched protocol).
+    pub htp_batching: bool,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
-            mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+            mode: Mode::Fase {
+                transport: TransportSpec::default(),
+                hfutex: true,
+                latency: HostLatency::default(),
+            },
             n_cpus: 1,
             dram_size: 1 << 31,
             core: CoreModel::rocket(),
@@ -55,6 +63,7 @@ impl Default for RunConfig {
             guest_root: PathBuf::from("."),
             max_target_seconds: 600.0,
             collect_windows: false,
+            htp_batching: true,
         }
     }
 }
@@ -94,6 +103,14 @@ pub struct RunResult {
     pub stall: StallBreakdown,
     pub total_bytes: u64,
     pub total_requests: u64,
+    /// Wire round-trips (batch frames count once).
+    pub transactions: u64,
+    /// Transport label the run used ("uart:921600", "xdma", ...).
+    pub transport: String,
+    /// HTP batching-layer tallies.
+    pub batch_frames: u64,
+    pub batch_reqs: u64,
+    pub batch_saved_bytes: u64,
     pub direct_equiv_bytes: u64,
     /// (kind name, bytes, requests)
     pub bytes_by_kind: Vec<(String, u64, u64)>,
@@ -135,18 +152,41 @@ pub struct Runtime {
     windows: Vec<WindowSample>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RunError {
-    #[error("load error: {0}")]
-    Load(#[from] loader::LoadError),
-    #[error("vm error: {0}")]
-    Vm(#[from] VmError),
-    #[error("guest fault: {0}")]
+    Load(loader::LoadError),
+    Vm(VmError),
     GuestFault(String),
-    #[error("deadlock: no runnable threads and no pending wakeups")]
     Deadlock,
-    #[error("target time limit exceeded")]
     Timeout,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Load(e) => write!(f, "load error: {e}"),
+            RunError::Vm(e) => write!(f, "vm error: {e}"),
+            RunError::GuestFault(s) => write!(f, "guest fault: {s}"),
+            RunError::Deadlock => {
+                write!(f, "deadlock: no runnable threads and no pending wakeups")
+            }
+            RunError::Timeout => write!(f, "target time limit exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+impl From<loader::LoadError> for RunError {
+    fn from(e: loader::LoadError) -> RunError {
+        RunError::Load(e)
+    }
+}
+
+impl From<VmError> for RunError {
+    fn from(e: VmError) -> RunError {
+        RunError::Vm(e)
+    }
 }
 
 impl Runtime {
@@ -160,8 +200,10 @@ impl Runtime {
         };
         let machine = Machine::new(mcfg);
         let target: Box<dyn TargetOps> = match &cfg.mode {
-            Mode::Fase { baud, hfutex, latency } => {
-                Box::new(FaseTarget::new(machine, *baud, *hfutex, *latency))
+            Mode::Fase { transport, hfutex, latency } => {
+                let mut t = FaseTarget::new(machine, transport, *hfutex, *latency);
+                t.batching = cfg.htp_batching;
+                Box::new(t)
             }
             Mode::FullSys { costs } => Box::new(DirectTarget::new(machine, *costs)),
         };
@@ -322,6 +364,12 @@ impl Runtime {
             self.k.pending_tlb[cpu] = false;
         }
         if exc.is_ecall() {
+            // One batched round-trip fetches a7 + a0..a6; the handler's
+            // subsequent reg_r calls hit the target's argument cache. The
+            // syscall number is not known until the frame returns, so the
+            // fetch is attributed to the dedicated syscall-entry context.
+            self.target.set_context(Context::SyscallEntry);
+            self.target.prefetch_syscall_args(cpu);
             let nr = self.target.reg_r(cpu, 17);
             self.target.set_context(Context::Syscall(nr));
             self.target.recorder().count_syscall(nr);
@@ -356,15 +404,18 @@ impl Runtime {
                         .take()
                         .ok_or_else(|| RunError::GuestFault("sigreturn without signal".into()))?;
                     self.k.sched.tcb_mut(tid).ctx = *saved;
-                    // Full context restore in place.
+                    // Full context restore in place (write-combined: the
+                    // 63 registers ride batched RegW frames).
                     self.target.set_context(Context::Signal);
                     let ctx = self.k.sched.tcb(tid).ctx.clone();
+                    let mut writes: Vec<(u8, u64)> = Vec::with_capacity(63);
                     for i in 1..32u8 {
-                        self.target.reg_w(cpu, i, ctx.xregs[i as usize - 1]);
+                        writes.push((i, ctx.xregs[i as usize - 1]));
                     }
                     for i in 0..32u8 {
-                        self.target.reg_w(cpu, 32 + i, ctx.fregs[i as usize]);
+                        writes.push((32 + i, ctx.fregs[i as usize]));
                     }
+                    self.target.reg_w_many(cpu, &writes);
                     self.target.redirect(cpu, ctx.pc, false);
                 }
             }
@@ -503,6 +554,11 @@ impl Runtime {
             stall: rec.stall,
             total_bytes: rec.total_bytes(),
             total_requests: rec.total_requests(),
+            transactions: rec.transactions,
+            transport: rec.transport.clone(),
+            batch_frames: rec.batch.frames,
+            batch_reqs: rec.batch.batched_reqs,
+            batch_saved_bytes: rec.batch.saved_bytes,
             direct_equiv_bytes: rec.direct_equiv_bytes,
             bytes_by_kind,
             bytes_by_ctx,

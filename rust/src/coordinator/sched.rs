@@ -140,22 +140,22 @@ impl Scheduler {
     }
 
     /// Save the full register context of the thread on `cpu` (63 Reg-port
-    /// reads), with `pc` from the exception's mepc.
+    /// reads — batched into coalesced frames on a batching target), with
+    /// `pc` from the exception's mepc.
     pub fn save_context(&mut self, t: &mut dyn TargetOps, cpu: usize, pc: u64) {
         let tid = self.running[cpu].expect("no thread on cpu");
         let mut ctx = ThreadCtx::zeroed();
-        for i in 1..32u8 {
-            ctx.xregs[i as usize - 1] = t.reg_r(cpu, i);
-        }
-        for i in 0..32u8 {
-            ctx.fregs[i as usize] = t.reg_r(cpu, 32 + i);
-        }
+        let idxs: Vec<u8> = (1u8..32).chain(32u8..64).collect();
+        let vals = t.reg_r_many(cpu, &idxs);
+        ctx.xregs.copy_from_slice(&vals[..31]);
+        ctx.fregs.copy_from_slice(&vals[31..63]);
         ctx.pc = pc;
         self.tcbs.get_mut(&tid).unwrap().ctx = ctx;
     }
 
     /// Restore `tid`'s context onto `cpu` and resume it there (63 Reg-port
-    /// writes + MMU setup on first use + Redirect-with-switch).
+    /// writes, write-combined on a batching target, + MMU setup on first
+    /// use + Redirect-with-switch).
     pub fn dispatch(&mut self, t: &mut dyn TargetOps, cpu: usize, tid: Tid, satp: u64) {
         debug_assert!(self.running[cpu].is_none(), "cpu busy");
         self.switches += 1;
@@ -165,12 +165,14 @@ impl Scheduler {
             self.mmu_set[cpu] = true;
         }
         let ctx = self.tcbs[&tid].ctx.clone();
+        let mut writes: Vec<(u8, u64)> = Vec::with_capacity(63);
         for i in 1..32u8 {
-            t.reg_w(cpu, i, ctx.xregs[i as usize - 1]);
+            writes.push((i, ctx.xregs[i as usize - 1]));
         }
         for i in 0..32u8 {
-            t.reg_w(cpu, 32 + i, ctx.fregs[i as usize]);
+            writes.push((32 + i, ctx.fregs[i as usize]));
         }
+        t.reg_w_many(cpu, &writes);
         let tcb = self.tcbs.get_mut(&tid).unwrap();
         tcb.state = TState::Running(cpu);
         tcb.last_cpu = Some(cpu);

@@ -3,7 +3,7 @@
 
 use crate::fase::controller::{Controller, NextOutcome};
 use crate::fase::htp::{HfOp, Req, Resp};
-use crate::fase::Uart;
+use crate::fase::transport::{BatchFrame, Transport, TransportSpec};
 use crate::iface::CpuInterface;
 use crate::mem::LINE;
 use crate::perf::{Context, Recorder};
@@ -56,6 +56,15 @@ impl HostLatency {
     }
 }
 
+/// How a fresh physical page is initialized (fill pattern or file bytes).
+/// Collected by the VM layer so the target can issue one scatter-gather
+/// transaction for a whole preload run instead of a per-page round-trip.
+#[derive(Debug)]
+pub enum PageInit {
+    Zero { ppn: u64, val: u64 },
+    Bytes { ppn: u64, data: Box<[u8; 4096]> },
+}
+
 /// The full runtime-facing target interface.
 pub trait TargetOps {
     fn n_cpus(&self) -> usize;
@@ -82,6 +91,46 @@ pub trait TargetOps {
     fn tick(&mut self) -> u64;
     fn utick(&mut self, cpu: usize) -> u64;
 
+    // ---- batchable multi-operation entry points ----
+    // Defaults fall back to per-request loops; `FaseTarget` overrides them
+    // to coalesce the operations into HTP batch frames (one wire
+    // round-trip and one host-latency charge per frame).
+
+    /// Read several registers of one hart.
+    fn reg_r_many(&mut self, cpu: usize, idxs: &[u8]) -> Vec<u64> {
+        idxs.iter().map(|&i| self.reg_r(cpu, i)).collect()
+    }
+
+    /// Write several `(index, value)` registers of one hart.
+    fn reg_w_many(&mut self, cpu: usize, writes: &[(u8, u64)]) {
+        for &(idx, val) in writes {
+            self.reg_w(cpu, idx, val);
+        }
+    }
+
+    /// Write several `(paddr, value)` words (page-table sync bursts).
+    fn mem_w_many(&mut self, cpu: usize, writes: &[(u64, u64)]) {
+        for &(addr, val) in writes {
+            self.mem_w(cpu, addr, val);
+        }
+    }
+
+    /// Initialize several fresh physical pages (scatter-gather
+    /// PageS/PageW for fault-preload and image-load runs).
+    fn page_init_many(&mut self, cpu: usize, inits: Vec<PageInit>) {
+        for init in inits {
+            match init {
+                PageInit::Zero { ppn, val } => self.page_set(cpu, ppn, val),
+                PageInit::Bytes { ppn, data } => self.page_write(cpu, ppn, &data),
+            }
+        }
+    }
+
+    /// Hint that the runtime is about to service a syscall on `cpu`: a
+    /// batching target fetches a0..a7 in one round-trip so the following
+    /// `reg_r` calls are free. No-op for direct-access targets.
+    fn prefetch_syscall_args(&mut self, _cpu: usize) {}
+
     /// Mode-specific overhead charged around guest-syscall handling.
     fn syscall_overhead(&mut self, cpu: usize, nr: u64);
     /// Mode-specific overhead charged around page-fault handling.
@@ -101,59 +150,159 @@ pub trait TargetOps {
 // FASE mode
 // =====================================================================
 
+/// Registers per coalesced RegR/RegW frame (context switches move 63).
+const REG_BATCH: usize = 32;
+/// Word writes per coalesced MemW frame (page-table sync bursts).
+const MEMW_BATCH: usize = 32;
+/// Page operations per coalesced scatter-gather frame.
+const PAGE_BATCH: usize = 8;
+
 pub struct FaseTarget {
     pub m: Machine,
     pub ctl: Controller,
-    pub uart: Uart,
+    /// Channel timing model; all wire time flows through this.
+    pub transport: Box<dyn Transport>,
     pub lat: HostLatency,
     pub rec: Recorder,
+    /// HTP batching layer: coalesce multi-request operations into batch
+    /// frames. Disable to model the one-request-per-transaction protocol.
+    pub batching: bool,
+    /// Cached a0..a7 (x10..x17) per cpu from a batched argument prefetch;
+    /// valid only while that hart is stopped in the controller.
+    arg_cache: Vec<Option<[u64; 8]>>,
 }
 
 impl FaseTarget {
-    pub fn new(m: Machine, baud: u64, hfutex: bool, lat: HostLatency) -> FaseTarget {
-        let uart = Uart::new(baud, m.clock_hz);
+    pub fn new(m: Machine, spec: &TransportSpec, hfutex: bool, lat: HostLatency) -> FaseTarget {
+        let transport = spec.build(m.clock_hz);
         let n = m.harts.len();
-        FaseTarget { m, ctl: Controller::new(n, hfutex, 8), uart, lat, rec: Recorder::new() }
+        let mut rec = Recorder::new();
+        rec.set_transport(transport.label());
+        FaseTarget {
+            m,
+            ctl: Controller::new(n, hfutex, 8),
+            transport,
+            lat,
+            rec,
+            batching: true,
+            arg_cache: vec![None; n],
+        }
     }
 
     fn host_ticks(&self, us: f64) -> u64 {
         (us * 1e-6 * self.m.clock_hz as f64) as u64
     }
 
-    /// Run one HTP transaction: request bytes in, controller execution
-    /// (overlapped with streaming payloads), response bytes out, plus the
-    /// per-request host serial overhead. Other harts keep running.
-    fn transact(&mut self, req: Req) -> Resp {
+    /// Run one framed HTP transaction — a single request or a coalesced
+    /// batch: channel setup + request bytes in, controller execution
+    /// (overlapped with streaming payloads on streaming channels),
+    /// response bytes out, plus the per-transaction host overhead charged
+    /// once per frame (the batching win). Other harts keep running.
+    fn transact_frame(&mut self, frame: BatchFrame) -> Vec<Resp> {
         let t0 = self.m.now;
-        let tx = req.wire_len();
-        let tx_stream = req.streaming_len();
-        // Non-streaming part of the request must fully arrive first.
-        let head_ticks = self.uart.ticks_for_bytes(tx - tx_stream);
+        let batched = frame.is_batched();
+        let streaming = self.transport.streaming();
+        let tx = frame.wire_len();
+        let tx_stream = frame.streaming_len();
+        // On a streaming channel only the non-streaming head must arrive
+        // before execution starts; burst channels land the whole frame.
+        let head_bytes = if streaming { tx - tx_stream } else { tx };
+        let head_ticks =
+            self.transport.per_transaction_ticks() + self.transport.tx_ticks(head_bytes);
         self.m.run_until(t0 + head_ticks);
-        let (resp, st) = self.ctl.execute(&mut self.m, &req);
+        let (resps, stats) = self.ctl.execute_batch(&mut self.m, &frame.reqs);
+        let ctl_cycles: u64 = stats.iter().map(|s| s.cycles).sum();
+        let resp_stream: u64 = resps.iter().map(|r| r.streaming_len()).sum();
         // Streaming payloads overlap controller execution.
-        let body_uart = self.uart.ticks_for_bytes(tx_stream + resp.streaming_len());
-        let exec_ticks = st.cycles.max(body_uart);
+        let body_chan = if streaming {
+            self.transport.tx_ticks(tx_stream) + self.transport.rx_ticks(resp_stream)
+        } else {
+            0
+        };
+        let exec_ticks = ctl_cycles.max(body_chan);
         let t1 = self.m.now + exec_ticks;
         self.m.run_until(t1);
-        let rx = resp.wire_len();
-        let tail_ticks = self.uart.ticks_for_bytes(rx - resp.streaming_len());
+        let rx = BatchFrame::resp_wire_len(&resps);
+        let tail_bytes = if streaming { rx - resp_stream } else { rx };
+        let tail_ticks = self.transport.rx_ticks(tail_bytes);
         self.m.run_until(t1 + tail_ticks);
-        // Host tty access overhead for this transaction.
+        // Host access overhead, once per frame.
         let host = self.host_ticks(self.lat.per_request_us);
         let t2 = self.m.now + host;
         self.m.run_until(t2);
-        self.rec.record_request(
-            req.kind(),
-            tx,
-            rx,
-            head_ticks + body_uart.min(exec_ticks) + tail_ticks,
-            st.cycles,
-            st.reg_ops,
-            st.injects,
-        );
+
+        // Accounting: each logical request is tallied under its own kind;
+        // the frame's channel time is apportioned by wire-byte share and
+        // the frame itself counts as one transaction. Singletons — the
+        // common case — skip the apportionment machinery.
+        let chan_total = head_ticks + body_chan + tail_ticks;
+        if !batched {
+            self.rec.record_request(
+                frame.reqs[0].kind(),
+                tx,
+                rx,
+                chan_total,
+                stats[0].cycles,
+                stats[0].reg_ops,
+                stats[0].injects,
+            );
+        } else {
+            let n = frame.reqs.len();
+            let shares: Vec<u64> = frame
+                .reqs
+                .iter()
+                .zip(&resps)
+                .map(|(q, p)| (q.wire_len() - 1) + p.wire_len())
+                .collect();
+            let share_sum: u64 = shares.iter().sum();
+            let mut given = 0u64;
+            for (i, q) in frame.reqs.iter().enumerate() {
+                let chan_i = if i + 1 == n {
+                    chan_total - given
+                } else {
+                    chan_total * shares[i] / share_sum.max(1)
+                };
+                given += chan_i;
+                self.rec.record_request(
+                    q.kind(),
+                    q.wire_len() - 1, // batched requests share the cpu byte
+                    resps[i].wire_len(),
+                    chan_i,
+                    stats[i].cycles,
+                    stats[i].reg_ops,
+                    stats[i].injects,
+                );
+            }
+            self.rec
+                .record_batch_frame(n as u64, BatchFrame::REQ_HDR, frame.saved_bytes());
+        }
+        self.rec.record_transaction();
         self.rec.record_runtime_stall(host);
-        resp
+        resps
+    }
+
+    fn transact(&mut self, req: Req) -> Resp {
+        let cpu = req.cpu();
+        self.transact_frame(BatchFrame::new(cpu, vec![req]))
+            .pop()
+            .expect("one response per request")
+    }
+
+    fn cached_arg(&self, cpu: usize, idx: u8) -> Option<u64> {
+        if (10..=17).contains(&idx) {
+            self.arg_cache[cpu].map(|a| a[(idx - 10) as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Keep the argument cache coherent with host-side register writes.
+    fn cache_reg_write(&mut self, cpu: usize, idx: u8, val: u64) {
+        if (10..=17).contains(&idx) {
+            if let Some(a) = self.arg_cache[cpu].as_mut() {
+                a[(idx - 10) as usize] = val;
+            }
+        }
     }
 }
 
@@ -174,10 +323,11 @@ impl TargetOps for FaseTarget {
                 return None;
             }
             // `Next` request goes out before the event is consumed.
-            let req_ticks = self.uart.ticks_for_bytes(Req::Next.wire_len());
+            let req_ticks = self.transport.per_transaction_ticks()
+                + self.transport.tx_ticks(Req::Next.wire_len());
             match self.ctl.next_event(&mut self.m) {
                 Some(NextOutcome::Report { resp, stats }) => {
-                    let resp_ticks = self.uart.ticks_for_bytes(resp.wire_len());
+                    let resp_ticks = self.transport.rx_ticks(resp.wire_len());
                     let host = self.host_ticks(self.lat.per_request_us);
                     let t =
                         self.m.now + req_ticks + stats.cycles + resp_ticks + host;
@@ -191,6 +341,7 @@ impl TargetOps for FaseTarget {
                         stats.reg_ops,
                         stats.injects,
                     );
+                    self.rec.record_transaction();
                     self.rec.record_runtime_stall(host);
                     if let Resp::Exception { cpu, cause, epc, tval } = resp {
                         return Some(ExcInfo { cpu: cpu as usize, cause, epc, tval });
@@ -198,7 +349,7 @@ impl TargetOps for FaseTarget {
                     unreachable!("next_event reports only exceptions");
                 }
                 Some(NextOutcome::Filtered { stats }) => {
-                    // Handled on-target: only controller cycles, no UART.
+                    // Handled on-target: only controller cycles, no wire.
                     self.rec.filtered_wakes += 1;
                     let t = self.m.now + stats.cycles;
                     self.m.run_until(t);
@@ -210,6 +361,8 @@ impl TargetOps for FaseTarget {
     }
 
     fn redirect(&mut self, cpu: usize, pc: u64, switch: bool) {
+        // The guest is about to run and mutate registers.
+        self.arg_cache[cpu] = None;
         self.transact(Req::Redirect { cpu: cpu as u8, pc, switch });
     }
     fn set_mmu(&mut self, cpu: usize, satp: u64) {
@@ -222,10 +375,100 @@ impl TargetOps for FaseTarget {
         self.transact(Req::SyncI { cpu: cpu as u8 });
     }
     fn reg_r(&mut self, cpu: usize, idx: u8) -> u64 {
+        if let Some(v) = self.cached_arg(cpu, idx) {
+            return v;
+        }
         self.transact(Req::RegR { cpu: cpu as u8, idx }).word()
     }
     fn reg_w(&mut self, cpu: usize, idx: u8, val: u64) {
+        self.cache_reg_write(cpu, idx, val);
         self.transact(Req::RegW { cpu: cpu as u8, idx, val });
+    }
+
+    fn reg_r_many(&mut self, cpu: usize, idxs: &[u8]) -> Vec<u64> {
+        if !self.batching || idxs.len() < 2 {
+            return idxs.iter().map(|&i| self.reg_r(cpu, i)).collect();
+        }
+        let mut out = Vec::with_capacity(idxs.len());
+        for chunk in idxs.chunks(REG_BATCH) {
+            let reqs: Vec<Req> =
+                chunk.iter().map(|&idx| Req::RegR { cpu: cpu as u8, idx }).collect();
+            let resps = self.transact_frame(BatchFrame::new(cpu as u8, reqs));
+            out.extend(resps.iter().map(|r| r.word()));
+        }
+        out
+    }
+
+    fn reg_w_many(&mut self, cpu: usize, writes: &[(u8, u64)]) {
+        if !self.batching || writes.len() < 2 {
+            for &(idx, val) in writes {
+                self.reg_w(cpu, idx, val);
+            }
+            return;
+        }
+        for &(idx, val) in writes {
+            self.cache_reg_write(cpu, idx, val);
+        }
+        for chunk in writes.chunks(REG_BATCH) {
+            let reqs: Vec<Req> = chunk
+                .iter()
+                .map(|&(idx, val)| Req::RegW { cpu: cpu as u8, idx, val })
+                .collect();
+            self.transact_frame(BatchFrame::new(cpu as u8, reqs));
+        }
+    }
+
+    fn mem_w_many(&mut self, cpu: usize, writes: &[(u64, u64)]) {
+        if !self.batching || writes.len() < 2 {
+            for &(addr, val) in writes {
+                self.mem_w(cpu, addr, val);
+            }
+            return;
+        }
+        for chunk in writes.chunks(MEMW_BATCH) {
+            let reqs: Vec<Req> = chunk
+                .iter()
+                .map(|&(addr, val)| Req::MemW { cpu: cpu as u8, addr, val })
+                .collect();
+            self.transact_frame(BatchFrame::new(cpu as u8, reqs));
+        }
+    }
+
+    fn page_init_many(&mut self, cpu: usize, inits: Vec<PageInit>) {
+        let to_req = |init: PageInit| match init {
+            PageInit::Zero { ppn, val } => Req::PageS { cpu: cpu as u8, ppn, val },
+            PageInit::Bytes { ppn, data } => Req::PageW { cpu: cpu as u8, ppn, data },
+        };
+        if !self.batching {
+            for init in inits {
+                self.transact(to_req(init));
+            }
+            return;
+        }
+        let mut chunk: Vec<Req> = Vec::with_capacity(PAGE_BATCH);
+        for init in inits {
+            chunk.push(to_req(init));
+            if chunk.len() == PAGE_BATCH {
+                self.transact_frame(BatchFrame::new(cpu as u8, std::mem::take(&mut chunk)));
+            }
+        }
+        if !chunk.is_empty() {
+            self.transact_frame(BatchFrame::new(cpu as u8, chunk));
+        }
+    }
+
+    fn prefetch_syscall_args(&mut self, cpu: usize) {
+        if !self.batching || self.arg_cache[cpu].is_some() {
+            return;
+        }
+        let reqs: Vec<Req> =
+            (10u8..=17).map(|idx| Req::RegR { cpu: cpu as u8, idx }).collect();
+        let resps = self.transact_frame(BatchFrame::new(cpu as u8, reqs));
+        let mut args = [0u64; 8];
+        for (a, r) in args.iter_mut().zip(&resps) {
+            *a = r.word();
+        }
+        self.arg_cache[cpu] = Some(args);
     }
     fn mem_r(&mut self, cpu: usize, paddr: u64) -> u64 {
         self.transact(Req::MemR { cpu: cpu as u8, addr: paddr }).word()
@@ -585,8 +828,12 @@ mod tests {
     use crate::soc::MachineConfig;
 
     fn fase_target(baud: u64) -> FaseTarget {
+        fase_target_spec(&TransportSpec::uart(baud))
+    }
+
+    fn fase_target_spec(spec: &TransportSpec) -> FaseTarget {
         let m = Machine::new(MachineConfig { n_harts: 2, dram_size: 16 << 20, ..Default::default() });
-        FaseTarget::new(m, baud, true, HostLatency::zero())
+        FaseTarget::new(m, spec, true, HostLatency::zero())
     }
 
     #[test]
@@ -596,7 +843,7 @@ mod tests {
         t.mem_w(0, DRAM_BASE + 0x100, 7);
         let dt = t.now() - t0;
         // MemW is 18 bytes + 9 byte resp = 27 bytes ≈ 27*11/921600 s.
-        let expect = t.uart.ticks_for_bytes(27);
+        let expect = crate::fase::Uart::new(921_600, t.clock_hz()).ticks_for_bytes(27);
         assert!(dt >= expect, "dt={dt} expect>={expect}");
         assert!(dt < expect + 5_000, "dt={dt} unreasonably long");
         assert_eq!(t.mem_r(0, DRAM_BASE + 0x100), 7);
@@ -646,7 +893,111 @@ mod tests {
         t.tick();
         let rec = t.recorder();
         assert_eq!(rec.total_requests(), 2);
+        assert_eq!(rec.transactions, 2);
         assert!(rec.total_bytes() >= 27);
+        assert_eq!(rec.transport, "uart:921600");
+    }
+
+    #[test]
+    fn batched_arg_fetch_collapses_eight_regr_to_one_transaction() {
+        // The acceptance criterion: >= 8 RegR transactions collapse into 1
+        // batched transaction for syscall-argument fetch.
+        let mut batched = fase_target(921_600);
+        batched.prefetch_syscall_args(0);
+        for idx in 10u8..=17 {
+            let _ = batched.reg_r(0, idx); // all served from the arg cache
+        }
+        let rec = batched.recorder();
+        assert_eq!(rec.transactions, 1, "one frame on the wire");
+        assert_eq!(rec.by_kind[&crate::fase::htp::ReqKind::RegRW].count, 8);
+        assert_eq!(rec.batch.frames, 1);
+        assert_eq!(rec.batch.batched_reqs, 8);
+
+        let mut unbatched = fase_target(921_600);
+        unbatched.batching = false;
+        unbatched.prefetch_syscall_args(0); // no-op without batching
+        for idx in 10u8..=17 {
+            let _ = unbatched.reg_r(0, idx);
+        }
+        assert_eq!(unbatched.rec.transactions, 8, "one round-trip per RegR");
+        // Batching also saves wire bytes and target time.
+        assert!(batched.rec.total_bytes() < unbatched.rec.total_bytes());
+        assert!(batched.now() < unbatched.now());
+    }
+
+    #[test]
+    fn arg_cache_invalidated_on_redirect_and_updated_on_write() {
+        let mut t = fase_target(921_600);
+        t.reg_w(0, 10, 111);
+        t.prefetch_syscall_args(0);
+        assert_eq!(t.reg_r(0, 10), 111);
+        // Host-side writes stay coherent with the cache.
+        t.reg_w(0, 10, 222);
+        assert_eq!(t.reg_r(0, 10), 222);
+        let before = t.rec.transactions;
+        let _ = t.reg_r(0, 10); // cache hit: no new transaction
+        assert_eq!(t.rec.transactions, before);
+        // After a redirect the guest may have changed registers.
+        let code = DRAM_BASE + 0x5000;
+        t.m.ms.phys.write_n(code, 4, encode::addi(10, 0, 44) as u64);
+        t.m.ms.phys.write_n(code + 4, 4, 0x73); // ecall
+        t.redirect(0, code, false);
+        let _ = t.next_exception(u64::MAX).expect("ecall");
+        assert_eq!(t.reg_r(0, 10), 44, "stale cache must not survive redirect");
+    }
+
+    #[test]
+    fn reg_w_many_batches_and_reads_back() {
+        let mut t = fase_target(921_600);
+        let writes: Vec<(u8, u64)> = (1u8..32).map(|i| (i, 1000 + i as u64)).collect();
+        t.reg_w_many(0, &writes);
+        assert_eq!(t.rec.transactions, 1, "31 writes ride one frame");
+        let idxs: Vec<u8> = (1u8..32).collect();
+        let vals = t.reg_r_many(0, &idxs);
+        assert_eq!(t.rec.transactions, 2);
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(*v, 1000 + (i as u64) + 1);
+        }
+    }
+
+    #[test]
+    fn transports_have_distinct_profiles() {
+        let run = |spec: &TransportSpec| {
+            let mut t = fase_target_spec(spec);
+            let t0 = t.now();
+            t.page_set(0, (DRAM_BASE + 0x10_0000) >> 12, 0);
+            t.mem_w(0, DRAM_BASE + 0x100, 9);
+            assert_eq!(t.mem_r(0, DRAM_BASE + 0x100), 9);
+            (t.now() - t0, t.rec.stall.channel_ticks, t.rec.transport.clone())
+        };
+        let (uart_dt, uart_chan, uart_label) = run(&TransportSpec::uart(921_600));
+        let (xdma_dt, xdma_chan, xdma_label) = run(&TransportSpec::Xdma);
+        let (loop_dt, loop_chan, loop_label) = run(&TransportSpec::Loopback);
+        assert_eq!(uart_label, "uart:921600");
+        assert_eq!(xdma_label, "xdma");
+        assert_eq!(loop_label, "loopback");
+        assert!(uart_dt > xdma_dt, "uart {uart_dt} vs xdma {xdma_dt}");
+        assert!(xdma_dt > loop_dt, "xdma {xdma_dt} vs loopback {loop_dt}");
+        assert!(uart_chan > xdma_chan && xdma_chan > 0);
+        assert_eq!(loop_chan, 0, "loopback records no channel time");
+    }
+
+    #[test]
+    fn page_init_many_scatter_gathers() {
+        let mut t = fase_target(921_600);
+        let base_ppn = (DRAM_BASE + 0x20_0000) >> 12;
+        let mut data = Box::new([0u8; 4096]);
+        data[0] = 0xcd;
+        let inits = vec![
+            PageInit::Zero { ppn: base_ppn, val: 0x1111_1111_1111_1111 },
+            PageInit::Zero { ppn: base_ppn + 2, val: 0 },
+            PageInit::Bytes { ppn: base_ppn + 4, data },
+        ];
+        t.page_init_many(0, inits);
+        assert_eq!(t.rec.transactions, 1, "3 page ops in one frame");
+        assert_eq!(t.m.ms.phys.read_u64(base_ppn << 12), Some(0x1111_1111_1111_1111));
+        assert_eq!(t.m.ms.phys.read_u64((base_ppn + 2) << 12), Some(0));
+        assert_eq!(t.m.ms.phys.read_u8((base_ppn + 4) << 12), Some(0xcd));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! through [`TargetOps`] so page-table sync shows up as MemWrite traffic
 //! and page zeroing as PageSet (the Fig 13(g) composition).
 
-use super::target::TargetOps;
+use super::target::{PageInit, TargetOps};
 use crate::mem::mmu::{PTE_A, PTE_D, PTE_R, PTE_U, PTE_V, PTE_W, PTE_X};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -22,15 +22,24 @@ pub const PROT_READ: u64 = 1;
 pub const PROT_WRITE: u64 = 2;
 pub const PROT_EXEC: u64 = 4;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum VmError {
-    #[error("segmentation fault at {0:#x}")]
     Segv(u64),
-    #[error("access violates segment protection at {0:#x}")]
     Prot(u64),
-    #[error("out of target physical memory")]
     Oom,
 }
+
+impl std::fmt::Display for VmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VmError::Segv(a) => write!(f, "segmentation fault at {a:#x}"),
+            VmError::Prot(a) => write!(f, "access violates segment protection at {a:#x}"),
+            VmError::Oom => write!(f, "out of target physical memory"),
+        }
+    }
+}
+
+impl std::error::Error for VmError {}
 
 /// Reference-counted physical page allocator over the device DRAM window
 /// above the loaded image.
@@ -341,22 +350,48 @@ impl AddressSpace {
         }
     }
 
-    /// Initialize a fresh physical page for `va` within segment `si`.
-    fn init_page(&self, t: &mut dyn TargetOps, cpu: usize, si: usize, va: u64, ppn: u64) {
+    /// Describe how a fresh physical page for `va` within segment `si` is
+    /// initialized; the target issues the device operation (scatter-gather
+    /// batched for multi-page runs).
+    fn page_init(&self, si: usize, va: u64, ppn: u64) -> PageInit {
         match &self.segments[si].kind {
-            SegKind::Anon => t.page_set(cpu, ppn, 0),
+            SegKind::Anon => PageInit::Zero { ppn, val: 0 },
             SegKind::File { bytes, file_off } => {
                 let off = (file_off + (va - self.segments[si].start)) as usize;
                 if off >= bytes.len() {
-                    t.page_set(cpu, ppn, 0);
+                    PageInit::Zero { ppn, val: 0 }
                 } else {
-                    let mut buf = [0u8; 4096];
+                    let mut buf = Box::new([0u8; 4096]);
                     let n = (bytes.len() - off).min(4096);
                     buf[..n].copy_from_slice(&bytes[off..off + n]);
-                    t.page_write(cpu, ppn, &buf);
+                    PageInit::Bytes { ppn, data: buf }
                 }
             }
         }
+    }
+
+    /// Install several leaf mappings (device + mirror): table walks first,
+    /// then all leaf PTE stores in one write-combined burst.
+    fn map_pages(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        pages: &[(u64, u64)],
+        prot: u64,
+    ) -> Result<(), VmError> {
+        let flags = leaf_flags(prot, false);
+        let mut writes: Vec<(u64, u64)> = Vec::with_capacity(pages.len());
+        for &(va, ppn) in pages {
+            debug_assert_eq!(va % PAGE, 0);
+            let l0 = self.ensure_tables(t, cpu, alloc, va)?;
+            let vpn0 = (va >> 12) & 0x1ff;
+            writes.push(((l0 << 12) + vpn0 * 8, (ppn << 10) | flags));
+            self.pages.insert(va >> 12, PageInfo { ppn, flags, cow: false });
+            self.pages_mapped += 1;
+        }
+        t.mem_w_many(cpu, &writes);
+        Ok(())
     }
 
     /// Demand fault (paper Fig 6 step: validate, allocate, initialize,
@@ -396,25 +431,32 @@ impl AddressSpace {
             return Ok(0);
         }
 
-        // Fresh page + preload ahead within the segment.
-        let mut mapped = 0;
+        // Fresh page + preload ahead within the segment: collect the run,
+        // then one scatter-gather page-init transaction and one
+        // write-combined PTE burst.
         let seg_end = self.segments[si].end;
+        let mut pending: Vec<(u64, u64)> = Vec::new();
+        let mut inits: Vec<PageInit> = Vec::new();
         let mut p = page_va;
-        while p < seg_end && mapped < 1 + self.preload {
+        while p < seg_end && (pending.len() as u64) < 1 + self.preload {
             if !self.pages.contains_key(&(p >> 12)) {
                 let ppn = alloc.alloc()?;
-                self.init_page(t, cpu, si, p, ppn);
-                self.map_page(t, cpu, alloc, p, ppn, seg_prot, false)?;
-                mapped += 1;
-            } else if mapped > 0 {
+                inits.push(self.page_init(si, p, ppn));
+                pending.push((p, ppn));
+            } else if !pending.is_empty() {
                 break; // contiguous run ended
             }
             p += PAGE;
         }
-        Ok(mapped)
+        t.page_init_many(cpu, inits);
+        self.map_pages(t, cpu, alloc, &pending, seg_prot)?;
+        Ok(pending.len() as u64)
     }
 
     /// Eagerly fault-in an address range (file preloading, stack setup).
+    /// Unlike the demand path this never maps beyond the requested range;
+    /// each per-segment run of unmapped pages becomes one scatter-gather
+    /// page-init transaction plus one write-combined PTE burst.
     pub fn populate(
         &mut self,
         t: &mut dyn TargetOps,
@@ -426,14 +468,30 @@ impl AddressSpace {
         let mut p = start & !(PAGE - 1);
         let end = start + len;
         while p < end {
-            if !self.pages.contains_key(&(p >> 12)) {
-                let save = self.preload;
-                self.preload = 0;
-                let r = self.handle_fault(t, cpu, alloc, p, false);
-                self.preload = save;
-                r?;
+            if self.pages.contains_key(&(p >> 12)) {
+                p += PAGE;
+                continue;
             }
-            p += PAGE;
+            let si = self.find_segment(p).ok_or(VmError::Segv(p))?;
+            let seg_end = self.segments[si].end;
+            let prot = self.segments[si].prot;
+            let mut pending: Vec<(u64, u64)> = Vec::new();
+            let mut inits: Vec<PageInit> = Vec::new();
+            let mut q = p;
+            while q < seg_end && q < end {
+                if !self.pages.contains_key(&(q >> 12)) {
+                    let ppn = alloc.alloc()?;
+                    inits.push(self.page_init(si, q, ppn));
+                    pending.push((q, ppn));
+                }
+                q += PAGE;
+            }
+            // One fault per page, as the seed's per-page demand path
+            // counted (page_faults is reported and compared across arms).
+            self.faults += pending.len() as u64;
+            t.page_init_many(cpu, inits);
+            self.map_pages(t, cpu, alloc, &pending, prot)?;
+            p = q;
         }
         Ok(())
     }

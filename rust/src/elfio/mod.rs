@@ -64,16 +64,31 @@ pub mod consts {
     pub const R_RISCV_SET32: u32 = 56;
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ElfError {
-    #[error("not an ELF file")]
     BadMagic,
-    #[error("unsupported ELF: {0}")]
     Unsupported(String),
-    #[error("malformed ELF: {0}")]
     Malformed(String),
-    #[error("link error: {0}")]
     Link(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ElfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ElfError::BadMagic => write!(f, "not an ELF file"),
+            ElfError::Unsupported(s) => write!(f, "unsupported ELF: {s}"),
+            ElfError::Malformed(s) => write!(f, "malformed ELF: {s}"),
+            ElfError::Link(s) => write!(f, "link error: {s}"),
+            ElfError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ElfError {}
+
+impl From<std::io::Error> for ElfError {
+    fn from(e: std::io::Error) -> ElfError {
+        ElfError::Io(e)
+    }
 }

@@ -283,6 +283,25 @@ impl Controller {
         }
     }
 
+    /// Execute a coalesced batch frame: each request runs in order, with
+    /// per-request cost accounting so the channel layer can apportion the
+    /// frame's time. A faulting request does not stop the frame — its
+    /// `Fault` response travels in the concatenated response stream.
+    pub fn execute_batch(
+        &mut self,
+        m: &mut Machine,
+        reqs: &[Req],
+    ) -> (Vec<Resp>, Vec<ExecStats>) {
+        let mut resps = Vec::with_capacity(reqs.len());
+        let mut stats = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let (resp, st) = self.execute(m, r);
+            resps.push(resp);
+            stats.push(st);
+        }
+        (resps, stats)
+    }
+
     /// Drain one exception event (the `Next` FSM body): read the cause
     /// CSRs via injection, then either report to the host or — for a
     /// redundant futex wake hitting the HFutex mask — finish it locally.

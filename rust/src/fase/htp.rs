@@ -18,6 +18,29 @@ pub enum HfOp {
     ClearAll,
 }
 
+/// Wire op codes ([`Req::op`]). All are < 0x80: a leading byte with the
+/// high bit set introduces a coalesced batch frame instead (see
+/// `fase::transport::batch`).
+pub mod op {
+    pub const REDIRECT: u8 = 0x01;
+    pub const NEXT: u8 = 0x02;
+    pub const SET_MMU: u8 = 0x03;
+    pub const FLUSH_TLB: u8 = 0x04;
+    pub const SYNC_I: u8 = 0x05;
+    pub const HFUTEX: u8 = 0x06;
+    pub const REG_R: u8 = 0x07;
+    pub const REG_W: u8 = 0x08;
+    pub const MEM_R: u8 = 0x09;
+    pub const MEM_W: u8 = 0x0a;
+    pub const PAGE_S: u8 = 0x0b;
+    pub const PAGE_CP: u8 = 0x0c;
+    pub const PAGE_R: u8 = 0x0d;
+    pub const PAGE_W: u8 = 0x0e;
+    pub const TICK: u8 = 0x0f;
+    pub const UTICK: u8 = 0x10;
+    pub const INTERRUPT: u8 = 0x11;
+}
+
 /// One HTP request (Table II). `cpu` selects the target hart; `Next` and
 /// `Tick` are global.
 #[derive(Debug, Clone, PartialEq)]
@@ -164,6 +187,178 @@ impl Req {
             _ => 0,
         }
     }
+
+    pub fn op(&self) -> u8 {
+        match self {
+            Req::Redirect { .. } => op::REDIRECT,
+            Req::Next => op::NEXT,
+            Req::SetMmu { .. } => op::SET_MMU,
+            Req::FlushTlb { .. } => op::FLUSH_TLB,
+            Req::SyncI { .. } => op::SYNC_I,
+            Req::HFutex { .. } => op::HFUTEX,
+            Req::RegR { .. } => op::REG_R,
+            Req::RegW { .. } => op::REG_W,
+            Req::MemR { .. } => op::MEM_R,
+            Req::MemW { .. } => op::MEM_W,
+            Req::PageS { .. } => op::PAGE_S,
+            Req::PageCp { .. } => op::PAGE_CP,
+            Req::PageR { .. } => op::PAGE_R,
+            Req::PageW { .. } => op::PAGE_W,
+            Req::Tick => op::TICK,
+            Req::UTick { .. } => op::UTICK,
+            Req::Interrupt { .. } => op::INTERRUPT,
+        }
+    }
+
+    /// Target hart carried in the header byte (0 for global requests).
+    pub fn cpu(&self) -> u8 {
+        match self {
+            Req::Redirect { cpu, .. }
+            | Req::SetMmu { cpu, .. }
+            | Req::FlushTlb { cpu }
+            | Req::SyncI { cpu }
+            | Req::HFutex { cpu, .. }
+            | Req::RegR { cpu, .. }
+            | Req::RegW { cpu, .. }
+            | Req::MemR { cpu, .. }
+            | Req::MemW { cpu, .. }
+            | Req::PageS { cpu, .. }
+            | Req::PageCp { cpu, .. }
+            | Req::PageR { cpu, .. }
+            | Req::PageW { cpu, .. }
+            | Req::UTick { cpu }
+            | Req::Interrupt { cpu } => *cpu,
+            Req::Next | Req::Tick => 0,
+        }
+    }
+
+    /// Payload encoding (everything after the `[op][cpu]` header).
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Req::Next | Req::FlushTlb { .. } | Req::SyncI { .. } | Req::Tick
+            | Req::UTick { .. } | Req::Interrupt { .. } => {}
+            Req::Redirect { pc, switch, .. } => {
+                out.extend_from_slice(&pc.to_le_bytes());
+                out.push(*switch as u8);
+            }
+            Req::SetMmu { satp, .. } => out.extend_from_slice(&satp.to_le_bytes()),
+            Req::HFutex { op, addr, .. } => {
+                out.push(op.to_byte());
+                out.extend_from_slice(&addr.to_le_bytes());
+            }
+            Req::RegR { idx, .. } => out.push(*idx),
+            Req::RegW { idx, val, .. } => {
+                out.push(*idx);
+                out.extend_from_slice(&val.to_le_bytes());
+            }
+            Req::MemR { addr, .. } => out.extend_from_slice(&addr.to_le_bytes()),
+            Req::MemW { addr, val, .. } => {
+                out.extend_from_slice(&addr.to_le_bytes());
+                out.extend_from_slice(&val.to_le_bytes());
+            }
+            Req::PageS { ppn, val, .. } => {
+                out.extend_from_slice(&ppn.to_le_bytes());
+                out.extend_from_slice(&val.to_le_bytes());
+            }
+            Req::PageCp { src_ppn, dst_ppn, .. } => {
+                out.extend_from_slice(&src_ppn.to_le_bytes());
+                out.extend_from_slice(&dst_ppn.to_le_bytes());
+            }
+            Req::PageR { ppn, .. } => out.extend_from_slice(&ppn.to_le_bytes()),
+            Req::PageW { ppn, data, .. } => {
+                out.extend_from_slice(&ppn.to_le_bytes());
+                out.extend_from_slice(&data[..]);
+            }
+        }
+    }
+
+    /// Full wire encoding `[op][cpu][payload]`; length equals
+    /// [`Req::wire_len`] (property-tested).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len() as usize);
+        out.push(self.op());
+        out.push(self.cpu());
+        self.encode_payload(&mut out);
+        out
+    }
+
+    /// Decode one request from `b`; returns the request and the bytes
+    /// consumed.
+    pub fn decode(b: &[u8]) -> Option<(Req, usize)> {
+        if b.len() < 2 {
+            return None;
+        }
+        Req::decode_body(b[0], b[1], &b[2..]).map(|(r, n)| (r, n + 2))
+    }
+
+    /// Decode the payload of a request whose `[op][cpu]` header has been
+    /// consumed (used by both the plain and the batch frame paths).
+    pub fn decode_body(opc: u8, cpu: u8, b: &[u8]) -> Option<(Req, usize)> {
+        fn u64_at(b: &[u8], off: usize) -> Option<u64> {
+            Some(u64::from_le_bytes(b.get(off..off + 8)?.try_into().ok()?))
+        }
+        match opc {
+            op::NEXT => Some((Req::Next, 0)),
+            op::TICK => Some((Req::Tick, 0)),
+            op::FLUSH_TLB => Some((Req::FlushTlb { cpu }, 0)),
+            op::SYNC_I => Some((Req::SyncI { cpu }, 0)),
+            op::UTICK => Some((Req::UTick { cpu }, 0)),
+            op::INTERRUPT => Some((Req::Interrupt { cpu }, 0)),
+            op::REDIRECT => {
+                let pc = u64_at(b, 0)?;
+                let switch = *b.get(8)? != 0;
+                Some((Req::Redirect { cpu, pc, switch }, 9))
+            }
+            op::SET_MMU => Some((Req::SetMmu { cpu, satp: u64_at(b, 0)? }, 8)),
+            op::HFUTEX => {
+                let hop = HfOp::from_byte(*b.first()?)?;
+                Some((Req::HFutex { cpu, op: hop, addr: u64_at(b, 1)? }, 9))
+            }
+            op::REG_R => Some((Req::RegR { cpu, idx: *b.first()? }, 1)),
+            op::REG_W => {
+                Some((Req::RegW { cpu, idx: *b.first()?, val: u64_at(b, 1)? }, 9))
+            }
+            op::MEM_R => Some((Req::MemR { cpu, addr: u64_at(b, 0)? }, 8)),
+            op::MEM_W => {
+                Some((Req::MemW { cpu, addr: u64_at(b, 0)?, val: u64_at(b, 8)? }, 16))
+            }
+            op::PAGE_S => {
+                Some((Req::PageS { cpu, ppn: u64_at(b, 0)?, val: u64_at(b, 8)? }, 16))
+            }
+            op::PAGE_CP => Some((
+                Req::PageCp { cpu, src_ppn: u64_at(b, 0)?, dst_ppn: u64_at(b, 8)? },
+                16,
+            )),
+            op::PAGE_R => Some((Req::PageR { cpu, ppn: u64_at(b, 0)? }, 8)),
+            op::PAGE_W => {
+                let ppn = u64_at(b, 0)?;
+                let bytes = b.get(8..8 + 4096)?;
+                let mut data = Box::new([0u8; 4096]);
+                data.copy_from_slice(bytes);
+                Some((Req::PageW { cpu, ppn, data }, 8 + 4096))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl HfOp {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            HfOp::Add => 0,
+            HfOp::ClearAddr => 1,
+            HfOp::ClearAll => 2,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Option<HfOp> {
+        match b {
+            0 => Some(HfOp::Add),
+            1 => Some(HfOp::ClearAddr),
+            2 => Some(HfOp::ClearAll),
+            _ => None,
+        }
+    }
 }
 
 impl Resp {
@@ -188,6 +383,72 @@ impl Resp {
         match self {
             Resp::Word(v) => *v,
             other => panic!("expected Word response, got {other:?}"),
+        }
+    }
+
+    /// Leading status byte of the wire encoding.
+    pub fn status(&self) -> u8 {
+        match self {
+            Resp::Ok => 0,
+            Resp::Word(_) => 1,
+            Resp::Exception { .. } => 2,
+            Resp::Page(_) => 3,
+            Resp::Fault(_) => 4,
+        }
+    }
+
+    /// Full wire encoding `[status][payload]`; length equals
+    /// [`Resp::wire_len`] (property-tested).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len() as usize);
+        out.push(self.status());
+        match self {
+            Resp::Ok => {}
+            Resp::Word(v) => out.extend_from_slice(&v.to_le_bytes()),
+            Resp::Exception { cpu, cause, epc, tval } => {
+                out.push(*cpu);
+                out.extend_from_slice(&cause.to_le_bytes());
+                out.extend_from_slice(&epc.to_le_bytes());
+                out.extend_from_slice(&tval.to_le_bytes());
+            }
+            Resp::Page(p) => out.extend_from_slice(&p[..]),
+            Resp::Fault(c) => out.push(*c),
+        }
+        out
+    }
+
+    /// Decode one response from `b`; returns it and the bytes consumed.
+    pub fn decode(b: &[u8]) -> Option<(Resp, usize)> {
+        let status = *b.first()?;
+        Resp::decode_body(status, &b[1..]).map(|(r, n)| (r, n + 1))
+    }
+
+    /// Decode the payload of a response whose status byte has been
+    /// consumed (used by both the plain and the batch frame paths).
+    pub fn decode_body(status: u8, b: &[u8]) -> Option<(Resp, usize)> {
+        fn u64_at(b: &[u8], off: usize) -> Option<u64> {
+            Some(u64::from_le_bytes(b.get(off..off + 8)?.try_into().ok()?))
+        }
+        match status {
+            0 => Some((Resp::Ok, 0)),
+            1 => Some((Resp::Word(u64_at(b, 0)?), 8)),
+            2 => Some((
+                Resp::Exception {
+                    cpu: *b.first()?,
+                    cause: u64_at(b, 1)?,
+                    epc: u64_at(b, 9)?,
+                    tval: u64_at(b, 17)?,
+                },
+                25,
+            )),
+            3 => {
+                let bytes = b.get(..4096)?;
+                let mut page = Box::new([0u8; 4096]);
+                page.copy_from_slice(bytes);
+                Some((Resp::Page(page), 4096))
+            }
+            4 => Some((Resp::Fault(*b.first()?), 1)),
+            _ => None,
         }
     }
 }
@@ -227,5 +488,67 @@ mod tests {
         assert_eq!(Req::Tick.kind(), ReqKind::Perf);
         assert_eq!(Req::FlushTlb { cpu: 0 }.kind(), ReqKind::Mmu);
         assert_eq!(Req::PageS { cpu: 0, ppn: 0, val: 0 }.kind().name(), "PageSet");
+    }
+
+    #[test]
+    fn req_codec_roundtrips_and_matches_wire_len() {
+        let mut page = Box::new([0u8; 4096]);
+        page[0] = 1;
+        page[4095] = 0xff;
+        let reqs = [
+            Req::Redirect { cpu: 2, pc: 0x8000_1234, switch: true },
+            Req::Next,
+            Req::SetMmu { cpu: 1, satp: 0x8000_0000_0001_0000 },
+            Req::FlushTlb { cpu: 3 },
+            Req::SyncI { cpu: 0 },
+            Req::HFutex { cpu: 1, op: HfOp::ClearAddr, addr: 0x700 },
+            Req::RegR { cpu: 0, idx: 17 },
+            Req::RegW { cpu: 0, idx: 10, val: u64::MAX },
+            Req::MemR { cpu: 0, addr: 0x8000_0100 },
+            Req::MemW { cpu: 0, addr: 0x8000_0100, val: 7 },
+            Req::PageS { cpu: 0, ppn: 0x80001, val: 0 },
+            Req::PageCp { cpu: 0, src_ppn: 1, dst_ppn: 2 },
+            Req::PageR { cpu: 0, ppn: 0x80001 },
+            Req::PageW { cpu: 0, ppn: 0x80001, data: page },
+            Req::Tick,
+            Req::UTick { cpu: 1 },
+            Req::Interrupt { cpu: 0 },
+        ];
+        for r in reqs {
+            let e = r.encode();
+            assert_eq!(e.len() as u64, r.wire_len(), "{r:?}");
+            let (back, n) = Req::decode(&e).expect("decode");
+            assert_eq!(n, e.len());
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn resp_codec_roundtrips_and_matches_wire_len() {
+        let mut page = Box::new([0u8; 4096]);
+        page[100] = 42;
+        let resps = [
+            Resp::Ok,
+            Resp::Word(0xdead_beef),
+            Resp::Exception { cpu: 1, cause: 13, epc: 0x8000_0000, tval: 0x123 },
+            Resp::Page(page),
+            Resp::Fault(5),
+        ];
+        for r in resps {
+            let e = r.encode();
+            assert_eq!(e.len() as u64, r.wire_len(), "{r:?}");
+            let (back, n) = Resp::decode(&e).expect("decode");
+            assert_eq!(n, e.len());
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn truncated_input_decodes_to_none() {
+        let e = Req::MemW { cpu: 0, addr: 1, val: 2 }.encode();
+        assert!(Req::decode(&e[..e.len() - 1]).is_none());
+        assert!(Req::decode(&[]).is_none());
+        assert!(Resp::decode(&[]).is_none());
+        assert!(Req::decode(&[0xee, 0]).is_none(), "unknown op");
     }
 }

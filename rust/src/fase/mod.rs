@@ -1,13 +1,14 @@
 //! FASE hardware framework (paper §IV): the Host-Target Protocol codec,
-//! the UART channel timing model, the HFutex mask cache, and the FASE
+//! the pluggable transport layer (UART / PCIe-XDMA / loopback channel
+//! timing + HTP batch framing), the HFutex mask cache, and the FASE
 //! hardware controller that drives the target exclusively through the
 //! Table-I CPU interface.
 
 pub mod controller;
 pub mod hfutex;
 pub mod htp;
-pub mod uart;
+pub mod transport;
 
 pub use controller::{Controller, ExecStats};
 pub use htp::{HfOp, Req, Resp};
-pub use uart::Uart;
+pub use transport::{BatchFrame, Transport, TransportKind, TransportSpec, Uart};

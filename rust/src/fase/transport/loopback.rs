@@ -1,0 +1,49 @@
+//! Zero-latency loopback channel: HTP semantics with no wire.
+//!
+//! Used for pure-emulation CI runs (no channel noise in assertions) and to
+//! isolate host-latency effects from channel effects — with loopback plus
+//! `HostLatency::zero()` the only non-user time left is controller
+//! execution, which is the Table IV "ideal transmission" arm.
+
+use super::{Transport, TransportKind};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoopbackTransport;
+
+impl Transport for LoopbackTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Loopback
+    }
+    fn label(&self) -> String {
+        "loopback".into()
+    }
+    fn tx_ticks(&self, _bytes: u64) -> u64 {
+        0
+    }
+    fn rx_ticks(&self, _bytes: u64) -> u64 {
+        0
+    }
+    fn per_transaction_ticks(&self) -> u64 {
+        0
+    }
+    fn streaming(&self) -> bool {
+        false
+    }
+    fn byte_seconds(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_free() {
+        let t = LoopbackTransport;
+        assert_eq!(t.tx_ticks(1 << 20), 0);
+        assert_eq!(t.rx_ticks(1 << 20), 0);
+        assert_eq!(t.per_transaction_ticks(), 0);
+        assert_eq!(t.byte_seconds(), 0.0);
+    }
+}

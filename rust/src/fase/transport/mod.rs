@@ -1,0 +1,180 @@
+//! Pluggable HTP transport layer: wire framing and channel timing for the
+//! host↔target link (paper §IV-B).
+//!
+//! The paper's reference implementation is UART-only; its README names
+//! PCIe-XDMA as the planned second physical layer. Everything above this
+//! module (controller, runtime, recorder) is channel-agnostic: a
+//! [`Transport`] converts byte counts into target ticks and describes the
+//! channel's burst/stream semantics, and [`batch::BatchFrame`] coalesces
+//! multiple HTP requests into one framed transaction so the per-transaction
+//! host overhead (§VI-D1: ~55 µs of tty syscalls) is paid once per frame.
+//!
+//! Three implementations ship:
+//! - [`UartTransport`] — the paper's 8N2 serial model (moved from the old
+//!   `fase::uart` module; ticks use ceiling division so partial bit-times
+//!   are charged).
+//! - [`PcieXdmaTransport`] — a DMA burst model: fixed descriptor/doorbell
+//!   setup latency plus bytes-per-beat bandwidth, so page transfers stop
+//!   dominating target time.
+//! - [`LoopbackTransport`] — a zero-latency channel for pure-emulation CI
+//!   runs and for isolating host-latency effects from channel effects.
+
+pub mod batch;
+pub mod loopback;
+pub mod uart;
+pub mod xdma;
+
+pub use batch::BatchFrame;
+pub use loopback::LoopbackTransport;
+pub use uart::{Uart, UartTransport};
+pub use xdma::PcieXdmaTransport;
+
+/// Stable transport identity for recorder dimensions and labels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    Uart,
+    PcieXdma,
+    Loopback,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Uart => "uart",
+            TransportKind::PcieXdma => "xdma",
+            TransportKind::Loopback => "loopback",
+        }
+    }
+}
+
+/// Channel timing model for one physical layer of the HTP link.
+///
+/// All times are target ticks (the timeline the coordinator advances); a
+/// transport converts wire bytes to ticks and declares its transaction
+/// semantics. Implementations must be pure functions of their
+/// configuration so identical runs stay deterministic.
+pub trait Transport {
+    fn kind(&self) -> TransportKind;
+
+    /// Human-readable instance label, e.g. `uart:921600`.
+    fn label(&self) -> String;
+
+    /// Ticks to move `bytes` host→target.
+    fn tx_ticks(&self, bytes: u64) -> u64;
+
+    /// Ticks to move `bytes` target→host.
+    fn rx_ticks(&self, bytes: u64) -> u64;
+
+    /// Fixed channel-side ticks charged once per framed transaction
+    /// (e.g. DMA descriptor setup + doorbell; zero for a raw serial line).
+    fn per_transaction_ticks(&self) -> u64;
+
+    /// Whether payload bytes arrive as a stream the controller can overlap
+    /// with execution (UART) rather than landing as one burst before
+    /// execution starts (DMA).
+    fn streaming(&self) -> bool;
+
+    /// Seconds per payload byte (reporting only).
+    fn byte_seconds(&self) -> f64;
+}
+
+/// Parseable transport selection, threaded through `RunConfig`, the CLI
+/// (`--transport uart:1000000 | xdma | loopback`) and config files.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportSpec {
+    Uart { baud: u64 },
+    Xdma,
+    Loopback,
+}
+
+impl Default for TransportSpec {
+    fn default() -> Self {
+        TransportSpec::Uart { baud: 921_600 }
+    }
+}
+
+impl TransportSpec {
+    pub fn uart(baud: u64) -> TransportSpec {
+        TransportSpec::Uart { baud }
+    }
+
+    /// Parse `uart`, `uart:BAUD`, `xdma` (aliases `pcie`, `pcie-xdma`) or
+    /// `loopback` (alias `ideal`). BAUD accepts the usual k/m suffixes.
+    pub fn parse(s: &str) -> Option<TransportSpec> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("uart:") {
+            return crate::util::cli::parse_u64(rest)
+                .filter(|&b| b > 0)
+                .map(|baud| TransportSpec::Uart { baud });
+        }
+        match s {
+            "uart" => Some(TransportSpec::Uart { baud: 921_600 }),
+            "xdma" | "pcie" | "pcie-xdma" => Some(TransportSpec::Xdma),
+            "loopback" | "ideal" => Some(TransportSpec::Loopback),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TransportSpec::Uart { baud } => format!("uart:{baud}"),
+            TransportSpec::Xdma => "xdma".into(),
+            TransportSpec::Loopback => "loopback".into(),
+        }
+    }
+
+    /// Instantiate the timing model at a given target clock.
+    pub fn build(&self, clock_hz: u64) -> Box<dyn Transport> {
+        match self {
+            TransportSpec::Uart { baud } => {
+                Box::new(UartTransport::new(*baud, clock_hz))
+            }
+            TransportSpec::Xdma => Box::new(PcieXdmaTransport::new(clock_hz)),
+            TransportSpec::Loopback => Box::new(LoopbackTransport),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_all_forms() {
+        assert_eq!(TransportSpec::parse("uart"), Some(TransportSpec::Uart { baud: 921_600 }));
+        assert_eq!(TransportSpec::parse("uart:1000000"), Some(TransportSpec::Uart { baud: 1_000_000 }));
+        assert_eq!(TransportSpec::parse("uart:1m"), Some(TransportSpec::Uart { baud: 1 << 20 }));
+        assert_eq!(TransportSpec::parse("xdma"), Some(TransportSpec::Xdma));
+        assert_eq!(TransportSpec::parse("pcie-xdma"), Some(TransportSpec::Xdma));
+        assert_eq!(TransportSpec::parse("loopback"), Some(TransportSpec::Loopback));
+        assert_eq!(TransportSpec::parse("ideal"), Some(TransportSpec::Loopback));
+        assert_eq!(TransportSpec::parse("uart:0"), None);
+        assert_eq!(TransportSpec::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn spec_labels_roundtrip_through_parse() {
+        for spec in [TransportSpec::uart(115_200), TransportSpec::Xdma, TransportSpec::Loopback] {
+            assert_eq!(TransportSpec::parse(&spec.label()), Some(spec.clone()));
+        }
+    }
+
+    #[test]
+    fn build_produces_matching_kind() {
+        assert_eq!(TransportSpec::uart(921_600).build(100_000_000).kind(), TransportKind::Uart);
+        assert_eq!(TransportSpec::Xdma.build(100_000_000).kind(), TransportKind::PcieXdma);
+        assert_eq!(TransportSpec::Loopback.build(100_000_000).kind(), TransportKind::Loopback);
+    }
+
+    #[test]
+    fn transports_order_by_bandwidth() {
+        let clock = 100_000_000;
+        let uart = TransportSpec::uart(921_600).build(clock);
+        let xdma = TransportSpec::Xdma.build(clock);
+        let loop_ = TransportSpec::Loopback.build(clock);
+        let bytes = 4106; // one PageW request
+        assert!(uart.tx_ticks(bytes) > xdma.tx_ticks(bytes) + xdma.per_transaction_ticks());
+        assert_eq!(loop_.tx_ticks(bytes), 0);
+        assert_eq!(loop_.per_transaction_ticks(), 0);
+    }
+}

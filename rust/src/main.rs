@@ -10,6 +10,7 @@
 
 use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
 use fase::coordinator::target::{HostLatency, KernelCosts};
+use fase::fase::transport::TransportSpec;
 use fase::rv64::hart::CoreModel;
 use fase::util::cli::Args;
 use std::path::PathBuf;
@@ -21,10 +22,12 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!("usage: fase <run|info> [options]");
-            eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N] [--baud N]");
-            eprintln!("           [--core rocket|cva6] [--no-hfutex] [--lazy-image]");
-            eprintln!("           [--preload N] [--env K=V]... [--quiet] [--report]");
-            eprintln!("           [--max-seconds S] [--ideal-latency] [-- guest args]");
+            eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N]");
+            eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
+            eprintln!("           [--core rocket|cva6] [--no-hfutex] [--no-batch]");
+            eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
+            eprintln!("           [--quiet] [--report] [--max-seconds S]");
+            eprintln!("           [--ideal-latency] [-- guest args]");
             std::process::exit(2);
         }
     }
@@ -34,7 +37,11 @@ fn build_config(args: &Args) -> RunConfig {
     let mode = match args.str_or("mode", "fase").as_str() {
         "fullsys" => Mode::FullSys { costs: KernelCosts::default() },
         _ => Mode::Fase {
-            baud: args.u64_or("baud", 921_600),
+            // --baud remains a shorthand for --transport uart:BAUD.
+            transport: args.transport_or(
+                "transport",
+                TransportSpec::Uart { baud: args.u64_or("baud", 921_600) },
+            ),
             hfutex: !args.flag("no-hfutex"),
             latency: if args.flag("ideal-latency") {
                 HostLatency::zero()
@@ -57,6 +64,7 @@ fn build_config(args: &Args) -> RunConfig {
         guest_root: PathBuf::from(args.str_or("root", ".")),
         max_target_seconds: args.f64_or("max-seconds", 600.0),
         collect_windows: args.flag("windows"),
+        htp_batching: !args.flag("no-batch"),
     }
 }
 
@@ -108,11 +116,19 @@ fn cmd_run(args: &Args) {
             "sim speed        : {:.2} MIPS",
             res.instret as f64 / res.wall_seconds.max(1e-9) / 1e6
         );
-        eprintln!("UART traffic     : {} bytes in {} requests", res.total_bytes, res.total_requests);
+        eprintln!("transport        : {}", res.transport);
+        eprintln!(
+            "channel traffic  : {} bytes, {} requests in {} transactions",
+            res.total_bytes, res.total_requests, res.transactions
+        );
+        eprintln!(
+            "HTP batching     : {} frames carrying {} requests ({} wire bytes saved)",
+            res.batch_frames, res.batch_reqs, res.batch_saved_bytes
+        );
         eprintln!("direct-equivalent: {} bytes", res.direct_equiv_bytes);
         eprintln!(
-            "stall ticks      : ctl={} uart={} runtime={}",
-            res.stall.controller_ticks, res.stall.uart_ticks, res.stall.runtime_ticks
+            "stall ticks      : ctl={} channel={} runtime={}",
+            res.stall.controller_ticks, res.stall.channel_ticks, res.stall.runtime_ticks
         );
         eprintln!("context switches : {}", res.context_switches);
         eprintln!("page faults      : {}", res.page_faults);

@@ -1,6 +1,7 @@
-//! Performance recording: UART traffic accounting by HTP request kind and
-//! by remote-syscall context (Fig 13/17), stall-time composition
-//! (Table IV), and timing-model window sampling for the PJRT evaluator.
+//! Performance recording: channel traffic accounting by HTP request kind,
+//! remote-syscall context (Fig 13/17), transport and batch frame,
+//! stall-time composition (Table IV), and timing-model window sampling
+//! for the timing-model evaluator.
 
 pub mod recorder;
 pub mod window;

@@ -16,6 +16,9 @@ pub enum Context {
     Load,
     Sched,
     PageFault,
+    /// Syscall dispatch before the number is known (the batched a0..a7
+    /// argument prefetch rides here).
+    SyscallEntry,
     Syscall(u64),
     Signal,
     Report,
@@ -28,6 +31,7 @@ impl Context {
             Context::Load => "load".into(),
             Context::Sched => "sched".into(),
             Context::PageFault => "page_fault".into(),
+            Context::SyscallEntry => "syscall_entry".into(),
             Context::Syscall(nr) => syscall_name(*nr).to_string(),
             Context::Signal => "signal".into(),
             Context::Report => "report".into(),
@@ -82,7 +86,7 @@ pub struct KindStats {
     pub count: u64,
     pub tx_bytes: u64,
     pub rx_bytes: u64,
-    pub uart_ticks: u64,
+    pub channel_ticks: u64,
     pub ctl_ticks: u64,
 }
 
@@ -97,14 +101,30 @@ pub struct CtxStats {
 #[derive(Debug, Default, Clone, Copy)]
 pub struct StallBreakdown {
     pub controller_ticks: u64,
-    pub uart_ticks: u64,
+    /// Time on the physical channel (UART / XDMA / loopback).
+    pub channel_ticks: u64,
     pub runtime_ticks: u64,
 }
 
 impl StallBreakdown {
     pub fn total(&self) -> u64 {
-        self.controller_ticks + self.uart_ticks + self.runtime_ticks
+        self.controller_ticks + self.channel_ticks + self.runtime_ticks
     }
+}
+
+/// HTP batching-layer accounting: how many wire round-trips were frames,
+/// how many logical requests rode in them, and what the frame format
+/// saved/cost in bytes.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BatchStats {
+    /// Coalesced frames sent (each is one wire transaction).
+    pub frames: u64,
+    /// Logical requests carried inside those frames.
+    pub batched_reqs: u64,
+    /// Frame header bytes on the wire (not attributable to one request).
+    pub header_bytes: u64,
+    /// Request-direction bytes saved vs individual framing.
+    pub saved_bytes: u64,
 }
 
 #[derive(Default)]
@@ -119,12 +139,19 @@ pub struct Recorder {
     pub syscall_counts: BTreeMap<u64, u64>,
     /// futex wakes filtered on-target by HFutex (no traffic).
     pub filtered_wakes: u64,
+    /// Wire round-trips (one per transaction; a batch frame counts once,
+    /// its logical requests are tallied per kind in `by_kind`).
+    pub transactions: u64,
+    /// Batching-layer accounting.
+    pub batch: BatchStats,
+    /// Label of the transport these tallies were recorded over.
+    pub transport: String,
     ctx: Context,
 }
 
 impl Recorder {
     pub fn new() -> Recorder {
-        Recorder { ctx: Context::Boot, ..Default::default() }
+        Recorder { ctx: Context::Boot, transport: "none".into(), ..Default::default() }
     }
 
     pub fn set_context(&mut self, ctx: Context) {
@@ -135,17 +162,23 @@ impl Recorder {
         self.ctx
     }
 
+    pub fn set_transport(&mut self, label: String) {
+        self.transport = label;
+    }
+
     pub fn count_syscall(&mut self, nr: u64) {
         *self.syscall_counts.entry(nr).or_default() += 1;
     }
 
-    /// Record one HTP transaction.
+    /// Record one logical HTP request (possibly one of several riding a
+    /// batch frame — then `channel_ticks` is this request's apportioned
+    /// share of the frame's channel time).
     pub fn record_request(
         &mut self,
         kind: ReqKind,
         tx_bytes: u64,
         rx_bytes: u64,
-        uart_ticks: u64,
+        channel_ticks: u64,
         ctl_ticks: u64,
         reg_ops: u64,
         injects: u64,
@@ -154,18 +187,33 @@ impl Recorder {
         k.count += 1;
         k.tx_bytes += tx_bytes;
         k.rx_bytes += rx_bytes;
-        k.uart_ticks += uart_ticks;
+        k.channel_ticks += channel_ticks;
         k.ctl_ticks += ctl_ticks;
         let c = self.by_ctx.entry(self.ctx).or_default();
         c.requests += 1;
         c.bytes += tx_bytes + rx_bytes;
-        c.stall_ticks += uart_ticks + ctl_ticks;
+        c.stall_ticks += channel_ticks + ctl_ticks;
         self.stall.controller_ticks += ctl_ticks;
-        self.stall.uart_ticks += uart_ticks;
+        self.stall.channel_ticks += channel_ticks;
         // Direct-interface equivalent: each reg op would be its own
         // request (3-byte header + idx + 8B data + 1B ack = 13..21B) and
         // each injected instruction its own 7-byte request + ack.
         self.direct_equiv_bytes += reg_ops * 21 + injects * 8 + 3;
+    }
+
+    /// Record one wire round-trip (a plain transaction or a whole frame).
+    pub fn record_transaction(&mut self) {
+        self.transactions += 1;
+    }
+
+    /// Record a coalesced frame's batching-layer numbers.
+    pub fn record_batch_frame(&mut self, reqs: u64, header_bytes: u64, saved_bytes: u64) {
+        self.batch.frames += 1;
+        self.batch.batched_reqs += reqs;
+        self.batch.header_bytes += header_bytes;
+        self.batch.saved_bytes += saved_bytes;
+        // Frame headers are wire bytes in the current context too.
+        self.by_ctx.entry(self.ctx).or_default().bytes += header_bytes;
     }
 
     pub fn record_runtime_stall(&mut self, ticks: u64) {
@@ -174,18 +222,22 @@ impl Recorder {
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.by_kind.values().map(|k| k.tx_bytes + k.rx_bytes).sum()
+        self.by_kind.values().map(|k| k.tx_bytes + k.rx_bytes).sum::<u64>()
+            + self.batch.header_bytes
     }
 
     pub fn total_requests(&self) -> u64 {
         self.by_kind.values().map(|k| k.count).sum()
     }
 
-    /// Reset the tallies (e.g. between measured iterations) keeping context.
+    /// Reset the tallies (e.g. between measured iterations) keeping
+    /// context and transport identity.
     pub fn reset(&mut self) {
         let ctx = self.ctx;
+        let transport = std::mem::take(&mut self.transport);
         *self = Recorder::new();
         self.ctx = ctx;
+        self.transport = transport;
     }
 
     /// Bytes grouped by syscall-context label (Fig 13 right-hand grouping).
@@ -210,8 +262,36 @@ mod tests {
         assert_eq!(r.total_bytes(), 3 + 9 + 11 + 1 + 18 + 1);
         assert_eq!(r.by_ctx[&Context::Syscall(98)].requests, 2);
         assert_eq!(r.by_ctx[&Context::PageFault].bytes, 19);
-        assert_eq!(r.stall.uart_ticks, 420);
+        assert_eq!(r.stall.channel_ticks, 420);
         assert_eq!(r.stall.controller_ticks, 1044);
+    }
+
+    #[test]
+    fn batch_frames_count_once_with_header_bytes() {
+        let mut r = Recorder::new();
+        // One 8-request frame: logical requests recorded per kind, the
+        // wire round-trip and header bytes recorded at frame level.
+        for _ in 0..8 {
+            r.record_request(ReqKind::RegRW, 2, 9, 10, 4, 1, 0);
+        }
+        r.record_transaction();
+        r.record_batch_frame(8, 2, 6);
+        assert_eq!(r.total_requests(), 8);
+        assert_eq!(r.transactions, 1);
+        assert_eq!(r.batch.frames, 1);
+        assert_eq!(r.batch.batched_reqs, 8);
+        assert_eq!(r.total_bytes(), 8 * (2 + 9) + 2);
+        assert_eq!(r.batch.saved_bytes, 6);
+    }
+
+    #[test]
+    fn reset_keeps_transport_label() {
+        let mut r = Recorder::new();
+        r.set_transport("xdma".into());
+        r.record_transaction();
+        r.reset();
+        assert_eq!(r.transport, "xdma");
+        assert_eq!(r.transactions, 0);
     }
 
     #[test]

@@ -1,9 +1,10 @@
-//! PJRT execution bridge: loads the AOT-compiled timing model
+//! Timing-model execution bridge: loads the AOT-compiled timing model
 //! (`artifacts/timing_model.hlo.txt`, produced once by
 //! `python/compile/aot.py`) and evaluates window batches from the
-//! performance recorder. Python never runs at simulation time — the HLO
-//! artifact is compiled and executed through the `xla` crate's PJRT CPU
-//! client.
+//! performance recorder. Python never runs at simulation time — the
+//! artifact is evaluated through [`pjrt::TimingModelExe`], a native
+//! executor kept in lockstep with the HLO (the offline vendor set has no
+//! XLA/PJRT runtime; see `pjrt.rs` for how a PJRT client slots back in).
 
 pub mod pjrt;
 pub mod timing_model;

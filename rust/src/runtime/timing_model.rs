@@ -2,9 +2,8 @@
 //! BATCH shape, runs the AOT HLO model, and cross-checks against the
 //! native mirror ([`crate::perf::window::native_window_cycles`]).
 
-use super::pjrt::{BatchOut, TimingModelExe, BATCH, MAX_HARTS};
+use super::pjrt::{BatchOut, Result, TimingModelExe, BATCH, MAX_HARTS};
 use crate::perf::window::{TimingCoeffs, WindowSample, NUM_FEATURES};
-use anyhow::Result;
 
 pub fn default_artifact_path() -> std::path::PathBuf {
     // Allow override for tests/deployment layouts.

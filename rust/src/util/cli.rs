@@ -75,6 +75,20 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// HTP transport selection (`uart`, `uart:BAUD`, `xdma`, `loopback`).
+    pub fn transport_or(
+        &self,
+        key: &str,
+        default: crate::fase::transport::TransportSpec,
+    ) -> crate::fase::transport::TransportSpec {
+        match self.get(key) {
+            Some(v) => {
+                crate::fase::transport::TransportSpec::parse(v).unwrap_or_else(|| die(key, v))
+            }
+            None => default,
+        }
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.note(key);
         self.flags.iter().any(|f| f == key)
@@ -165,5 +179,19 @@ mod tests {
         let a = args(&["--a", "--b", "v"]);
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn transport_option_parses() {
+        use crate::fase::transport::TransportSpec;
+        let a = args(&["run", "--transport", "uart:1000000"]);
+        assert_eq!(
+            a.transport_or("transport", TransportSpec::default()),
+            TransportSpec::Uart { baud: 1_000_000 }
+        );
+        let b = args(&["run", "--transport=loopback"]);
+        assert_eq!(b.transport_or("transport", TransportSpec::default()), TransportSpec::Loopback);
+        let c = args(&["run"]);
+        assert_eq!(c.transport_or("transport", TransportSpec::Xdma), TransportSpec::Xdma);
     }
 }

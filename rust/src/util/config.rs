@@ -10,12 +10,29 @@ pub struct Config {
     sections: BTreeMap<String, BTreeMap<String, String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: expected `key = value`, got {1:?}")]
     BadLine(usize, String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::BadLine(n, l) => {
+                write!(f, "line {n}: expected `key = value`, got {l:?}")
+            }
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> ConfigError {
+        ConfigError::Io(e)
+    }
 }
 
 impl Config {
@@ -61,6 +78,19 @@ impl Config {
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key)
             .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// HTP transport selection (`uart`, `uart:BAUD`, `xdma`, `loopback`),
+    /// e.g. `[target]\ntransport = uart:1000000`.
+    pub fn transport_or(
+        &self,
+        section: &str,
+        key: &str,
+        default: crate::fase::transport::TransportSpec,
+    ) -> crate::fase::transport::TransportSpec {
+        self.get(section, key)
+            .and_then(crate::fase::transport::TransportSpec::parse)
             .unwrap_or(default)
     }
 
@@ -115,5 +145,20 @@ mod tests {
     fn top_level_keys() {
         let c = Config::parse("x = 1\n").unwrap();
         assert_eq!(c.u64_or("", "x", 0), 1);
+    }
+
+    #[test]
+    fn transport_key_parses() {
+        use crate::fase::transport::TransportSpec;
+        let c = Config::parse("[target]\ntransport = xdma\n[alt]\ntransport = uart:115200\n").unwrap();
+        assert_eq!(c.transport_or("target", "transport", TransportSpec::default()), TransportSpec::Xdma);
+        assert_eq!(
+            c.transport_or("alt", "transport", TransportSpec::default()),
+            TransportSpec::Uart { baud: 115_200 }
+        );
+        assert_eq!(
+            c.transport_or("missing", "transport", TransportSpec::Loopback),
+            TransportSpec::Loopback
+        );
     }
 }

@@ -5,6 +5,7 @@
 
 use fase::coordinator::runtime::{run_elf, Mode, RunConfig, RunResult};
 use fase::coordinator::target::{HostLatency, KernelCosts};
+use fase::fase::transport::TransportSpec;
 use std::path::PathBuf;
 
 fn guest(name: &str) -> Option<PathBuf> {
@@ -19,7 +20,11 @@ fn guest(name: &str) -> Option<PathBuf> {
 
 fn fase_cfg(cpus: usize) -> RunConfig {
     RunConfig {
-        mode: Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::default() },
+        mode: Mode::Fase {
+            transport: TransportSpec::uart(921_600),
+            hfutex: true,
+            latency: HostLatency::default(),
+        },
         n_cpus: cpus,
         echo_stdout: false,
         max_target_seconds: 120.0,
@@ -135,9 +140,17 @@ fn fase_and_fullsys_agree_functionally() {
 fn hfutex_reduces_traffic_on_threads() {
     let Some(elf) = guest("threads") else { return };
     let mut on = fase_cfg(4);
-    on.mode = Mode::Fase { baud: 921_600, hfutex: true, latency: HostLatency::zero() };
+    on.mode = Mode::Fase {
+        transport: TransportSpec::uart(921_600),
+        hfutex: true,
+        latency: HostLatency::zero(),
+    };
     let mut off = fase_cfg(4);
-    off.mode = Mode::Fase { baud: 921_600, hfutex: false, latency: HostLatency::zero() };
+    off.mode = Mode::Fase {
+        transport: TransportSpec::uart(921_600),
+        hfutex: false,
+        latency: HostLatency::zero(),
+    };
     let r_on = run(on, &elf, &["3"], &[]);
     let r_off = run(off, &elf, &["3"], &[]);
     assert_eq!(r_on.error, None);
@@ -153,10 +166,62 @@ fn hfutex_reduces_traffic_on_threads() {
 }
 
 #[test]
+fn transport_selection_changes_profile_not_results() {
+    let Some(elf) = guest("hello") else { return };
+    let run_with = |spec: TransportSpec| {
+        let mut cfg = fase_cfg(1);
+        cfg.mode = Mode::Fase { transport: spec, hfutex: true, latency: HostLatency::zero() };
+        run(cfg, &elf, &[], &[])
+    };
+    let uart = run_with(TransportSpec::uart(921_600));
+    let xdma = run_with(TransportSpec::Xdma);
+    let loopback = run_with(TransportSpec::Loopback);
+    for r in [&uart, &xdma, &loopback] {
+        assert_eq!(r.error, None);
+        assert_eq!(r.exit_code, 42);
+    }
+    assert_eq!(uart.transport, "uart:921600");
+    assert_eq!(xdma.transport, "xdma");
+    assert_eq!(loopback.transport, "loopback");
+    // Functional results agree; timing profiles are ordered by bandwidth.
+    assert_eq!(uart.stdout, xdma.stdout);
+    assert_eq!(uart.stdout, loopback.stdout);
+    assert!(uart.ticks > xdma.ticks, "uart {} vs xdma {}", uart.ticks, xdma.ticks);
+    assert!(xdma.ticks > loopback.ticks, "xdma {} vs loopback {}", xdma.ticks, loopback.ticks);
+    assert_eq!(loopback.stall.channel_ticks, 0);
+}
+
+#[test]
+fn htp_batching_cuts_transactions_not_results() {
+    let Some(elf) = guest("hello") else { return };
+    let mut on = fase_cfg(1);
+    on.htp_batching = true;
+    let mut off = fase_cfg(1);
+    off.htp_batching = false;
+    let r_on = run(on, &elf, &[], &[]);
+    let r_off = run(off, &elf, &[], &[]);
+    assert_eq!(r_on.error, None);
+    assert_eq!(r_off.error, None);
+    assert_eq!(r_on.stdout, r_off.stdout);
+    assert!(r_on.batch_frames > 0, "load + syscalls must produce batch frames");
+    assert!(
+        r_on.transactions < r_off.transactions,
+        "batched {} vs unbatched {}",
+        r_on.transactions,
+        r_off.transactions
+    );
+    assert!(r_on.ticks <= r_off.ticks, "batching must not slow the target down");
+}
+
+#[test]
 fn baud_rate_changes_target_time_not_results() {
     let Some(elf) = guest("hello") else { return };
     let mut slow = fase_cfg(1);
-    slow.mode = Mode::Fase { baud: 115_200, hfutex: true, latency: HostLatency::zero() };
+    slow.mode = Mode::Fase {
+        transport: TransportSpec::uart(115_200),
+        hfutex: true,
+        latency: HostLatency::zero(),
+    };
     let fast = fase_cfg(1);
     let r_slow = run(slow, &elf, &[], &[]);
     let r_fast = run(fast, &elf, &[], &[]);

@@ -7,7 +7,8 @@ use fase::coordinator::sched::{Scheduler, TState, ThreadCtx};
 use fase::coordinator::target::{DirectTarget, KernelCosts, TargetOps};
 use fase::coordinator::vm::{AddressSpace, PageAlloc, PAGE, PROT_READ, PROT_WRITE};
 use fase::fase::controller::Controller;
-use fase::fase::htp::Req;
+use fase::fase::htp::{HfOp, Req, Resp};
+use fase::fase::transport::BatchFrame;
 use fase::rv64::decode::encode;
 use fase::soc::machine::DRAM_BASE;
 use fase::soc::{Machine, MachineConfig};
@@ -302,6 +303,153 @@ fn prop_futex_fifo_exact_counts() {
         let rest = s.futex_wake(0x500, usize::MAX >> 1);
         if rest.len() != n - k.min(n) {
             return Err("remaining wake count wrong".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- HTP wire-format properties ----
+
+/// A random batchable request addressed to `cpu` (everything except the
+/// global `Next`/`Tick`, which never ride batch frames).
+fn arb_req(rng: &mut Prng, cpu: u8) -> Req {
+    match rng.below(12) {
+        0 => Req::Redirect { cpu, pc: rng.next_u64(), switch: rng.bool() },
+        1 => Req::SetMmu { cpu, satp: rng.next_u64() },
+        2 => Req::FlushTlb { cpu },
+        3 => Req::SyncI { cpu },
+        4 => {
+            let op = match rng.below(3) {
+                0 => HfOp::Add,
+                1 => HfOp::ClearAddr,
+                _ => HfOp::ClearAll,
+            };
+            Req::HFutex { cpu, op, addr: rng.next_u64() }
+        }
+        5 => Req::RegR { cpu, idx: rng.below(64) as u8 },
+        6 => Req::RegW { cpu, idx: rng.below(64) as u8, val: rng.next_u64() },
+        7 => Req::MemR { cpu, addr: rng.next_u64() },
+        8 => Req::MemW { cpu, addr: rng.next_u64(), val: rng.next_u64() },
+        9 => Req::PageS { cpu, ppn: rng.next_u64() >> 12, val: rng.next_u64() },
+        10 => Req::PageCp {
+            cpu,
+            src_ppn: rng.next_u64() >> 12,
+            dst_ppn: rng.next_u64() >> 12,
+        },
+        _ => {
+            let mut data = Box::new([0u8; 4096]);
+            for b in data.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            Req::PageW { cpu, ppn: rng.next_u64() >> 12, data }
+        }
+    }
+}
+
+fn arb_resp(rng: &mut Prng) -> Resp {
+    match rng.below(5) {
+        0 => Resp::Ok,
+        1 => Resp::Word(rng.next_u64()),
+        2 => Resp::Exception {
+            cpu: rng.below(8) as u8,
+            cause: rng.below(16),
+            epc: rng.next_u64(),
+            tval: rng.next_u64(),
+        },
+        3 => {
+            let mut page = Box::new([0u8; 4096]);
+            for b in page.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            Resp::Page(page)
+        }
+        _ => Resp::Fault(rng.below(16) as u8),
+    }
+}
+
+/// Every request and response encodes to exactly `wire_len` bytes and
+/// decodes back to itself (including `Next`/`Tick`, via singleton frames).
+#[test]
+fn prop_htp_codec_roundtrip() {
+    quick("HTP codec roundtrip", |rng: &mut Prng| {
+        let cpu = rng.below(8) as u8;
+        let req = match rng.below(8) {
+            0 => Req::Next,
+            1 => Req::Tick,
+            2 => Req::UTick { cpu },
+            3 => Req::Interrupt { cpu },
+            _ => arb_req(rng, cpu),
+        };
+        let e = req.encode();
+        if e.len() as u64 != req.wire_len() {
+            return Err(format!("{req:?}: encoded {} != wire_len {}", e.len(), req.wire_len()));
+        }
+        match Req::decode(&e) {
+            Some((back, n)) if back == req && n == e.len() => {}
+            other => return Err(format!("req decode mismatch: {other:?} vs {req:?}")),
+        }
+        let resp = arb_resp(rng);
+        let e = resp.encode();
+        if e.len() as u64 != resp.wire_len() {
+            return Err(format!("{resp:?}: encoded {} != wire_len {}", e.len(), resp.wire_len()));
+        }
+        match Resp::decode(&e) {
+            Some((back, n)) if back == resp && n == e.len() => {}
+            other => return Err(format!("resp decode mismatch: {other:?} vs {resp:?}")),
+        }
+        Ok(())
+    });
+}
+
+/// Batch frames (request and response direction) round-trip through the
+/// codec, and the encoded size matches the arithmetic the channel-timing
+/// layer uses.
+#[test]
+fn prop_batch_frame_roundtrip() {
+    quick("batch frame roundtrip", |rng: &mut Prng| {
+        let cpu = rng.below(8) as u8;
+        let n = 1 + rng.below(12) as usize;
+        let frame = BatchFrame::new(cpu, (0..n).map(|_| arb_req(rng, cpu)).collect());
+        let e = frame.encode();
+        if e.len() as u64 != frame.wire_len() {
+            return Err(format!("frame encoded {} != wire_len {}", e.len(), frame.wire_len()));
+        }
+        match BatchFrame::decode(&e) {
+            Some((back, used)) if back == frame && used == e.len() => {}
+            _ => return Err(format!("frame decode mismatch (n={n})")),
+        }
+        let resps: Vec<Resp> = (0..n).map(|_| arb_resp(rng)).collect();
+        let er = BatchFrame::encode_resps(&resps);
+        if er.len() as u64 != BatchFrame::resp_wire_len(&resps) {
+            return Err("resp stream length mismatch".into());
+        }
+        match BatchFrame::decode_resps(&er, n) {
+            Some((back, used)) if back == resps && used == er.len() => Ok(()),
+            _ => Err(format!("resp stream decode mismatch (n={n})")),
+        }
+    });
+}
+
+/// The batching layer never inflates traffic: a frame's wire bytes (both
+/// directions) are at most the sum of its individually-framed requests.
+#[test]
+fn prop_batch_wire_bytes_leq_individual() {
+    quick("batched bytes <= individual bytes", |rng: &mut Prng| {
+        let cpu = rng.below(8) as u8;
+        let n = 1 + rng.below(16) as usize;
+        let frame = BatchFrame::new(cpu, (0..n).map(|_| arb_req(rng, cpu)).collect());
+        let resps: Vec<Resp> = (0..n).map(|_| arb_resp(rng)).collect();
+        let individual_req: u64 = frame.reqs.iter().map(|r| r.wire_len()).sum();
+        let individual_resp: u64 = resps.iter().map(|r| r.wire_len()).sum();
+        let framed = frame.wire_len() + BatchFrame::resp_wire_len(&resps);
+        if framed > individual_req + individual_resp {
+            return Err(format!(
+                "n={n}: framed {framed} > individual {}",
+                individual_req + individual_resp
+            ));
+        }
+        if frame.saved_bytes() != individual_req + individual_resp - framed {
+            return Err("saved_bytes disagrees with direct computation".into());
         }
         Ok(())
     });
