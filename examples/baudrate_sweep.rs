@@ -2,9 +2,14 @@
 //! how does validation accuracy degrade as the host-target channel slows
 //! down, and where does the futex cliff appear for your workload?
 //!
+//! Also the smallest real example of the sweep orchestrator: declare the
+//! grid, run it in parallel, render from the outcomes. The same matrix
+//! runs from the CLI with a spec file (`fase sweep --spec my.sweep`).
+//!
 //!     cargo run --release --example baudrate_sweep -- sssp 2
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -12,38 +17,31 @@ fn main() {
     let threads: u32 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(2);
     let scale = bench_scale();
     let trials = bench_trials();
+    let bauds = [57_600u64, 115_200, 230_400, 460_800, 921_600, 1_843_200];
+    let w = WorkloadSpec::gapbs(&bench, scale, trials);
 
-    eprintln!("[sweep] baseline ({bench}-{threads}, scale 2^{scale})...");
-    let fs = run_gapbs(&bench, &Arm::FullSys, threads, scale, trials, "rocket");
+    let mut spec = SweepSpec::new("baudrate-sweep");
+    spec.workloads = vec![w.clone()];
+    spec.arms =
+        std::iter::once(Arm::FullSys).chain(bauds.iter().map(|&b| Arm::fase_uart(b))).collect();
+    spec.harts = vec![threads.max(1) as usize];
+    let out = run_figure(&spec);
 
+    let fs = cell(&out, &w, &Arm::FullSys, threads);
     let mut tab = Table::new(&["baud", "score", "err", "futex", "chan_stall"]);
-    for baud in [57_600u64, 115_200, 230_400, 460_800, 921_600, 1_843_200] {
-        let se = run_gapbs(
-            &bench,
-            &Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false },
-            threads,
-            scale,
-            trials,
-            "rocket",
-        );
-        let futexes = se
-            .result
-            .syscall_counts
-            .iter()
-            .find(|(n, _)| n == "futex")
-            .map(|(_, c)| *c)
-            .unwrap_or(0);
+    for &baud in &bauds {
+        let se = cell(&out, &w, &Arm::fase_uart(baud), threads);
+        let futexes = syscall_count(&se.result, "futex");
         tab.row(vec![
             baud.to_string(),
-            format!("{:.5}", se.score),
-            pct(rel_err(se.score, fs.score)),
+            format!("{:.5}", score(se)),
+            pct(rel_err(score(se), score(fs))),
             futexes.to_string(),
             secs(se.result.stall.channel_ticks as f64 / 100e6),
         ]);
-        eprintln!("[sweep] {baud} done");
     }
     tab.print(&format!(
         "Baud-rate sweep — {bench}-{threads} (full-system score {:.5})",
-        fs.score
+        score(fs)
     ));
 }

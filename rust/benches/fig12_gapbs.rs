@@ -6,45 +6,47 @@
 //! (BC/CCSV/PR/TC moderately, BFS/SSSP sharply at 4T); user CPU time error
 //! sits near -3% for most workloads.
 //!
-//! Scale knobs: FASE_BENCH_SCALE (default 11), FASE_BENCH_TRIALS (2).
-//! The paper's 2^20-vertex runs reproduce with FASE_BENCH_SCALE=20 given
-//! hours of wall-clock.
+//! Scale knobs: FASE_BENCH_SCALE (default 11), FASE_BENCH_TRIALS (2),
+//! FASE_BENCH_JOBS (sweep workers). The paper's 2^20-vertex runs reproduce
+//! with FASE_BENCH_SCALE=20 given hours of wall-clock.
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
     let benches = ["bc", "bfs", "cc_sv", "pr", "sssp", "tc"];
     let threads = [1u32, 2, 4];
+    let fase_arm = Arm::fase_uart(921_600);
+
+    let mut spec = SweepSpec::new("fig12");
+    spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
+    spec.arms = vec![Arm::FullSys, fase_arm.clone()];
+    spec.harts = threads.iter().map(|&t| t as usize).collect();
+    let out = run_figure(&spec);
+
     let mut score_tab = Table::new(&[
         "bench", "T", "score_fase", "score_fs", "score_err", "utime_fase", "utime_fs",
         "utime_err",
     ]);
     for b in benches {
+        let w = WorkloadSpec::gapbs(b, scale, trials);
         for &t in &threads {
-            let fs = run_gapbs(b, &Arm::FullSys, t, scale, trials, "rocket");
-            let se = run_gapbs(
-                b,
-                &Arm::fase_uart(921_600),
-                t,
-                scale,
-                trials,
-                "rocket",
-            );
-            let u_fs = fs.result.user_seconds;
-            let u_se = se.result.user_seconds;
+            let fs = cell(&out, &w, &Arm::FullSys, t);
+            let se = cell(&out, &w, &fase_arm, t);
+            let (s_fs, s_se) = (score(fs), score(se));
+            let (u_fs, u_se) = (fs.result.user_seconds, se.result.user_seconds);
             score_tab.row(vec![
                 b.into(),
                 t.to_string(),
-                format!("{:.5}", se.score),
-                format!("{:.5}", fs.score),
-                pct(rel_err(se.score, fs.score)),
-                format!("{:.5}", u_se),
-                format!("{:.5}", u_fs),
+                format!("{s_se:.5}"),
+                format!("{s_fs:.5}"),
+                pct(rel_err(s_se, s_fs)),
+                format!("{u_se:.5}"),
+                format!("{u_fs:.5}"),
                 pct(rel_err(u_se, u_fs)),
             ]);
-            eprintln!("[fig12] {b}-{t} done");
         }
     }
     score_tab.print(&format!(

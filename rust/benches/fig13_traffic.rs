@@ -7,14 +7,25 @@
 //! MemWrite (page-table sync ~60%) and PageSet zeroing (~25%).
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
     let arm = Arm::fase_uart(921_600);
-    for bench in ["bc", "bfs", "sssp", "tc"] {
-        for threads in [2u32, 4] {
-            let run = run_gapbs(bench, &arm, threads, scale, trials, "rocket");
+    let benches = ["bc", "bfs", "sssp", "tc"];
+    let threads = [2u32, 4];
+
+    let mut spec = SweepSpec::new("fig13");
+    spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
+    spec.arms = vec![arm.clone()];
+    spec.harts = threads.iter().map(|&t| t as usize).collect();
+    let out = run_figure(&spec);
+
+    for b in benches {
+        let w = WorkloadSpec::gapbs(b, scale, trials);
+        for &t in &threads {
+            let run = cell(&out, &w, &arm, t);
             let per_iter = |v: u64| v as f64 / trials as f64;
             let mut kind_tab = Table::new(&["HTP kind", "bytes/iter", "reqs/iter"]);
             for (name, bytes, count) in &run.result.bytes_by_kind {
@@ -25,16 +36,16 @@ fn main() {
                 ]);
             }
             kind_tab.print(&format!(
-                "Fig 13 — {bench}-{threads}: traffic by HTP request (total {} B)",
+                "Fig 13 — {b}-{t}: traffic by HTP request (total {} B)",
                 run.result.total_bytes
             ));
             let mut ctx_tab = Table::new(&["context", "bytes/iter"]);
             for (label, bytes) in &run.result.bytes_by_ctx {
                 ctx_tab.row(vec![label.clone(), format!("{:.0}", per_iter(*bytes))]);
             }
-            ctx_tab.print(&format!("Fig 13 — {bench}-{threads}: traffic by syscall context"));
+            ctx_tab.print(&format!("Fig 13 — {b}-{t}: traffic by syscall context"));
             eprintln!(
-                "[fig13] {bench}-{threads}: filtered_wakes={} switches={} faults={}",
+                "[fig13] {b}-{t}: filtered_wakes={} switches={} faults={}",
                 run.result.filtered_wakes, run.result.context_switches, run.result.page_faults
             );
         }

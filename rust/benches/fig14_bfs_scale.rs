@@ -5,31 +5,34 @@
 //! compute), dropping below 5% at the largest scales.
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let base = bench_scale();
     let trials = bench_trials();
     let scales: Vec<u32> = (base.saturating_sub(3)..=base + 1).collect();
+    let fase_arm = Arm::fase_uart(921_600);
+
+    // The scale axis rides the workload list: one workload atom per size.
+    let mut spec = SweepSpec::new("fig14");
+    spec.workloads = scales.iter().map(|&s| WorkloadSpec::gapbs("bfs", s, trials)).collect();
+    spec.arms = vec![Arm::FullSys, fase_arm.clone()];
+    spec.harts = vec![1, 2];
+    let out = run_figure(&spec);
+
     let mut tab = Table::new(&["scale", "T", "score_fase", "score_fs", "err"]);
     for &s in &scales {
+        let w = WorkloadSpec::gapbs("bfs", s, trials);
         for t in [1u32, 2] {
-            let fs = run_gapbs("bfs", &Arm::FullSys, t, s, trials, "rocket");
-            let se = run_gapbs(
-                "bfs",
-                &Arm::fase_uart(921_600),
-                t,
-                s,
-                trials,
-                "rocket",
-            );
+            let fs = cell(&out, &w, &Arm::FullSys, t);
+            let se = cell(&out, &w, &fase_arm, t);
             tab.row(vec![
                 format!("2^{s}"),
                 t.to_string(),
-                format!("{:.5}", se.score),
-                format!("{:.5}", fs.score),
-                pct(rel_err(se.score, fs.score)),
+                format!("{:.5}", score(se)),
+                format!("{:.5}", score(fs)),
+                pct(rel_err(score(se), score(fs))),
             ]);
-            eprintln!("[fig14] scale {s} T{t} done");
         }
     }
     tab.print("Fig 14 — BFS error vs data scale");

@@ -7,25 +7,28 @@
 //! and PageSet/MemWrite traffic alongside the error).
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let base = bench_scale();
     let trials = bench_trials();
     let scales: Vec<u32> = (base.saturating_sub(3)..=base + 1).collect();
+    let fase_arm = Arm::fase_uart(921_600);
+
+    let mut spec = SweepSpec::new("fig15");
+    spec.workloads = scales.iter().map(|&s| WorkloadSpec::gapbs("tc", s, trials)).collect();
+    spec.arms = vec![Arm::FullSys, fase_arm.clone()];
+    spec.harts = vec![1, 2];
+    let out = run_figure(&spec);
+
     let mut tab = Table::new(&[
         "scale", "T", "score_fase", "score_fs", "err", "faults/iter", "mmap_bytes/iter",
     ]);
     for &s in &scales {
+        let w = WorkloadSpec::gapbs("tc", s, trials);
         for t in [1u32, 2] {
-            let fs = run_gapbs("tc", &Arm::FullSys, t, s, trials, "rocket");
-            let se = run_gapbs(
-                "tc",
-                &Arm::fase_uart(921_600),
-                t,
-                s,
-                trials,
-                "rocket",
-            );
+            let fs = cell(&out, &w, &Arm::FullSys, t);
+            let se = cell(&out, &w, &fase_arm, t);
             let pf = se.result.page_faults as f64 / trials as f64;
             let mmap_bytes: u64 = se
                 .result
@@ -37,13 +40,12 @@ fn main() {
             tab.row(vec![
                 format!("2^{s}"),
                 t.to_string(),
-                format!("{:.5}", se.score),
-                format!("{:.5}", fs.score),
-                pct(rel_err(se.score, fs.score)),
+                format!("{:.5}", score(se)),
+                format!("{:.5}", score(fs)),
+                pct(rel_err(score(se), score(fs))),
                 format!("{pf:.0}"),
                 format!("{:.0}", mmap_bytes as f64 / trials as f64),
             ]);
-            eprintln!("[fig15] scale {s} T{t} done");
         }
     }
     tab.print("Fig 15 — TC error vs data scale (mmap/page-fault driven)");

@@ -6,39 +6,38 @@
 //! (futex storm), which appears at higher baud for more threads.
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
     let bauds = [115_200u64, 230_400, 460_800, 921_600, 1_843_200, 3_686_400];
+    let benches = ["bc", "bfs", "sssp", "tc"];
+
+    // The baud axis is just more FASE arms next to the baseline.
+    let mut spec = SweepSpec::new("fig16");
+    spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
+    spec.arms = std::iter::once(Arm::FullSys)
+        .chain(bauds.iter().map(|&b| Arm::fase_uart(b)))
+        .collect();
+    spec.harts = vec![1, 2];
+    let out = run_figure(&spec);
+
     let mut tab = Table::new(&["bench", "T", "baud", "score_err", "futex/iter"]);
-    for bench in ["bc", "bfs", "sssp", "tc"] {
+    for b in benches {
+        let w = WorkloadSpec::gapbs(b, scale, trials);
         for t in [1u32, 2] {
-            let fs = run_gapbs(bench, &Arm::FullSys, t, scale, trials, "rocket");
+            let fs = cell(&out, &w, &Arm::FullSys, t);
             for &baud in &bauds {
-                let se = run_gapbs(
-                    bench,
-                    &Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false },
-                    t,
-                    scale,
-                    trials,
-                    "rocket",
-                );
-                let futexes = se
-                    .result
-                    .syscall_counts
-                    .iter()
-                    .find(|(n, _)| n == "futex")
-                    .map(|(_, c)| *c)
-                    .unwrap_or(0);
+                let se = cell(&out, &w, &Arm::fase_uart(baud), t);
+                let futexes = syscall_count(&se.result, "futex");
                 tab.row(vec![
-                    bench.into(),
+                    b.into(),
                     t.to_string(),
                     baud.to_string(),
-                    pct(rel_err(se.score, fs.score)),
+                    pct(rel_err(score(se), score(fs))),
                     format!("{:.1}", futexes as f64 / trials as f64),
                 ]);
-                eprintln!("[fig16] {bench}-{t} @{baud} done");
             }
         }
     }

@@ -7,52 +7,42 @@
 //! total traffic by 3-15% depending on the program's wake redundancy.
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
+    let benches = ["bc", "cc_sv", "pr"];
+    let hf = Arm::fase_uart(921_600);
+    let nhf =
+        Arm::Fase { transport: TransportSpec::uart(921_600), hfutex: false, ideal_latency: false };
+
+    let mut spec = SweepSpec::new("fig17");
+    spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
+    spec.arms = vec![nhf.clone(), hf.clone()];
+    spec.harts = vec![2, 4];
+    let out = run_figure(&spec);
+
     let mut tab = Table::new(&[
         "bench", "T", "bytes_NHF", "bytes_HF", "reduction", "futex_NHF", "futex_HF",
         "filtered",
     ]);
-    for bench in ["bc", "cc_sv", "pr"] {
+    for b in benches {
+        let w = WorkloadSpec::gapbs(b, scale, trials);
         for t in [2u32, 4] {
-            let nhf = run_gapbs(
-                bench,
-                &Arm::Fase { transport: TransportSpec::uart(921_600), hfutex: false, ideal_latency: false },
-                t,
-                scale,
-                trials,
-                "rocket",
-            );
-            let hf = run_gapbs(
-                bench,
-                &Arm::fase_uart(921_600),
-                t,
-                scale,
-                trials,
-                "rocket",
-            );
-            let fut = |r: &GapbsRun| {
-                r.result
-                    .syscall_counts
-                    .iter()
-                    .find(|(n, _)| n == "futex")
-                    .map(|(_, c)| *c)
-                    .unwrap_or(0)
-            };
-            let (b_n, b_h) = (nhf.result.total_bytes, hf.result.total_bytes);
+            let n = cell(&out, &w, &nhf, t);
+            let h = cell(&out, &w, &hf, t);
+            let (b_n, b_h) = (n.result.total_bytes, h.result.total_bytes);
             tab.row(vec![
-                bench.into(),
+                b.into(),
                 t.to_string(),
                 b_n.to_string(),
                 b_h.to_string(),
                 pct((b_h as f64 - b_n as f64) / b_n as f64),
-                fut(&nhf).to_string(),
-                fut(&hf).to_string(),
-                hf.result.filtered_wakes.to_string(),
+                syscall_count(&n.result, "futex").to_string(),
+                syscall_count(&h.result, "futex").to_string(),
+                h.result.filtered_wakes.to_string(),
             ]);
-            eprintln!("[fig17] {bench}-{t} done");
         }
     }
     tab.print("Fig 17 — HFutex impact on UART traffic (NHF vs HF)");

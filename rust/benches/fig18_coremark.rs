@@ -6,31 +6,45 @@
 //! timing differs from the target's); CVA6 also within 1%.
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
-    let iters = std::env::var("FASE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10u32);
+    let iters =
+        std::env::var("FASE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10u32);
+    let w = WorkloadSpec::coremark(iters);
+    let fase_arm = Arm::fase_uart(921_600);
+    let pk = Arm::Pk { sim_threads: 4 };
+
     let mut tab = Table::new(&["core", "system", "time/iter", "err_vs_fullsys"]);
     for core in ["rocket", "cva6"] {
-        let fs = run_coremark(&Arm::FullSys, iters, core);
-        let se = run_coremark(
-            &Arm::fase_uart(921_600),
-            iters,
-            core,
-        );
-        tab.row(vec![core.into(), "fullsys".into(), format!("{:.6}", fs.score), "—".into()]);
+        // One spec per core: the PK arm (detailed engine, expensive) only
+        // runs where the figure reports it — Rocket.
+        let mut spec = SweepSpec::new(&format!("fig18-{core}"));
+        spec.cores = vec![core.to_string()];
+        spec.workloads = vec![w.clone()];
+        spec.arms = if core == "rocket" {
+            vec![Arm::FullSys, fase_arm.clone(), pk.clone()]
+        } else {
+            vec![Arm::FullSys, fase_arm.clone()]
+        };
+        let out = run_figure(&spec);
+
+        let fs = cell(&out, &w, &Arm::FullSys, 1);
+        let se = cell(&out, &w, &fase_arm, 1);
+        tab.row(vec![core.into(), "fullsys".into(), format!("{:.6}", score(fs)), "—".into()]);
         tab.row(vec![
             core.into(),
             "FASE".into(),
-            format!("{:.6}", se.score),
-            pct(rel_err(se.score, fs.score)),
+            format!("{:.6}", score(se)),
+            pct(rel_err(score(se), score(fs))),
         ]);
         if core == "rocket" {
-            let pk = run_coremark(&Arm::Pk { sim_threads: 4 }, iters, core);
+            let p = cell(&out, &w, &pk, 1);
             tab.row(vec![
                 core.into(),
                 "PK(sim)".into(),
-                format!("{:.6}", pk.score),
-                pct(rel_err(pk.score, fs.score)),
+                format!("{:.6}", score(p)),
+                pct(rel_err(score(p), score(fs))),
             ]);
         }
         eprintln!("[fig18] {core} done");

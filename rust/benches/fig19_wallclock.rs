@@ -8,40 +8,43 @@
 //! smaller and its intercept (workload loading) does not scale with baud
 //! linearly. The absolute FASE/PK ratio on this testbed reflects our
 //! scaled-down netlist (DESIGN.md §Substitutions).
+//!
+//! This figure measures *host wall-clock*, so its sweep runs serially —
+//! concurrent cells would steal each other's CPU time. (Wall-clock is
+//! also why this figure renders from in-memory results: sweep JSON
+//! reports exclude wall time by design.)
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let iter_list = [1u32, 2, 4];
+    let pk_arms: Vec<Arm> = [1usize, 2, 4, 8].map(|t| Arm::Pk { sim_threads: t }).to_vec();
+    let fase_arms: Vec<Arm> = [115_200u64, 921_600].map(Arm::fase_uart).to_vec();
+
+    let mut spec = SweepSpec::new("fig19");
+    spec.workloads = iter_list.iter().map(|&it| WorkloadSpec::coremark(it)).collect();
+    spec.arms = pk_arms.iter().chain(fase_arms.iter()).cloned().collect();
+    let out = run_figure_serial(&spec);
+
     let mut tab = Table::new(&["system", "iters", "wall_total", "wall/iter", "target_time"]);
-    for threads in [1usize, 2, 4, 8] {
-        for &it in &iter_list {
-            let r = run_coremark(&Arm::Pk { sim_threads: threads }, it, "rocket");
-            tab.row(vec![
-                format!("PK {threads} simthreads"),
-                it.to_string(),
-                secs(r.result.wall_seconds),
-                secs(r.result.wall_seconds / it as f64),
-                secs(r.result.target_seconds),
-            ]);
-            eprintln!("[fig19] pk-{threads} x{it} done");
-        }
-    }
-    for baud in [115_200u64, 921_600] {
-        for &it in &iter_list {
-            let r = run_coremark(
-                &Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false },
-                it,
-                "rocket",
-            );
-            tab.row(vec![
-                format!("FASE {baud} bps"),
-                it.to_string(),
-                secs(r.result.wall_seconds),
-                secs(r.result.wall_seconds / it as f64),
-                secs(r.result.target_seconds),
-            ]);
-            eprintln!("[fig19] fase-{baud} x{it} done");
+    for (arms, name) in [(&pk_arms, "PK"), (&fase_arms, "FASE")] {
+        for arm in arms.iter() {
+            for &it in &iter_list {
+                let r = cell(&out, &WorkloadSpec::coremark(it), arm, 1);
+                let system = match arm {
+                    Arm::Pk { sim_threads } => format!("{name} {sim_threads} simthreads"),
+                    Arm::Fase { transport, .. } => format!("{name} {}", transport.label()),
+                    Arm::FullSys => name.to_string(),
+                };
+                tab.row(vec![
+                    system,
+                    it.to_string(),
+                    secs(r.result.wall_seconds),
+                    secs(r.result.wall_seconds / it as f64),
+                    secs(r.result.target_seconds),
+                ]);
+            }
         }
     }
     tab.print("Fig 19 — wall-clock comparison, PK vs FASE (boot+load+run)");

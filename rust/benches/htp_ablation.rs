@@ -10,20 +10,33 @@
 //! against the full-system baseline and host wall-clock.
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let scale = bench_scale().saturating_sub(1);
     let trials = bench_trials();
+    let arm = Arm::fase_uart(921_600);
+
+    // ---- HTP vs direct-interface traffic ----
+    let mut spec = SweepSpec::new("htp-ablation");
+    spec.workloads = ["bc", "tc", "sssp"]
+        .iter()
+        .map(|b| WorkloadSpec::gapbs(b, scale, trials))
+        .collect();
+    spec.arms = vec![arm.clone()];
+    spec.harts = vec![2];
+    let out = run_figure(&spec);
+
     let mut tab = Table::new(&[
         "workload", "HTP bytes", "direct-equiv bytes", "reduction",
     ]);
-    let arm = Arm::fase_uart(921_600);
-    for (bench, threads) in [("bc", 2u32), ("tc", 2), ("sssp", 2)] {
-        let r = run_gapbs(bench, &arm, threads, scale, trials, "rocket");
+    for bench in ["bc", "tc", "sssp"] {
+        let w = WorkloadSpec::gapbs(bench, scale, trials);
+        let r = cell(&out, &w, &arm, 2);
         let htp = r.result.total_bytes;
         let direct = r.result.direct_equiv_bytes;
         tab.row(vec![
-            format!("{bench}-{threads}"),
+            format!("{bench}-2"),
             htp.to_string(),
             direct.to_string(),
             pct(-(1.0 - htp as f64 / direct as f64)),
@@ -46,42 +59,55 @@ fn main() {
         // One page via MemW = 512 * 19 B; via PageS/PageW as measured.
         let word_equiv = page_reqs * 512 * 19;
         eprintln!(
-            "[htp] {bench}-{threads}: page ops {page_bytes} B vs word-level {word_equiv} B ({:.2}%)",
+            "[htp] {bench}-2: page ops {page_bytes} B vs word-level {word_equiv} B ({:.2}%)",
             100.0 * page_bytes as f64 / word_equiv.max(1) as f64
         );
     }
     tab.print("HTP ablation — traffic vs direct CPU-interface protocol (>95% reduction expected)");
 
     // ---- transport sweep (Fig 16 axis, generalized to physical layers) ----
-    let (bench, threads) = ("bfs", 2u32);
-    eprintln!("[htp] transport sweep baseline ({bench}-{threads})...");
-    let fs = run_gapbs(bench, &Arm::FullSys, threads, scale, trials, "rocket");
-    let mut sweep = Table::new(&[
-        "transport", "score_err", "target_s", "wall_s", "bytes", "txns", "frames",
-    ]);
-    let specs = [
+    let bench = "bfs";
+    let w = WorkloadSpec::gapbs(bench, scale, trials);
+    let transports = [
         TransportSpec::uart(115_200),
         TransportSpec::uart(921_600),
         TransportSpec::uart(1_000_000),
         TransportSpec::Xdma,
         TransportSpec::Loopback,
     ];
-    for spec in specs {
-        let arm = Arm::Fase { transport: spec.clone(), hfutex: true, ideal_latency: false };
-        let r = run_gapbs(bench, &arm, threads, scale, trials, "rocket");
-        sweep.row(vec![
-            spec.label(),
-            pct(rel_err(r.score, fs.score)),
+    let mut spec = SweepSpec::new("htp-transport-sweep");
+    spec.workloads = vec![w.clone()];
+    spec.arms = std::iter::once(Arm::FullSys)
+        .chain(transports.iter().map(|t| Arm::Fase {
+            transport: t.clone(),
+            hfutex: true,
+            ideal_latency: false,
+        }))
+        .collect();
+    spec.harts = vec![2];
+    // Serial: the wall_s column measures host wall-clock, which parallel
+    // cells would distort (same reason fig19 runs serially).
+    let out = run_figure_serial(&spec);
+
+    let fs = cell(&out, &w, &Arm::FullSys, 2);
+    let mut sweep_tab = Table::new(&[
+        "transport", "score_err", "target_s", "wall_s", "bytes", "txns", "frames",
+    ]);
+    for t in &transports {
+        let a = Arm::Fase { transport: t.clone(), hfutex: true, ideal_latency: false };
+        let r = cell(&out, &w, &a, 2);
+        sweep_tab.row(vec![
+            t.label(),
+            pct(rel_err(score(r), score(fs))),
             secs(r.result.target_seconds),
             secs(r.result.wall_seconds),
             r.result.total_bytes.to_string(),
             r.result.transactions.to_string(),
             r.result.batch_frames.to_string(),
         ]);
-        eprintln!("[htp] {} done", spec.label());
     }
-    sweep.print(&format!(
-        "Transport sweep — {bench}-{threads} score error vs full-system ({:.5})",
-        fs.score
+    sweep_tab.print(&format!(
+        "Transport sweep — {bench}-2 score error vs full-system ({:.5})",
+        score(fs)
     ));
 }

@@ -8,63 +8,54 @@
 //! round-trips once thread timelines stop slipping).
 
 use fase::bench_support::*;
+use fase::sweep::{SweepSpec, WorkloadSpec};
 
 fn main() {
     let scale = bench_scale();
     let trials = bench_trials();
+    let real = Arm::fase_uart(921_600);
+    // Ideal transmission: the loopback transport + zero host latency,
+    // i.e. HTP requests become effective immediately — Table IV's sim
+    // variant that isolates controller work.
+    let ideal =
+        Arm::Fase { transport: TransportSpec::Loopback, hfutex: true, ideal_latency: true };
+    let w = WorkloadSpec::gapbs("bc", scale, trials);
+
+    let mut spec = SweepSpec::new("table4");
+    spec.workloads = vec![w.clone()];
+    spec.arms = vec![real.clone(), ideal.clone()];
+    spec.harts = vec![1, 2, 4];
+    let out = run_figure(&spec);
+
     let mut tab = Table::new(&[
         "workload", "controller", "channel", "runtime", "total_stall", "score",
     ]);
-    let mut ideal_tab = Table::new(&["workload", "controller(ideal)", "delta", "futex", "futex(ideal)"]);
+    let mut ideal_tab =
+        Table::new(&["workload", "controller(ideal)", "delta", "futex", "futex(ideal)"]);
     for t in [1u32, 2, 4] {
-        let real = run_gapbs(
-            "bc",
-            &Arm::fase_uart(921_600),
-            t,
-            scale,
-            trials,
-            "rocket",
-        );
+        let re = cell(&out, &w, &real, t);
+        let id = cell(&out, &w, &ideal, t);
         let hz = 100e6;
         let per_iter = |ticks: u64| secs(ticks as f64 / hz / trials as f64);
         tab.row(vec![
             format!("BC-{t}"),
-            per_iter(real.result.stall.controller_ticks),
-            per_iter(real.result.stall.channel_ticks),
-            per_iter(real.result.stall.runtime_ticks),
-            per_iter(real.result.stall.total()),
-            format!("{:.5}", real.score),
+            per_iter(re.result.stall.controller_ticks),
+            per_iter(re.result.stall.channel_ticks),
+            per_iter(re.result.stall.runtime_ticks),
+            per_iter(re.result.stall.total()),
+            format!("{:.5}", score(re)),
         ]);
-        // Ideal transmission: the loopback transport + zero host latency,
-        // i.e. HTP requests become effective immediately — Table IV's sim
-        // variant that isolates controller work.
-        let ideal = run_gapbs(
-            "bc",
-            &Arm::Fase { transport: TransportSpec::Loopback, hfutex: true, ideal_latency: true },
-            t,
-            scale,
-            trials,
-            "rocket",
-        );
-        let f = |r: &GapbsRun| {
-            r.result
-                .syscall_counts
-                .iter()
-                .find(|(n, _)| n == "futex")
-                .map(|(_, c)| *c)
-                .unwrap_or(0)
-        };
-        let c_real = real.result.stall.controller_ticks as f64;
-        let c_ideal = ideal.result.stall.controller_ticks as f64;
+        let c_real = re.result.stall.controller_ticks as f64;
+        let c_ideal = id.result.stall.controller_ticks as f64;
         ideal_tab.row(vec![
             format!("BC-{t}"),
-            per_iter(ideal.result.stall.controller_ticks),
+            per_iter(id.result.stall.controller_ticks),
             pct((c_ideal - c_real) / c_real.max(1.0)),
-            f(&real).to_string(),
-            f(&ideal).to_string(),
+            syscall_count(&re.result, "futex").to_string(),
+            syscall_count(&id.result, "futex").to_string(),
         ]);
-        eprintln!("[table4] BC-{t} done");
     }
     tab.print("Table IV — stall time composition per iteration (BC @921600)");
-    ideal_tab.print("Table IV — ideal-transmission simulation (controller stall + futex counts)");
+    ideal_tab
+        .print("Table IV — ideal-transmission simulation (controller stall + futex counts)");
 }

@@ -12,4 +12,4 @@
 
 pub mod pk;
 
-pub use pk::{run_pk, PkConfig};
+pub use pk::{run_pk, run_pk_exe, PkConfig};

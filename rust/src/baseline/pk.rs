@@ -30,6 +30,8 @@ pub struct PkConfig {
     pub netlist_size: usize,
     /// Verilator-style simulation threads (scaling saturates ~4).
     pub sim_threads: usize,
+    /// Kernel PRNG base seed (see `RunConfig::seed`).
+    pub seed: u64,
 }
 
 impl Default for PkConfig {
@@ -42,6 +44,7 @@ impl Default for PkConfig {
             dram_size: 1 << 31,
             netlist_size: 2048,
             sim_threads: 1,
+            seed: 0xFA5E,
         }
     }
 }
@@ -245,6 +248,26 @@ pub fn run_pk(
     envp: &[String],
     max_target_seconds: f64,
 ) -> RunResult {
+    let exe = match crate::elfio::read::Executable::load(elf_path) {
+        Ok(exe) => exe,
+        Err(e) => {
+            return RunResult::empty_with_error(format!(
+                "cannot load {}: {e}",
+                elf_path.display()
+            ))
+        }
+    };
+    run_pk_exe(pk, &exe, argv, envp, max_target_seconds)
+}
+
+/// [`run_pk`] for an already-parsed (or synthesized in-memory) executable.
+pub fn run_pk_exe(
+    pk: PkConfig,
+    exe: &crate::elfio::read::Executable,
+    argv: &[String],
+    envp: &[String],
+    max_target_seconds: f64,
+) -> RunResult {
     let cfg = RunConfig {
         mode: crate::coordinator::runtime::Mode::FullSys { costs: KernelCosts::default() },
         n_cpus: 1,
@@ -257,47 +280,14 @@ pub fn run_pk(
         max_target_seconds,
         collect_windows: false,
         htp_batching: true,
+        seed: pk.seed,
     };
     let target = Box::new(PkTarget::new(&pk));
     let mut rt = Runtime::with_target(cfg, target, false);
-    if let Err(e) = rt.load_path(elf_path, argv, envp) {
-        let mut r = empty_result();
-        r.error = Some(e.to_string());
-        return r;
+    if let Err(e) = rt.load(exe, argv, envp) {
+        return RunResult::empty_with_error(e.to_string());
     }
     rt.run()
-}
-
-fn empty_result() -> RunResult {
-    RunResult {
-        exit_code: -1,
-        error: None,
-        stdout: String::new(),
-        stderr: String::new(),
-        ticks: 0,
-        target_seconds: 0.0,
-        uticks: Vec::new(),
-        user_seconds: 0.0,
-        wall_seconds: 0.0,
-        instret: 0,
-        stall: Default::default(),
-        total_bytes: 0,
-        total_requests: 0,
-        transactions: 0,
-        transport: "none".into(),
-        batch_frames: 0,
-        batch_reqs: 0,
-        batch_saved_bytes: 0,
-        direct_equiv_bytes: 0,
-        bytes_by_kind: Vec::new(),
-        bytes_by_ctx: Vec::new(),
-        syscall_counts: Vec::new(),
-        filtered_wakes: 0,
-        context_switches: 0,
-        page_faults: 0,
-        peak_pages: 0,
-        windows: Vec::new(),
-    }
 }
 
 // Unused Kernel import guard (the type appears in docs).

@@ -1,29 +1,34 @@
-//! Shared experiment drivers for the paper-figure benches (criterion is
-//! not in the offline vendor set, so `cargo bench` targets are plain
-//! binaries built on this module: workload runners, timing helpers and
-//! aligned table printing).
+//! Shared helpers for the paper-figure benches (criterion is not in the
+//! offline vendor set, so `cargo bench` targets are plain binaries).
+//!
+//! Since the sweep orchestrator landed, every figure driver is a
+//! declarative [`SweepSpec`] — the grid runs in parallel on the worker
+//! pool and the bench only renders its tables from the outcomes. This
+//! module keeps the table/formatting helpers, the scale knobs, and
+//! fail-fast wrappers that preserve the old bench UX (exit non-zero with
+//! the guest's stderr when a cell fails).
 
-use crate::baseline::{run_pk, PkConfig};
-use crate::coordinator::runtime::{run_elf, Mode, RunConfig, RunResult};
-use crate::coordinator::target::{HostLatency, KernelCosts};
-use crate::rv64::hart::CoreModel;
+use crate::sweep::{self, JobOutcome, SweepOutcome, SweepSpec, WorkloadSpec};
 use std::path::PathBuf;
 
+pub use crate::coordinator::runtime::RunResult;
 pub use crate::fase::transport::TransportSpec;
+pub use crate::sweep::spec::Arm;
 
-/// Locate a guest ELF built by `make guests`.
+/// Locate a guest ELF built by `make guests`, exiting with a notice when
+/// missing (bench fail-fast; the orchestrator's [`sweep::job::find_guest_elf`]
+/// is the non-exiting variant).
 pub fn guest_elf(name: &str) -> PathBuf {
-    let p = PathBuf::from(format!("artifacts/guests/{name}.elf"));
-    if !p.exists() {
-        eprintln!("missing {} — run `make guests` first", p.display());
+    sweep::job::find_guest_elf(name).unwrap_or_else(|e| {
+        eprintln!("{e}");
         std::process::exit(3);
-    }
-    p
+    })
 }
 
 /// Benchmark-scale knobs, overridable from the environment so the same
 /// bench binaries reproduce paper-scale runs when given more time:
-///   FASE_BENCH_SCALE (default 11), FASE_BENCH_TRIALS (default 2).
+///   FASE_BENCH_SCALE (default 11), FASE_BENCH_TRIALS (default 2),
+///   FASE_BENCH_JOBS (default: all cores) — sweep worker threads.
 pub fn bench_scale() -> u32 {
     std::env::var("FASE_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(11)
 }
@@ -32,32 +37,69 @@ pub fn bench_trials() -> u32 {
     std::env::var("FASE_BENCH_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(2)
 }
 
-/// One experimental arm.
-#[derive(Debug, Clone)]
-pub enum Arm {
-    Fase { transport: TransportSpec, hfutex: bool, ideal_latency: bool },
-    FullSys,
-    Pk { sim_threads: usize },
+pub fn bench_workers() -> usize {
+    std::env::var("FASE_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-impl Arm {
-    /// The paper's standard FASE arm at a given UART baud rate.
-    pub fn fase_uart(baud: u64) -> Arm {
-        Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false }
-    }
+/// Run a figure's scenario grid in parallel, failing fast (after the
+/// whole grid completes) if any cell errored.
+pub fn run_figure(spec: &SweepSpec) -> SweepOutcome {
+    run_figure_with(spec, bench_workers())
+}
 
-    pub fn label(&self) -> String {
-        match self {
-            Arm::Fase { transport, hfutex, ideal_latency } => format!(
-                "fase@{}{}{}",
-                transport.label(),
-                if *hfutex { "" } else { "-nohf" },
-                if *ideal_latency { "-ideal" } else { "" }
-            ),
-            Arm::FullSys => "fullsys".into(),
-            Arm::Pk { sim_threads } => format!("pk-{sim_threads}t"),
+/// Serial variant for wall-clock figures (Fig 19, §Perf): concurrent
+/// cells would distort each other's host wall-clock measurements.
+/// Modeled target time is unaffected by worker count either way.
+pub fn run_figure_serial(spec: &SweepSpec) -> SweepOutcome {
+    run_figure_with(spec, 1)
+}
+
+fn run_figure_with(spec: &SweepSpec, workers: usize) -> SweepOutcome {
+    let out = sweep::run_sweep(spec, workers, None, true);
+    let errors = out.errors();
+    if !errors.is_empty() {
+        for o in errors {
+            eprintln!(
+                "[bench] {} failed: {}\n{}",
+                o.job.label(),
+                o.result.error.as_deref().unwrap_or("?"),
+                o.result.stderr
+            );
         }
+        std::process::exit(1);
     }
+    out
+}
+
+/// Look up one grid cell, exiting if the spec never produced it.
+pub fn cell<'a>(
+    out: &'a SweepOutcome,
+    workload: &WorkloadSpec,
+    arm: &Arm,
+    threads: u32,
+) -> &'a JobOutcome {
+    out.get(&workload.name, &arm.label(), threads.max(1) as usize).unwrap_or_else(|| {
+        eprintln!(
+            "[bench] missing sweep cell {}|{}|{}c",
+            workload.name,
+            arm.label(),
+            threads
+        );
+        std::process::exit(1);
+    })
+}
+
+/// Guest-reported score of a cell, exiting if the guest printed none
+/// (same fail-fast behavior the serial drivers had).
+pub fn score(o: &JobOutcome) -> f64 {
+    o.score.unwrap_or_else(|| {
+        eprintln!("[bench] no score in {} output:\n{}", o.job.label(), o.result.stdout);
+        std::process::exit(1);
+    })
 }
 
 #[derive(Debug, Clone)]
@@ -68,7 +110,8 @@ pub struct GapbsRun {
     pub result: RunResult,
 }
 
-/// Run one GAPBS-style benchmark.
+/// Run one GAPBS-style benchmark (single cell; figure drivers should
+/// build a [`SweepSpec`] and use [`run_figure`] instead).
 pub fn run_gapbs(
     bench: &str,
     arm: &Arm,
@@ -77,80 +120,34 @@ pub fn run_gapbs(
     trials: u32,
     core: &str,
 ) -> GapbsRun {
-    let elf = guest_elf(bench);
-    let argv = vec![
-        bench.to_string(),
-        scale.to_string(),
-        threads.to_string(),
-        trials.to_string(),
-    ];
-    run_workload(&elf, &argv, arm, threads.max(1) as usize, core, "Average Time")
+    run_one(WorkloadSpec::gapbs(bench, scale, trials), arm, threads.max(1) as usize, core)
 }
 
 /// Run the CoreMark-style benchmark (single core).
 pub fn run_coremark(arm: &Arm, iterations: u32, core: &str) -> GapbsRun {
-    let elf = guest_elf("coremark");
-    let argv = vec!["coremark".to_string(), iterations.to_string()];
-    run_workload(&elf, &argv, arm, 1, core, "Time per iter")
+    run_one(WorkloadSpec::coremark(iterations), arm, 1, core)
 }
 
-fn run_workload(
-    elf: &std::path::Path,
-    argv: &[String],
-    arm: &Arm,
-    cpus: usize,
-    core: &str,
-    metric: &str,
-) -> GapbsRun {
-    let core_model = CoreModel::by_name(core).expect("core model");
-    let result = match arm {
-        Arm::Pk { sim_threads } => {
-            let pk = PkConfig {
-                core: core_model.clone(),
-                sim_threads: *sim_threads,
-                ..Default::default()
-            };
-            run_pk(pk, elf, argv, &[], 3000.0)
-        }
-        _ => {
-            let mode = match arm {
-                Arm::Fase { transport, hfutex, ideal_latency } => Mode::Fase {
-                    transport: transport.clone(),
-                    hfutex: *hfutex,
-                    latency: if *ideal_latency {
-                        HostLatency::zero()
-                    } else {
-                        HostLatency::default()
-                    },
-                },
-                Arm::FullSys => Mode::FullSys { costs: KernelCosts::default() },
-                Arm::Pk { .. } => unreachable!(),
-            };
-            let cfg = RunConfig {
-                mode,
-                n_cpus: cpus,
-                core: core_model,
-                echo_stdout: false,
-                max_target_seconds: 3000.0,
-                ..Default::default()
-            };
-            run_elf(cfg, elf, argv, &[])
-        }
-    };
-    if let Some(err) = &result.error {
-        eprintln!("[bench] {} failed: {err}\n{}", argv.join(" "), result.stderr);
+fn run_one(workload: WorkloadSpec, arm: &Arm, harts: usize, core: &str) -> GapbsRun {
+    let spec = SweepSpec::new("bench");
+    let job = sweep::Job::new(0, workload, arm.clone(), harts, core.to_string(), 0, &spec);
+    let o = sweep::run_job(&job);
+    if let Some(err) = &o.result.error {
+        eprintln!("[bench] {} failed: {err}\n{}", o.job.label(), o.result.stderr);
         std::process::exit(1);
     }
-    let score = result.parse_metric(metric).unwrap_or_else(|| {
-        eprintln!("[bench] no {metric:?} in guest output:\n{}", result.stdout);
-        std::process::exit(1);
-    });
-    GapbsRun { score, result }
+    let s = score(&o);
+    GapbsRun { score: s, result: o.result }
 }
 
 /// Relative error, paper convention: (se - fs) / fs.
 pub fn rel_err(se: f64, fs: f64) -> f64 {
     (se - fs) / fs
+}
+
+/// How many times the guest made one syscall (0 if it never did).
+pub fn syscall_count(r: &RunResult, name: &str) -> u64 {
+    r.syscall_counts.iter().find(|(n, _)| n == name).map(|(_, c)| *c).unwrap_or(0)
 }
 
 // ---------------- table printing ----------------
@@ -207,6 +204,8 @@ mod tests {
 
     #[test]
     fn arm_labels() {
+        // Arm moved to sweep::spec; the re-export must keep the old names
+        // and label grammar working for bench code.
         assert_eq!(Arm::FullSys.label(), "fullsys");
         assert_eq!(
             Arm::Fase {

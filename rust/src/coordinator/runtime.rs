@@ -44,6 +44,10 @@ pub struct RunConfig {
     /// Coalesce multi-request operations into HTP batch frames (FASE
     /// mode; `--no-batch` disables it to model the unbatched protocol).
     pub htp_batching: bool,
+    /// Base seed for the kernel's PRNG stream (getrandom etc.). Sweep
+    /// jobs derive an independent stream per scenario from this so
+    /// parallel execution order can never reorder randomness.
+    pub seed: u64,
 }
 
 impl Default for RunConfig {
@@ -64,6 +68,7 @@ impl Default for RunConfig {
             max_target_seconds: 600.0,
             collect_windows: false,
             htp_batching: true,
+            seed: 0xFA5E,
         }
     }
 }
@@ -139,6 +144,87 @@ impl RunResult {
             }
         }
         None
+    }
+
+    /// An all-zero result carrying only an error (load failures and
+    /// scenarios that never reached the run loop).
+    pub fn empty_with_error(err: String) -> RunResult {
+        RunResult {
+            exit_code: -1,
+            error: Some(err),
+            stdout: String::new(),
+            stderr: String::new(),
+            ticks: 0,
+            target_seconds: 0.0,
+            uticks: Vec::new(),
+            user_seconds: 0.0,
+            wall_seconds: 0.0,
+            instret: 0,
+            stall: StallBreakdown::default(),
+            total_bytes: 0,
+            total_requests: 0,
+            transactions: 0,
+            transport: "none".into(),
+            batch_frames: 0,
+            batch_reqs: 0,
+            batch_saved_bytes: 0,
+            direct_equiv_bytes: 0,
+            bytes_by_kind: Vec::new(),
+            bytes_by_ctx: Vec::new(),
+            syscall_counts: Vec::new(),
+            filtered_wakes: 0,
+            context_switches: 0,
+            page_faults: 0,
+            peak_pages: 0,
+            windows: Vec::new(),
+        }
+    }
+
+    /// Deterministic numeric metrics for machine-readable sweep reports.
+    ///
+    /// Wall-clock time is deliberately excluded: every value here is a
+    /// pure function of (config, workload, seed), so the sweep report
+    /// stays byte-identical across runs and worker counts.
+    pub fn metrics_json(&self, score: Option<f64>) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m: Vec<(String, Json)> = Vec::new();
+        if let Some(s) = score {
+            m.push(("score".into(), Json::f64(s)));
+        }
+        m.push(("ticks".into(), Json::u64(self.ticks)));
+        m.push(("target_seconds".into(), Json::f64(self.target_seconds)));
+        m.push((
+            "uticks".into(),
+            Json::Arr(self.uticks.iter().map(|&u| Json::u64(u)).collect()),
+        ));
+        m.push(("user_seconds".into(), Json::f64(self.user_seconds)));
+        m.push(("instret".into(), Json::u64(self.instret)));
+        m.push(("stall".into(), self.stall.to_json()));
+        m.push(("total_bytes".into(), Json::u64(self.total_bytes)));
+        m.push(("total_requests".into(), Json::u64(self.total_requests)));
+        m.push(("transactions".into(), Json::u64(self.transactions)));
+        m.push(("batch_frames".into(), Json::u64(self.batch_frames)));
+        m.push(("batch_reqs".into(), Json::u64(self.batch_reqs)));
+        m.push(("batch_saved_bytes".into(), Json::u64(self.batch_saved_bytes)));
+        m.push(("direct_equiv_bytes".into(), Json::u64(self.direct_equiv_bytes)));
+        m.push((
+            "bytes_by_kind".into(),
+            Json::Obj(
+                self.bytes_by_kind
+                    .iter()
+                    .map(|(k, b, _)| (k.clone(), Json::u64(*b)))
+                    .collect(),
+            ),
+        ));
+        m.push((
+            "syscalls_total".into(),
+            Json::u64(self.syscall_counts.iter().map(|(_, c)| *c).sum()),
+        ));
+        m.push(("filtered_wakes".into(), Json::u64(self.filtered_wakes)));
+        m.push(("context_switches".into(), Json::u64(self.context_switches)));
+        m.push(("page_faults".into(), Json::u64(self.page_faults)));
+        m.push(("peak_pages".into(), Json::u64(self.peak_pages)));
+        Json::Obj(m)
     }
 }
 
@@ -234,7 +320,7 @@ impl Runtime {
             hf_mirror: HashMap::new(),
             pending_tlb: vec![false; n],
             pid: 100,
-            prng: Prng::new(0xFA5E),
+            prng: Prng::stream(cfg.seed, 0x5EED),
         };
         Runtime { cfg, target, k, load: None, last_utick: vec![0; n], windows: Vec::new() }
     }
@@ -581,6 +667,18 @@ pub fn run_elf(
 ) -> RunResult {
     let mut rt = Runtime::new(cfg);
     if let Err(e) = rt.load_path(elf_path, argv, envp) {
+        let mut r = rt.collect_result(0.0, Some(e.to_string()));
+        r.exit_code = -1;
+        return r;
+    }
+    rt.run()
+}
+
+/// Same as [`run_elf`] for an already-parsed (or synthesized in-memory)
+/// executable — the sweep's built-in workloads never touch the filesystem.
+pub fn run_exe(cfg: RunConfig, exe: &Executable, argv: &[String], envp: &[String]) -> RunResult {
+    let mut rt = Runtime::new(cfg);
+    if let Err(e) = rt.load(exe, argv, envp) {
         let mut r = rt.collect_result(0.0, Some(e.to_string()));
         r.exit_code = -1;
         return r;

@@ -13,4 +13,5 @@ pub mod perf;
 pub mod runtime;
 pub mod rv64;
 pub mod soc;
+pub mod sweep;
 pub mod util;

@@ -2,32 +2,40 @@
 //!
 //! Subcommands:
 //!   run   — execute a guest ELF under FASE or the full-system baseline
+//!   sweep — run a scenario-matrix sweep and emit a JSON report
 //!   info  — print target/ELF information
 //!
 //! Example:
 //!   fase run artifacts/guests/hello.elf --cpus 2 --baud 921600 -- arg1
 //!   fase run g.elf --mode fullsys --env OMP_NUM_THREADS=4
+//!   fase sweep --spec ci-smoke --jobs 8 --out report.json \
+//!              --check-against ci/baseline.json
 
 use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
 use fase::coordinator::target::{HostLatency, KernelCosts};
 use fase::fase::transport::TransportSpec;
 use fase::rv64::hart::CoreModel;
 use fase::util::cli::Args;
+use fase::util::json::Json;
 use std::path::PathBuf;
 
 fn main() {
     let args = Args::from_env();
     match args.subcommand() {
         Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: fase <run|info> [options]");
+            eprintln!("usage: fase <run|sweep|info> [options]");
             eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N]");
             eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
             eprintln!("           [--core rocket|cva6] [--no-hfutex] [--no-batch]");
             eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
             eprintln!("           [--quiet] [--report] [--max-seconds S]");
             eprintln!("           [--ideal-latency] [-- guest args]");
+            eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
+            eprintln!("           [--filter SUBSTR] [--check-against baseline.json]");
+            eprintln!("           [--compare-only report.json] [--list] [--quiet]");
             std::process::exit(2);
         }
     }
@@ -65,6 +73,7 @@ fn build_config(args: &Args) -> RunConfig {
         max_target_seconds: args.f64_or("max-seconds", 600.0),
         collect_windows: args.flag("windows"),
         htp_batching: !args.flag("no-batch"),
+        seed: args.u64_or("seed", 0xFA5E),
     }
 }
 
@@ -89,6 +98,7 @@ fn cmd_run(args: &Args) {
             dram_size: args.u64_or("dram", 1 << 31),
             netlist_size: args.usize_or("netlist", 2048),
             sim_threads: args.usize_or("sim-threads", 1),
+            seed: args.u64_or("seed", 0xFA5E),
             ..Default::default()
         };
         fase::baseline::run_pk(pk, &elf, &argv, &envp, args.f64_or("max-seconds", 600.0))
@@ -144,6 +154,146 @@ fn cmd_run(args: &Args) {
         }
     }
     std::process::exit(if res.error.is_some() { 1 } else { res.exit_code.min(125) });
+}
+
+fn load_json(path: &str) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("fase sweep: cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    fase::util::json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("fase sweep: {path}: {e}");
+        std::process::exit(2);
+    })
+}
+
+/// Run the perf-regression gate; exits non-zero on breach.
+fn run_gate(current: &Json, baseline: &Json) {
+    match fase::sweep::check_against(current, baseline) {
+        Ok(gate) => {
+            if gate.compared_jobs == 0 {
+                eprintln!(
+                    "[gate] WARNING: baseline has no scenarios (bootstrap mode); \
+                     commit the generated report as ci/baseline.json to arm the gate"
+                );
+            }
+            for label in &gate.new_jobs {
+                eprintln!("[gate] new scenario (not in baseline): {label}");
+            }
+            if gate.passed() {
+                eprintln!(
+                    "[gate] OK — {} scenario(s), {} metric(s) within tolerance",
+                    gate.compared_jobs, gate.compared_metrics
+                );
+            } else {
+                eprintln!("[gate] FAILED — {} breach(es):", gate.breaches.len());
+                for b in &gate.breaches {
+                    eprintln!("[gate]   {b}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("[gate] {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    // Comparator-only mode: gate an existing report without re-running
+    // (CI uses this for the gate self-test).
+    if let Some(cur_path) = args.get("compare-only") {
+        let Some(base_path) = args.get("check-against") else {
+            eprintln!("fase sweep: --compare-only requires --check-against");
+            std::process::exit(2);
+        };
+        let current = load_json(cur_path);
+        let baseline = load_json(base_path);
+        run_gate(&current, &baseline);
+        return;
+    }
+
+    let spec_arg = args.str_or("spec", "ci-smoke");
+    let spec = match fase::sweep::builtin(&spec_arg) {
+        Some(s) => s,
+        None => {
+            let path = std::path::Path::new(&spec_arg);
+            let cfg = fase::util::config::Config::load(path).unwrap_or_else(|e| {
+                eprintln!("fase sweep: no built-in spec and cannot load file {spec_arg:?}: {e}");
+                std::process::exit(2);
+            });
+            let fallback = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "sweep".into());
+            fase::sweep::SweepSpec::from_config(&cfg, &fallback).unwrap_or_else(|e| {
+                eprintln!("fase sweep: {spec_arg}: {e}");
+                std::process::exit(2);
+            })
+        }
+    };
+    let filter = args.get("filter").map(str::to_string);
+    if args.flag("list") {
+        for job in spec.expand(filter.as_deref()) {
+            println!("{}", job.label());
+        }
+        return;
+    }
+    let default_jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = args.usize_or("jobs", default_jobs).max(1);
+    let quiet = args.flag("quiet");
+    let sweep = fase::sweep::run_sweep(&spec, workers, filter.as_deref(), !quiet);
+    if sweep.outcomes.is_empty() {
+        eprintln!("fase sweep: no jobs matched (spec {}, filter {filter:?})", spec.name);
+        std::process::exit(2);
+    }
+
+    if !quiet {
+        let mut tab = fase::bench_support::Table::new(&[
+            "scenario", "status", "ticks", "instret", "bytes", "score",
+        ]);
+        for o in &sweep.outcomes {
+            tab.row(vec![
+                o.job.label(),
+                if o.ok() { "ok".into() } else { "ERROR".into() },
+                o.result.ticks.to_string(),
+                o.result.instret.to_string(),
+                o.result.total_bytes.to_string(),
+                o.score.map(|s| format!("{s:.5}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        tab.print(&format!(
+            "sweep {} ({} job(s), {} worker(s))",
+            sweep.name,
+            sweep.outcomes.len(),
+            workers
+        ));
+    }
+
+    let doc = sweep.to_json();
+    if let Some(path) = args.get("out") {
+        let text = doc.to_string_pretty();
+        if let Err(e) = std::fs::write(path, &text) {
+            eprintln!("fase sweep: cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("[sweep] report written to {path}");
+    }
+
+    let n_err = sweep.errors().len();
+    for o in sweep.errors() {
+        eprintln!(
+            "[sweep] FAILED {}: {}",
+            o.job.label(),
+            o.result.error.as_deref().unwrap_or("?")
+        );
+    }
+    if let Some(base_path) = args.get("check-against") {
+        let baseline = load_json(base_path);
+        run_gate(&doc, &baseline);
+    }
+    std::process::exit(if n_err > 0 { 1 } else { 0 });
 }
 
 fn cmd_info(args: &Args) {

@@ -110,6 +110,16 @@ impl StallBreakdown {
     pub fn total(&self) -> u64 {
         self.controller_ticks + self.channel_ticks + self.runtime_ticks
     }
+
+    /// Stable JSON form for sweep reports (member order is fixed).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(vec![
+            ("controller_ticks".into(), Json::u64(self.controller_ticks)),
+            ("channel_ticks".into(), Json::u64(self.channel_ticks)),
+            ("runtime_ticks".into(), Json::u64(self.runtime_ticks)),
+        ])
+    }
 }
 
 /// HTP batching-layer accounting: how many wire round-trips were frames,

@@ -1,0 +1,292 @@
+//! One expanded sweep scenario and its execution.
+
+use super::spec::{Arm, SweepSpec, WorkloadKind, WorkloadSpec};
+use crate::baseline::{run_pk, run_pk_exe, PkConfig};
+use crate::coordinator::runtime::{run_elf, run_exe, Mode, RunConfig, RunResult};
+use crate::coordinator::target::{HostLatency, KernelCosts};
+use crate::rv64::hart::CoreModel;
+use std::path::PathBuf;
+
+/// FNV-1a over the scenario label — the stable identity hash that seeds
+/// each job's independent PRNG stream.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One (workload, arm, harts, core, seed) scenario.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Dense position in the (possibly filtered) expansion — report
+    /// order. Scenario *identity* for baselines is [`label`](Job::label).
+    pub id: usize,
+    pub workload: WorkloadSpec,
+    pub arm: Arm,
+    pub harts: usize,
+    pub core: String,
+    /// Seed-axis value (replicate index).
+    pub seed: u64,
+    /// Derived kernel-PRNG base seed: `spec.seed ^ fnv1a(label)`. The
+    /// label already encodes every axis including the seed-axis value, so
+    /// each scenario owns an independent stream that does not depend on
+    /// expansion position, filtering, or worker completion order.
+    pub prng_seed: u64,
+    pub max_target_seconds: f64,
+    pub dram_size: u64,
+}
+
+impl Job {
+    pub fn new(
+        id: usize,
+        workload: WorkloadSpec,
+        arm: Arm,
+        harts: usize,
+        core: String,
+        seed: u64,
+        spec: &SweepSpec,
+    ) -> Job {
+        let mut job = Job {
+            id,
+            workload,
+            arm,
+            harts,
+            core,
+            seed,
+            prng_seed: 0,
+            max_target_seconds: spec.max_target_seconds,
+            dram_size: spec.dram_size,
+        };
+        job.prng_seed = spec.seed ^ fnv1a(&job.label());
+        job
+    }
+
+    /// Stable scenario identity, the join key for baseline comparisons:
+    /// `workload|arm|<harts>c|core|s<seed>`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}|{}|{}c|{}|s{}",
+            self.workload.name,
+            self.arm.label(),
+            self.harts,
+            self.core,
+            self.seed
+        )
+    }
+
+    fn mode(&self) -> Mode {
+        match &self.arm {
+            Arm::Fase { transport, hfutex, ideal_latency } => Mode::Fase {
+                transport: transport.clone(),
+                hfutex: *hfutex,
+                latency: if *ideal_latency { HostLatency::zero() } else { HostLatency::default() },
+            },
+            Arm::FullSys => Mode::FullSys { costs: KernelCosts::default() },
+            Arm::Pk { .. } => unreachable!("PK arms run through run_pk, not RunConfig"),
+        }
+    }
+
+    /// RunConfig for the non-PK arms. Synthetic workloads load lazily
+    /// with a small fault-preload window so they exercise the page-fault
+    /// path even at tiny sizes.
+    fn run_config(&self, core: CoreModel, synth: bool) -> RunConfig {
+        RunConfig {
+            mode: self.mode(),
+            n_cpus: self.harts,
+            dram_size: self.dram_size,
+            core,
+            preload_pages: if synth { 4 } else { 16 },
+            preload_image: !synth,
+            echo_stdout: false,
+            guest_root: PathBuf::from("."),
+            max_target_seconds: self.max_target_seconds,
+            collect_windows: false,
+            htp_batching: true,
+            seed: self.prng_seed,
+        }
+    }
+
+    fn pk_config(&self, core: CoreModel, sim_threads: usize) -> PkConfig {
+        PkConfig {
+            core,
+            sim_threads,
+            dram_size: self.dram_size,
+            seed: self.prng_seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// The outcome of one job: the full in-memory [`RunResult`] (benches
+/// render figure tables from it) plus the parsed guest score, if the
+/// workload defines one.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub job: Job,
+    pub result: RunResult,
+    pub score: Option<f64>,
+}
+
+impl JobOutcome {
+    pub fn ok(&self) -> bool {
+        self.result.error.is_none()
+    }
+}
+
+fn error_outcome(job: &Job, msg: String) -> JobOutcome {
+    JobOutcome { job: job.clone(), result: RunResult::empty_with_error(msg), score: None }
+}
+
+/// Locate a cross-compiled guest ELF without exiting the process (the
+/// orchestrator records missing artifacts as job errors).
+pub fn find_guest_elf(name: &str) -> Result<PathBuf, String> {
+    let p = PathBuf::from(format!("artifacts/guests/{name}.elf"));
+    if p.exists() {
+        Ok(p)
+    } else {
+        Err(format!("missing {} — run `make guests` first", p.display()))
+    }
+}
+
+/// Execute one scenario to completion. Never panics on workload-level
+/// problems: bad cores, missing guest ELFs and guest faults all come back
+/// as error outcomes so one broken cell cannot sink a whole sweep.
+pub fn run_job(job: &Job) -> JobOutcome {
+    let Some(core) = CoreModel::by_name(&job.core) else {
+        return error_outcome(job, format!("unknown core model {:?}", job.core));
+    };
+    match &job.workload.kind {
+        WorkloadKind::Synth(kind) => {
+            let exe = super::synth::build(*kind);
+            let argv = vec![job.workload.name.clone()];
+            let result = match &job.arm {
+                Arm::Pk { sim_threads } => run_pk_exe(
+                    job.pk_config(core, *sim_threads),
+                    &exe,
+                    &argv,
+                    &[],
+                    job.max_target_seconds,
+                ),
+                _ => run_exe(job.run_config(core, true), &exe, &argv, &[]),
+            };
+            JobOutcome { job: job.clone(), result, score: None }
+        }
+        WorkloadKind::Gapbs { bench, scale, trials } => {
+            let elf = match find_guest_elf(bench) {
+                Ok(p) => p,
+                Err(e) => return error_outcome(job, e),
+            };
+            let argv = vec![
+                bench.clone(),
+                scale.to_string(),
+                job.harts.to_string(),
+                trials.to_string(),
+            ];
+            run_guest(job, core, &elf, argv)
+        }
+        WorkloadKind::Coremark { iters } => {
+            let elf = match find_guest_elf("coremark") {
+                Ok(p) => p,
+                Err(e) => return error_outcome(job, e),
+            };
+            let argv = vec!["coremark".to_string(), iters.to_string()];
+            run_guest(job, core, &elf, argv)
+        }
+    }
+}
+
+fn run_guest(job: &Job, core: CoreModel, elf: &std::path::Path, argv: Vec<String>) -> JobOutcome {
+    let result = match &job.arm {
+        Arm::Pk { sim_threads } => run_pk(
+            job.pk_config(core, *sim_threads),
+            elf,
+            &argv,
+            &[],
+            job.max_target_seconds,
+        ),
+        _ => run_elf(job.run_config(core, false), elf, &argv, &[]),
+    };
+    let score = match job.workload.metric_prefix() {
+        Some(prefix) if result.error.is_none() => result.parse_metric(prefix),
+        _ => None,
+    };
+    JobOutcome { job: job.clone(), result, score }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::SynthKind;
+
+    fn spin_job(arm: Arm, harts: usize) -> Job {
+        let mut spec = SweepSpec::new("t");
+        spec.dram_size = 64 << 20;
+        spec.max_target_seconds = 30.0;
+        Job::new(
+            0,
+            WorkloadSpec::synth(SynthKind::Spin { iters: 500 }),
+            arm,
+            harts,
+            "rocket".into(),
+            0,
+            &spec,
+        )
+    }
+
+    #[test]
+    fn label_is_stable_identity() {
+        let a = spin_job(Arm::fase_uart(921_600), 2);
+        assert_eq!(a.label(), "spin:500|fase@uart:921600|2c|rocket|s0");
+        // prng seed depends only on (spec seed, label)
+        let b = spin_job(Arm::fase_uart(921_600), 2);
+        assert_eq!(a.prng_seed, b.prng_seed);
+        assert_ne!(a.prng_seed, spin_job(Arm::fase_uart(921_600), 4).prng_seed);
+        assert_ne!(a.prng_seed, spin_job(Arm::FullSys, 2).prng_seed);
+    }
+
+    #[test]
+    fn unknown_core_is_an_error_outcome_not_a_panic() {
+        let mut j = spin_job(Arm::FullSys, 1);
+        j.core = "warp9".into();
+        let out = run_job(&j);
+        assert!(!out.ok());
+        assert!(out.result.error.as_deref().unwrap().contains("unknown core"));
+    }
+
+    #[test]
+    fn missing_guest_elf_is_an_error_outcome() {
+        let mut spec = SweepSpec::new("t");
+        spec.dram_size = 64 << 20;
+        let j = Job::new(
+            0,
+            WorkloadSpec::gapbs("no_such_bench", 4, 1),
+            Arm::FullSys,
+            1,
+            "rocket".into(),
+            0,
+            &spec,
+        );
+        let out = run_job(&j);
+        assert!(!out.ok());
+        assert!(out.result.error.as_deref().unwrap().contains("make guests"));
+    }
+
+    #[test]
+    fn synth_spin_runs_under_fase_and_fullsys() {
+        for arm in [Arm::Fase {
+            transport: crate::fase::transport::TransportSpec::Loopback,
+            hfutex: true,
+            ideal_latency: false,
+        }, Arm::FullSys]
+        {
+            let out = run_job(&spin_job(arm, 1));
+            assert_eq!(out.result.error, None, "{:?}", out.result.error);
+            assert_eq!(out.result.exit_code, 0);
+            assert!(out.result.instret > 500, "spin must retire its loop");
+            assert!(out.result.ticks > 0);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Scenario-matrix sweep orchestrator (DESIGN.md §Sweep).
+//!
+//! The paper's evaluation is a pile of sweeps — workload × transport ×
+//! hart-count × engine grids (Figs 12–19, Table IV). This module turns
+//! each of them into data: a declarative [`SweepSpec`] expands into
+//! independent jobs, a worker pool runs them in parallel, and the
+//! outcomes aggregate into a stable, versioned JSON report that CI gates
+//! on (`fase sweep --spec ci-smoke --check-against ci/baseline.json`).
+//!
+//! Determinism contract: the same spec + seed produces a byte-identical
+//! report at any `--jobs` count and under any `--filter`, because every
+//! scenario derives its own PRNG stream from its stable label and results
+//! are ordered by job id, never completion order.
+
+pub mod job;
+pub mod pool;
+pub mod report;
+pub mod spec;
+pub mod synth;
+
+pub use job::{run_job, Job, JobOutcome};
+pub use report::{check_against, Gate};
+pub use spec::{Arm, SweepSpec, SynthKind, WorkloadKind, WorkloadSpec};
+
+use crate::util::json::Json;
+
+/// The CI smoke matrix: synthetic workloads only (no cross-compiled
+/// guests on CI runners), tiny sizes, loopback + UART transports, 1 and
+/// 4 harts. Doubles as the reference example of the spec file format.
+pub const CI_SMOKE: &str = "\
+# ci-smoke — the CI bench-smoke + perf-gate matrix (see DESIGN.md §Sweep)
+[sweep]
+name = ci-smoke
+seed = 0xFA5E
+max_seconds = 120
+dram = 256m
+workloads = spin:4000, storm:64, memtouch:48
+arms = fase@loopback, fase@uart:921600, fullsys
+harts = 1, 4
+cores = rocket
+seeds = 0
+";
+
+/// Resolve a built-in spec by name.
+pub fn builtin(name: &str) -> Option<SweepSpec> {
+    match name {
+        "ci-smoke" => Some(SweepSpec::parse(CI_SMOKE, "ci-smoke").expect("ci-smoke spec parses")),
+        _ => None,
+    }
+}
+
+/// A completed sweep: ordered outcomes plus identity for the report.
+pub struct SweepOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub outcomes: Vec<JobOutcome>,
+}
+
+impl SweepOutcome {
+    pub fn to_json(&self) -> Json {
+        report::report_json(&self.name, self.seed, &self.outcomes)
+    }
+
+    /// Look up one scenario cell (first match across cores/seed axes —
+    /// the common case of single-core, single-seed figure sweeps).
+    pub fn get(&self, workload: &str, arm_label: &str, harts: usize) -> Option<&JobOutcome> {
+        self.outcomes.iter().find(|o| {
+            o.job.workload.name == workload
+                && o.job.arm.label() == arm_label
+                && o.job.harts == harts
+        })
+    }
+
+    /// All error outcomes (empty on a clean sweep).
+    pub fn errors(&self) -> Vec<&JobOutcome> {
+        self.outcomes.iter().filter(|o| !o.ok()).collect()
+    }
+}
+
+/// Expand and execute a spec on `workers` threads.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    workers: usize,
+    filter: Option<&str>,
+    progress: bool,
+) -> SweepOutcome {
+    let jobs = spec.expand(filter);
+    let outcomes = pool::run_jobs(&jobs, workers, progress);
+    SweepOutcome { name: spec.name.clone(), seed: spec.seed, outcomes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci_smoke_builtin_parses_and_expands() {
+        let spec = builtin("ci-smoke").unwrap();
+        assert_eq!(spec.name, "ci-smoke");
+        assert_eq!(spec.seed, 0xFA5E);
+        let jobs = spec.expand(None);
+        // 3 workloads x 3 arms x 2 hart counts
+        assert_eq!(jobs.len(), 18);
+        assert!(builtin("no-such-spec").is_none());
+    }
+
+    #[test]
+    fn sweep_outcome_lookup() {
+        let mut spec = SweepSpec::new("t");
+        spec.dram_size = 64 << 20;
+        spec.max_target_seconds = 30.0;
+        spec.workloads = vec![WorkloadSpec::synth(SynthKind::Spin { iters: 50 })];
+        spec.arms = vec![Arm::FullSys];
+        spec.harts = vec![1, 2];
+        let out = run_sweep(&spec, 2, None, false);
+        assert_eq!(out.outcomes.len(), 2);
+        assert!(out.get("spin:50", "fullsys", 2).is_some());
+        assert!(out.get("spin:50", "fullsys", 3).is_none());
+        assert!(out.errors().is_empty());
+    }
+}

@@ -1,0 +1,398 @@
+//! Machine-readable sweep reports and the perf-regression comparator.
+//!
+//! The report is versioned (`"schema": 1`) and *byte-stable*: member
+//! order is fixed, jobs are ordered by id, and every value is a pure
+//! function of (spec, seed) — wall-clock never appears. `ci/baseline.json`
+//! is simply an earlier report (plus optionally hand-tuned tolerances);
+//! the gate compares scenario-by-scenario and fails on drift beyond the
+//! per-metric tolerance.
+
+use super::job::JobOutcome;
+use crate::util::json::Json;
+
+/// Report schema version; bump when the structure changes shape.
+pub const SCHEMA: i64 = 1;
+
+/// Default per-metric relative tolerances, embedded in every report so a
+/// committed baseline carries its own gate configuration (editable by
+/// hand when a metric needs more slack).
+fn default_tolerances() -> Json {
+    Json::Obj(vec![
+        // Relative drift allowed for any metric without its own entry.
+        ("default_rel".into(), Json::Float(0.05)),
+        // Guest-reported scores and modeled cycle counts gate tighter:
+        // they are the paper's headline numbers.
+        ("score".into(), Json::Float(0.02)),
+        ("ticks".into(), Json::Float(0.02)),
+        ("instret".into(), Json::Float(0.02)),
+        // Absolute drift allowed on validation-error entries (they are
+        // already relative quantities).
+        ("validation_abs".into(), Json::Float(0.02)),
+    ])
+}
+
+fn job_json(o: &JobOutcome) -> Json {
+    let mut m: Vec<(String, Json)> = vec![
+        ("label".into(), Json::str(o.job.label())),
+        ("workload".into(), Json::str(&o.job.workload.name)),
+        ("arm".into(), Json::str(o.job.arm.label())),
+        ("engine".into(), Json::str(o.job.arm.engine())),
+        ("harts".into(), Json::u64(o.job.harts as u64)),
+        ("core".into(), Json::str(&o.job.core)),
+        ("seed".into(), Json::u64(o.job.seed)),
+        (
+            "status".into(),
+            Json::str(if o.ok() { "ok" } else { "error" }),
+        ),
+    ];
+    if let Some(err) = &o.result.error {
+        m.push(("error".into(), Json::str(err)));
+    } else {
+        m.push(("exit_code".into(), Json::Int(o.result.exit_code.into())));
+        m.push(("metrics".into(), o.result.metrics_json(o.score)));
+    }
+    Json::Obj(m)
+}
+
+/// Derived validation-error entries: each non-FullSys arm is compared to
+/// the FullSys baseline of the same (workload, harts, core, seed) cell
+/// when one exists — the paper's accuracy axis, machine-checkable.
+fn validation_json(outcomes: &[JobOutcome]) -> Json {
+    let cell = |o: &JobOutcome| {
+        format!("{}|{}c|{}|s{}", o.job.workload.name, o.job.harts, o.job.core, o.job.seed)
+    };
+    let mut entries = Vec::new();
+    for o in outcomes {
+        if !o.ok() || matches!(o.job.arm, super::spec::Arm::FullSys) {
+            continue;
+        }
+        let Some(base) = outcomes.iter().find(|b| {
+            matches!(b.job.arm, super::spec::Arm::FullSys) && b.ok() && cell(b) == cell(o)
+        }) else {
+            continue;
+        };
+        let (metric, se, fs) = match (o.score, base.score) {
+            (Some(se), Some(fs)) => ("score", se, fs),
+            _ => ("ticks", o.result.ticks as f64, base.result.ticks as f64),
+        };
+        if fs == 0.0 {
+            continue;
+        }
+        entries.push(Json::Obj(vec![
+            ("label".into(), Json::str(o.job.label())),
+            ("metric".into(), Json::str(metric)),
+            ("baseline_arm".into(), Json::str("fullsys")),
+            ("err".into(), Json::f64((se - fs) / fs)),
+        ]));
+    }
+    Json::Arr(entries)
+}
+
+/// Assemble the full report document.
+pub fn report_json(sweep_name: &str, seed: u64, outcomes: &[JobOutcome]) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::Int(SCHEMA)),
+        ("sweep".into(), Json::str(sweep_name)),
+        ("seed".into(), Json::u64(seed)),
+        ("tolerances".into(), default_tolerances()),
+        ("jobs".into(), Json::Arr(outcomes.iter().map(job_json).collect())),
+        ("validation".into(), validation_json(outcomes)),
+    ])
+}
+
+/// Outcome of a gate comparison.
+#[derive(Debug)]
+pub struct Gate {
+    /// Human-readable breach descriptions; empty means the gate passed.
+    pub breaches: Vec<String>,
+    pub compared_jobs: usize,
+    pub compared_metrics: usize,
+    /// Labels present in the current report but not the baseline
+    /// (informational — new scenarios are not a regression).
+    pub new_jobs: Vec<String>,
+}
+
+impl Gate {
+    pub fn passed(&self) -> bool {
+        self.breaches.is_empty()
+    }
+}
+
+/// Flatten nested metric objects/arrays into dotted numeric leaves
+/// (`stall.channel_ticks`, `uticks[0]`, ...).
+fn flatten(prefix: &str, j: &Json, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Obj(members) => {
+            for (k, v) in members {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(&p, v, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                flatten(&format!("{prefix}[{i}]"), v, out);
+            }
+        }
+        _ => {
+            if let Some(v) = j.as_f64() {
+                out.push((prefix.to_string(), v));
+            }
+        }
+    }
+}
+
+/// Tolerance for a metric path: exact path entry, then its leaf name,
+/// then `default_rel`.
+fn tolerance(tols: Option<&Json>, path: &str) -> f64 {
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    let leaf = leaf.split('[').next().unwrap_or(leaf);
+    if let Some(t) = tols {
+        for key in [path, leaf, "default_rel"] {
+            if let Some(v) = t.get(key).and_then(|v| v.as_f64()) {
+                return v;
+            }
+        }
+    }
+    0.05
+}
+
+/// Compare `current` against `baseline`, job by job. Every scenario and
+/// numeric metric present in the baseline must exist in the current
+/// report and sit within tolerance; scenarios only present in the
+/// current report are reported as new, not failed.
+pub fn check_against(current: &Json, baseline: &Json) -> Result<Gate, String> {
+    for (doc, name) in [(current, "current report"), (baseline, "baseline")] {
+        match doc.get("schema").and_then(|s| s.as_f64()) {
+            Some(v) if v == SCHEMA as f64 => {}
+            Some(v) => return Err(format!("{name}: unsupported schema {v}")),
+            None => return Err(format!("{name}: missing \"schema\" field")),
+        }
+    }
+    let tols = baseline.get("tolerances");
+    let empty: Vec<Json> = Vec::new();
+    fn jobs_of<'a>(doc: &str, j: &'a Json) -> Result<&'a [Json], String> {
+        match j.get("jobs") {
+            Some(Json::Arr(v)) => Ok(v),
+            None => Err(format!("{doc}: missing \"jobs\" array")),
+            Some(_) => Err(format!("{doc}: \"jobs\" is not an array")),
+        }
+    }
+    let cur_jobs = jobs_of("current report", current)?;
+    let base_jobs = jobs_of("baseline", baseline)?;
+    let label_of = |j: &Json| j.get("label").and_then(|l| l.as_str()).map(str::to_string);
+
+    let mut gate = Gate {
+        breaches: Vec::new(),
+        compared_jobs: 0,
+        compared_metrics: 0,
+        new_jobs: Vec::new(),
+    };
+
+    for bj in base_jobs {
+        let Some(label) = label_of(bj) else {
+            gate.breaches.push("baseline job without a label".into());
+            continue;
+        };
+        let Some(cj) = cur_jobs.iter().find(|c| label_of(c).as_deref() == Some(&label)) else {
+            gate.breaches.push(format!("{label}: scenario missing from current report"));
+            continue;
+        };
+        gate.compared_jobs += 1;
+        let status = |j: &Json| j.get("status").and_then(|s| s.as_str()).unwrap_or("?").to_string();
+        let (bs, cs) = (status(bj), status(cj));
+        if bs != cs {
+            gate.breaches.push(format!("{label}: status changed {bs} -> {cs}"));
+            continue;
+        }
+        if bs != "ok" {
+            continue; // both errored; nothing numeric to gate
+        }
+        let exit = |j: &Json| j.get("exit_code").and_then(|v| v.as_f64());
+        if exit(bj) != exit(cj) {
+            gate.breaches.push(format!(
+                "{label}: exit code changed {:?} -> {:?}",
+                exit(bj),
+                exit(cj)
+            ));
+        }
+        let mut bm = Vec::new();
+        flatten("", bj.get("metrics").unwrap_or(&Json::Null), &mut bm);
+        let mut cm = Vec::new();
+        flatten("", cj.get("metrics").unwrap_or(&Json::Null), &mut cm);
+        for (path, bv) in &bm {
+            let Some((_, cv)) = cm.iter().find(|(p, _)| p == path) else {
+                gate.breaches.push(format!("{label}: metric {path} missing from current report"));
+                continue;
+            };
+            gate.compared_metrics += 1;
+            let tol = tolerance(tols, path);
+            let drift = if *bv == 0.0 {
+                if *cv == 0.0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                (cv - bv).abs() / bv.abs()
+            };
+            if drift > tol {
+                gate.breaches.push(format!(
+                    "{label}: {path} drifted {:.2}% (baseline {bv}, current {cv}, tolerance {:.2}%)",
+                    drift * 100.0,
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+
+    // Validation-error entries gate on absolute drift.
+    let vabs = tolerance(tols, "validation_abs");
+    let base_val = baseline.get("validation").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let cur_val = current.get("validation").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let key = |e: &Json| {
+        Some((
+            e.get("label")?.as_str()?.to_string(),
+            e.get("metric")?.as_str()?.to_string(),
+        ))
+    };
+    for be in base_val {
+        let Some(k) = key(be) else { continue };
+        let Some(ce) = cur_val.iter().find(|c| key(c).as_ref() == Some(&k)) else {
+            gate.breaches
+                .push(format!("{}: validation entry ({}) missing from current report", k.0, k.1));
+            continue;
+        };
+        let (b, c) = (
+            be.get("err").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            ce.get("err").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+        gate.compared_metrics += 1;
+        if (c - b).abs() > vabs {
+            gate.breaches.push(format!(
+                "{}: validation error ({}) drifted from {b:.4} to {c:.4} (tolerance ±{vabs})",
+                k.0, k.1
+            ));
+        }
+    }
+
+    for cj in cur_jobs {
+        if let Some(label) = label_of(cj) {
+            if !base_jobs.iter().any(|b| label_of(b).as_deref() == Some(&label)) {
+                gate.new_jobs.push(label);
+            }
+        }
+    }
+    Ok(gate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::{Arm, SweepSpec, SynthKind, WorkloadSpec};
+
+    fn tiny_outcomes() -> Vec<JobOutcome> {
+        let mut spec = SweepSpec::new("report-test");
+        spec.dram_size = 64 << 20;
+        spec.max_target_seconds = 30.0;
+        spec.workloads = vec![WorkloadSpec::synth(SynthKind::Storm { calls: 4 })];
+        spec.arms = vec![
+            Arm::FullSys,
+            Arm::Fase {
+                transport: crate::fase::transport::TransportSpec::Loopback,
+                hfutex: true,
+                ideal_latency: false,
+            },
+        ];
+        super::super::pool::run_jobs(&spec.expand(None), 2, false)
+    }
+
+    #[test]
+    fn report_has_schema_jobs_and_validation() {
+        let outcomes = tiny_outcomes();
+        let r = report_json("report-test", 7, &outcomes);
+        assert_eq!(r.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(r.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+        // one fase arm vs the fullsys baseline -> one validation entry
+        let val = r.get("validation").unwrap().as_arr().unwrap();
+        assert_eq!(val.len(), 1);
+        assert_eq!(val[0].get("metric").unwrap().as_str(), Some("ticks"));
+        assert!(val[0].get("err").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn identical_reports_pass_the_gate() {
+        let outcomes = tiny_outcomes();
+        let r = report_json("report-test", 7, &outcomes);
+        let gate = check_against(&r, &r).unwrap();
+        assert!(gate.passed(), "{:?}", gate.breaches);
+        assert_eq!(gate.compared_jobs, 2);
+        assert!(gate.compared_metrics > 10);
+        assert!(gate.new_jobs.is_empty());
+    }
+
+    #[test]
+    fn perturbed_metric_breaches_the_gate() {
+        let outcomes = tiny_outcomes();
+        let baseline = report_json("report-test", 7, &outcomes);
+        // Perturb one job's tick count well past the 2% tolerance.
+        let mut current = baseline.clone();
+        if let Json::Obj(members) = &mut current {
+            let jobs = members.iter_mut().find(|(k, _)| k == "jobs").unwrap();
+            if let Json::Arr(list) = &mut jobs.1 {
+                if let Json::Obj(job) = &mut list[0] {
+                    let metrics = job.iter_mut().find(|(k, _)| k == "metrics").unwrap();
+                    if let Json::Obj(ms) = &mut metrics.1 {
+                        let ticks = ms.iter_mut().find(|(k, _)| k == "ticks").unwrap();
+                        let old = ticks.1.as_f64().unwrap();
+                        ticks.1 = Json::f64(old * 1.5 + 1000.0);
+                    }
+                }
+            }
+        }
+        let gate = check_against(&current, &baseline).unwrap();
+        assert!(!gate.passed());
+        assert!(
+            gate.breaches.iter().any(|b| b.contains("ticks drifted")),
+            "{:?}",
+            gate.breaches
+        );
+    }
+
+    #[test]
+    fn missing_scenario_breaches_new_scenario_does_not() {
+        let outcomes = tiny_outcomes();
+        let full = report_json("report-test", 7, &outcomes);
+        let one = report_json("report-test", 7, &outcomes[..1]);
+        // Baseline has both, current only one -> breach.
+        let gate = check_against(&one, &full).unwrap();
+        assert!(!gate.passed());
+        // Baseline has one, current both -> new job, no breach.
+        let gate = check_against(&full, &one).unwrap();
+        assert!(gate.passed(), "{:?}", gate.breaches);
+        assert_eq!(gate.new_jobs.len(), 1);
+    }
+
+    #[test]
+    fn empty_bootstrap_baseline_passes() {
+        let outcomes = tiny_outcomes();
+        let current = report_json("report-test", 7, &outcomes);
+        let bootstrap = crate::util::json::parse(
+            "{\"schema\": 1, \"sweep\": \"report-test\", \"jobs\": [], \"validation\": []}",
+        )
+        .unwrap();
+        let gate = check_against(&current, &bootstrap).unwrap();
+        assert!(gate.passed());
+        assert_eq!(gate.compared_jobs, 0);
+        assert_eq!(gate.new_jobs.len(), 2);
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let doc = crate::util::json::parse("{\"schema\": 2, \"jobs\": []}").unwrap();
+        let ok = crate::util::json::parse("{\"schema\": 1, \"jobs\": []}").unwrap();
+        assert!(check_against(&doc, &ok).is_err());
+        assert!(check_against(&ok, &doc).is_err());
+        let none = crate::util::json::parse("{\"jobs\": []}").unwrap();
+        assert!(check_against(&ok, &none).is_err());
+    }
+}

@@ -1,0 +1,406 @@
+//! Declarative sweep specifications: the scenario matrix (workloads ×
+//! arms × hart counts × cores × seeds) and its expansion into jobs.
+//!
+//! A spec is either built in code (the figure benches), named (built-ins
+//! like `ci-smoke`), or loaded from a config file in the crate's
+//! INI-subset format (see [`SweepSpec::from_config`]).
+
+use crate::fase::transport::TransportSpec;
+use crate::util::config::Config;
+
+/// One experimental arm: which stack executes the scenario. The engine
+/// follows from the arm — FASE and the full-system baseline run on the
+/// fast quantum-stepped engine, PK on the cycle-stepped detailed engine.
+#[derive(Debug, Clone)]
+pub enum Arm {
+    Fase { transport: TransportSpec, hfutex: bool, ideal_latency: bool },
+    FullSys,
+    Pk { sim_threads: usize },
+}
+
+impl Arm {
+    /// The paper's standard FASE arm at a given UART baud rate.
+    pub fn fase_uart(baud: u64) -> Arm {
+        Arm::Fase { transport: TransportSpec::uart(baud), hfutex: true, ideal_latency: false }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Arm::Fase { transport, hfutex, ideal_latency } => format!(
+                "fase@{}{}{}",
+                transport.label(),
+                if *hfutex { "" } else { "-nohf" },
+                if *ideal_latency { "-ideal" } else { "" }
+            ),
+            Arm::FullSys => "fullsys".into(),
+            Arm::Pk { sim_threads } => format!("pk-{sim_threads}t"),
+        }
+    }
+
+    /// Which execution engine this arm runs on.
+    pub fn engine(&self) -> &'static str {
+        match self {
+            Arm::Pk { .. } => "detailed",
+            _ => "fast",
+        }
+    }
+
+    /// Inverse of [`label`](Arm::label): `fullsys`, `pk-4t`,
+    /// `fase@uart:921600`, `fase@loopback-ideal`, `fase@xdma-nohf-ideal`.
+    pub fn parse(s: &str) -> Option<Arm> {
+        let s = s.trim();
+        if s == "fullsys" {
+            return Some(Arm::FullSys);
+        }
+        if let Some(rest) = s.strip_prefix("pk-") {
+            let n = rest.strip_suffix('t')?;
+            return n.parse::<usize>().ok().filter(|&n| n > 0).map(|sim_threads| Arm::Pk {
+                sim_threads,
+            });
+        }
+        let mut body = s.strip_prefix("fase@")?;
+        let mut hfutex = true;
+        let mut ideal_latency = false;
+        // Suffixes may appear in either order; strip until none match.
+        loop {
+            if let Some(b) = body.strip_suffix("-ideal") {
+                ideal_latency = true;
+                body = b;
+            } else if let Some(b) = body.strip_suffix("-nohf") {
+                hfutex = false;
+                body = b;
+            } else {
+                break;
+            }
+        }
+        TransportSpec::parse(body).map(|transport| Arm::Fase { transport, hfutex, ideal_latency })
+    }
+}
+
+/// Built-in synthetic workloads (assembled in memory, no guest ELF or
+/// cross-compiler needed — what makes the `ci-smoke` sweep self-contained).
+#[derive(Debug, Clone, Copy)]
+pub enum SynthKind {
+    /// Pure-compute countdown loop, then exit: `spin:ITERS`.
+    Spin { iters: u32 },
+    /// Syscall round-trip storm (getpid xN), then exit: `storm:CALLS`.
+    Storm { calls: u32 },
+    /// Touch one word per page across a BSS region (page-fault / PageSet
+    /// path), then exit: `memtouch:PAGES`.
+    MemTouch { pages: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub enum WorkloadKind {
+    /// GAPBS-style guest ELF (`artifacts/guests/<bench>.elf`), argv
+    /// `<bench> <scale> <threads> <trials>`, score line "Average Time".
+    Gapbs { bench: String, scale: u32, trials: u32 },
+    /// CoreMark guest ELF, argv `coremark <iters>`, score "Time per iter".
+    Coremark { iters: u32 },
+    Synth(SynthKind),
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Canonical parseable name, also the workload key in reports.
+    pub name: String,
+    pub kind: WorkloadKind,
+}
+
+impl WorkloadSpec {
+    pub fn gapbs(bench: &str, scale: u32, trials: u32) -> WorkloadSpec {
+        WorkloadSpec {
+            name: format!("gapbs:{bench}:{scale}:{trials}"),
+            kind: WorkloadKind::Gapbs { bench: bench.to_string(), scale, trials },
+        }
+    }
+
+    pub fn coremark(iters: u32) -> WorkloadSpec {
+        WorkloadSpec { name: format!("coremark:{iters}"), kind: WorkloadKind::Coremark { iters } }
+    }
+
+    pub fn synth(kind: SynthKind) -> WorkloadSpec {
+        let name = match kind {
+            SynthKind::Spin { iters } => format!("spin:{iters}"),
+            SynthKind::Storm { calls } => format!("storm:{calls}"),
+            SynthKind::MemTouch { pages } => format!("memtouch:{pages}"),
+        };
+        WorkloadSpec { name, kind: WorkloadKind::Synth(kind) }
+    }
+
+    /// The stdout line prefix holding the guest-reported score, if any.
+    pub fn metric_prefix(&self) -> Option<&'static str> {
+        match &self.kind {
+            WorkloadKind::Gapbs { .. } => Some("Average Time"),
+            WorkloadKind::Coremark { .. } => Some("Time per iter"),
+            WorkloadKind::Synth(_) => None,
+        }
+    }
+
+    /// Parse a workload atom: `spin:N`, `storm:N`, `memtouch:N`,
+    /// `coremark:N`, `gapbs:BENCH:SCALE[:TRIALS]`.
+    pub fn parse(s: &str) -> Option<WorkloadSpec> {
+        let s = s.trim();
+        let mut parts = s.split(':');
+        let head = parts.next()?;
+        let fields: Vec<&str> = parts.collect();
+        let one_u32 = |fields: &[&str]| -> Option<u32> {
+            match fields {
+                [v] => v.trim().parse().ok(),
+                _ => None,
+            }
+        };
+        match head {
+            "spin" => one_u32(&fields).map(|iters| WorkloadSpec::synth(SynthKind::Spin { iters })),
+            "storm" => {
+                one_u32(&fields).map(|calls| WorkloadSpec::synth(SynthKind::Storm { calls }))
+            }
+            "memtouch" => {
+                one_u32(&fields).map(|pages| WorkloadSpec::synth(SynthKind::MemTouch { pages }))
+            }
+            "coremark" => one_u32(&fields).map(WorkloadSpec::coremark),
+            "gapbs" => match fields.as_slice() {
+                [bench, scale] => {
+                    Some(WorkloadSpec::gapbs(bench.trim(), scale.trim().parse().ok()?, 2))
+                }
+                [bench, scale, trials] => Some(WorkloadSpec::gapbs(
+                    bench.trim(),
+                    scale.trim().parse().ok()?,
+                    trials.trim().parse().ok()?,
+                )),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+}
+
+/// The declarative scenario matrix. `expand` takes the cartesian product
+/// of all axes in a fixed order, so job ids and report order are stable.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Base seed; each job derives an independent PRNG stream from
+    /// (this, the seed-axis value, the scenario label) — see
+    /// [`Job::prng_seed`](super::job::Job).
+    pub seed: u64,
+    pub workloads: Vec<WorkloadSpec>,
+    pub arms: Vec<Arm>,
+    pub harts: Vec<usize>,
+    pub cores: Vec<String>,
+    /// Seed axis (replication with different randomness); `[0]` = one
+    /// replicate.
+    pub seeds: Vec<u64>,
+    pub max_target_seconds: f64,
+    pub dram_size: u64,
+}
+
+impl SweepSpec {
+    pub fn new(name: &str) -> SweepSpec {
+        SweepSpec {
+            name: name.to_string(),
+            seed: 0xFA5E,
+            workloads: Vec::new(),
+            arms: Vec::new(),
+            harts: vec![1],
+            cores: vec!["rocket".into()],
+            seeds: vec![0],
+            max_target_seconds: 3000.0,
+            dram_size: 1 << 31,
+        }
+    }
+
+    /// Expand the matrix into jobs, optionally keeping only scenarios
+    /// whose label contains `filter`. Filtering never changes a surviving
+    /// scenario's randomness or metrics (PRNG streams key off the stable
+    /// label, not the positional id), so filtered reports stay comparable
+    /// to full baselines.
+    pub fn expand(&self, filter: Option<&str>) -> Vec<super::job::Job> {
+        let mut jobs = Vec::new();
+        for w in &self.workloads {
+            for arm in &self.arms {
+                for &harts in &self.harts {
+                    for core in &self.cores {
+                        for &seed in &self.seeds {
+                            let job = super::job::Job::new(
+                                jobs.len(),
+                                w.clone(),
+                                arm.clone(),
+                                harts,
+                                core.clone(),
+                                seed,
+                                self,
+                            );
+                            if let Some(f) = filter {
+                                if !job.label().contains(f) {
+                                    continue;
+                                }
+                            }
+                            jobs.push(job);
+                        }
+                    }
+                }
+            }
+        }
+        // Re-number after filtering so report order is dense; identity
+        // for comparisons remains the label.
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.id = i;
+        }
+        jobs
+    }
+
+    /// Parse a spec from the INI-subset config format:
+    ///
+    /// ```text
+    /// [sweep]
+    /// name = ci-smoke
+    /// seed = 0xFA5E
+    /// max_seconds = 120
+    /// dram = 256m
+    /// workloads = spin:4000, storm:64, memtouch:48
+    /// arms = fase@loopback, fase@uart:921600, fullsys
+    /// harts = 1, 4
+    /// cores = rocket
+    /// seeds = 0
+    /// ```
+    pub fn from_config(cfg: &Config, fallback_name: &str) -> Result<SweepSpec, String> {
+        let sec = "sweep";
+        let mut spec = SweepSpec::new(&cfg.get(sec, "name").unwrap_or(fallback_name).to_string());
+        spec.seed = cfg.u64_or(sec, "seed", spec.seed);
+        spec.max_target_seconds = cfg.f64_or(sec, "max_seconds", spec.max_target_seconds);
+        spec.dram_size = cfg.u64_or(sec, "dram", spec.dram_size);
+        let workloads = cfg.list_or(sec, "workloads", &[]);
+        if workloads.is_empty() {
+            return Err("spec has no workloads".into());
+        }
+        spec.workloads = workloads
+            .iter()
+            .map(|w| WorkloadSpec::parse(w).ok_or_else(|| format!("bad workload {w:?}")))
+            .collect::<Result<_, _>>()?;
+        let arms = cfg.list_or(sec, "arms", &[]);
+        if arms.is_empty() {
+            return Err("spec has no arms".into());
+        }
+        spec.arms = arms
+            .iter()
+            .map(|a| Arm::parse(a).ok_or_else(|| format!("bad arm {a:?}")))
+            .collect::<Result<_, _>>()?;
+        let parse_nums = |key: &str, default: &[u64]| -> Result<Vec<u64>, String> {
+            let raw = cfg.list_or(sec, key, &[]);
+            if raw.is_empty() {
+                return Ok(default.to_vec());
+            }
+            raw.iter()
+                .map(|v| {
+                    crate::util::cli::parse_u64(v).ok_or_else(|| format!("bad {key} value {v:?}"))
+                })
+                .collect()
+        };
+        spec.harts = parse_nums("harts", &[1])?.into_iter().map(|v| v as usize).collect();
+        spec.seeds = parse_nums("seeds", &[0])?;
+        let cores = cfg.list_or(sec, "cores", &[]);
+        if !cores.is_empty() {
+            spec.cores = cores;
+        }
+        if spec.harts.iter().any(|&h| h == 0) {
+            return Err("harts must be >= 1".into());
+        }
+        Ok(spec)
+    }
+
+    /// Parse a spec from config-file text.
+    pub fn parse(text: &str, fallback_name: &str) -> Result<SweepSpec, String> {
+        let cfg = Config::parse(text).map_err(|e| e.to_string())?;
+        SweepSpec::from_config(&cfg, fallback_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_labels_round_trip() {
+        let arms = [
+            Arm::FullSys,
+            Arm::Pk { sim_threads: 4 },
+            Arm::fase_uart(921_600),
+            Arm::Fase { transport: TransportSpec::Xdma, hfutex: false, ideal_latency: false },
+            Arm::Fase { transport: TransportSpec::Loopback, hfutex: true, ideal_latency: true },
+            Arm::Fase {
+                transport: TransportSpec::uart(115_200),
+                hfutex: false,
+                ideal_latency: true,
+            },
+        ];
+        for arm in arms {
+            let label = arm.label();
+            let back = Arm::parse(&label).unwrap_or_else(|| panic!("parse {label}"));
+            assert_eq!(back.label(), label);
+            assert_eq!(back.engine(), arm.engine());
+        }
+        assert!(Arm::parse("pk-0t").is_none());
+        assert!(Arm::parse("fase@warp9").is_none());
+        assert!(Arm::parse("nonsense").is_none());
+    }
+
+    #[test]
+    fn workload_atoms_round_trip() {
+        for atom in ["spin:4000", "storm:64", "memtouch:48", "coremark:10", "gapbs:bfs:11:2"] {
+            let w = WorkloadSpec::parse(atom).unwrap_or_else(|| panic!("parse {atom}"));
+            assert_eq!(w.name, atom);
+        }
+        assert_eq!(WorkloadSpec::parse("gapbs:tc:9").unwrap().name, "gapbs:tc:9:2");
+        assert!(WorkloadSpec::parse("spin").is_none());
+        assert!(WorkloadSpec::parse("spin:x").is_none());
+        assert!(WorkloadSpec::parse("warp:1").is_none());
+    }
+
+    #[test]
+    fn spec_expansion_order_and_filter() {
+        let mut spec = SweepSpec::new("t");
+        spec.workloads =
+            vec![WorkloadSpec::parse("spin:10").unwrap(), WorkloadSpec::parse("storm:5").unwrap()];
+        spec.arms = vec![Arm::FullSys, Arm::fase_uart(921_600)];
+        spec.harts = vec![1, 2];
+        let all = spec.expand(None);
+        assert_eq!(all.len(), 8);
+        // workload-major, then arm, then harts
+        assert!(all[0].label().starts_with("spin:10|fullsys|1c"));
+        assert!(all[1].label().starts_with("spin:10|fullsys|2c"));
+        assert!(all[2].label().starts_with("spin:10|fase@uart:921600|1c"));
+        assert!(all[7].label().starts_with("storm:5|fase@uart:921600|2c"));
+        let ids: Vec<usize> = all.iter().map(|j| j.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+
+        // Filtering keeps labels and per-scenario PRNG seeds stable.
+        let filtered = spec.expand(Some("storm"));
+        assert_eq!(filtered.len(), 4);
+        assert_eq!(filtered[0].label(), all[4].label());
+        assert_eq!(filtered[0].prng_seed, all[4].prng_seed);
+        assert_eq!(filtered[0].id, 0);
+    }
+
+    #[test]
+    fn spec_parses_from_config_text() {
+        let spec = SweepSpec::parse(
+            "[sweep]\nname = demo\nseed = 0x10\nmax_seconds = 9\ndram = 64m\n\
+             workloads = spin:100, memtouch:8\narms = fase@loopback, fullsys\n\
+             harts = 1, 4\nseeds = 0, 1\n",
+            "fallback",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.seed, 0x10);
+        assert_eq!(spec.max_target_seconds, 9.0);
+        assert_eq!(spec.dram_size, 64 << 20);
+        assert_eq!(spec.workloads.len(), 2);
+        assert_eq!(spec.arms.len(), 2);
+        assert_eq!(spec.harts, vec![1, 4]);
+        assert_eq!(spec.seeds, vec![0, 1]);
+        assert_eq!(spec.expand(None).len(), 2 * 2 * 2 * 2);
+        assert!(SweepSpec::parse("[sweep]\narms = fullsys\n", "x").is_err());
+        assert!(SweepSpec::parse("[sweep]\nworkloads = spin:1\narms = zap\n", "x").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Synthetic guest workloads assembled in memory.
+//!
+//! CI runners have no RISC-V cross-compiler, so the `ci-smoke` sweep
+//! cannot depend on `make guests`. These tiny RV64 programs are encoded
+//! directly with [`crate::rv64::decode::encode`] (plus the few extra
+//! encodings below) into an [`Executable`] the loader maps like any ELF —
+//! they still travel the full stack: HTP image load, Redirect, ecall
+//! traps, page faults, remote syscall service and exit.
+
+use super::spec::SynthKind;
+use crate::elfio::consts::{PF_R, PF_W, PF_X};
+use crate::elfio::read::{Executable, Segment};
+use crate::rv64::decode::encode;
+
+const TEXT_VA: u64 = 0x10000;
+const DATA_VA: u64 = 0x100000;
+const PAGE: u64 = 4096;
+
+/// ecall
+const ECALL: u32 = 0x0000_0073;
+
+/// bne rs1, rs2, off (B-type; `off` is byte offset from this instruction).
+fn bne(rs1: u8, rs2: u8, off: i32) -> u32 {
+    debug_assert!(off % 2 == 0 && (-4096..4096).contains(&off));
+    let v = off as u32;
+    (((v >> 12) & 1) << 31)
+        | (((v >> 5) & 0x3f) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (1 << 12)
+        | (((v >> 1) & 0xf) << 8)
+        | (((v >> 11) & 1) << 7)
+        | 0x63
+}
+
+/// add rd, rs1, rs2
+fn add(rd: u8, rs1: u8, rs2: u8) -> u32 {
+    ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0x33
+}
+
+/// Load a 31-bit constant (lui+addi when it exceeds the addi range).
+fn li(code: &mut Vec<u32>, rd: u8, v: i64) {
+    debug_assert!((0..(1 << 31) - 2048).contains(&v));
+    if (-2048..2048).contains(&v) {
+        code.push(encode::addi(rd, 0, v as i32));
+        return;
+    }
+    let hi = (v + 0x800) >> 12;
+    let lo = (v - (hi << 12)) as i32;
+    code.push(encode::lui(rd, (hi as u32) & 0xf_ffff));
+    if lo != 0 {
+        code.push(encode::addi(rd, rd, lo));
+    }
+}
+
+/// exit_group(0)
+fn emit_exit(code: &mut Vec<u32>) {
+    code.push(encode::addi(10, 0, 0)); // a0 = 0
+    code.push(encode::addi(17, 0, 94)); // a7 = exit_group
+    code.push(ECALL);
+    code.push(encode::self_loop()); // never reached
+}
+
+/// Assemble one synthetic workload into a loadable in-memory executable.
+pub fn build(kind: SynthKind) -> Executable {
+    let mut code: Vec<u32> = Vec::new();
+    let mut data_pages = 0u64;
+    match kind {
+        SynthKind::Spin { iters } => {
+            // t0 = iters; do { t0 -= 1 } while (t0 != 0); exit
+            li(&mut code, 5, i64::from(iters.clamp(1, 1 << 30)));
+            code.push(encode::addi(5, 5, -1));
+            code.push(bne(5, 0, -4));
+            emit_exit(&mut code);
+        }
+        SynthKind::Storm { calls } => {
+            // t0 = calls; do { getpid(); t0 -= 1 } while (t0 != 0); exit
+            li(&mut code, 5, i64::from(calls.clamp(1, 1 << 20)));
+            code.push(encode::addi(17, 0, 172)); // a7 = getpid
+            code.push(ECALL);
+            code.push(encode::addi(5, 5, -1));
+            code.push(bne(5, 0, -12));
+            emit_exit(&mut code);
+        }
+        SynthKind::MemTouch { pages } => {
+            // One store per page across the BSS region, then exit.
+            let pages = u64::from(pages.clamp(1, 16 * 1024));
+            data_pages = pages;
+            code.push(encode::lui(6, (DATA_VA >> 12) as u32)); // t1 = buf
+            code.push(encode::lui(7, 1)); // t2 = 4096
+            li(&mut code, 5, pages as i64);
+            code.push(encode::sd(5, 6, 0));
+            code.push(add(6, 6, 7));
+            code.push(encode::addi(5, 5, -1));
+            code.push(bne(5, 0, -12));
+            emit_exit(&mut code);
+        }
+    }
+    let text: Vec<u8> = code.iter().flat_map(|w| w.to_le_bytes()).collect();
+    let mut segments = vec![Segment {
+        vaddr: TEXT_VA,
+        memsz: text.len() as u64,
+        flags: PF_R | PF_X,
+        data: text,
+    }];
+    if data_pages > 0 {
+        segments.push(Segment {
+            vaddr: DATA_VA,
+            memsz: data_pages * PAGE,
+            flags: PF_R | PF_W,
+            data: Vec::new(), // all-BSS: zero-filled on fault
+        });
+    }
+    Executable { entry: TEXT_VA, segments, symbols: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runtime::{run_exe, Mode, RunConfig};
+    use crate::coordinator::target::KernelCosts;
+
+    fn cfg() -> RunConfig {
+        RunConfig {
+            mode: Mode::FullSys { costs: KernelCosts::default() },
+            dram_size: 64 << 20,
+            preload_image: false,
+            preload_pages: 4,
+            max_target_seconds: 30.0,
+            ..Default::default()
+        }
+    }
+
+    fn run(kind: SynthKind) -> crate::coordinator::runtime::RunResult {
+        let exe = build(kind);
+        run_exe(cfg(), &exe, &["synth".to_string()], &[])
+    }
+
+    #[test]
+    fn spin_exits_cleanly_and_spins() {
+        let r = run(SynthKind::Spin { iters: 1000 });
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        assert!(r.instret >= 2000, "two instructions per iteration, got {}", r.instret);
+    }
+
+    #[test]
+    fn storm_issues_syscalls() {
+        let r = run(SynthKind::Storm { calls: 25 });
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        let total: u64 = r.syscall_counts.iter().map(|(_, c)| *c).sum();
+        assert!(total >= 25, "expected >=25 syscalls, saw {total}: {:?}", r.syscall_counts);
+    }
+
+    #[test]
+    fn memtouch_faults_across_its_region() {
+        let r = run(SynthKind::MemTouch { pages: 64 });
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        assert!(r.page_faults >= 64 / 8, "expected faults over 64 pages, got {}", r.page_faults);
+    }
+
+    #[test]
+    fn li_emits_wide_constants() {
+        let mut code = Vec::new();
+        li(&mut code, 5, 0x12345);
+        assert_eq!(code.len(), 2);
+        let mut small = Vec::new();
+        li(&mut small, 5, 7);
+        assert_eq!(small, vec![encode::addi(5, 0, 7)]);
+    }
+}

@@ -94,6 +94,19 @@ impl Config {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list value, e.g. `workloads = spin:4000, storm:64`
+    /// (used by sweep spec files). Empty/missing yields the default.
+    pub fn list_or(&self, section: &str, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(section, key) {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key)
             .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
@@ -139,6 +152,17 @@ mod tests {
         assert!(c.bool_or("a", "hf", false));
         assert!(!c.bool_or("a", "missing", false));
         assert_eq!(c.f64_or("a", "missing", 2.5), 2.5);
+    }
+
+    #[test]
+    fn list_values() {
+        let c = Config::parse("[axis]\nworkloads = spin:4000, storm:64 ,memtouch:48\n").unwrap();
+        assert_eq!(
+            c.list_or("axis", "workloads", &[]),
+            vec!["spin:4000", "storm:64", "memtouch:48"]
+        );
+        assert_eq!(c.list_or("axis", "missing", &["a", "b"]), vec!["a", "b"]);
+        assert!(c.list_or("axis", "missing", &[]).is_empty());
     }
 
     #[test]

@@ -1,11 +1,12 @@
-//! Small self-contained utilities: CLI parsing, config files, PRNG,
-//! statistics, and a mini property-testing harness.
+//! Small self-contained utilities: CLI parsing, config files, JSON,
+//! PRNG, statistics, and a mini property-testing harness.
 //!
 //! The offline vendor set has no clap/serde/criterion/proptest, so these
 //! are hand-rolled and kept deliberately tiny.
 
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod prng;
 pub mod propcheck;
 pub mod stats;
