@@ -24,32 +24,33 @@ fn main() {
     spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
     spec.arms = vec![Arm::FullSys, fase_arm.clone()];
     spec.harts = threads.iter().map(|&t| t as usize).collect();
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
-    let mut score_tab = Table::new(&[
-        "bench", "T", "score_fase", "score_fs", "score_err", "utime_fase", "utime_fs",
-        "utime_err",
-    ]);
-    for b in benches {
-        let w = WorkloadSpec::gapbs(b, scale, trials);
-        for &t in &threads {
-            let fs = cell(&out, &w, &Arm::FullSys, t);
-            let se = cell(&out, &w, &fase_arm, t);
-            let (s_fs, s_se) = (score(fs), score(se));
-            let (u_fs, u_se) = (fs.result.user_seconds, se.result.user_seconds);
-            score_tab.row(vec![
-                b.into(),
-                t.to_string(),
-                format!("{s_se:.5}"),
-                format!("{s_fs:.5}"),
-                pct(rel_err(s_se, s_fs)),
-                format!("{u_se:.5}"),
-                format!("{u_fs:.5}"),
-                pct(rel_err(u_se, u_fs)),
-            ]);
-        }
-    }
-    score_tab.print(&format!(
-        "Fig 12 — GAPBS score & user CPU time, FASE vs full-system (scale=2^{scale}, {trials} trials)"
-    ));
+    let rows: Vec<GridRow> = benches
+        .iter()
+        .flat_map(|b| {
+            let w = WorkloadSpec::gapbs(b, scale, trials);
+            threads
+                .iter()
+                .map(move |&t| GridRow::new(vec![b.to_string(), t.to_string()], &w, t))
+        })
+        .collect();
+    Grid::new(&doc)
+        .baseline(&Arm::FullSys)
+        .col("score_fase", &fase_arm, |j, _| format!("{:.5}", j.score()))
+        .col("score_fs", &Arm::FullSys, |j, _| format!("{:.5}", j.score()))
+        .col("score_err", &fase_arm, |j, b| pct(rel_err(j.score(), b.unwrap().score())))
+        .col("utime_fase", &fase_arm, |j, _| format!("{:.5}", j.metric("user_seconds")))
+        .col("utime_fs", &Arm::FullSys, |j, _| format!("{:.5}", j.metric("user_seconds")))
+        .col("utime_err", &fase_arm, |j, b| {
+            pct(rel_err(j.metric("user_seconds"), b.unwrap().metric("user_seconds")))
+        })
+        .render(
+            &format!(
+                "Fig 12 — GAPBS score & user CPU time, FASE vs full-system \
+                 (scale=2^{scale}, {trials} trials)"
+            ),
+            &["bench", "T"],
+            &rows,
+        );
 }

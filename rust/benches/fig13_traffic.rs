@@ -20,33 +20,50 @@ fn main() {
     spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
     spec.arms = vec![arm.clone()];
     spec.harts = threads.iter().map(|&t| t as usize).collect();
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
     for b in benches {
         let w = WorkloadSpec::gapbs(b, scale, trials);
         for &t in &threads {
-            let run = cell(&out, &w, &arm, t);
-            let per_iter = |v: u64| v as f64 / trials as f64;
-            let mut kind_tab = Table::new(&["HTP kind", "bytes/iter", "reqs/iter"]);
-            for (name, bytes, count) in &run.result.bytes_by_kind {
-                kind_tab.row(vec![
-                    name.clone(),
-                    format!("{:.0}", per_iter(*bytes)),
-                    format!("{:.1}", per_iter(*count)),
-                ]);
-            }
-            kind_tab.print(&format!(
-                "Fig 13 — {b}-{t}: traffic by HTP request (total {} B)",
-                run.result.total_bytes
-            ));
-            let mut ctx_tab = Table::new(&["context", "bytes/iter"]);
-            for (label, bytes) in &run.result.bytes_by_ctx {
-                ctx_tab.row(vec![label.clone(), format!("{:.0}", per_iter(*bytes))]);
-            }
-            ctx_tab.print(&format!("Fig 13 — {b}-{t}: traffic by syscall context"));
+            let cell = find_job(&doc, &w.name, &arm.label(), t as usize).expect("cell");
+            render_breakdown(
+                &doc,
+                &w,
+                &arm,
+                t,
+                "bytes_by_kind",
+                ["HTP kind", "bytes/iter"],
+                trials as f64,
+                &format!(
+                    "Fig 13 — {b}-{t}: traffic by HTP request (total {} B)",
+                    cell.metric("total_bytes")
+                ),
+            );
+            render_breakdown(
+                &doc,
+                &w,
+                &arm,
+                t,
+                "reqs_by_kind",
+                ["HTP kind", "reqs/iter"],
+                trials as f64,
+                &format!("Fig 13 — {b}-{t}: requests by HTP kind"),
+            );
+            render_breakdown(
+                &doc,
+                &w,
+                &arm,
+                t,
+                "bytes_by_ctx",
+                ["context", "bytes/iter"],
+                trials as f64,
+                &format!("Fig 13 — {b}-{t}: traffic by syscall context"),
+            );
             eprintln!(
                 "[fig13] {b}-{t}: filtered_wakes={} switches={} faults={}",
-                run.result.filtered_wakes, run.result.context_switches, run.result.page_faults
+                cell.metric("filtered_wakes"),
+                cell.metric("context_switches"),
+                cell.metric("page_faults")
             );
         }
     }

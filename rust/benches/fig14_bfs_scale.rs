@@ -18,22 +18,21 @@ fn main() {
     spec.workloads = scales.iter().map(|&s| WorkloadSpec::gapbs("bfs", s, trials)).collect();
     spec.arms = vec![Arm::FullSys, fase_arm.clone()];
     spec.harts = vec![1, 2];
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
-    let mut tab = Table::new(&["scale", "T", "score_fase", "score_fs", "err"]);
-    for &s in &scales {
-        let w = WorkloadSpec::gapbs("bfs", s, trials);
-        for t in [1u32, 2] {
-            let fs = cell(&out, &w, &Arm::FullSys, t);
-            let se = cell(&out, &w, &fase_arm, t);
-            tab.row(vec![
-                format!("2^{s}"),
-                t.to_string(),
-                format!("{:.5}", score(se)),
-                format!("{:.5}", score(fs)),
-                pct(rel_err(score(se), score(fs))),
-            ]);
-        }
-    }
-    tab.print("Fig 14 — BFS error vs data scale");
+    let rows: Vec<GridRow> = scales
+        .iter()
+        .flat_map(|&s| {
+            let w = WorkloadSpec::gapbs("bfs", s, trials);
+            [1u32, 2].map(move |t| {
+                GridRow::new(vec![format!("2^{s}"), t.to_string()], &w, t)
+            })
+        })
+        .collect();
+    Grid::new(&doc)
+        .baseline(&Arm::FullSys)
+        .col("score_fase", &fase_arm, |j, _| format!("{:.5}", j.score()))
+        .col("score_fs", &Arm::FullSys, |j, _| format!("{:.5}", j.score()))
+        .col("err", &fase_arm, |j, b| pct(rel_err(j.score(), b.unwrap().score())))
+        .render("Fig 14 — BFS error vs data scale", &["scale", "T"], &rows);
 }

@@ -19,34 +19,38 @@ fn main() {
     spec.workloads = scales.iter().map(|&s| WorkloadSpec::gapbs("tc", s, trials)).collect();
     spec.arms = vec![Arm::FullSys, fase_arm.clone()];
     spec.harts = vec![1, 2];
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
-    let mut tab = Table::new(&[
-        "scale", "T", "score_fase", "score_fs", "err", "faults/iter", "mmap_bytes/iter",
-    ]);
-    for &s in &scales {
-        let w = WorkloadSpec::gapbs("tc", s, trials);
-        for t in [1u32, 2] {
-            let fs = cell(&out, &w, &Arm::FullSys, t);
-            let se = cell(&out, &w, &fase_arm, t);
-            let pf = se.result.page_faults as f64 / trials as f64;
-            let mmap_bytes: u64 = se
-                .result
-                .bytes_by_ctx
+    let trials_f = trials as f64;
+    let rows: Vec<GridRow> = scales
+        .iter()
+        .flat_map(|&s| {
+            let w = WorkloadSpec::gapbs("tc", s, trials);
+            [1u32, 2].map(move |t| {
+                GridRow::new(vec![format!("2^{s}"), t.to_string()], &w, t)
+            })
+        })
+        .collect();
+    Grid::new(&doc)
+        .baseline(&Arm::FullSys)
+        .col("score_fase", &fase_arm, |j, _| format!("{:.5}", j.score()))
+        .col("score_fs", &Arm::FullSys, |j, _| format!("{:.5}", j.score()))
+        .col("err", &fase_arm, |j, b| pct(rel_err(j.score(), b.unwrap().score())))
+        .col("faults/iter", &fase_arm, move |j, _| {
+            format!("{:.0}", j.metric("page_faults") / trials_f)
+        })
+        .col("mmap_bytes/iter", &fase_arm, move |j, _| {
+            let mmap_bytes: f64 = j
+                .obj("bytes_by_ctx")
                 .iter()
                 .filter(|(l, _)| l == "mmap" || l == "page_fault" || l == "munmap" || l == "brk")
                 .map(|(_, b)| *b)
                 .sum();
-            tab.row(vec![
-                format!("2^{s}"),
-                t.to_string(),
-                format!("{:.5}", score(se)),
-                format!("{:.5}", score(fs)),
-                pct(rel_err(score(se), score(fs))),
-                format!("{pf:.0}"),
-                format!("{:.0}", mmap_bytes as f64 / trials as f64),
-            ]);
-        }
-    }
-    tab.print("Fig 15 — TC error vs data scale (mmap/page-fault driven)");
+            format!("{:.0}", mmap_bytes / trials_f)
+        })
+        .render(
+            "Fig 15 — TC error vs data scale (mmap/page-fault driven)",
+            &["scale", "T"],
+            &rows,
+        );
 }

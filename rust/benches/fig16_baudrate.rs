@@ -21,25 +21,26 @@ fn main() {
         .chain(bauds.iter().map(|&b| Arm::fase_uart(b)))
         .collect();
     spec.harts = vec![1, 2];
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
-    let mut tab = Table::new(&["bench", "T", "baud", "score_err", "futex/iter"]);
-    for b in benches {
-        let w = WorkloadSpec::gapbs(b, scale, trials);
-        for t in [1u32, 2] {
-            let fs = cell(&out, &w, &Arm::FullSys, t);
-            for &baud in &bauds {
-                let se = cell(&out, &w, &Arm::fase_uart(baud), t);
-                let futexes = syscall_count(&se.result, "futex");
-                tab.row(vec![
-                    b.into(),
-                    t.to_string(),
-                    baud.to_string(),
-                    pct(rel_err(score(se), score(fs))),
-                    format!("{:.1}", futexes as f64 / trials as f64),
-                ]);
-            }
-        }
+    let rows: Vec<GridRow> = benches
+        .iter()
+        .flat_map(|b| {
+            let w = WorkloadSpec::gapbs(b, scale, trials);
+            [1u32, 2].map(move |t| GridRow::new(vec![b.to_string(), t.to_string()], &w, t))
+        })
+        .collect();
+    // One error column per baud rate (the figure's x-axis), plus the
+    // per-iteration futex count at the paper's reference baud.
+    let mut grid = Grid::new(&doc).baseline(&Arm::FullSys);
+    for &baud in &bauds {
+        grid = grid.col(&format!("err@{baud}"), &Arm::fase_uart(baud), |j, b| {
+            pct(rel_err(j.score(), b.unwrap().score()))
+        });
     }
-    tab.print("Fig 16 — score error vs UART baud rate");
+    let trials_f = trials as f64;
+    grid = grid.col("futex/iter@921600", &Arm::fase_uart(921_600), move |j, _| {
+        format!("{:.1}", j.syscall("futex") / trials_f)
+    });
+    grid.render("Fig 16 — score error vs UART baud rate", &["bench", "T"], &rows);
 }

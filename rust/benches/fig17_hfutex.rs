@@ -1,6 +1,8 @@
 //! Fig 17 — HFutex on/off impact on UART traffic for BC/CCSV/PR
 //! (the three low-error workloads whose only syscalls are futex, write and
-//! clock_gettime).
+//! clock_gettime), plus the stall-overlap view the completion-queue
+//! runtime exposes: how much of each configuration's trap stall was
+//! hidden behind the other harts' user-mode execution.
 //!
 //! Paper shape to reproduce: HFutex suppresses part of the futex_wake
 //! volume (up to ~30% of wakes in BC-2, negligible in CCSV-2), cutting
@@ -21,29 +23,36 @@ fn main() {
     spec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
     spec.arms = vec![nhf.clone(), hf.clone()];
     spec.harts = vec![2, 4];
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
-    let mut tab = Table::new(&[
-        "bench", "T", "bytes_NHF", "bytes_HF", "reduction", "futex_NHF", "futex_HF",
-        "filtered",
-    ]);
-    for b in benches {
-        let w = WorkloadSpec::gapbs(b, scale, trials);
-        for t in [2u32, 4] {
-            let n = cell(&out, &w, &nhf, t);
-            let h = cell(&out, &w, &hf, t);
-            let (b_n, b_h) = (n.result.total_bytes, h.result.total_bytes);
-            tab.row(vec![
-                b.into(),
-                t.to_string(),
-                b_n.to_string(),
-                b_h.to_string(),
-                pct((b_h as f64 - b_n as f64) / b_n as f64),
-                syscall_count(&n.result, "futex").to_string(),
-                syscall_count(&h.result, "futex").to_string(),
-                h.result.filtered_wakes.to_string(),
-            ]);
-        }
-    }
-    tab.print("Fig 17 — HFutex impact on UART traffic (NHF vs HF)");
+    let rows: Vec<GridRow> = benches
+        .iter()
+        .flat_map(|b| {
+            let w = WorkloadSpec::gapbs(b, scale, trials);
+            [2u32, 4].map(move |t| GridRow::new(vec![b.to_string(), t.to_string()], &w, t))
+        })
+        .collect();
+    let hidden = |j: &JobView, _: Option<&JobView>| {
+        let (_, stall, overlapped) = j.overlap_totals();
+        pct(overlapped / stall.max(1.0))
+    };
+    Grid::new(&doc)
+        .baseline(&nhf)
+        .col("bytes_NHF", &nhf, |j, _| format!("{:.0}", j.metric("total_bytes")))
+        .col("bytes_HF", &hf, |j, _| format!("{:.0}", j.metric("total_bytes")))
+        .col("reduction", &hf, |j, b| {
+            let (h, n) = (j.metric("total_bytes"), b.unwrap().metric("total_bytes"));
+            pct((h - n) / n)
+        })
+        .col("futex_NHF", &nhf, |j, _| format!("{:.0}", j.syscall("futex")))
+        .col("futex_HF", &hf, |j, _| format!("{:.0}", j.syscall("futex")))
+        .col("filtered", &hf, |j, _| format!("{:.0}", j.metric("filtered_wakes")))
+        .col("hidden_NHF", &nhf, hidden)
+        .col("hidden_HF", &hf, hidden)
+        .render(
+            "Fig 17 — HFutex impact on UART traffic (NHF vs HF; hidden = \
+             stall overlapped by other harts)",
+            &["bench", "T"],
+            &rows,
+        );
 }

@@ -15,7 +15,6 @@ fn main() {
     let fase_arm = Arm::fase_uart(921_600);
     let pk = Arm::Pk { sim_threads: 4 };
 
-    let mut tab = Table::new(&["core", "system", "time/iter", "err_vs_fullsys"]);
     for core in ["rocket", "cva6"] {
         // One spec per core: the PK arm (detailed engine, expensive) only
         // runs where the figure reports it — Rocket.
@@ -27,27 +26,24 @@ fn main() {
         } else {
             vec![Arm::FullSys, fase_arm.clone()]
         };
-        let out = run_figure(&spec);
+        let doc = run_figure(&spec).to_json();
 
-        let fs = cell(&out, &w, &Arm::FullSys, 1);
-        let se = cell(&out, &w, &fase_arm, 1);
-        tab.row(vec![core.into(), "fullsys".into(), format!("{:.6}", score(fs)), "—".into()]);
-        tab.row(vec![
-            core.into(),
-            "FASE".into(),
-            format!("{:.6}", score(se)),
-            pct(rel_err(score(se), score(fs))),
-        ]);
+        let rows = [GridRow::new(vec![core.to_string()], &w, 1)];
+        let mut grid = Grid::new(&doc)
+            .baseline(&Arm::FullSys)
+            .col("fullsys t/iter", &Arm::FullSys, |j, _| format!("{:.6}", j.score()))
+            .col("FASE t/iter", &fase_arm, |j, _| format!("{:.6}", j.score()))
+            .col("FASE err", &fase_arm, |j, b| pct(rel_err(j.score(), b.unwrap().score())));
         if core == "rocket" {
-            let p = cell(&out, &w, &pk, 1);
-            tab.row(vec![
-                core.into(),
-                "PK(sim)".into(),
-                format!("{:.6}", score(p)),
-                pct(rel_err(score(p), score(fs))),
-            ]);
+            grid = grid
+                .col("PK(sim) t/iter", &pk, |j, _| format!("{:.6}", j.score()))
+                .col("PK err", &pk, |j, b| pct(rel_err(j.score(), b.unwrap().score())));
         }
+        grid.render(
+            &format!("Fig 18 — CoreMark time-per-iteration across systems ({core})"),
+            &["core"],
+            &rows,
+        );
         eprintln!("[fig18] {core} done");
     }
-    tab.print("Fig 18 — CoreMark time-per-iteration across systems");
 }

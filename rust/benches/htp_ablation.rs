@@ -25,45 +25,42 @@ fn main() {
         .collect();
     spec.arms = vec![arm.clone()];
     spec.harts = vec![2];
-    let out = run_figure(&spec);
+    let doc = run_figure(&spec).to_json();
 
-    let mut tab = Table::new(&[
-        "workload", "HTP bytes", "direct-equiv bytes", "reduction",
-    ]);
+    let rows: Vec<GridRow> = ["bc", "tc", "sssp"]
+        .iter()
+        .map(|b| {
+            GridRow::new(vec![format!("{b}-2")], &WorkloadSpec::gapbs(b, scale, trials), 2)
+        })
+        .collect();
+    Grid::new(&doc)
+        .col("HTP bytes", &arm, |j, _| format!("{:.0}", j.metric("total_bytes")))
+        .col("direct-equiv bytes", &arm, |j, _| {
+            format!("{:.0}", j.metric("direct_equiv_bytes"))
+        })
+        .col("reduction", &arm, |j, _| {
+            pct(-(1.0 - j.metric("total_bytes") / j.metric("direct_equiv_bytes")))
+        })
+        .render(
+            "HTP ablation — traffic vs direct CPU-interface protocol (>95% reduction expected)",
+            &["workload"],
+            &rows,
+        );
     for bench in ["bc", "tc", "sssp"] {
         let w = WorkloadSpec::gapbs(bench, scale, trials);
-        let r = cell(&out, &w, &arm, 2);
-        let htp = r.result.total_bytes;
-        let direct = r.result.direct_equiv_bytes;
-        tab.row(vec![
-            format!("{bench}-2"),
-            htp.to_string(),
-            direct.to_string(),
-            pct(-(1.0 - htp as f64 / direct as f64)),
-        ]);
+        let r = find_job(&doc, &w.name, &arm.label(), 2).expect("cell");
         // Page-path ablation: PageSet/PageCopy/PageWrite vs word-level.
-        let page_bytes: u64 = r
-            .result
-            .bytes_by_kind
-            .iter()
-            .filter(|(k, _, _)| k.starts_with("Page"))
-            .map(|(_, b, _)| *b)
-            .sum();
-        let page_reqs: u64 = r
-            .result
-            .bytes_by_kind
-            .iter()
-            .filter(|(k, _, _)| k.starts_with("Page"))
-            .map(|(_, _, c)| *c)
-            .sum();
+        let page = |kinds: Vec<(String, f64)>| -> f64 {
+            kinds.iter().filter(|(k, _)| k.starts_with("Page")).map(|(_, v)| *v).sum()
+        };
+        let page_bytes = page(r.obj("bytes_by_kind"));
         // One page via MemW = 512 * 19 B; via PageS/PageW as measured.
-        let word_equiv = page_reqs * 512 * 19;
+        let word_equiv = page(r.obj("reqs_by_kind")) * 512.0 * 19.0;
         eprintln!(
-            "[htp] {bench}-2: page ops {page_bytes} B vs word-level {word_equiv} B ({:.2}%)",
-            100.0 * page_bytes as f64 / word_equiv.max(1) as f64
+            "[htp] {bench}-2: page ops {page_bytes:.0} B vs word-level {word_equiv:.0} B ({:.2}%)",
+            100.0 * page_bytes / word_equiv.max(1.0)
         );
     }
-    tab.print("HTP ablation — traffic vs direct CPU-interface protocol (>95% reduction expected)");
 
     // ---- transport sweep (Fig 16 axis, generalized to physical layers) ----
     let bench = "bfs";

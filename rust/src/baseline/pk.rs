@@ -133,7 +133,15 @@ impl TargetOps for PkTarget {
         }
         let ev = self.e.m.pop_exception().unwrap();
         let h = &self.e.m.harts[ev.cpu];
-        Some(ExcInfo { cpu: ev.cpu, cause: h.csrs.mcause, epc: h.csrs.mepc, tval: h.csrs.mtval })
+        let cause = h.csrs.mcause;
+        Some(ExcInfo {
+            cpu: ev.cpu,
+            cause,
+            epc: h.csrs.mepc,
+            tval: h.csrs.mtval,
+            at: ev.at,
+            nr: if cause == 8 { h.regs[17] } else { 0 },
+        })
     }
 
     fn redirect(&mut self, cpu: usize, pc: u64, _switch: bool) {

@@ -9,6 +9,7 @@
 //! the guest's stderr when a cell fails).
 
 use crate::sweep::{self, JobOutcome, SweepOutcome, SweepSpec, WorkloadSpec};
+use crate::util::json::Json;
 use std::path::PathBuf;
 
 pub use crate::coordinator::runtime::RunResult;
@@ -150,6 +151,207 @@ pub fn syscall_count(r: &RunResult, name: &str) -> u64 {
     r.syscall_counts.iter().find(|(n, _)| n == name).map(|(_, c)| *c).unwrap_or(0)
 }
 
+// ---------------- figure grids from sweep JSON reports ----------------
+//
+// The figure drivers share one renderer: run the sweep, serialize it to
+// the same versioned JSON report `fase sweep --out` emits, then declare
+// the grid as rows (scenario cells) × columns (an arm plus a formatter
+// over that arm's metrics). Only wall-clock figures (fig19, the
+// htp_ablation transport table, §Perf) render from in-memory results,
+// because reports exclude wall time by design.
+
+/// Read-only view of one `jobs[]` entry in a sweep report document.
+pub struct JobView<'a> {
+    label: String,
+    job: &'a Json,
+}
+
+impl JobView<'_> {
+    /// Navigate `metrics` by a dotted path with optional indices, e.g.
+    /// `"stall.channel_ticks"`, `"uticks[0]"`, `"syscalls.futex"`.
+    fn lookup(&self, path: &str) -> Option<&Json> {
+        let mut node = self.job.get("metrics")?;
+        for seg in path.split('.') {
+            let (key, idx) = match seg.find('[') {
+                Some(p) => {
+                    let i: usize = seg[p + 1..].strip_suffix(']')?.parse().ok()?;
+                    (&seg[..p], Some(i))
+                }
+                None => (seg, None),
+            };
+            if !key.is_empty() {
+                node = node.get(key)?;
+            }
+            if let Some(i) = idx {
+                node = node.as_arr()?.get(i)?;
+            }
+        }
+        Some(node)
+    }
+
+    /// Numeric metric; exits with a message if the report lacks it (same
+    /// fail-fast contract as [`cell`]).
+    pub fn metric(&self, path: &str) -> f64 {
+        self.lookup(path).and_then(|j| j.as_f64()).unwrap_or_else(|| {
+            eprintln!("[bench] {}: no numeric metric {path:?} in report", self.label);
+            std::process::exit(1);
+        })
+    }
+
+    /// Numeric metric with a default for absent paths (sparse maps like
+    /// `syscalls.<name>`).
+    pub fn metric_or(&self, path: &str, default: f64) -> f64 {
+        self.lookup(path).and_then(|j| j.as_f64()).unwrap_or(default)
+    }
+
+    /// The guest-reported score (exits when the guest printed none).
+    pub fn score(&self) -> f64 {
+        self.metric("score")
+    }
+
+    /// How many times the guest made one syscall (0 if it never did).
+    pub fn syscall(&self, name: &str) -> f64 {
+        self.metric_or(&format!("syscalls.{name}"), 0.0)
+    }
+
+    /// All numeric members of an object metric (e.g. `bytes_by_kind`),
+    /// in report order.
+    pub fn obj(&self, path: &str) -> Vec<(String, f64)> {
+        let Some(Json::Obj(members)) = self.lookup(path) else {
+            return Vec::new();
+        };
+        members
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+            .collect()
+    }
+
+    /// Per-hart trap overlap summed across harts:
+    /// `(traps, stall_ticks, overlapped_uticks)`.
+    pub fn overlap_totals(&self) -> (f64, f64, f64) {
+        let Some(Json::Arr(items)) = self.lookup("overlap") else {
+            return (0.0, 0.0, 0.0);
+        };
+        let sum = |key: &str| -> f64 {
+            items.iter().filter_map(|o| o.get(key).and_then(|v| v.as_f64())).sum()
+        };
+        (sum("traps"), sum("stall_ticks"), sum("overlapped_uticks"))
+    }
+}
+
+/// Find one scenario cell in a report document (first match across the
+/// core/seed axes, like [`SweepOutcome::get`]).
+pub fn find_job<'a>(doc: &'a Json, workload: &str, arm: &str, harts: usize) -> Option<JobView<'a>> {
+    let jobs = doc.get("jobs")?.as_arr()?;
+    let field = |j: &Json, k: &str| j.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    jobs.iter()
+        .find(|j| {
+            field(j, "workload") == workload
+                && field(j, "arm") == arm
+                && j.get("harts").and_then(Json::as_u64) == Some(harts as u64)
+        })
+        .map(|job| JobView { label: field(job, "label"), job })
+}
+
+fn find_job_or_exit<'a>(doc: &'a Json, workload: &str, arm: &str, harts: usize) -> JobView<'a> {
+    find_job(doc, workload, arm, harts).unwrap_or_else(|| {
+        eprintln!("[bench] missing report cell {workload}|{arm}|{harts}c");
+        std::process::exit(1);
+    })
+}
+
+/// One scenario row of a figure grid: the printed label cells plus the
+/// (workload, harts) report key the columns read their cells from.
+pub struct GridRow {
+    pub label: Vec<String>,
+    pub workload: String,
+    pub harts: usize,
+}
+
+impl GridRow {
+    pub fn new(label: Vec<String>, workload: &WorkloadSpec, harts: u32) -> GridRow {
+        GridRow { label, workload: workload.name.clone(), harts: harts.max(1) as usize }
+    }
+}
+
+type CellFn<'a> = Box<dyn Fn(&JobView, Option<&JobView>) -> String + 'a>;
+
+/// Declarative figure/table grid over a sweep report document: each
+/// column names the arm whose cell it reads and formats that cell's
+/// metrics (optionally against the row's baseline-arm cell).
+pub struct Grid<'a> {
+    doc: &'a Json,
+    baseline: Option<String>,
+    cols: Vec<(String, String, CellFn<'a>)>,
+}
+
+impl<'a> Grid<'a> {
+    pub fn new(doc: &'a Json) -> Grid<'a> {
+        Grid { doc, baseline: None, cols: Vec::new() }
+    }
+
+    /// Arm whose same-row cell is handed to every column formatter as
+    /// the comparison baseline (usually `Arm::FullSys`).
+    pub fn baseline(mut self, arm: &Arm) -> Self {
+        self.baseline = Some(arm.label());
+        self
+    }
+
+    pub fn col(
+        mut self,
+        header: &str,
+        arm: &Arm,
+        cell: impl Fn(&JobView, Option<&JobView>) -> String + 'a,
+    ) -> Self {
+        self.cols.push((header.to_string(), arm.label(), Box::new(cell)));
+        self
+    }
+
+    /// Render and print the grid. `row_headers` title the label cells
+    /// every row starts with.
+    pub fn render(&self, title: &str, row_headers: &[&str], rows: &[GridRow]) {
+        let headers: Vec<&str> = row_headers
+            .iter()
+            .copied()
+            .chain(self.cols.iter().map(|(h, _, _)| h.as_str()))
+            .collect();
+        let mut tab = Table::new(&headers);
+        for row in rows {
+            let base =
+                self.baseline.as_ref().map(|arm| {
+                    find_job_or_exit(self.doc, &row.workload, arm, row.harts)
+                });
+            let mut cells = row.label.clone();
+            for (_, arm, cell) in &self.cols {
+                let view = find_job_or_exit(self.doc, &row.workload, arm, row.harts);
+                cells.push(cell(&view, base.as_ref()));
+            }
+            tab.row(cells);
+        }
+        tab.print(title);
+    }
+}
+
+/// Print one object metric (e.g. `bytes_by_kind`) of one cell as a
+/// two-column breakdown table, values scaled by `1/div`.
+pub fn render_breakdown(
+    doc: &Json,
+    workload: &WorkloadSpec,
+    arm: &Arm,
+    harts: u32,
+    path: &str,
+    headers: [&str; 2],
+    div: f64,
+    title: &str,
+) {
+    let view = find_job_or_exit(doc, &workload.name, &arm.label(), harts.max(1) as usize);
+    let mut tab = Table::new(&headers);
+    for (name, v) in view.obj(path) {
+        tab.row(vec![name, format!("{:.1}", v / div)]);
+    }
+    tab.print(title);
+}
+
 // ---------------- table printing ----------------
 
 pub struct Table {
@@ -236,5 +438,70 @@ mod tests {
     fn pct_format() {
         assert_eq!(pct(0.0315), "+3.15%");
         assert_eq!(pct(-0.02), "-2.00%");
+    }
+
+    fn report_doc() -> Json {
+        crate::util::json::parse(
+            r#"{
+              "schema": 1, "sweep": "t", "seed": 7,
+              "jobs": [
+                {"label": "w|fullsys|2c|rocket|s0", "workload": "w", "arm": "fullsys",
+                 "harts": 2, "status": "ok",
+                 "metrics": {"score": 2.0, "ticks": 100,
+                             "stall": {"channel_ticks": 7},
+                             "uticks": [5, 6],
+                             "syscalls": {"futex": 3},
+                             "overlap": [
+                               {"traps": 1, "stall_ticks": 10, "overlapped_uticks": 4},
+                               {"traps": 2, "stall_ticks": 30, "overlapped_uticks": 8}]}},
+                {"label": "w|fase@loopback|2c|rocket|s0", "workload": "w",
+                 "arm": "fase@loopback", "harts": 2, "status": "ok",
+                 "metrics": {"score": 2.2, "ticks": 110,
+                             "bytes_by_kind": {"RegRW": 64, "MemRW": 32}}}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn job_view_navigates_metrics_paths() {
+        let doc = report_doc();
+        let j = find_job(&doc, "w", "fullsys", 2).unwrap();
+        assert_eq!(j.score(), 2.0);
+        assert_eq!(j.metric("stall.channel_ticks"), 7.0);
+        assert_eq!(j.metric("uticks[1]"), 6.0);
+        assert_eq!(j.syscall("futex"), 3.0);
+        assert_eq!(j.syscall("clone"), 0.0, "absent syscalls default to 0");
+        assert_eq!(j.metric_or("no.such.path", -1.0), -1.0);
+        assert_eq!(j.overlap_totals(), (3.0, 40.0, 12.0));
+        let fase = find_job(&doc, "w", "fase@loopback", 2).unwrap();
+        assert_eq!(
+            fase.obj("bytes_by_kind"),
+            vec![("RegRW".into(), 64.0), ("MemRW".into(), 32.0)]
+        );
+        assert!(find_job(&doc, "w", "fullsys", 4).is_none());
+        assert!(find_job(&doc, "nope", "fullsys", 2).is_none());
+    }
+
+    #[test]
+    fn grid_renders_columns_against_baseline() {
+        let doc = report_doc();
+        let fase = Arm::Fase {
+            transport: TransportSpec::Loopback,
+            hfutex: true,
+            ideal_latency: false,
+        };
+        // Render runs the lookups and formatters; a missing cell or
+        // metric would exit(1) and fail the test.
+        Grid::new(&doc)
+            .baseline(&Arm::FullSys)
+            .col("score", &fase, |j, _| format!("{:.2}", j.score()))
+            .col("err", &fase, |j, b| pct(rel_err(j.score(), b.unwrap().score())))
+            .render(
+                "grid test",
+                &["bench", "T"],
+                &[GridRow { label: vec!["w".into(), "2".into()], workload: "w".into(), harts: 2 }],
+            );
     }
 }

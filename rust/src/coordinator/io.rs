@@ -21,6 +21,10 @@ pub struct FdTable {
     pub stderr: Vec<u8>,
     /// Preloaded stdin bytes.
     pub stdin: VecDeque<u8>,
+    /// When set, a guest `read` on empty stdin defers through the
+    /// kernel's `Pending` table (completed by
+    /// `Runtime::push_stdin`) instead of returning EOF.
+    pub stdin_block: bool,
     /// Sandbox root for openat.
     pub root: PathBuf,
     /// Also echo guest stdout to the host console.
@@ -38,9 +42,15 @@ impl FdTable {
             stdout: Vec::new(),
             stderr: Vec::new(),
             stdin: VecDeque::new(),
+            stdin_block: false,
             root,
             echo,
         }
+    }
+
+    /// Does `fd` currently name the stdin stream?
+    pub fn is_stdin(&self, fd: i64) -> bool {
+        matches!(self.fds.get(fd as usize), Some(Some(HostFd::Stdin)))
     }
 
     fn alloc_slot(&mut self) -> usize {

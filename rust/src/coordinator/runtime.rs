@@ -4,18 +4,18 @@
 use super::io::FdTable;
 use super::loader::{self, LoadOut};
 use super::sched::{Scheduler, TState, Tid};
-use super::syscall::{self, Flow};
+use super::syscall::{self, Flow, Wait};
 use super::target::{DirectTarget, ExcInfo, FaseTarget, HostLatency, KernelCosts, TargetOps};
 use super::vm::{AddressSpace, PageAlloc, VmError};
 use crate::elfio::read::Executable;
 use crate::fase::transport::TransportSpec;
 use crate::perf::recorder::Context;
 use crate::perf::window::WindowSample;
-use crate::perf::StallBreakdown;
+use crate::perf::{OverlapStats, StallBreakdown};
 use crate::rv64::hart::CoreModel;
 use crate::soc::{Machine, MachineConfig};
 use crate::util::prng::Prng;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::PathBuf;
 
 /// Execution mode: the FASE stack or the full-system baseline.
@@ -87,8 +87,56 @@ pub struct Kernel {
     pub hf_mirror: HashMap<u64, Vec<usize>>,
     /// Delayed remote TLB flush flags, applied at each CPU's next trap.
     pub pending_tlb: Vec<bool>,
+    /// Deferred-completion (`Pending`) table: every thread parked by
+    /// [`Flow::Block`] has exactly one entry recording what completes it.
+    /// A BTreeMap so completion scans run in tid order — deterministic
+    /// regardless of how the waiters were created.
+    pub pending: BTreeMap<Tid, Wait>,
     pub pid: i32,
     pub prng: Prng,
+}
+
+impl Kernel {
+    /// Wake up to `n` futex waiters on `pa`, completing their deferred
+    /// syscalls (a0 was staged to 0 at park time). Returns the woken tids.
+    pub fn wake_futex(&mut self, pa: u64, n: usize) -> Vec<Tid> {
+        let woken = self.sched.futex_wake(pa, n);
+        for tid in &woken {
+            self.pending.remove(tid);
+        }
+        woken
+    }
+
+    /// Cancel `tid`'s deferred completion (signal delivery): remove it
+    /// from its wait structure, complete the syscall with `a0` (normally
+    /// EINTR) and make the thread runnable. No-op for non-parked threads.
+    pub fn interrupt_wait(&mut self, tid: Tid, a0: u64) {
+        let Some(wait) = self.pending.remove(&tid) else { return };
+        if let Wait::Futex { pa, .. } = wait {
+            if let Some(q) = self.sched.futex_q.get_mut(&pa) {
+                q.retain(|&t| t != tid);
+                if q.is_empty() {
+                    self.sched.futex_q.remove(&pa);
+                }
+            }
+        }
+        // The stale sleeper-heap entry (if this was a sleep) is harmless:
+        // expiry only wakes an entry whose deadline matches the TCB's
+        // *current* `Sleep { until }`, so neither this completed wait nor
+        // a later sleep by the same thread can be cut short by it.
+        self.sched.tcb_mut(tid).ctx.set_x(10, a0);
+        self.sched.make_ready(tid);
+    }
+
+    /// Expire due sleepers, completing their `Pending` entries; returns
+    /// how many woke.
+    pub fn expire_sleepers(&mut self, now: u64) -> usize {
+        let woken = self.sched.expire_sleepers(now);
+        for tid in &woken {
+            self.pending.remove(tid);
+        }
+        woken.len()
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -106,6 +154,10 @@ pub struct RunResult {
     pub wall_seconds: f64,
     pub instret: u64,
     pub stall: StallBreakdown,
+    /// Per-hart trap-transaction overlap: how much user time the *other*
+    /// harts retired while each hart's traps were in host service (the
+    /// fig17/table4 delegation-hiding axis).
+    pub overlap: Vec<OverlapStats>,
     pub total_bytes: u64,
     pub total_requests: u64,
     /// Wire round-trips (batch frames count once).
@@ -161,6 +213,7 @@ impl RunResult {
             wall_seconds: 0.0,
             instret: 0,
             stall: StallBreakdown::default(),
+            overlap: Vec::new(),
             total_bytes: 0,
             total_requests: 0,
             transactions: 0,
@@ -200,6 +253,21 @@ impl RunResult {
         m.push(("user_seconds".into(), Json::f64(self.user_seconds)));
         m.push(("instret".into(), Json::u64(self.instret)));
         m.push(("stall".into(), self.stall.to_json()));
+        m.push((
+            "overlap".into(),
+            Json::Arr(
+                self.overlap
+                    .iter()
+                    .map(|o| {
+                        Json::Obj(vec![
+                            ("traps".into(), Json::u64(o.traps)),
+                            ("stall_ticks".into(), Json::u64(o.stall_ticks)),
+                            ("overlapped_uticks".into(), Json::u64(o.overlapped_uticks)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
         m.push(("total_bytes".into(), Json::u64(self.total_bytes)));
         m.push(("total_requests".into(), Json::u64(self.total_requests)));
         m.push(("transactions".into(), Json::u64(self.transactions)));
@@ -214,6 +282,27 @@ impl RunResult {
                     .iter()
                     .map(|(k, b, _)| (k.clone(), Json::u64(*b)))
                     .collect(),
+            ),
+        ));
+        m.push((
+            "reqs_by_kind".into(),
+            Json::Obj(
+                self.bytes_by_kind
+                    .iter()
+                    .map(|(k, _, c)| (k.clone(), Json::u64(*c)))
+                    .collect(),
+            ),
+        ));
+        m.push((
+            "bytes_by_ctx".into(),
+            Json::Obj(
+                self.bytes_by_ctx.iter().map(|(l, b)| (l.clone(), Json::u64(*b))).collect(),
+            ),
+        ));
+        m.push((
+            "syscalls".into(),
+            Json::Obj(
+                self.syscall_counts.iter().map(|(n, c)| (n.clone(), Json::u64(*c))).collect(),
             ),
         ));
         m.push((
@@ -319,6 +408,7 @@ impl Runtime {
             hfutex_enabled: hfutex,
             hf_mirror: HashMap::new(),
             pending_tlb: vec![false; n],
+            pending: BTreeMap::new(),
             pid: 100,
             prng: Prng::stream(cfg.seed, 0x5EED),
         };
@@ -440,7 +530,7 @@ impl Runtime {
         self.windows.push(WindowSample::from_counters(cpu, dt, &ic, &me));
     }
 
-    fn handle_exception(&mut self, exc: ExcInfo) -> Result<(), RunError> {
+    pub(crate) fn handle_exception(&mut self, exc: ExcInfo) -> Result<(), RunError> {
         let cpu = exc.cpu;
         self.sample_window(cpu);
         // Delayed remote TLB flush (paper §V-C).
@@ -450,23 +540,36 @@ impl Runtime {
             self.k.pending_tlb[cpu] = false;
         }
         if exc.is_ecall() {
-            // One batched round-trip fetches a7 + a0..a6; the handler's
-            // subsequent reg_r calls hit the target's argument cache. The
-            // syscall number is not known until the frame returns, so the
-            // fetch is attributed to the dedicated syscall-entry context.
-            self.target.set_context(Context::SyscallEntry);
-            self.target.prefetch_syscall_args(cpu);
-            let nr = self.target.reg_r(cpu, 17);
+            // The `Next` report already carries a7 (the controller's FSM
+            // forwards it), so the registry handler — and its `ArgSpec`
+            // prefetch mask — are known before any register traffic: the
+            // dispatch below issues exactly one batched fetch of the
+            // declared argument registers.
+            let nr = exc.nr;
             self.target.set_context(Context::Syscall(nr));
             self.target.recorder().count_syscall(nr);
             self.target.syscall_overhead(cpu, nr);
-            let flow = syscall::handle(&mut self.k, self.target.as_mut(), cpu, &exc, nr);
+            let flow = syscall::dispatch(&mut self.k, self.target.as_mut(), cpu, &exc);
             match flow {
                 Flow::Return(v) => {
                     self.target.reg_w(cpu, 10, v);
                     self.k.sched.resume_current(self.target.as_mut(), cpu, exc.epc + 4);
                 }
-                Flow::Blocked => {
+                Flow::Block(wait) => {
+                    // Deferred completion: save context, stage the happy-
+                    // path return value (a0 = 0; read completions and
+                    // EINTR overwrite it), park the thread and file the
+                    // wait in the `Pending` table.
+                    self.k.sched.save_context(self.target.as_mut(), cpu, exc.epc + 4);
+                    let tid = self.k.sched.current(cpu).unwrap();
+                    self.k.sched.tcb_mut(tid).ctx.set_x(10, 0);
+                    let state = match &wait {
+                        Wait::Futex { pa, va } => TState::FutexWait { pa: *pa, va: *va },
+                        Wait::Sleep { until } => TState::Sleep { until: *until },
+                        Wait::Read { .. } => TState::IoWait,
+                    };
+                    self.k.sched.block_current(cpu, state);
+                    self.k.pending.insert(tid, wait);
                     self.fill_cpus();
                 }
                 Flow::Yield => {
@@ -542,12 +645,32 @@ impl Runtime {
         }
     }
 
+    /// Merge freshly drained trap reports into the completion queue,
+    /// keeping it ordered by (raise tick, hart) — the deterministic
+    /// service order that keeps sweep reports byte-stable no matter how
+    /// service windows interleave. Each hart has at most one trap in
+    /// flight (it stalls until redirected), so the key is total.
+    fn enqueue_traps(queue: &mut VecDeque<ExcInfo>, fresh: Vec<ExcInfo>) {
+        queue.extend(fresh);
+        queue.make_contiguous().sort_by_key(|e| (e.at, e.cpu));
+    }
+
     /// Run to completion (or error); always returns a RunResult.
+    ///
+    /// The loop is a completion queue over in-flight trap transactions:
+    /// one `Next` wait pulls the first trap, then `drain_exceptions`
+    /// refills the queue with every other already-raised trap (on a FASE
+    /// target these stream off the controller's event FIFO on the armed
+    /// `Next`, with no extra per-transaction host charge). While one
+    /// hart's transaction is in host service the other harts keep
+    /// executing — `begin_trap`/`complete_trap` bracket each service
+    /// window so the recorder can attribute the overlap.
     pub fn run(&mut self) -> RunResult {
         let wall_start = std::time::Instant::now();
         let deadline =
             (self.cfg.max_target_seconds * self.target.clock_hz() as f64) as u64;
         let mut error: Option<String> = None;
+        let mut queue: VecDeque<ExcInfo> = VecDeque::new();
 
         // Fig 6 step 4: initial Redirect of the main thread.
         self.fill_cpus();
@@ -564,19 +687,31 @@ impl Runtime {
                 error = Some(RunError::Timeout.to_string());
                 break;
             }
+            if let Some(exc) = queue.pop_front() {
+                self.target.begin_trap(exc.cpu);
+                let r = self.handle_exception(exc);
+                self.target.complete_trap(exc.cpu);
+                if let Err(e) = r {
+                    error = Some(e.to_string());
+                    break;
+                }
+                // Traps raised while this one was in service join the
+                // queue (possibly ahead of already-queued later ones).
+                Self::enqueue_traps(&mut queue, self.target.drain_exceptions());
+                continue;
+            }
             let chunk_end =
                 self.k.sched.next_wake().unwrap_or(now + 50_000_000).min(deadline + 1);
             match self.target.next_exception(chunk_end) {
                 Some(exc) => {
-                    if let Err(e) = self.handle_exception(exc) {
-                        error = Some(e.to_string());
-                        break;
-                    }
+                    let mut fresh = vec![exc];
+                    fresh.extend(self.target.drain_exceptions());
+                    Self::enqueue_traps(&mut queue, fresh);
                 }
                 None => {
                     // Either the chunk expired or nothing can run.
                     let now = self.target.now();
-                    let woke = self.k.sched.expire_sleepers(now);
+                    let woke = self.k.expire_sleepers(now);
                     if woke > 0 {
                         self.fill_cpus();
                         continue;
@@ -585,7 +720,7 @@ impl Runtime {
                         if w > now {
                             self.target.advance(w - now);
                         }
-                        self.k.sched.expire_sleepers(self.target.now());
+                        self.k.expire_sleepers(self.target.now());
                         self.fill_cpus();
                         continue;
                     }
@@ -606,6 +741,30 @@ impl Runtime {
         self.collect_result(wall_start.elapsed().as_secs_f64(), error)
     }
 
+    /// Feed bytes into guest stdin and complete (in tid order) any
+    /// threads parked on a blocking read — the `Pending` table's I/O
+    /// completion path. Readers get up to their requested length; data
+    /// left over stays buffered for future reads.
+    pub fn push_stdin(&mut self, data: &[u8]) {
+        self.k.fds.stdin.extend(data.iter().copied());
+        loop {
+            if self.k.fds.stdin.is_empty() {
+                break;
+            }
+            let Some((tid, fd, buf, len)) = self.k.pending.iter().find_map(|(t, w)| match w {
+                Wait::Read { fd, buf, len } => Some((*t, *fd, *buf, *len)),
+                _ => None,
+            }) else {
+                break;
+            };
+            self.k.pending.remove(&tid);
+            let cpu = self.k.sched.tcb(tid).last_cpu.unwrap_or(0);
+            let a0 = syscall::complete_read(&mut self.k, self.target.as_mut(), cpu, fd, buf, len);
+            self.k.sched.tcb_mut(tid).ctx.set_x(10, a0);
+            self.k.sched.make_ready(tid);
+        }
+    }
+
     fn collect_result(&mut self, wall: f64, error: Option<String>) -> RunResult {
         self.target.set_context(Context::Report);
         let ticks = self.target.now();
@@ -624,8 +783,9 @@ impl Runtime {
         let syscall_counts = rec
             .syscall_counts
             .iter()
-            .map(|(nr, c)| (crate::perf::recorder::syscall_name(*nr).to_string(), *c))
+            .map(|(nr, c)| (crate::perf::recorder::syscall_label(*nr), *c))
             .collect();
+        let overlap = rec.overlap.clone();
         RunResult {
             exit_code: self.k.exit_code.unwrap_or(0),
             error,
@@ -638,6 +798,7 @@ impl Runtime {
             wall_seconds: wall,
             instret,
             stall: rec.stall,
+            overlap,
             total_bytes: rec.total_bytes(),
             total_requests: rec.total_requests(),
             transactions: rec.transactions,

@@ -45,6 +45,9 @@ pub enum TState {
     FutexWait { pa: u64, va: u64 },
     /// Sleeping until a target tick (nanosleep / blocking host op).
     Sleep { until: u64 },
+    /// Parked on host I/O (blocking read); the kernel's `Pending` table
+    /// holds the completion data and `Runtime::push_stdin` retires it.
+    IoWait,
     Exited,
 }
 
@@ -246,21 +249,26 @@ impl Scheduler {
         self.sleepers.peek().map(|std::cmp::Reverse((t, _))| *t)
     }
 
-    /// Move sleepers due at `now` to ready.
-    pub fn expire_sleepers(&mut self, now: u64) -> usize {
-        let mut n = 0;
+    /// Move sleepers due at `now` to ready; returns the woken tids (the
+    /// kernel clears their `Pending`-table entries).
+    pub fn expire_sleepers(&mut self, now: u64) -> Vec<Tid> {
+        let mut woken = Vec::new();
         while let Some(std::cmp::Reverse((t, tid))) = self.sleepers.peek().copied() {
             if t > now {
                 break;
             }
             self.sleepers.pop();
-            // Skip if it was woken by other means meanwhile.
-            if matches!(self.tcbs[&tid].state, TState::Sleep { .. }) {
+            // Skip if it was woken by other means meanwhile, and skip
+            // *stale* entries: a sleep interrupted by a signal leaves its
+            // heap entry behind, and a later nanosleep by the same thread
+            // must not be cut short by it — only an entry whose deadline
+            // matches the TCB's current wait is live.
+            if matches!(self.tcbs[&tid].state, TState::Sleep { until } if until == t) {
                 self.make_ready(tid);
-                n += 1;
+                woken.push(tid);
             }
         }
-        n
+        woken
     }
 
     /// Dispatch ready threads onto idle CPUs; returns dispatch count.
@@ -377,10 +385,30 @@ mod tests {
         s.tcbs.get_mut(&b).unwrap().state = TState::Running(0);
         s.block_current(0, TState::Sleep { until: 200 });
         assert_eq!(s.next_wake(), Some(200));
-        assert_eq!(s.expire_sleepers(199), 0);
-        assert_eq!(s.expire_sleepers(200), 1);
+        assert!(s.expire_sleepers(199).is_empty());
+        assert_eq!(s.expire_sleepers(200), vec![b]);
         assert_eq!(s.ready.front(), Some(&b));
-        assert_eq!(s.expire_sleepers(1000), 1);
+        assert_eq!(s.expire_sleepers(1000), vec![a]);
+    }
+
+    #[test]
+    fn stale_sleeper_entry_cannot_cut_a_later_sleep_short() {
+        let mut s = Scheduler::new(1);
+        let a = s.spawn(ThreadCtx::zeroed());
+        s.ready.clear();
+        s.running[0] = Some(a);
+        s.tcbs.get_mut(&a).unwrap().state = TState::Running(0);
+        s.block_current(0, TState::Sleep { until: 100 });
+        // Interrupted (e.g. signal): woken early, heap entry left behind.
+        s.make_ready(a);
+        s.ready.clear();
+        s.running[0] = Some(a);
+        s.tcbs.get_mut(&a).unwrap().state = TState::Running(0);
+        // Sleeps again, much longer.
+        s.block_current(0, TState::Sleep { until: 1000 });
+        assert!(s.expire_sleepers(100).is_empty(), "stale entry must not wake the new sleep");
+        assert!(matches!(s.tcb(a).state, TState::Sleep { until: 1000 }));
+        assert_eq!(s.expire_sleepers(1000), vec![a]);
     }
 
     #[test]

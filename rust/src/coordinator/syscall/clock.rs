@@ -1,0 +1,64 @@
+//! Time syscalls: clock_gettime, gettimeofday, nanosleep. Guest-visible
+//! time is the target's Tick — syscall service latency is therefore
+//! observable by the guest exactly as the paper measures it. nanosleep
+//! defers through the `Pending` table; expiry is driven by the run
+//! loop's sleeper heap.
+
+use super::{Flow, Wait, EFAULT};
+use crate::coordinator::runtime::Kernel;
+use crate::coordinator::target::{ExcInfo, TargetOps};
+
+pub(super) fn sys_nanosleep(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let req = t.reg_r(cpu, 10);
+    let ts = match k.vm.read_guest(t, cpu, &mut k.alloc, req, 16) {
+        Ok(b) => b,
+        Err(_) => return Flow::Return(EFAULT),
+    };
+    let sec = u64::from_le_bytes(ts[0..8].try_into().unwrap());
+    let nsec = u64::from_le_bytes(ts[8..16].try_into().unwrap());
+    let ticks = sec
+        .saturating_mul(t.clock_hz())
+        .saturating_add(nsec.saturating_mul(t.clock_hz()) / 1_000_000_000);
+    let until = t.now() + ticks;
+    Flow::Block(Wait::Sleep { until })
+}
+
+pub(super) fn sys_clock_gettime(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    let ts_ptr = t.reg_r(cpu, 11);
+    let now = t.now();
+    let hz = t.clock_hz();
+    let sec = now / hz;
+    let nsec = (now % hz) * (1_000_000_000 / hz);
+    let mut buf = [0u8; 16];
+    buf[0..8].copy_from_slice(&sec.to_le_bytes());
+    buf[8..16].copy_from_slice(&nsec.to_le_bytes());
+    if k.vm.write_guest(t, cpu, &mut k.alloc, ts_ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+pub(super) fn sys_gettimeofday(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    let tv_ptr = t.reg_r(cpu, 10);
+    let now = t.now();
+    let hz = t.clock_hz();
+    let sec = now / hz;
+    let usec = (now % hz) / (hz / 1_000_000);
+    let mut buf = [0u8; 16];
+    buf[0..8].copy_from_slice(&sec.to_le_bytes());
+    buf[8..16].copy_from_slice(&usec.to_le_bytes());
+    if k.vm.write_guest(t, cpu, &mut k.alloc, tv_ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}

@@ -1,0 +1,157 @@
+//! File / descriptor syscalls (paper §V-D I/O bypass): openat, close,
+//! lseek, read/write, readv/writev, fstat. Reads that would block (stdin
+//! with no data, when blocking is enabled) defer through
+//! [`Flow::Block`]`(`[`Wait::Read`]`)` instead of spinning the guest.
+
+use super::{Flow, Wait, EFAULT};
+use crate::coordinator::runtime::Kernel;
+use crate::coordinator::target::{ExcInfo, TargetOps};
+
+pub(super) fn sys_openat(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let path_ptr = t.reg_r(cpu, 11);
+    let flags = t.reg_r(cpu, 12);
+    let path = match k.vm.read_cstr(t, cpu, &mut k.alloc, path_ptr, 4096) {
+        Ok(p) => p,
+        Err(_) => return Flow::Return(EFAULT),
+    };
+    Flow::Return(k.fds.open(&path, flags) as u64)
+}
+
+pub(super) fn sys_close(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let fd = t.reg_r(cpu, 10) as i64;
+    Flow::Return(k.fds.close(fd) as u64)
+}
+
+pub(super) fn sys_lseek(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let (fd, off, wh) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11) as i64, t.reg_r(cpu, 12));
+    Flow::Return(k.fds.lseek(fd, off, wh) as u64)
+}
+
+pub(super) fn sys_read(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let (fd, buf, len) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11), t.reg_r(cpu, 12) as usize);
+    if len > 0 && k.fds.stdin_block && k.fds.is_stdin(fd) && k.fds.stdin.is_empty() {
+        // Deferred completion: parked until push_stdin feeds data.
+        return Flow::Block(Wait::Read { fd, buf, len });
+    }
+    Flow::Return(do_read(k, t, cpu, fd, buf, len))
+}
+
+/// Perform a ready read — drain the descriptor, copy into guest memory,
+/// map the outcome to the syscall's a0. One body for the immediate path
+/// above and the deferred completion below, so both give a guest read
+/// identical semantics.
+pub(crate) fn do_read(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    fd: i64,
+    buf: u64,
+    len: usize,
+) -> u64 {
+    match k.fds.read(fd, len) {
+        Ok(data) => {
+            if !data.is_empty() && k.vm.write_guest(t, cpu, &mut k.alloc, buf, &data).is_err() {
+                return EFAULT;
+            }
+            data.len() as u64
+        }
+        Err(e) => e as u64,
+    }
+}
+
+/// Complete a deferred (`Wait::Read`) blocking read once input is
+/// available: the destination range for the bytes about to be delivered
+/// is validated (faulted in for writing) *before* the descriptor is
+/// drained, so a bad buffer completes with EFAULT without losing the
+/// buffered input — another parked reader can still receive it.
+pub(crate) fn complete_read(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    fd: i64,
+    buf: u64,
+    len: usize,
+) -> u64 {
+    let n = len.min(k.fds.stdin.len()) as u64;
+    let mut addr = buf;
+    let end = buf.saturating_add(n);
+    while addr < end {
+        // Mirror write_guest's failure modes: unmapped or COW pages go
+        // through the write-fault path; anything it rejects is EFAULT.
+        let writable = matches!(k.vm.translate(addr), Some((_, info)) if !info.cow);
+        if !writable && k.vm.handle_fault(t, cpu, &mut k.alloc, addr, true).is_err() {
+            return EFAULT;
+        }
+        addr = (addr & !(crate::coordinator::vm::PAGE - 1)) + crate::coordinator::vm::PAGE;
+    }
+    do_read(k, t, cpu, fd, buf, len)
+}
+
+pub(super) fn sys_write(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let (fd, buf, len) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11), t.reg_r(cpu, 12) as usize);
+    let data = match k.vm.read_guest(t, cpu, &mut k.alloc, buf, len) {
+        Ok(d) => d,
+        Err(_) => return Flow::Return(EFAULT),
+    };
+    Flow::Return(k.fds.write(fd, &data) as u64)
+}
+
+/// readv (65) / writev (66) — direction multiplexed on the trap's nr.
+pub(super) fn sys_iov(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, e: &ExcInfo) -> Flow {
+    let is_write = e.nr == 66;
+    let (fd, iov, cnt) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11), t.reg_r(cpu, 12));
+    let mut total: i64 = 0;
+    for i in 0..cnt.min(64) {
+        let hdr = match k.vm.read_guest(t, cpu, &mut k.alloc, iov + i * 16, 16) {
+            Ok(h) => h,
+            Err(_) => return Flow::Return(EFAULT),
+        };
+        let base = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        if len == 0 {
+            continue;
+        }
+        if is_write {
+            let data = match k.vm.read_guest(t, cpu, &mut k.alloc, base, len) {
+                Ok(d) => d,
+                Err(_) => return Flow::Return(EFAULT),
+            };
+            let r = k.fds.write(fd, &data);
+            if r < 0 {
+                return Flow::Return(r as u64);
+            }
+            total += r;
+        } else {
+            match k.fds.read(fd, len) {
+                Ok(d) => {
+                    if k.vm.write_guest(t, cpu, &mut k.alloc, base, &d).is_err() {
+                        return Flow::Return(EFAULT);
+                    }
+                    total += d.len() as i64;
+                    if d.len() < len {
+                        break;
+                    }
+                }
+                Err(e) => return Flow::Return(e as u64),
+            }
+        }
+    }
+    Flow::Return(total as u64)
+}
+
+pub(super) fn sys_fstat(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let (fd, statbuf) = (t.reg_r(cpu, 10) as i64, t.reg_r(cpu, 11));
+    let size = k.fds.file_size(fd);
+    if size < 0 {
+        return Flow::Return(size as u64);
+    }
+    let mut st = [0u8; 128];
+    let mode: u32 = if k.fds.is_tty(fd) { 0o020620 } else { 0o100644 };
+    st[16..20].copy_from_slice(&mode.to_le_bytes());
+    st[48..56].copy_from_slice(&(size as u64).to_le_bytes());
+    st[56..60].copy_from_slice(&4096u32.to_le_bytes()); // st_blksize
+    if k.vm.write_guest(t, cpu, &mut k.alloc, statbuf, &st).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}

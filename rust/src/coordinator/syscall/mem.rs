@@ -1,0 +1,120 @@
+//! Memory-management syscalls (paper §V-C): brk, mmap, munmap, mremap,
+//! mprotect. Page-table mutations go through [`AddressSpace`] so device
+//! sync rides write-combined MemW bursts; cross-CPU TLB shootdowns are
+//! deferred to each CPU's next trap via [`super::mark_tlb_stale`].
+
+use super::{mark_tlb_stale, Flow, EBADF, EFAULT, EINVAL, ENOMEM};
+use crate::coordinator::runtime::Kernel;
+use crate::coordinator::target::{ExcInfo, TargetOps};
+use crate::coordinator::vm::{RemapError, PAGE, PROT_READ, PROT_WRITE};
+
+const MAP_ANONYMOUS: u64 = 0x20;
+const MREMAP_MAYMOVE: u64 = 1;
+
+pub(super) fn sys_brk(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let want = t.reg_r(cpu, 10);
+    if want == 0 {
+        return Flow::Return(k.vm.brk);
+    }
+    if want < k.vm.brk_start {
+        return Flow::Return(k.vm.brk);
+    }
+    let new_end = (want + PAGE - 1) & !(PAGE - 1);
+    let old_end = k.vm.segments[k.heap_seg].end;
+    if new_end < old_end {
+        // shrink: release pages
+        let start = new_end;
+        k.vm.segments[k.heap_seg].end = new_end;
+        let mut p = start;
+        while p < old_end {
+            if let Some(ppn) = k.vm.unmap_page(t, cpu, p) {
+                k.alloc.decref(ppn);
+            }
+            p += PAGE;
+        }
+        mark_tlb_stale(k, cpu);
+    } else {
+        k.vm.segments[k.heap_seg].end = new_end;
+    }
+    k.vm.brk = want;
+    Flow::Return(want)
+}
+
+pub(super) fn sys_munmap(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let (addr, len) = (t.reg_r(cpu, 10), t.reg_r(cpu, 11));
+    if addr % PAGE != 0 {
+        return Flow::Return(EINVAL);
+    }
+    k.vm.munmap(t, cpu, &mut k.alloc, addr, len);
+    mark_tlb_stale(k, cpu);
+    Flow::Return(0)
+}
+
+/// mremap (nr 216) — glibc's large-allocation realloc path. Shrinks in
+/// place, grows in place when the following VA range is free, and
+/// relocates with MREMAP_MAYMOVE by re-pointing the existing physical
+/// pages (no copy, no wire traffic beyond the PTE updates).
+pub(super) fn sys_mremap(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let old_addr = t.reg_r(cpu, 10);
+    let old_len = t.reg_r(cpu, 11);
+    let new_len = t.reg_r(cpu, 12);
+    let flags = t.reg_r(cpu, 13);
+    if flags & !MREMAP_MAYMOVE != 0 {
+        // MREMAP_FIXED / MREMAP_DONTUNMAP are not supported.
+        return Flow::Return(EINVAL);
+    }
+    let may_move = flags & MREMAP_MAYMOVE != 0;
+    match k.vm.mremap(t, cpu, &mut k.alloc, old_addr, old_len, new_len, may_move) {
+        Ok(va) => {
+            mark_tlb_stale(k, cpu);
+            Flow::Return(va)
+        }
+        Err(RemapError::Invalid) => Flow::Return(EINVAL),
+        Err(RemapError::NoMem) => Flow::Return(ENOMEM),
+        Err(RemapError::Fault) => Flow::Return(EFAULT),
+    }
+}
+
+pub(super) fn sys_mmap(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let len = t.reg_r(cpu, 11);
+    let prot = t.reg_r(cpu, 12) & 7;
+    let flags = t.reg_r(cpu, 13);
+    if len == 0 {
+        return Flow::Return(EINVAL);
+    }
+    if flags & MAP_ANONYMOUS != 0 {
+        let va = k.vm.mmap_anon(len, if prot == 0 { PROT_READ | PROT_WRITE } else { prot });
+        return Flow::Return(va);
+    }
+    // File-backed mapping: slurp the file and map a private copy source.
+    let fd = t.reg_r(cpu, 14) as i64;
+    let off = t.reg_r(cpu, 15);
+    let size = k.fds.file_size(fd);
+    if size < 0 {
+        return Flow::Return(EBADF);
+    }
+    let cur = k.fds.lseek(fd, 0, 1);
+    k.fds.lseek(fd, off as i64, 0);
+    let content = match k.fds.read(fd, size.saturating_sub(off as i64) as usize) {
+        Ok(c) => c,
+        Err(e) => return Flow::Return(e as u64),
+    };
+    k.fds.lseek(fd, cur, 0);
+    let va = k.vm.mmap_anon(len, prot | PROT_READ);
+    let si = k.vm.find_segment(va).unwrap();
+    k.vm.segments[si].kind = crate::coordinator::vm::SegKind::File {
+        bytes: std::sync::Arc::new(content),
+        file_off: 0,
+    };
+    Flow::Return(va)
+}
+
+pub(super) fn sys_mprotect(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let (addr, len, prot) = (t.reg_r(cpu, 10), t.reg_r(cpu, 11), t.reg_r(cpu, 12) & 7);
+    if addr % PAGE != 0 {
+        return Flow::Return(EINVAL);
+    }
+    k.vm.mprotect(t, cpu, addr, len, prot);
+    mark_tlb_stale(k, cpu);
+    Flow::Return(0)
+}

@@ -1,0 +1,70 @@
+//! Identity / information / no-op syscalls: ioctl, uname, getpid,
+//! gettid, sysinfo, getrandom, and the accepted-but-inert family
+//! (set_robust_list, rt_sigprocmask, madvise, prlimit64) that all share
+//! [`sys_ok0`].
+
+use super::{Flow, EFAULT, ENOTTY};
+use crate::coordinator::runtime::Kernel;
+use crate::coordinator::target::{ExcInfo, TargetOps};
+
+/// Accept and return 0 — single-process semantics make these no-ops.
+pub(super) fn sys_ok0(_k: &mut Kernel, _t: &mut dyn TargetOps, _cpu: usize, _e: &ExcInfo) -> Flow {
+    Flow::Return(0)
+}
+
+pub(super) fn sys_ioctl(_k: &mut Kernel, _t: &mut dyn TargetOps, _cpu: usize, _e: &ExcInfo) -> Flow {
+    Flow::Return(ENOTTY)
+}
+
+pub(super) fn sys_getpid(k: &mut Kernel, _t: &mut dyn TargetOps, _cpu: usize, _e: &ExcInfo) -> Flow {
+    Flow::Return(k.pid as u64)
+}
+
+pub(super) fn sys_gettid(k: &mut Kernel, _t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    Flow::Return(k.sched.current(cpu).unwrap() as u64)
+}
+
+pub(super) fn sys_uname(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let buf_ptr = t.reg_r(cpu, 10);
+    let mut buf = [0u8; 65 * 6];
+    for (i, s) in ["Linux", "fase-target", "5.15.0-fase", "#1 SMP FASE", "riscv64", ""]
+        .iter()
+        .enumerate()
+    {
+        buf[i * 65..i * 65 + s.len()].copy_from_slice(s.as_bytes());
+    }
+    if k.vm.write_guest(t, cpu, &mut k.alloc, buf_ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+pub(super) fn sys_sysinfo(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let ptr = t.reg_r(cpu, 10);
+    let mut buf = [0u8; 112];
+    let uptime = t.now() / t.clock_hz();
+    buf[0..8].copy_from_slice(&uptime.to_le_bytes());
+    buf[32..40].copy_from_slice(&(2u64 << 30).to_le_bytes()); // totalram
+    if k.vm.write_guest(t, cpu, &mut k.alloc, ptr, &buf).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(0)
+}
+
+pub(super) fn sys_getrandom(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    let (buf, len) = (t.reg_r(cpu, 10), t.reg_r(cpu, 11) as usize);
+    let len = len.min(256);
+    let mut bytes = Vec::with_capacity(len);
+    for _ in 0..len {
+        bytes.push((k.prng.next_u64() >> 32) as u8);
+    }
+    if k.vm.write_guest(t, cpu, &mut k.alloc, buf, &bytes).is_err() {
+        return Flow::Return(EFAULT);
+    }
+    Flow::Return(len as u64)
+}

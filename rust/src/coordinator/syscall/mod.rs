@@ -1,0 +1,168 @@
+//! Linux RV64 syscall emulation — the exception-handler half of the FASE
+//! runtime (paper Fig 5/6), organized as a static handler registry.
+//!
+//! Each handler is registered in [`SYSCALLS`] with an [`ArgSpec`]
+//! (`argmask`) declaring *up front* which argument registers it will
+//! read. The run loop learns the syscall number from the `Next` report
+//! itself (the controller forwards a7), looks the handler up, and issues
+//! **one** batched HTP prefetch of exactly the declared registers — the
+//! handler's subsequent `reg_r` calls all hit the per-hart argument
+//! cache. An undeclared read still works (it falls back to a single
+//! round-trip), so a stale mask is a performance bug, never a
+//! correctness bug.
+//!
+//! Handlers return a [`Flow`]: either an immediate result or a deferred
+//! completion ([`Flow::Block`]) that parks the thread in the kernel's
+//! `Pending` table until a wake source (futex wake, sleep expiry, stdin
+//! data, signal) completes it — no handler pokes the scheduler directly.
+
+mod clock;
+mod fs;
+mod mem;
+mod misc;
+mod signal;
+mod thread;
+
+pub(crate) use fs::complete_read;
+
+use super::runtime::Kernel;
+use super::target::{ExcInfo, TargetOps};
+
+pub const EPERM: u64 = (-1i64) as u64;
+pub const ENOENT: u64 = (-2i64) as u64;
+pub const EINTR: u64 = (-4i64) as u64;
+pub const EBADF: u64 = (-9i64) as u64;
+pub const EAGAIN: u64 = (-11i64) as u64;
+pub const ENOMEM: u64 = (-12i64) as u64;
+pub const EFAULT: u64 = (-14i64) as u64;
+pub const EINVAL: u64 = (-22i64) as u64;
+pub const ENOTTY: u64 = (-25i64) as u64;
+pub const ENOSYS: u64 = (-38i64) as u64;
+
+/// What completes a deferred syscall — the kernel's `Pending`-table
+/// entry. The scheduler keeps its wait queues (futex FIFO, sleeper
+/// heap); this records *why* the thread is parked and what data the
+/// completion needs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Wait {
+    /// futex FUTEX_WAIT on a physical (and virtual) word address.
+    Futex { pa: u64, va: u64 },
+    /// nanosleep until a target tick.
+    Sleep { until: u64 },
+    /// Blocking read: `fd` had no bytes; completed by
+    /// [`Runtime::push_stdin`](super::runtime::Runtime::push_stdin).
+    Read { fd: i64, buf: u64, len: usize },
+}
+
+/// What the run loop should do after a handler returns.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Flow {
+    /// Write `a0` and resume at epc+4.
+    Return(u64),
+    /// Deferred completion: save context, park the thread on `wait` (the
+    /// runtime files it in the `Pending` table) and schedule something
+    /// else. The completion path writes a0 and readies the thread.
+    Block(Wait),
+    /// Current thread exited.
+    Exited,
+    /// Voluntary yield: context saved, thread re-queued.
+    Yield,
+    /// Whole process exited (exit_group).
+    ExitGroup,
+    /// Signal return: restore the saved context in place.
+    SigReturn,
+}
+
+/// Handler signature: the shared kernel state, the target, the trapping
+/// cpu and the full exception report (epc for resume, nr for multiplexed
+/// entries like kill/tgkill and readv/writev).
+pub type Handler = fn(&mut Kernel, &mut dyn TargetOps, usize, &ExcInfo) -> Flow;
+
+/// One registry entry. `argmask` is the handler's `ArgSpec`: bit i set
+/// means the handler reads a_i (x10+i); the run loop prefetches exactly
+/// that set in one batched round-trip. a7 never appears — the `Next`
+/// report already carries it.
+pub struct SyscallDef {
+    pub nr: u64,
+    pub name: &'static str,
+    pub argmask: u8,
+    pub handler: Handler,
+}
+
+const fn def(nr: u64, name: &'static str, argmask: u8, handler: Handler) -> SyscallDef {
+    SyscallDef { nr, name, argmask, handler }
+}
+
+/// The handler registry, sorted by syscall number (binary-searched).
+pub static SYSCALLS: &[SyscallDef] = &[
+    def(29, "ioctl", 0, misc::sys_ioctl),
+    def(56, "openat", 0b0000_0110, fs::sys_openat),
+    def(57, "close", 0b0000_0001, fs::sys_close),
+    def(62, "lseek", 0b0000_0111, fs::sys_lseek),
+    def(63, "read", 0b0000_0111, fs::sys_read),
+    def(64, "write", 0b0000_0111, fs::sys_write),
+    def(65, "readv", 0b0000_0111, fs::sys_iov),
+    def(66, "writev", 0b0000_0111, fs::sys_iov),
+    def(80, "fstat", 0b0000_0011, fs::sys_fstat),
+    def(93, "exit", 0, thread::sys_exit_thread),
+    def(94, "exit_group", 0b0000_0001, thread::sys_exit_group),
+    def(96, "set_tid_address", 0b0000_0001, thread::sys_set_tid_address),
+    def(98, "futex", 0b0000_0111, thread::sys_futex),
+    def(99, "set_robust_list", 0, misc::sys_ok0),
+    def(101, "nanosleep", 0b0000_0001, clock::sys_nanosleep),
+    def(113, "clock_gettime", 0b0000_0010, clock::sys_clock_gettime),
+    def(124, "sched_yield", 0, thread::sys_yield),
+    def(129, "kill", 0b0000_0010, signal::sys_kill),
+    def(131, "tgkill", 0b0000_0110, signal::sys_kill),
+    def(134, "rt_sigaction", 0b0000_0111, signal::sys_rt_sigaction),
+    def(135, "rt_sigprocmask", 0, misc::sys_ok0),
+    def(139, "rt_sigreturn", 0, signal::sys_rt_sigreturn),
+    def(160, "uname", 0b0000_0001, misc::sys_uname),
+    def(169, "gettimeofday", 0b0000_0001, clock::sys_gettimeofday),
+    def(172, "getpid", 0, misc::sys_getpid),
+    def(178, "gettid", 0, misc::sys_gettid),
+    def(179, "sysinfo", 0b0000_0001, misc::sys_sysinfo),
+    def(214, "brk", 0b0000_0001, mem::sys_brk),
+    def(215, "munmap", 0b0000_0011, mem::sys_munmap),
+    def(216, "mremap", 0b0000_1111, mem::sys_mremap),
+    def(220, "clone", 0b0001_1111, thread::sys_clone),
+    def(222, "mmap", 0b0011_1110, mem::sys_mmap),
+    def(226, "mprotect", 0b0000_0111, mem::sys_mprotect),
+    def(233, "madvise", 0, misc::sys_ok0),
+    def(261, "prlimit64", 0, misc::sys_ok0),
+    def(278, "getrandom", 0b0000_0011, misc::sys_getrandom),
+];
+
+/// Registry lookup by syscall number.
+pub fn lookup(nr: u64) -> Option<&'static SyscallDef> {
+    SYSCALLS.binary_search_by_key(&nr, |d| d.nr).ok().map(|i| &SYSCALLS[i])
+}
+
+/// Dispatch one delegated syscall: look the handler up, issue its
+/// ArgSpec prefetch (one batched round-trip on a batching target), run
+/// it. Unknown numbers fall through to ENOSYS.
+pub fn dispatch(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, exc: &ExcInfo) -> Flow {
+    match lookup(exc.nr) {
+        Some(d) => {
+            t.prefetch_args(cpu, d.argmask);
+            (d.handler)(k, t, cpu, exc)
+        }
+        None => Flow::Return(ENOSYS),
+    }
+}
+
+/// Page tables changed under running CPUs: the paper delays remote TLB
+/// flushes to each CPU's next exception (no IPIs on the minimal target).
+pub(crate) fn mark_tlb_stale(k: &mut Kernel, except_cpu: usize) {
+    for (i, p) in k.pending_tlb.iter_mut().enumerate() {
+        if i != except_cpu {
+            *p = true;
+        }
+    }
+    // The faulting CPU is stalled in M-mode; flush applied on its resume
+    // path too, cheaply, by the same mechanism.
+    k.pending_tlb[except_cpu] = true;
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,76 @@
+//! Signal syscalls: kill/tgkill, rt_sigaction, rt_sigreturn. Delivery to
+//! a thread parked in the `Pending` table goes through
+//! [`Kernel::interrupt_wait`], which cancels the deferred completion
+//! with EINTR instead of hand-rolled queue surgery.
+
+use super::{Flow, EINTR, ENOENT};
+use crate::coordinator::runtime::Kernel;
+use crate::coordinator::sched::{SigAction, TState, MAIN_TID};
+use crate::coordinator::target::{ExcInfo, TargetOps};
+
+/// kill (129) -> main thread; tgkill (131) -> explicit tid. Multiplexed
+/// on the trap's nr.
+pub(super) fn sys_kill(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, e: &ExcInfo) -> Flow {
+    let (target_tid, sig) = if e.nr == 131 {
+        // tgkill(tgid, tid, sig)
+        (t.reg_r(cpu, 11) as i32, t.reg_r(cpu, 12) as i32)
+    } else {
+        // kill(pid, sig) -> main thread
+        (MAIN_TID, t.reg_r(cpu, 11) as i32)
+    };
+    if sig == 0 {
+        return Flow::Return(0);
+    }
+    if !k.sched.tcbs.contains_key(&target_tid) {
+        return Flow::Return(ENOENT);
+    }
+    k.sched.tcb_mut(target_tid).pending_signals.push_back(sig);
+    // Interrupt a blocked target so the signal is delivered promptly:
+    // cancel its deferred completion with EINTR.
+    let state = k.sched.tcb(target_tid).state.clone();
+    if matches!(state, TState::FutexWait { .. } | TState::Sleep { .. } | TState::IoWait) {
+        k.interrupt_wait(target_tid, EINTR);
+    }
+    Flow::Return(0)
+}
+
+pub(super) fn sys_rt_sigaction(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    let sig = t.reg_r(cpu, 10) as i32;
+    let act = t.reg_r(cpu, 11);
+    let oldact = t.reg_r(cpu, 12);
+    if oldact != 0 {
+        let prev = k.sched.sig_actions.get(&sig).copied().unwrap_or_default();
+        let mut buf = [0u8; 32];
+        buf[0..8].copy_from_slice(&prev.handler.to_le_bytes());
+        buf[8..16].copy_from_slice(&prev.flags.to_le_bytes());
+        buf[24..32].copy_from_slice(&prev.mask.to_le_bytes());
+        if k.vm.write_guest(t, cpu, &mut k.alloc, oldact, &buf).is_err() {
+            return Flow::Return(super::EFAULT);
+        }
+    }
+    if act != 0 {
+        let buf = match k.vm.read_guest(t, cpu, &mut k.alloc, act, 32) {
+            Ok(b) => b,
+            Err(_) => return Flow::Return(super::EFAULT),
+        };
+        let handler = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let flags = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let mask = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        k.sched.sig_actions.insert(sig, SigAction { handler, mask, flags });
+    }
+    Flow::Return(0)
+}
+
+pub(super) fn sys_rt_sigreturn(
+    _k: &mut Kernel,
+    _t: &mut dyn TargetOps,
+    _cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    Flow::SigReturn
+}

@@ -1,0 +1,172 @@
+//! Thread lifecycle + futex syscalls (paper §V-A): clone, exit,
+//! exit_group, set_tid_address, sched_yield and futex. Blocking waits go
+//! through [`Flow::Block`] so the kernel's `Pending` table owns every
+//! deferred completion; wakes flow through [`Kernel::wake_futex`] which
+//! clears those entries centrally.
+
+use super::{Flow, Wait, EAGAIN, EFAULT, ENOSYS};
+use crate::coordinator::runtime::Kernel;
+use crate::coordinator::sched::ThreadCtx;
+use crate::coordinator::target::{ExcInfo, TargetOps};
+use crate::fase::htp::HfOp;
+
+const FUTEX_WAIT: u64 = 0;
+const FUTEX_WAKE: u64 = 1;
+const FUTEX_CMD_MASK: u64 = 0x7f;
+
+// clone flags
+const CLONE_SETTLS: u64 = 0x0008_0000;
+const CLONE_PARENT_SETTID: u64 = 0x0010_0000;
+const CLONE_CHILD_CLEARTID: u64 = 0x0020_0000;
+
+// ---- HFutex host-side mirror maintenance ----
+
+pub(super) fn hf_add(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, va: u64) {
+    let cpus = k.hf_mirror.entry(va).or_default();
+    if !cpus.contains(&cpu) {
+        t.hfutex(cpu, HfOp::Add, va);
+        cpus.push(cpu);
+    }
+}
+
+pub(super) fn hf_clear(k: &mut Kernel, t: &mut dyn TargetOps, va: u64) {
+    if let Some(cpus) = k.hf_mirror.remove(&va) {
+        for cpu in cpus {
+            t.hfutex(cpu, HfOp::ClearAddr, va);
+        }
+    }
+}
+
+pub(super) fn sys_exit_thread(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    let tid = k.sched.exit_current(cpu);
+    let ctid = k.sched.tcb(tid).clear_child_tid;
+    if ctid != 0 {
+        // CLONE_CHILD_CLEARTID: *ctid = 0; futex_wake(ctid, 1). This is
+        // what thread_join waits on.
+        if let Some((pa, _)) = k.vm.translate(ctid) {
+            let aligned = pa & !7;
+            let word = t.mem_r(cpu, aligned);
+            let mut bytes = word.to_le_bytes();
+            let off = (pa - aligned) as usize;
+            bytes[off..off + 4].copy_from_slice(&0u32.to_le_bytes());
+            t.mem_w(cpu, aligned, u64::from_le_bytes(bytes));
+            let woken = k.wake_futex(pa & !3, 1);
+            if woken.is_empty() && k.hfutex_enabled {
+                // nobody waiting yet; mask future redundant wakes
+                hf_add(k, t, cpu, ctid & !3);
+            } else {
+                hf_clear(k, t, ctid & !3);
+            }
+        }
+    }
+    Flow::Exited
+}
+
+pub(super) fn sys_exit_group(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    k.exit_code = Some(t.reg_r(cpu, 10) as i32);
+    Flow::ExitGroup
+}
+
+pub(super) fn sys_set_tid_address(
+    k: &mut Kernel,
+    t: &mut dyn TargetOps,
+    cpu: usize,
+    _e: &ExcInfo,
+) -> Flow {
+    let tid = k.sched.current(cpu).unwrap();
+    let addr = t.reg_r(cpu, 10);
+    k.sched.tcb_mut(tid).clear_child_tid = addr;
+    Flow::Return(tid as u64)
+}
+
+pub(super) fn sys_futex(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, _e: &ExcInfo) -> Flow {
+    let uaddr = t.reg_r(cpu, 10);
+    let op = t.reg_r(cpu, 11) & FUTEX_CMD_MASK;
+    let val = t.reg_r(cpu, 12);
+    // Resolve the futex word's physical address (fault it in if needed).
+    if k.vm.translate(uaddr).is_none()
+        && k.vm.handle_fault(t, cpu, &mut k.alloc, uaddr, false).is_err()
+    {
+        return Flow::Return(EFAULT);
+    }
+    let (pa, _) = k.vm.translate(uaddr).unwrap();
+    let pa_word = pa & !3;
+    match op {
+        FUTEX_WAIT => {
+            let aligned = pa & !7;
+            let word = t.mem_r(cpu, aligned);
+            let cur = if pa & 7 == 4 { (word >> 32) as u32 } else { word as u32 };
+            if cur != val as u32 {
+                return Flow::Return(EAGAIN);
+            }
+            // A real waiter exists now: redundant-wake filtering must stop.
+            if k.hfutex_enabled {
+                hf_clear(k, t, uaddr);
+            }
+            // Deferred completion: woken by wake_futex (a0 = 0) or a
+            // signal (a0 = EINTR).
+            Flow::Block(Wait::Futex { pa: pa_word, va: uaddr })
+        }
+        FUTEX_WAKE => {
+            let woken = k.wake_futex(pa_word, val as usize);
+            if k.hfutex_enabled {
+                if woken.is_empty() {
+                    // Redundant wake: teach the controller to absorb these.
+                    hf_add(k, t, cpu, uaddr);
+                } else {
+                    hf_clear(k, t, uaddr);
+                }
+            }
+            Flow::Return(woken.len() as u64)
+        }
+        _ => Flow::Return(ENOSYS),
+    }
+}
+
+pub(super) fn sys_yield(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, e: &ExcInfo) -> Flow {
+    k.sched.save_context(t, cpu, e.epc + 4);
+    let tid = k.sched.current(cpu).unwrap();
+    k.sched.tcb_mut(tid).ctx.set_x(10, 0);
+    Flow::Yield
+}
+
+pub(super) fn sys_clone(k: &mut Kernel, t: &mut dyn TargetOps, cpu: usize, e: &ExcInfo) -> Flow {
+    let flags = t.reg_r(cpu, 10);
+    let stack = t.reg_r(cpu, 11);
+    let ptid = t.reg_r(cpu, 12);
+    let ctid = t.reg_r(cpu, 14);
+    if stack == 0 {
+        return Flow::Return(ENOSYS); // fork not supported (threads only)
+    }
+    // Child context = parent's registers at the syscall, with a0=0 and the
+    // provided stack (paper Fig 6 step 7: runtime builds the thread).
+    k.sched.save_context(t, cpu, e.epc + 4);
+    let parent = k.sched.current(cpu).unwrap();
+    let mut child_ctx: ThreadCtx = k.sched.tcb(parent).ctx.clone();
+    child_ctx.set_x(10, 0);
+    child_ctx.set_x(2, stack);
+    if flags & CLONE_SETTLS != 0 {
+        child_ctx.set_x(4, t.reg_r(cpu, 13));
+    }
+    let child = k.sched.spawn(child_ctx);
+    if flags & CLONE_CHILD_CLEARTID != 0 {
+        k.sched.tcb_mut(child).clear_child_tid = ctid;
+    }
+    if flags & CLONE_PARENT_SETTID != 0 && ptid != 0 {
+        let bytes = (child as u32).to_le_bytes();
+        if k.vm.write_guest(t, cpu, &mut k.alloc, ptid, &bytes).is_err() {
+            return Flow::Return(EFAULT);
+        }
+    }
+    Flow::Return(child as u64)
+}

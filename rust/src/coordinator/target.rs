@@ -17,6 +17,15 @@ pub struct ExcInfo {
     pub cause: u64,
     pub epc: u64,
     pub tval: u64,
+    /// Target tick at which the hart raised the trap. The completion
+    /// queue services drained traps in (at, cpu) order — the
+    /// deterministic tie-break that keeps sweep reports byte-stable.
+    pub at: u64,
+    /// a7 at trap time: the syscall number for ecalls (0 for other
+    /// causes), forwarded by the controller's Next FSM so the host can
+    /// pick the handler and plan its argument prefetch without an extra
+    /// RegR round-trip.
+    pub nr: u64,
 }
 
 impl ExcInfo {
@@ -74,6 +83,28 @@ pub trait TargetOps {
     /// Wait (in target time) for the next exception, up to `t_max`.
     fn next_exception(&mut self, t_max: u64) -> Option<ExcInfo>;
 
+    /// Drain trap events that are *already raised* on the target without
+    /// advancing past them — the completion-queue refill. After
+    /// [`next_exception`](TargetOps::next_exception) returns one trap,
+    /// the runtime pulls every other pending trap so multiple harts'
+    /// transactions are in flight concurrently; a FASE target streams
+    /// them off the controller's event FIFO on the already-armed `Next`
+    /// (no extra per-transaction host charge). Default: nothing queued.
+    fn drain_exceptions(&mut self) -> Vec<ExcInfo> {
+        Vec::new()
+    }
+
+    /// A trap transaction for `cpu` enters host service. A FASE target
+    /// snapshots the other harts' user-time here so the recorder can
+    /// attribute how much execution overlapped this hart's stall.
+    fn begin_trap(&mut self, _cpu: usize) {}
+
+    /// The trap transaction for `cpu` retires (thread resumed, blocked
+    /// or exited); the overlap window closes. `DirectTarget` retires
+    /// synchronously but records the same per-hart overlap so fullsys
+    /// and FASE stall breakdowns stay comparable.
+    fn complete_trap(&mut self, _cpu: usize) {}
+
     fn redirect(&mut self, cpu: usize, pc: u64, switch: bool);
     fn set_mmu(&mut self, cpu: usize, satp: u64);
     fn flush_tlb(&mut self, cpu: usize);
@@ -126,10 +157,12 @@ pub trait TargetOps {
         }
     }
 
-    /// Hint that the runtime is about to service a syscall on `cpu`: a
-    /// batching target fetches a0..a7 in one round-trip so the following
-    /// `reg_r` calls are free. No-op for direct-access targets.
-    fn prefetch_syscall_args(&mut self, _cpu: usize) {}
+    /// Hint that the syscall handler about to run on `cpu` will read the
+    /// argument registers in `mask` (bit i => a_i, i.e. x10+i — the
+    /// handler's declared `ArgSpec`): a batching target fetches exactly
+    /// those registers in one round-trip so the handler's `reg_r` calls
+    /// are free. No-op for direct-access targets.
+    fn prefetch_args(&mut self, _cpu: usize, _mask: u8) {}
 
     /// Mode-specific overhead charged around guest-syscall handling.
     fn syscall_overhead(&mut self, cpu: usize, nr: u64);
@@ -144,6 +177,36 @@ pub trait TargetOps {
     fn machine_mut(&mut self) -> &mut Machine;
     fn machine(&self) -> &Machine;
     fn filtered_wakes(&self) -> u64;
+}
+
+/// Per-hart in-flight trap-transaction windows, shared by every target:
+/// `begin` snapshots (now, other harts' summed UTick), `complete` closes
+/// the window and attributes the delta to the recorder. FASE and the
+/// full-system baseline must account overlap *identically* or the
+/// fig17/table4 stall comparisons skew — hence one implementation.
+struct TrapOverlap {
+    marks: Vec<Option<(u64, u64)>>,
+}
+
+impl TrapOverlap {
+    fn new(n: usize) -> TrapOverlap {
+        TrapOverlap { marks: vec![None; n] }
+    }
+
+    /// Summed user-mode ticks of every hart except `cpu` (overlap probe).
+    fn others_uticks(m: &Machine, cpu: usize) -> u64 {
+        m.harts.iter().enumerate().filter(|&(i, _)| i != cpu).map(|(_, h)| h.utick).sum()
+    }
+
+    fn begin(&mut self, m: &Machine, cpu: usize) {
+        self.marks[cpu] = Some((m.now, Self::others_uticks(m, cpu)));
+    }
+
+    fn complete(&mut self, m: &Machine, rec: &mut Recorder, cpu: usize) {
+        if let Some((t0, u0)) = self.marks[cpu].take() {
+            rec.record_trap(cpu, m.now - t0, Self::others_uticks(m, cpu) - u0);
+        }
+    }
 }
 
 // =====================================================================
@@ -167,9 +230,11 @@ pub struct FaseTarget {
     /// HTP batching layer: coalesce multi-request operations into batch
     /// frames. Disable to model the one-request-per-transaction protocol.
     pub batching: bool,
-    /// Cached a0..a7 (x10..x17) per cpu from a batched argument prefetch;
+    /// Cached a0..a7 (x10..x17) per cpu from a masked argument prefetch;
     /// valid only while that hart is stopped in the controller.
-    arg_cache: Vec<Option<[u64; 8]>>,
+    arg_cache: Vec<[Option<u64>; 8]>,
+    /// In-flight trap windows, closed by `complete_trap`.
+    trap_mark: TrapOverlap,
 }
 
 impl FaseTarget {
@@ -185,7 +250,8 @@ impl FaseTarget {
             lat,
             rec,
             batching: true,
-            arg_cache: vec![None; n],
+            arg_cache: vec![[None; 8]; n],
+            trap_mark: TrapOverlap::new(n),
         }
     }
 
@@ -290,18 +356,18 @@ impl FaseTarget {
 
     fn cached_arg(&self, cpu: usize, idx: u8) -> Option<u64> {
         if (10..=17).contains(&idx) {
-            self.arg_cache[cpu].map(|a| a[(idx - 10) as usize])
+            self.arg_cache[cpu][(idx - 10) as usize]
         } else {
             None
         }
     }
 
-    /// Keep the argument cache coherent with host-side register writes.
+    /// Keep the argument cache coherent with host-side register writes
+    /// (the host knows the value it just wrote, so the entry is valid
+    /// whether or not it was prefetched).
     fn cache_reg_write(&mut self, cpu: usize, idx: u8, val: u64) {
         if (10..=17).contains(&idx) {
-            if let Some(a) = self.arg_cache[cpu].as_mut() {
-                a[(idx - 10) as usize] = val;
-            }
+            self.arg_cache[cpu][(idx - 10) as usize] = Some(val);
         }
     }
 }
@@ -343,8 +409,8 @@ impl TargetOps for FaseTarget {
                     );
                     self.rec.record_transaction();
                     self.rec.record_runtime_stall(host);
-                    if let Resp::Exception { cpu, cause, epc, tval } = resp {
-                        return Some(ExcInfo { cpu: cpu as usize, cause, epc, tval });
+                    if let Resp::Exception { cpu, cause, epc, tval, nr, at } = resp {
+                        return Some(ExcInfo { cpu: cpu as usize, cause, epc, tval, at, nr });
                     }
                     unreachable!("next_event reports only exceptions");
                 }
@@ -360,9 +426,60 @@ impl TargetOps for FaseTarget {
         }
     }
 
+    fn drain_exceptions(&mut self) -> Vec<ExcInfo> {
+        // Pipelined Next: with a report already in flight the controller
+        // streams further queued events back-to-back off its event FIFO —
+        // the wire and controller time are paid per report, but the
+        // per-transaction host charge is not (the host's Next is already
+        // armed). This is what lets one hart's syscall service overlap
+        // the *reporting* of other harts' traps.
+        let mut out = Vec::new();
+        loop {
+            match self.ctl.next_event(&mut self.m) {
+                Some(NextOutcome::Report { resp, stats }) => {
+                    let req_ticks = self.transport.per_transaction_ticks()
+                        + self.transport.tx_ticks(Req::Next.wire_len());
+                    let resp_ticks = self.transport.rx_ticks(resp.wire_len());
+                    let t = self.m.now + req_ticks + stats.cycles + resp_ticks;
+                    self.m.run_until(t);
+                    self.rec.record_request(
+                        Req::Next.kind(),
+                        Req::Next.wire_len(),
+                        resp.wire_len(),
+                        req_ticks + resp_ticks,
+                        stats.cycles,
+                        stats.reg_ops,
+                        stats.injects,
+                    );
+                    self.rec.record_transaction();
+                    if let Resp::Exception { cpu, cause, epc, tval, nr, at } = resp {
+                        out.push(ExcInfo { cpu: cpu as usize, cause, epc, tval, at, nr });
+                    } else {
+                        unreachable!("next_event reports only exceptions");
+                    }
+                }
+                Some(NextOutcome::Filtered { stats }) => {
+                    self.rec.filtered_wakes += 1;
+                    let t = self.m.now + stats.cycles;
+                    self.m.run_until(t);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    fn begin_trap(&mut self, cpu: usize) {
+        self.trap_mark.begin(&self.m, cpu);
+    }
+
+    fn complete_trap(&mut self, cpu: usize) {
+        self.trap_mark.complete(&self.m, &mut self.rec, cpu);
+    }
+
     fn redirect(&mut self, cpu: usize, pc: u64, switch: bool) {
         // The guest is about to run and mutate registers.
-        self.arg_cache[cpu] = None;
+        self.arg_cache[cpu] = [None; 8];
         self.transact(Req::Redirect { cpu: cpu as u8, pc, switch });
     }
     fn set_mmu(&mut self, cpu: usize, satp: u64) {
@@ -457,18 +574,22 @@ impl TargetOps for FaseTarget {
         }
     }
 
-    fn prefetch_syscall_args(&mut self, cpu: usize) {
-        if !self.batching || self.arg_cache[cpu].is_some() {
+    fn prefetch_args(&mut self, cpu: usize, mask: u8) {
+        if !self.batching {
             return;
         }
-        let reqs: Vec<Req> =
-            (10u8..=17).map(|idx| Req::RegR { cpu: cpu as u8, idx }).collect();
-        let resps = self.transact_frame(BatchFrame::new(cpu as u8, reqs));
-        let mut args = [0u64; 8];
-        for (a, r) in args.iter_mut().zip(&resps) {
-            *a = r.word();
+        let need: Vec<u8> = (0..8u8)
+            .filter(|&i| mask & (1 << i) != 0 && self.arg_cache[cpu][i as usize].is_none())
+            .map(|i| 10 + i)
+            .collect();
+        if need.is_empty() {
+            return;
         }
-        self.arg_cache[cpu] = Some(args);
+        let reqs: Vec<Req> = need.iter().map(|&idx| Req::RegR { cpu: cpu as u8, idx }).collect();
+        let resps = self.transact_frame(BatchFrame::new(cpu as u8, reqs));
+        for (&idx, r) in need.iter().zip(&resps) {
+            self.arg_cache[cpu][(idx - 10) as usize] = Some(r.word());
+        }
     }
     fn mem_r(&mut self, cpu: usize, paddr: u64) -> u64 {
         self.transact(Req::MemR { cpu: cpu as u8, addr: paddr }).word()
@@ -600,12 +721,42 @@ pub struct DirectTarget {
     /// Preemption only matters when threads exceed cores; the runtime
     /// enables the timer when it dispatches.
     pub timer_enabled: bool,
+    /// In-flight trap windows (same accounting as `FaseTarget`).
+    trap_mark: TrapOverlap,
 }
 
 impl DirectTarget {
     pub fn new(m: Machine, k: KernelCosts) -> DirectTarget {
         let next_timer = k.timer_period;
-        DirectTarget { m, k, rec: Recorder::new(), next_timer, timer_rr: 0, timer_enabled: true }
+        let n = m.harts.len();
+        DirectTarget {
+            m,
+            k,
+            rec: Recorder::new(),
+            next_timer,
+            timer_rr: 0,
+            timer_enabled: true,
+            trap_mark: TrapOverlap::new(n),
+        }
+    }
+
+    /// Trap CSRs + raise-time + a7 of a popped event, then the on-core
+    /// kernel entry cost (cycles + cache/TLB pollution).
+    fn take_event(&mut self, ev: crate::soc::machine::ExceptionEvent) -> ExcInfo {
+        let h = &self.m.harts[ev.cpu];
+        let cause = h.csrs.mcause;
+        let info = ExcInfo {
+            cpu: ev.cpu,
+            cause,
+            epc: h.csrs.mepc,
+            tval: h.csrs.mtval,
+            at: ev.at,
+            nr: if cause == 8 { h.regs[17] } else { 0 },
+        };
+        // Kernel trap entry runs on-core.
+        self.kernel_work(ev.cpu, self.k.trap_entry);
+        self.pollute(ev.cpu);
+        info
     }
 
     /// Kernel work on `cpu`: cycles pass on that hart (M-mode, so UTick is
@@ -669,17 +820,7 @@ impl TargetOps for DirectTarget {
             };
             if self.m.run_until_exception(step_max) {
                 let ev = self.m.pop_exception().unwrap();
-                let h = &self.m.harts[ev.cpu];
-                let info = ExcInfo {
-                    cpu: ev.cpu,
-                    cause: h.csrs.mcause,
-                    epc: h.csrs.mepc,
-                    tval: h.csrs.mtval,
-                };
-                // Kernel trap entry runs on-core.
-                self.kernel_work(ev.cpu, self.k.trap_entry);
-                self.pollute(ev.cpu);
-                return Some(info);
+                return Some(self.take_event(ev));
             }
             if self.m.now >= t_max {
                 return None;
@@ -693,6 +834,25 @@ impl TargetOps for DirectTarget {
                 return None;
             }
         }
+    }
+
+    fn drain_exceptions(&mut self) -> Vec<ExcInfo> {
+        // The baseline kernel retires traps synchronously, but multiple
+        // harts can still have trapped in the same execution window; the
+        // completion queue services them in deterministic (at, cpu) order.
+        let mut out = Vec::new();
+        while let Some(ev) = self.m.pop_exception() {
+            out.push(self.take_event(ev));
+        }
+        out
+    }
+
+    fn begin_trap(&mut self, cpu: usize) {
+        self.trap_mark.begin(&self.m, cpu);
+    }
+
+    fn complete_trap(&mut self, cpu: usize) {
+        self.trap_mark.complete(&self.m, &mut self.rec, cpu);
     }
 
     fn redirect(&mut self, cpu: usize, pc: u64, _switch: bool) {
@@ -903,7 +1063,7 @@ mod tests {
         // The acceptance criterion: >= 8 RegR transactions collapse into 1
         // batched transaction for syscall-argument fetch.
         let mut batched = fase_target(921_600);
-        batched.prefetch_syscall_args(0);
+        batched.prefetch_args(0, 0xff);
         for idx in 10u8..=17 {
             let _ = batched.reg_r(0, idx); // all served from the arg cache
         }
@@ -915,7 +1075,7 @@ mod tests {
 
         let mut unbatched = fase_target(921_600);
         unbatched.batching = false;
-        unbatched.prefetch_syscall_args(0); // no-op without batching
+        unbatched.prefetch_args(0, 0xff); // no-op without batching
         for idx in 10u8..=17 {
             let _ = unbatched.reg_r(0, idx);
         }
@@ -926,10 +1086,27 @@ mod tests {
     }
 
     #[test]
+    fn masked_prefetch_fetches_only_declared_args() {
+        let mut t = fase_target(921_600);
+        t.prefetch_args(0, 0b0000_0111); // a0..a2 only
+        assert_eq!(t.rec.transactions, 1);
+        assert_eq!(t.rec.by_kind[&crate::fase::htp::ReqKind::RegRW].count, 3);
+        for idx in 10u8..=12 {
+            let _ = t.reg_r(0, idx); // cache hits
+        }
+        assert_eq!(t.rec.transactions, 1, "declared args served from cache");
+        let _ = t.reg_r(0, 13); // undeclared: falls back to a round-trip
+        assert_eq!(t.rec.transactions, 2);
+        // Re-prefetching an already-cached subset is free.
+        t.prefetch_args(0, 0b0000_0011);
+        assert_eq!(t.rec.transactions, 2);
+    }
+
+    #[test]
     fn arg_cache_invalidated_on_redirect_and_updated_on_write() {
         let mut t = fase_target(921_600);
         t.reg_w(0, 10, 111);
-        t.prefetch_syscall_args(0);
+        t.prefetch_args(0, 0xff);
         assert_eq!(t.reg_r(0, 10), 111);
         // Host-side writes stay coherent with the cache.
         t.reg_w(0, 10, 222);
@@ -1034,6 +1211,63 @@ mod tests {
         assert_eq!(exc.cpu, 0);
         assert!(exc.is_ecall());
         assert_eq!(exc.epc, code + 4);
+        assert_eq!(exc.nr, 93, "Next report carries a7");
+        assert!(exc.at > 0, "Next report carries the raise tick");
         assert_eq!(t.reg_r(0, 17), 93);
+    }
+
+    /// Two harts trap in the same window: `next_exception` returns one,
+    /// `drain_exceptions` pulls the other off the event FIFO without an
+    /// extra host round-trip charge — both reports carry (at, nr).
+    #[test]
+    fn drain_pulls_second_harts_trap_from_the_event_fifo() {
+        let mut t = fase_target(921_600);
+        for cpu in 0..2u8 {
+            let code = DRAM_BASE + 0x4000 + cpu as u64 * 0x100;
+            t.m.ms.phys.write_n(code, 4, encode::addi(17, 0, 100 + cpu as i32) as u64);
+            t.m.ms.phys.write_n(code + 4, 4, 0x73);
+            t.redirect(cpu as usize, code, false);
+        }
+        let first = t.next_exception(u64::MAX).expect("first trap");
+        let stall_before = t.rec.stall.runtime_ticks;
+        let rest = t.drain_exceptions();
+        assert_eq!(rest.len(), 1, "second hart's trap drained");
+        assert_ne!(first.cpu, rest[0].cpu);
+        assert_eq!(rest[0].nr, 100 + rest[0].cpu as u64);
+        assert_eq!(
+            t.rec.stall.runtime_ticks, stall_before,
+            "drained reports ride the armed Next: no extra host charge"
+        );
+        assert!(t.drain_exceptions().is_empty());
+    }
+
+    /// While hart 0's trap transaction is in flight, hart 1 keeps
+    /// retiring user instructions — the recorder attributes the overlap.
+    #[test]
+    fn trap_overlap_accounts_other_harts_progress() {
+        let mut t = fase_target(115_200);
+        let code = DRAM_BASE + 0x6000;
+        t.m.ms.phys.write_n(code, 4, encode::addi(5, 5, 1) as u64);
+        t.m.ms.phys.write_n(code + 4, 4, {
+            // jal x0, -4
+            let off: i64 = -4;
+            let v = off as u32;
+            (0x0000_006fu32
+                | (((v >> 20) & 1) << 31)
+                | (((v >> 1) & 0x3ff) << 21)
+                | (((v >> 11) & 1) << 20)
+                | (((v >> 12) & 0xff) << 12)) as u64
+        });
+        t.m.harts[1].pc = code;
+        t.m.harts[1].prv = crate::rv64::hart::PrivLevel::U;
+        t.m.harts[1].stop_fetch = false;
+        t.begin_trap(0);
+        t.page_set(0, (DRAM_BASE + 0x10_0000) >> 12, 0);
+        t.complete_trap(0);
+        let o = &t.rec.overlap[0];
+        assert_eq!(o.traps, 1);
+        assert!(o.stall_ticks > 0);
+        assert!(o.overlapped_uticks > 0, "hart 1 user time overlapped the stall");
+        assert!(t.rec.overlap.len() < 2 || t.rec.overlap[1].traps == 0);
     }
 }

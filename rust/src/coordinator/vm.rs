@@ -41,6 +41,20 @@ impl std::fmt::Display for VmError {
 
 impl std::error::Error for VmError {}
 
+/// Why an [`AddressSpace::mremap`] request was refused — mapped onto
+/// EINVAL / ENOMEM / EFAULT by the syscall handler.
+#[derive(Debug, PartialEq)]
+pub enum RemapError {
+    /// Misaligned address, zero length, unsupported flags, or a range the
+    /// remapper does not handle (partial segment, file-backed mapping).
+    Invalid,
+    /// The region cannot grow in place and moving was not permitted (or
+    /// target physical memory ran out).
+    NoMem,
+    /// The old range is not (entirely) part of the address space.
+    Fault,
+}
+
 /// Reference-counted physical page allocator over the device DRAM window
 /// above the loaded image.
 pub struct PageAlloc {
@@ -325,6 +339,115 @@ impl AddressSpace {
         }
         self.segments = new_segs;
         freed
+    }
+
+    /// mremap (glibc's large-allocation realloc path). Handles whole
+    /// anonymous mappings: shrinks in place, grows in place when the
+    /// following VA range is free, and — with `may_move` — relocates by
+    /// re-pointing the existing physical pages at a fresh VA range, so
+    /// the only device traffic is the PTE updates (no page copies).
+    /// Returns the (possibly new) base address.
+    pub fn mremap(
+        &mut self,
+        t: &mut dyn TargetOps,
+        cpu: usize,
+        alloc: &mut PageAlloc,
+        old_addr: u64,
+        old_len: u64,
+        new_len: u64,
+        may_move: bool,
+    ) -> Result<u64, RemapError> {
+        if old_addr % PAGE != 0 || old_len == 0 || new_len == 0 {
+            return Err(RemapError::Invalid);
+        }
+        // Lengths are guest-controlled: page-rounding and end-address
+        // arithmetic must not wrap (a wrapped new_end would masquerade as
+        // a shrink and free the whole mapping behind a "success").
+        let round = |len: u64| len.checked_add(PAGE - 1).map(|v| v & !(PAGE - 1));
+        let old_len = round(old_len).ok_or(RemapError::Invalid)?;
+        let new_len = round(new_len).ok_or(RemapError::Invalid)?;
+        let old_end = old_addr.checked_add(old_len).ok_or(RemapError::Fault)?;
+        let new_end = old_addr.checked_add(new_len).ok_or(RemapError::NoMem)?;
+        if new_end > USER_TOP {
+            return Err(RemapError::NoMem);
+        }
+        let si = self.find_segment(old_addr).ok_or(RemapError::Fault)?;
+        if old_end > self.segments[si].end {
+            return Err(RemapError::Fault);
+        }
+        // Only whole anonymous mappings are remappable (the realloc
+        // shape); partial or file-backed ranges are refused.
+        if self.segments[si].start != old_addr || self.segments[si].end != old_end {
+            return Err(RemapError::Invalid);
+        }
+        if !matches!(self.segments[si].kind, SegKind::Anon) {
+            return Err(RemapError::Invalid);
+        }
+        if new_len == old_len {
+            return Ok(old_addr);
+        }
+        if new_len < old_len {
+            // Shrink in place: release the tail pages.
+            let mut p = new_end;
+            while p < old_end {
+                if let Some(ppn) = self.unmap_page(t, cpu, p) {
+                    alloc.decref(ppn);
+                }
+                p += PAGE;
+            }
+            self.segments[si].end = new_end;
+            return Ok(old_addr);
+        }
+        // Grow in place when the VA range after the mapping is free.
+        let tail_free = !self
+            .segments
+            .iter()
+            .enumerate()
+            .any(|(i, s)| i != si && s.start < new_end && s.end > old_end);
+        if tail_free {
+            self.segments[si].end = new_end;
+            // Future anonymous mappings must not land in the grown tail.
+            if new_end + PAGE > self.mmap_cursor {
+                self.mmap_cursor = new_end + PAGE;
+            }
+            return Ok(old_addr);
+        }
+        if !may_move {
+            return Err(RemapError::NoMem);
+        }
+        // Relocate: fresh VA range, same physical pages re-pointed.
+        // Pre-flight the new range's page-table pages *before* creating
+        // the segment or touching any old PTE: the move below must not be
+        // able to fail halfway (a torn remap would silently corrupt the
+        // mapping behind an ENOMEM), and a pre-flight failure must not
+        // leak — the cursor has not advanced, so any table pages
+        // allocated here serve the next mapping at this same VA window.
+        let prot = self.segments[si].prot;
+        let new_va = self.mmap_cursor;
+        let mut off = 0;
+        while off < old_len {
+            if self.pages.contains_key(&((old_addr + off) >> 12)) {
+                self.ensure_tables(t, cpu, alloc, new_va + off)
+                    .map_err(|_| RemapError::NoMem)?;
+            }
+            off += PAGE;
+        }
+        let got = self.mmap_anon(new_len, prot);
+        debug_assert_eq!(got, new_va);
+        let new_va = got;
+        let mut off = 0;
+        while off < old_len {
+            if let Some(info) = self.pages.get(&((old_addr + off) >> 12)).copied() {
+                self.unmap_page(t, cpu, old_addr + off);
+                self.map_page(t, cpu, alloc, new_va + off, info.ppn, prot, info.cow)
+                    .expect("tables pre-flighted: map_page cannot fail");
+            }
+            off += PAGE;
+        }
+        // mmap_anon appended the new segment, so index si is still the
+        // old one; drop it (its pages have moved).
+        self.segments.remove(si);
+        Ok(new_va)
     }
 
     /// mprotect over a mapped range: update segment prot + installed PTEs.
@@ -731,6 +854,118 @@ mod tests {
         assert!(vm.find_segment(va + PAGE).is_none());
         assert!(vm.find_segment(va).is_some());
         assert!(vm.find_segment(va + 2 * PAGE).is_some());
+    }
+
+    #[test]
+    fn mremap_shrinks_in_place_and_frees_pages() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(4 * PAGE, PROT_READ | PROT_WRITE);
+        vm.preload = 8;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, true).unwrap();
+        let before = alloc.allocated;
+        let r = vm.mremap(&mut t, 0, &mut alloc, va, 4 * PAGE, 2 * PAGE, false).unwrap();
+        assert_eq!(r, va);
+        assert_eq!(alloc.allocated, before - 2);
+        assert!(vm.translate(va + PAGE).is_some());
+        assert!(vm.translate(va + 2 * PAGE).is_none());
+        let si = vm.find_segment(va).unwrap();
+        assert_eq!(vm.segments[si].end, va + 2 * PAGE);
+    }
+
+    #[test]
+    fn mremap_grows_in_place_when_tail_is_free() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(2 * PAGE, PROT_READ | PROT_WRITE);
+        vm.preload = 0;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, true).unwrap();
+        let r = vm.mremap(&mut t, 0, &mut alloc, va, 2 * PAGE, 6 * PAGE, false).unwrap();
+        assert_eq!(r, va, "tail free: grows in place");
+        let si = vm.find_segment(va + 5 * PAGE).unwrap();
+        assert_eq!(vm.segments[si].start, va);
+        // Grown tail faults in like any anon page.
+        vm.handle_fault(&mut t, 0, &mut alloc, va + 5 * PAGE, true).unwrap();
+        assert!(vm.translate(va + 5 * PAGE).is_some());
+        // Later anonymous mappings must not collide with the grown tail.
+        let other = vm.mmap_anon(PAGE, PROT_READ | PROT_WRITE);
+        assert!(other >= va + 7 * PAGE, "{other:#x} overlaps grown tail");
+    }
+
+    #[test]
+    fn mremap_moves_pages_without_copying() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(2 * PAGE, PROT_READ | PROT_WRITE);
+        // Block in-place growth with a neighbouring mapping.
+        let _wall = vm.mmap_anon(PAGE, PROT_READ);
+        vm.preload = 0;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, true).unwrap();
+        let (pa, info) = vm.translate(va).unwrap();
+        t.mem_w(0, pa, 0xfeed_beef);
+        let pages_before = alloc.allocated;
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va, 2 * PAGE, 8 * PAGE, false),
+            Err(RemapError::NoMem),
+            "cannot grow in place and may_move not set"
+        );
+        let new_va =
+            vm.mremap(&mut t, 0, &mut alloc, va, 2 * PAGE, 8 * PAGE, true).unwrap();
+        assert_ne!(new_va, va);
+        assert!(vm.find_segment(va).is_none(), "old mapping gone");
+        let (new_pa, new_info) = vm.translate(new_va).unwrap();
+        assert_eq!(new_info.ppn, info.ppn, "physical page re-pointed, not copied");
+        assert_eq!(t.mem_r(0, new_pa), 0xfeed_beef);
+        assert_eq!(alloc.allocated, pages_before, "no page alloc/free on move");
+    }
+
+    #[test]
+    fn mremap_rejects_overflowing_guest_lengths() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(2 * PAGE, PROT_READ | PROT_WRITE);
+        vm.preload = 0;
+        vm.handle_fault(&mut t, 0, &mut alloc, va, true).unwrap();
+        // Page-rounding must not wrap into a bogus shrink/grow.
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va, 2 * PAGE, u64::MAX, 1),
+            Err(RemapError::Invalid)
+        );
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va, 2 * PAGE, u64::MAX - 2 * PAGE, 1),
+            Err(RemapError::NoMem),
+            "end-address overflow is not a shrink"
+        );
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va, 2 * PAGE, USER_TOP, 1),
+            Err(RemapError::NoMem),
+            "ranges past USER_TOP are refused"
+        );
+        // The mapping is untouched by the rejected calls.
+        assert!(vm.translate(va).is_some());
+        let si = vm.find_segment(va).unwrap();
+        assert_eq!((vm.segments[si].start, vm.segments[si].end), (va, va + 2 * PAGE));
+    }
+
+    #[test]
+    fn mremap_rejects_partial_and_unmapped_ranges() {
+        let (mut t, mut alloc, mut vm) = setup();
+        let va = vm.mmap_anon(4 * PAGE, PROT_READ | PROT_WRITE);
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va + PAGE, PAGE, 2 * PAGE, true),
+            Err(RemapError::Invalid),
+            "partial-segment remap unsupported"
+        );
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va, 8 * PAGE, PAGE, true),
+            Err(RemapError::Fault),
+            "old range past the mapping"
+        );
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, 0xdead_0000, PAGE, 2 * PAGE, true),
+            Err(RemapError::Fault)
+        );
+        assert_eq!(
+            vm.mremap(&mut t, 0, &mut alloc, va + 1, PAGE, 2 * PAGE, true),
+            Err(RemapError::Invalid)
+        );
+        assert_eq!(vm.mremap(&mut t, 0, &mut alloc, va, 4 * PAGE, 4 * PAGE, false), Ok(va));
     }
 
     #[test]

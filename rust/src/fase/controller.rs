@@ -321,10 +321,14 @@ impl Controller {
         let tval = rd_csr(self, m, csr::MTVAL, &mut st);
         self.unstage(m, cpu, &[1], &old, &mut st);
 
-        // HFutex filter: ecall + a7==futex + wake op + address in mask.
-        if self.hfutex_enabled && cause == 8 {
-            let a7 = self.reg_read(m, cpu, 17, &mut st);
-            if a7 == SYS_FUTEX {
+        // For ecalls the FSM also reads a7 and forwards it with the
+        // report: the host learns the syscall number without a RegR
+        // round-trip and can issue its ArgSpec-driven argument prefetch
+        // immediately. The same read feeds the HFutex filter below.
+        let mut a7 = 0;
+        if cause == 8 {
+            a7 = self.reg_read(m, cpu, 17, &mut st);
+            if self.hfutex_enabled && a7 == SYS_FUTEX {
                 let a0 = self.reg_read(m, cpu, 10, &mut st);
                 let a1 = self.reg_read(m, cpu, 11, &mut st);
                 if a1 & FUTEX_CMD_MASK == FUTEX_WAKE && self.masks[cpu].contains(a0) {
@@ -345,7 +349,7 @@ impl Controller {
             }
         }
         Some(NextOutcome::Report {
-            resp: Resp::Exception { cpu: cpu as u8, cause, epc, tval },
+            resp: Resp::Exception { cpu: cpu as u8, cause, epc, tval, nr: a7, at: ev.at },
             stats: st,
         })
     }

@@ -73,7 +73,13 @@ pub enum Req {
 pub enum Resp {
     Ok,
     Word(u64),
-    Exception { cpu: u8, cause: u64, epc: u64, tval: u64 },
+    /// Exception report from the Next FSM. Besides the trap CSRs it
+    /// carries `nr` (a7 at trap time — the syscall number for ecalls, 0
+    /// otherwise, read by the controller so the host can plan its
+    /// ArgSpec-driven argument prefetch without an extra round-trip) and
+    /// `at` (the controller's event timestamp, the deterministic
+    /// completion-order tie-break for overlapped multi-hart traps).
+    Exception { cpu: u8, cause: u64, epc: u64, tval: u64, nr: u64, at: u64 },
     Page(Box<[u8; 4096]>),
     Fault(u8),
 }
@@ -366,7 +372,7 @@ impl Resp {
         match self {
             Resp::Ok => 1,
             Resp::Word(_) => 1 + 8,
-            Resp::Exception { .. } => 1 + 1 + 24,
+            Resp::Exception { .. } => 1 + 1 + 40,
             Resp::Page(_) => 1 + 4096,
             Resp::Fault(_) => 1 + 1,
         }
@@ -405,11 +411,13 @@ impl Resp {
         match self {
             Resp::Ok => {}
             Resp::Word(v) => out.extend_from_slice(&v.to_le_bytes()),
-            Resp::Exception { cpu, cause, epc, tval } => {
+            Resp::Exception { cpu, cause, epc, tval, nr, at } => {
                 out.push(*cpu);
                 out.extend_from_slice(&cause.to_le_bytes());
                 out.extend_from_slice(&epc.to_le_bytes());
                 out.extend_from_slice(&tval.to_le_bytes());
+                out.extend_from_slice(&nr.to_le_bytes());
+                out.extend_from_slice(&at.to_le_bytes());
             }
             Resp::Page(p) => out.extend_from_slice(&p[..]),
             Resp::Fault(c) => out.push(*c),
@@ -438,8 +446,10 @@ impl Resp {
                     cause: u64_at(b, 1)?,
                     epc: u64_at(b, 9)?,
                     tval: u64_at(b, 17)?,
+                    nr: u64_at(b, 25)?,
+                    at: u64_at(b, 33)?,
                 },
-                25,
+                41,
             )),
             3 => {
                 let bytes = b.get(..4096)?;
@@ -469,8 +479,8 @@ mod tests {
         assert_eq!(Resp::Word(7).wire_len(), 9);
         assert_eq!(Resp::Page(Box::new([0; 4096])).wire_len(), 4097);
         assert_eq!(
-            Resp::Exception { cpu: 0, cause: 8, epc: 0, tval: 0 }.wire_len(),
-            26
+            Resp::Exception { cpu: 0, cause: 8, epc: 0, tval: 0, nr: 98, at: 0 }.wire_len(),
+            42
         );
     }
 
@@ -530,7 +540,14 @@ mod tests {
         let resps = [
             Resp::Ok,
             Resp::Word(0xdead_beef),
-            Resp::Exception { cpu: 1, cause: 13, epc: 0x8000_0000, tval: 0x123 },
+            Resp::Exception {
+                cpu: 1,
+                cause: 13,
+                epc: 0x8000_0000,
+                tval: 0x123,
+                nr: 0,
+                at: 0x5555,
+            },
             Resp::Page(page),
             Resp::Fault(5),
         ];

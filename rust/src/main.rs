@@ -35,7 +35,8 @@ fn main() {
             eprintln!("           [--ideal-latency] [-- guest args]");
             eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
             eprintln!("           [--filter SUBSTR] [--check-against baseline.json]");
-            eprintln!("           [--compare-only report.json] [--list] [--quiet]");
+            eprintln!("           [--compare-only report.json] [--require-baseline]");
+            eprintln!("           [--list] [--quiet]");
             std::process::exit(2);
         }
     }
@@ -140,6 +141,18 @@ fn cmd_run(args: &Args) {
             "stall ticks      : ctl={} channel={} runtime={}",
             res.stall.controller_ticks, res.stall.channel_ticks, res.stall.runtime_ticks
         );
+        for (cpu, o) in res.overlap.iter().enumerate() {
+            if o.traps == 0 {
+                continue;
+            }
+            eprintln!(
+                "trap overlap     : cpu{cpu}: {} traps, {} stall ticks, {} uticks hidden ({:.1}%)",
+                o.traps,
+                o.stall_ticks,
+                o.overlapped_uticks,
+                100.0 * o.overlapped_uticks as f64 / o.stall_ticks.max(1) as f64
+            );
+        }
         eprintln!("context switches : {}", res.context_switches);
         eprintln!("page faults      : {}", res.page_faults);
         eprintln!("filtered wakes   : {}", res.filtered_wakes);
@@ -167,11 +180,22 @@ fn load_json(path: &str) -> Json {
     })
 }
 
-/// Run the perf-regression gate; exits non-zero on breach.
-fn run_gate(current: &Json, baseline: &Json) {
+/// Run the perf-regression gate; exits non-zero on breach. With
+/// `require_baseline` an unarmed (no-scenario bootstrap) baseline is
+/// itself a failure instead of a trivial pass — the armed-gate mode CI
+/// runs in.
+fn run_gate(current: &Json, baseline: &Json, require_baseline: bool) {
     match fase::sweep::check_against(current, baseline) {
         Ok(gate) => {
             if gate.compared_jobs == 0 {
+                if require_baseline {
+                    eprintln!(
+                        "[gate] FAILED — baseline has no scenarios and \
+                         --require-baseline is set; commit a generated \
+                         ci-smoke report as ci/baseline.json"
+                    );
+                    std::process::exit(1);
+                }
                 eprintln!(
                     "[gate] WARNING: baseline has no scenarios (bootstrap mode); \
                      commit the generated report as ci/baseline.json to arm the gate"
@@ -210,7 +234,7 @@ fn cmd_sweep(args: &Args) {
         };
         let current = load_json(cur_path);
         let baseline = load_json(base_path);
-        run_gate(&current, &baseline);
+        run_gate(&current, &baseline, args.flag("require-baseline"));
         return;
     }
 
@@ -291,7 +315,7 @@ fn cmd_sweep(args: &Args) {
     }
     if let Some(base_path) = args.get("check-against") {
         let baseline = load_json(base_path);
-        run_gate(&doc, &baseline);
+        run_gate(&doc, &baseline, args.flag("require-baseline"));
     }
     std::process::exit(if n_err > 0 { 1 } else { 0 });
 }

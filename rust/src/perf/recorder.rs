@@ -16,9 +16,6 @@ pub enum Context {
     Load,
     Sched,
     PageFault,
-    /// Syscall dispatch before the number is known (the batched a0..a7
-    /// argument prefetch rides here).
-    SyscallEntry,
     Syscall(u64),
     Signal,
     Report,
@@ -31,53 +28,27 @@ impl Context {
             Context::Load => "load".into(),
             Context::Sched => "sched".into(),
             Context::PageFault => "page_fault".into(),
-            Context::SyscallEntry => "syscall_entry".into(),
-            Context::Syscall(nr) => syscall_name(*nr).to_string(),
+            Context::Syscall(nr) => syscall_label(*nr),
             Context::Signal => "signal".into(),
             Context::Report => "report".into(),
         }
     }
 }
 
+/// Human name of a syscall number — backed by the handler registry
+/// (`coordinator::syscall::SYSCALLS`), the single source of truth for
+/// what the runtime implements.
 pub fn syscall_name(nr: u64) -> &'static str {
-    match nr {
-        29 => "ioctl",
-        56 => "openat",
-        57 => "close",
-        62 => "lseek",
-        63 => "read",
-        64 => "write",
-        65 => "readv",
-        66 => "writev",
-        80 => "fstat",
-        93 => "exit",
-        94 => "exit_group",
-        96 => "set_tid_address",
-        98 => "futex",
-        99 => "set_robust_list",
-        101 => "nanosleep",
-        113 => "clock_gettime",
-        124 => "sched_yield",
-        129 => "kill",
-        131 => "tgkill",
-        134 => "rt_sigaction",
-        135 => "rt_sigprocmask",
-        139 => "rt_sigreturn",
-        160 => "uname",
-        169 => "gettimeofday",
-        172 => "getpid",
-        178 => "gettid",
-        179 => "sysinfo",
-        214 => "brk",
-        215 => "munmap",
-        216 => "mremap",
-        220 => "clone",
-        222 => "mmap",
-        226 => "mprotect",
-        233 => "madvise",
-        261 => "prlimit64",
-        278 => "getrandom",
-        _ => "unknown",
+    crate::coordinator::syscall::lookup(nr).map(|d| d.name).unwrap_or("unknown")
+}
+
+/// Unique report label for a syscall number: registry name, or `sys<nr>`
+/// for numbers outside it — two distinct unknown numbers must not
+/// collide on one "unknown" key in report maps.
+pub fn syscall_label(nr: u64) -> String {
+    match syscall_name(nr) {
+        "unknown" => format!("sys{nr}"),
+        n => n.to_string(),
     }
 }
 
@@ -122,6 +93,21 @@ impl StallBreakdown {
     }
 }
 
+/// Per-hart trap-transaction overlap accounting: while one hart's trap
+/// is in host service (wire + controller + handler time), how much
+/// user-mode execution did the *other* harts retire? The paper's central
+/// claim — syscall delegation hidden behind concurrent execution — as a
+/// machine-checkable number (fig17/table4 stall columns).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OverlapStats {
+    /// Trap transactions serviced for this hart.
+    pub traps: u64,
+    /// Target ticks this hart spent stalled across those transactions.
+    pub stall_ticks: u64,
+    /// User-mode ticks other harts retired during those windows.
+    pub overlapped_uticks: u64,
+}
+
 /// HTP batching-layer accounting: how many wire round-trips were frames,
 /// how many logical requests rode in them, and what the frame format
 /// saved/cost in bytes.
@@ -154,6 +140,8 @@ pub struct Recorder {
     pub transactions: u64,
     /// Batching-layer accounting.
     pub batch: BatchStats,
+    /// Per-hart trap overlap accounting (indexed by cpu; grown on use).
+    pub overlap: Vec<OverlapStats>,
     /// Label of the transport these tallies were recorded over.
     pub transport: String,
     ctx: Context,
@@ -224,6 +212,18 @@ impl Recorder {
         self.batch.saved_bytes += saved_bytes;
         // Frame headers are wire bytes in the current context too.
         self.by_ctx.entry(self.ctx).or_default().bytes += header_bytes;
+    }
+
+    /// Record one completed trap transaction for `cpu`: how long the hart
+    /// stalled and how many user ticks the other harts retired meanwhile.
+    pub fn record_trap(&mut self, cpu: usize, stall_ticks: u64, overlapped_uticks: u64) {
+        if self.overlap.len() <= cpu {
+            self.overlap.resize(cpu + 1, OverlapStats::default());
+        }
+        let o = &mut self.overlap[cpu];
+        o.traps += 1;
+        o.stall_ticks += stall_ticks;
+        o.overlapped_uticks += overlapped_uticks;
     }
 
     pub fn record_runtime_stall(&mut self, ticks: u64) {
@@ -327,5 +327,14 @@ mod tests {
         assert_eq!(syscall_name(98), "futex");
         assert_eq!(syscall_name(222), "mmap");
         assert_eq!(syscall_name(9999), "unknown");
+    }
+
+    #[test]
+    fn unknown_syscall_labels_stay_unique() {
+        assert_eq!(syscall_label(98), "futex");
+        assert_eq!(syscall_label(300), "sys300");
+        assert_ne!(syscall_label(300), syscall_label(301));
+        // Two unknown numbers land on distinct by_ctx report keys.
+        assert_ne!(Context::Syscall(300).label(), Context::Syscall(301).label());
     }
 }

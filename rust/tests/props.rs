@@ -355,6 +355,8 @@ fn arb_resp(rng: &mut Prng) -> Resp {
             cause: rng.below(16),
             epc: rng.next_u64(),
             tval: rng.next_u64(),
+            nr: rng.below(512),
+            at: rng.next_u64(),
         },
         3 => {
             let mut page = Box::new([0u8; 4096]);
