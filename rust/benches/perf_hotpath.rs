@@ -8,6 +8,7 @@ use fase::mem::MemLatency;
 use fase::perf::window::{TimingCoeffs, WindowSample, NUM_FEATURES};
 use fase::rv64::decode::encode;
 use fase::rv64::hart::CoreModel;
+use fase::rv64::EngineKind;
 use fase::soc::detailed::DetailedEngine;
 use fase::soc::machine::DRAM_BASE;
 use fase::soc::{Machine, MachineConfig};
@@ -46,18 +47,42 @@ fn tight_loop(m: &mut Machine, cpu: usize) {
 fn main() {
     let mut tab = Table::new(&["metric", "value"]);
 
-    // L3 fast engine.
+    // L3 fast engine: interpreter vs decoded basic-block cache.
     for n in [1usize, 4] {
-        let mut m = mk_machine(n);
-        for c in 0..n {
-            tight_loop(&mut m, c);
+        let mut mips = [0.0f64; 2];
+        for (ei, kind) in [EngineKind::Interp, EngineKind::Block].into_iter().enumerate() {
+            let mut m = Machine::new(MachineConfig {
+                n_harts: n,
+                dram_size: 64 << 20,
+                engine: kind,
+                ..Default::default()
+            });
+            for c in 0..n {
+                tight_loop(&mut m, c);
+            }
+            let t0 = Instant::now();
+            m.run_until(40_000_000); // 0.4 target-seconds
+            let dt = t0.elapsed().as_secs_f64();
+            mips[ei] = m.instret() as f64 / dt / 1e6;
+            tab.row(vec![
+                format!("fast engine MIPS ({n} hart, {kind})"),
+                format!("{:.1}", mips[ei]),
+            ]);
+            if kind == EngineKind::Block {
+                let s = m.engine_stats();
+                let chain_rate = 100.0 * s.chained as f64 / s.block_hits.max(1) as f64;
+                tab.row(vec![
+                    format!("block cache ({n} hart)"),
+                    format!(
+                        "{} built, {} hits, {:.1}% chained, {} evicted",
+                        s.blocks_built, s.block_hits, chain_rate, s.evicted
+                    ),
+                ]);
+            }
         }
-        let t0 = Instant::now();
-        m.run_until(40_000_000); // 0.4 target-seconds
-        let dt = t0.elapsed().as_secs_f64();
         tab.row(vec![
-            format!("fast engine MIPS ({n} hart)"),
-            format!("{:.1}", m.instret() as f64 / dt / 1e6),
+            format!("block/interp speedup ({n} hart)"),
+            format!("{:.2}x", mips[1] / mips[0].max(1e-9)),
         ]);
     }
 

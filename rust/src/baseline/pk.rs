@@ -32,6 +32,11 @@ pub struct PkConfig {
     pub sim_threads: usize,
     /// Kernel PRNG base seed (see `RunConfig::seed`).
     pub seed: u64,
+    /// Execution engine for the underlying [`Machine`]. The PK baseline
+    /// cycle-steps through [`DetailedEngine`] so this never drives
+    /// execution, but the field keeps the config surface uniform with
+    /// [`RunConfig`] so sweep arms can pin it everywhere.
+    pub engine: crate::rv64::EngineKind,
 }
 
 impl Default for PkConfig {
@@ -45,6 +50,7 @@ impl Default for PkConfig {
             netlist_size: 2048,
             sim_threads: 1,
             seed: 0xFA5E,
+            engine: crate::rv64::EngineKind::default(),
         }
     }
 }
@@ -65,6 +71,7 @@ impl PkTarget {
             clock_hz: 100_000_000,
             core: cfg.core.clone(),
             quantum: 64,
+            engine: cfg.engine,
         });
         let mut e = DetailedEngine::with_netlist(m, cfg.dram_skew, cfg.netlist_size, cfg.sim_threads);
         boot(&mut e, cfg.boot_instructions);
@@ -162,7 +169,7 @@ impl TargetOps for PkTarget {
         self.e.m.ms.flush_tlb(cpu);
     }
     fn sync_i(&mut self, cpu: usize) {
-        self.e.m.ms.l1i[cpu].flush();
+        self.e.m.ms.instr_sync(cpu);
         self.e.m.harts[cpu].dcache.clear();
     }
     fn reg_r(&mut self, cpu: usize, idx: u8) -> u64 {
@@ -176,12 +183,14 @@ impl TargetOps for PkTarget {
     }
     fn mem_w(&mut self, _cpu: usize, paddr: u64, val: u64) {
         self.e.m.ms.phys.write_u64(paddr, val);
+        self.e.m.ms.note_phys_write(paddr, 8);
     }
     fn page_set(&mut self, _cpu: usize, ppn: u64, val: u64) {
         let base = ppn << 12;
         for i in 0..512 {
             self.e.m.ms.phys.write_u64(base + i * 8, val);
         }
+        self.e.m.ms.note_phys_write(base, 4096);
     }
     fn page_copy(&mut self, _cpu: usize, src_ppn: u64, dst_ppn: u64) {
         let (s, d) = (src_ppn << 12, dst_ppn << 12);
@@ -189,6 +198,7 @@ impl TargetOps for PkTarget {
             let v = self.e.m.ms.phys.read_u64(s + i * 8).unwrap_or(0);
             self.e.m.ms.phys.write_u64(d + i * 8, v);
         }
+        self.e.m.ms.note_phys_write(d, 4096);
     }
     fn page_read(&mut self, _cpu: usize, ppn: u64) -> Box<[u8; 4096]> {
         let mut p = Box::new([0u8; 4096]);
@@ -197,6 +207,7 @@ impl TargetOps for PkTarget {
     }
     fn page_write(&mut self, _cpu: usize, ppn: u64, data: &[u8; 4096]) {
         self.e.m.ms.phys.slice_mut(ppn << 12, 4096).unwrap().copy_from_slice(data);
+        self.e.m.ms.note_phys_write(ppn << 12, 4096);
     }
     fn hfutex(&mut self, _cpu: usize, _op: HfOp, _addr: u64) {}
     fn interrupt(&mut self, cpu: usize) {
@@ -289,6 +300,7 @@ pub fn run_pk_exe(
         collect_windows: false,
         htp_batching: true,
         seed: pk.seed,
+        engine: pk.engine,
     };
     let target = Box::new(PkTarget::new(&pk));
     let mut rt = Runtime::with_target(cfg, target, false);

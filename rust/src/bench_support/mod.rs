@@ -131,7 +131,7 @@ pub fn run_coremark(arm: &Arm, iterations: u32, core: &str) -> GapbsRun {
 
 fn run_one(workload: WorkloadSpec, arm: &Arm, harts: usize, core: &str) -> GapbsRun {
     let spec = SweepSpec::new("bench");
-    let job = sweep::Job::new(0, workload, arm.clone(), harts, core.to_string(), 0, &spec);
+    let job = sweep::Job::new(0, workload, arm.clone(), harts, core.to_string(), 0, None, &spec);
     let o = sweep::run_job(&job);
     if let Some(err) = &o.result.error {
         eprintln!("[bench] {} failed: {err}\n{}", o.job.label(), o.result.stderr);

@@ -13,6 +13,7 @@ use crate::perf::recorder::Context;
 use crate::perf::window::WindowSample;
 use crate::perf::{OverlapStats, StallBreakdown};
 use crate::rv64::hart::CoreModel;
+use crate::rv64::{EngineKind, EngineStats};
 use crate::soc::{Machine, MachineConfig};
 use crate::util::prng::Prng;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -48,6 +49,9 @@ pub struct RunConfig {
     /// jobs derive an independent stream per scenario from this so
     /// parallel execution order can never reorder randomness.
     pub seed: u64,
+    /// Execution engine for the fast machine. Timing-neutral: engines
+    /// must produce identical metrics and may differ only in wall-clock.
+    pub engine: EngineKind,
 }
 
 impl Default for RunConfig {
@@ -69,6 +73,7 @@ impl Default for RunConfig {
             collect_windows: false,
             htp_batching: true,
             seed: 0xFA5E,
+            engine: EngineKind::default(),
         }
     }
 }
@@ -180,6 +185,13 @@ pub struct RunResult {
     pub page_faults: u64,
     pub peak_pages: u64,
     pub windows: Vec<WindowSample>,
+    /// Engine that drove the run ("interp"/"block"). Like `wall_seconds`,
+    /// excluded from `metrics_json`: engines are timing-neutral, so the
+    /// report surface must not vary by engine.
+    pub engine: String,
+    /// Host-side block-cache counters (all zero on the interpreter).
+    /// Excluded from `metrics_json` for the same reason.
+    pub engine_stats: EngineStats,
 }
 
 impl RunResult {
@@ -230,6 +242,8 @@ impl RunResult {
             page_faults: 0,
             peak_pages: 0,
             windows: Vec::new(),
+            engine: "none".into(),
+            engine_stats: EngineStats::default(),
         }
     }
 
@@ -372,6 +386,7 @@ impl Runtime {
             clock_hz: 100_000_000,
             core: cfg.core.clone(),
             quantum: 256,
+            engine: cfg.engine,
         };
         let machine = Machine::new(mcfg);
         let target: Box<dyn TargetOps> = match &cfg.mode {
@@ -772,8 +787,11 @@ impl Runtime {
         let uticks: Vec<u64> =
             (0..self.cfg.n_cpus).map(|c| self.target.machine().harts[c].utick).collect();
         let instret = self.target.machine().instret();
+        let engine_kind = self.target.machine().engine_kind();
+        let engine_stats = self.target.machine().engine_stats();
         let filtered = self.target.filtered_wakes();
         let rec = self.target.recorder();
+        rec.engine = engine_stats;
         let bytes_by_kind = rec
             .by_kind
             .iter()
@@ -815,6 +833,8 @@ impl Runtime {
             page_faults: self.k.vm.faults,
             peak_pages: self.k.alloc.peak,
             windows: std::mem::take(&mut self.windows),
+            engine: engine_kind.label().to_string(),
+            engine_stats,
         }
     }
 }

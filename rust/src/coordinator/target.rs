@@ -873,7 +873,7 @@ impl TargetOps for DirectTarget {
         self.kernel_work(cpu, 20);
     }
     fn sync_i(&mut self, cpu: usize) {
-        self.m.ms.l1i[cpu].flush();
+        self.m.ms.instr_sync(cpu);
         self.m.harts[cpu].dcache.clear();
         self.kernel_work(cpu, 30);
     }
@@ -892,6 +892,7 @@ impl TargetOps for DirectTarget {
         let line = paddr & !(LINE - 1);
         self.m.ms.l1d[cpu].access(line, true);
         self.m.ms.phys.write_u64(paddr, val);
+        self.m.ms.note_phys_write(paddr, 8);
     }
     fn page_set(&mut self, cpu: usize, ppn: u64, val: u64) {
         let base = ppn << 12;
@@ -903,6 +904,7 @@ impl TargetOps for DirectTarget {
             self.m.ms.l1d[cpu].access(line, true);
             self.m.ms.l2.access(line, true);
         }
+        self.m.ms.note_phys_write(base, 4096);
         self.kernel_work(cpu, 700); // clear_page + overhead
     }
     fn page_copy(&mut self, cpu: usize, src_ppn: u64, dst_ppn: u64) {
@@ -915,6 +917,7 @@ impl TargetOps for DirectTarget {
             self.m.ms.l1d[cpu].access(s + l * LINE, false);
             self.m.ms.l1d[cpu].access(d + l * LINE, true);
         }
+        self.m.ms.note_phys_write(d, 4096);
         self.kernel_work(cpu, 1200);
     }
     fn page_read(&mut self, cpu: usize, ppn: u64) -> Box<[u8; 4096]> {
@@ -933,6 +936,7 @@ impl TargetOps for DirectTarget {
         for l in 0..64 {
             self.m.ms.l1d[cpu].access((ppn << 12) + l * LINE, true);
         }
+        self.m.ms.note_phys_write(ppn << 12, 4096);
         self.kernel_work(cpu, 900);
     }
     fn hfutex(&mut self, _cpu: usize, _op: HfOp, _addr: u64) {

@@ -15,6 +15,7 @@ use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
 use fase::coordinator::target::{HostLatency, KernelCosts};
 use fase::fase::transport::TransportSpec;
 use fase::rv64::hart::CoreModel;
+use fase::rv64::EngineKind;
 use fase::util::cli::Args;
 use fase::util::json::Json;
 use std::path::PathBuf;
@@ -29,17 +30,27 @@ fn main() {
             eprintln!("usage: fase <run|sweep|info> [options]");
             eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N]");
             eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
-            eprintln!("           [--core rocket|cva6] [--no-hfutex] [--no-batch]");
+            eprintln!("           [--core rocket|cva6] [--engine interp|block]");
+            eprintln!("           [--no-hfutex] [--no-batch]");
             eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
             eprintln!("           [--quiet] [--report] [--max-seconds S]");
             eprintln!("           [--ideal-latency] [-- guest args]");
             eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
-            eprintln!("           [--filter SUBSTR] [--check-against baseline.json]");
+            eprintln!("           [--engine interp|block] [--filter SUBSTR]");
+            eprintln!("           [--check-against baseline.json]");
             eprintln!("           [--compare-only report.json] [--require-baseline]");
             eprintln!("           [--list] [--quiet]");
             std::process::exit(2);
         }
     }
+}
+
+fn engine_arg(args: &Args) -> EngineKind {
+    let s = args.str_or("engine", EngineKind::default().label());
+    EngineKind::parse(&s).unwrap_or_else(|| {
+        eprintln!("unknown engine {s:?}; use interp or block");
+        std::process::exit(2);
+    })
 }
 
 fn build_config(args: &Args) -> RunConfig {
@@ -75,6 +86,7 @@ fn build_config(args: &Args) -> RunConfig {
         collect_windows: args.flag("windows"),
         htp_batching: !args.flag("no-batch"),
         seed: args.u64_or("seed", 0xFA5E),
+        engine: engine_arg(args),
     }
 }
 
@@ -126,6 +138,14 @@ fn cmd_run(args: &Args) {
         eprintln!(
             "sim speed        : {:.2} MIPS",
             res.instret as f64 / res.wall_seconds.max(1e-9) / 1e6
+        );
+        eprintln!(
+            "engine           : {} ({} blocks built, {} hits, {} chained, {} evicted)",
+            res.engine,
+            res.engine_stats.blocks_built,
+            res.engine_stats.block_hits,
+            res.engine_stats.chained,
+            res.engine_stats.evicted
         );
         eprintln!("transport        : {}", res.transport);
         eprintln!(
@@ -239,7 +259,7 @@ fn cmd_sweep(args: &Args) {
     }
 
     let spec_arg = args.str_or("spec", "ci-smoke");
-    let spec = match fase::sweep::builtin(&spec_arg) {
+    let mut spec = match fase::sweep::builtin(&spec_arg) {
         Some(s) => s,
         None => {
             let path = std::path::Path::new(&spec_arg);
@@ -257,6 +277,11 @@ fn cmd_sweep(args: &Args) {
             })
         }
     };
+    // Label-invisible engine selection: reports stay byte-comparable
+    // across engines (the CI cross-engine differential gate relies on it).
+    if args.get("engine").is_some() {
+        spec.engine_override = Some(engine_arg(args));
+    }
     let filter = args.get("filter").map(str::to_string);
     if args.flag("list") {
         for job in spec.expand(filter.as_deref()) {

@@ -78,6 +78,15 @@ pub struct MemSys {
     pub evt: Vec<MemEvents>,
     pub lat: MemLatency,
     n_harts: usize,
+    /// Per-physical-page write generation: bumped on every store into the
+    /// page (guest stores and host-side writes alike). Decoded-block
+    /// caches snapshot the generation of the page they decoded from and
+    /// treat a mismatch as "code may have changed".
+    code_gen: Vec<u32>,
+    /// Bumped on every `fence.i` (any hart). Together with `code_gen`
+    /// this is the whole invalidation contract for cached decodes.
+    icache_epoch: u64,
+    dram_base: u64,
 }
 
 pub const LINE: u64 = 64;
@@ -96,6 +105,9 @@ impl MemSys {
             evt: vec![MemEvents::default(); n_harts],
             lat: MemLatency::default(),
             n_harts,
+            code_gen: vec![0; (dram_size >> 12) as usize],
+            icache_epoch: 0,
+            dram_base,
         }
     }
 
@@ -189,6 +201,7 @@ impl MemSys {
         if !self.phys.write_n(paddr, n, val) {
             return Err(Trap::StoreAccessFault(paddr));
         }
+        self.note_phys_write(paddr, n as u64);
         let mut cycles = self.access_timing(hart, paddr, true, false);
         if (paddr & (LINE - 1)) + n > LINE {
             cycles += self.access_timing(hart, paddr + n - 1, true, false);
@@ -211,6 +224,47 @@ impl MemSys {
     /// Flush a hart's TLB (sfence.vma).
     pub fn flush_tlb(&mut self, hart: usize) {
         self.tlbs[hart].flush();
+    }
+
+    /// Record a write of `len` bytes at physical `paddr` that did not go
+    /// through [`store`](MemSys::store) (host-side page ops, direct
+    /// `phys` pokes). Bumps the write generation of every touched page so
+    /// decoded-block caches notice rewritten code. `store` calls this
+    /// itself for guest stores.
+    #[inline]
+    pub fn note_phys_write(&mut self, paddr: u64, len: u64) {
+        if len == 0 || paddr < self.dram_base {
+            return;
+        }
+        let first = (paddr - self.dram_base) >> 12;
+        let last = (paddr - self.dram_base + len - 1) >> 12;
+        for p in first..=last {
+            if let Some(g) = self.code_gen.get_mut(p as usize) {
+                *g = g.wrapping_add(1);
+            }
+        }
+    }
+
+    /// Write generation of the page containing physical page number
+    /// `ppn` (`paddr >> 12`). Pages outside DRAM report generation 0.
+    #[inline]
+    pub fn page_gen(&self, ppn: u64) -> u32 {
+        let base_ppn = self.dram_base >> 12;
+        ppn.checked_sub(base_ppn)
+            .and_then(|i| self.code_gen.get(i as usize).copied())
+            .unwrap_or(0)
+    }
+
+    /// `fence.i` semantics for `hart`: flush its L1I and advance the
+    /// global instruction-cache epoch (invalidates all decoded blocks).
+    pub fn instr_sync(&mut self, hart: usize) {
+        self.l1i[hart].flush();
+        self.icache_epoch = self.icache_epoch.wrapping_add(1);
+    }
+
+    #[inline]
+    pub fn icache_epoch(&self) -> u64 {
+        self.icache_epoch
     }
 
     /// Drain and reset one hart's window event counters.
@@ -284,6 +338,41 @@ mod tests {
         m.load(0, 0x8000_0000 + 60, Width::D).unwrap();
         let e = m.take_events(0);
         assert!(e.l1d_miss >= 2, "crossing access should probe both lines");
+    }
+
+    #[test]
+    fn store_and_host_writes_bump_page_generation() {
+        let mut m = sys();
+        let base_ppn = 0x8000_0000u64 >> 12;
+        let g0 = m.page_gen(base_ppn);
+        m.store(0, 0x8000_0100, Width::D, 1).unwrap();
+        assert_ne!(m.page_gen(base_ppn), g0, "guest store bumps its page");
+        assert_eq!(m.page_gen(base_ppn + 1), 0, "other pages untouched");
+        // Page-crossing store bumps both pages.
+        let g1 = m.page_gen(base_ppn + 1);
+        let g2 = m.page_gen(base_ppn + 2);
+        m.store(0, 0x8000_1000 + 4094, Width::W, 1).unwrap();
+        assert_ne!(m.page_gen(base_ppn + 1), g1);
+        assert_ne!(m.page_gen(base_ppn + 2), g2);
+        // Host-side bulk write (loader/page ops) covers the whole range.
+        let g3 = m.page_gen(base_ppn + 4);
+        m.note_phys_write(0x8000_4000, 4096);
+        assert_ne!(m.page_gen(base_ppn + 4), g3);
+        // Out-of-DRAM addresses are ignored, not a panic.
+        m.note_phys_write(0x10, 8);
+        assert_eq!(m.page_gen(0), 0);
+    }
+
+    #[test]
+    fn instr_sync_flushes_l1i_and_advances_epoch() {
+        let mut m = sys();
+        m.fetch(0, 0x8000_0000).unwrap();
+        let e0 = m.icache_epoch();
+        m.instr_sync(0);
+        assert_ne!(m.icache_epoch(), e0);
+        let before = m.evt[0].l1i_miss;
+        m.fetch(0, 0x8000_0000).unwrap();
+        assert_eq!(m.evt[0].l1i_miss, before + 1, "L1I was flushed");
     }
 
     #[test]

@@ -14,12 +14,21 @@ pub struct Tlb {
     mask: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Bumped on every mutation (insert/flush/pollute). A cached
+    /// translation snapshot taken at generation G is still present with
+    /// the same (ppn, flags) while the generation stays G.
+    gen: u64,
 }
 
 impl Tlb {
     pub fn new(n: usize) -> Tlb {
         assert!(n.is_power_of_two());
-        Tlb { entries: vec![Entry::default(); n], mask: n as u64 - 1, hits: 0, misses: 0 }
+        Tlb { entries: vec![Entry::default(); n], mask: n as u64 - 1, hits: 0, misses: 0, gen: 0 }
+    }
+
+    #[inline]
+    pub fn gen(&self) -> u64 {
+        self.gen
     }
 
     #[inline]
@@ -34,12 +43,23 @@ impl Tlb {
         }
     }
 
+    /// Probe for `vpn` without touching the hit/miss counters (host-side
+    /// validity check — lookups that the target never performs must not
+    /// perturb the timing-model statistics).
+    #[inline]
+    pub fn peek(&self, vpn: u64) -> bool {
+        let e = &self.entries[(vpn & self.mask) as usize];
+        e.valid && e.vpn == vpn
+    }
+
     #[inline]
     pub fn insert(&mut self, vpn: u64, ppn: u64, flags: u8) {
+        self.gen = self.gen.wrapping_add(1);
         self.entries[(vpn & self.mask) as usize] = Entry { vpn, ppn, flags, valid: true };
     }
 
     pub fn flush(&mut self) {
+        self.gen = self.gen.wrapping_add(1);
         for e in &mut self.entries {
             e.valid = false;
         }
@@ -48,6 +68,7 @@ impl Tlb {
     /// Invalidate a deterministic fraction (kernel-noise model for the
     /// full-system baseline).
     pub fn pollute(&mut self, num: u32, den: u32) {
+        self.gen = self.gen.wrapping_add(1);
         let mut acc = 0u32;
         for e in &mut self.entries {
             acc += num;
@@ -73,6 +94,24 @@ mod tests {
         assert!(t.lookup(0x10).is_none());
         assert_eq!(t.hits, 1);
         assert_eq!(t.misses, 2);
+    }
+
+    #[test]
+    fn generation_tracks_mutations_not_lookups() {
+        let mut t = Tlb::new(4);
+        let g0 = t.gen();
+        t.lookup(0x10);
+        assert_eq!(t.gen(), g0, "lookups do not invalidate snapshots");
+        t.insert(0x10, 0x999, 0x1f);
+        let g1 = t.gen();
+        assert_ne!(g1, g0);
+        t.lookup(0x10);
+        assert_eq!(t.gen(), g1);
+        t.flush();
+        assert_ne!(t.gen(), g1);
+        let g2 = t.gen();
+        t.pollute(1, 2);
+        assert_ne!(t.gen(), g2);
     }
 
     #[test]

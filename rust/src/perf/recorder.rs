@@ -6,6 +6,7 @@
 //! exactly the two groupings Fig 13 plots.
 
 use crate::fase::htp::ReqKind;
+use crate::rv64::EngineStats;
 use std::collections::BTreeMap;
 
 /// Why the runtime is currently talking to the target.
@@ -144,6 +145,10 @@ pub struct Recorder {
     pub overlap: Vec<OverlapStats>,
     /// Label of the transport these tallies were recorded over.
     pub transport: String,
+    /// Execution-engine counters (decoded-block cache behaviour),
+    /// snapshotted from the machine at collection time. Host-side
+    /// diagnostics only — never part of the deterministic report surface.
+    pub engine: EngineStats,
     ctx: Context,
 }
 

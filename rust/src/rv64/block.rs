@@ -1,0 +1,469 @@
+//! Decoded basic-block execution engine.
+//!
+//! Decodes a basic block once into a straight-line buffer of pre-dispatched
+//! ops (decoded instruction + pre-classified cycle class), keyed by
+//! (address-space, entry pc), terminated at control flow / system ops /
+//! page boundaries, with superblock chaining of the fall-through and taken
+//! edges so hot loops re-enter the next block without a hash lookup.
+//!
+//! # Exactness contract
+//!
+//! The engine must be cycle- and counter-identical to the interpreter (see
+//! `engine.rs`). Per op it therefore replicates the interpreter's
+//! fetch path precisely:
+//!
+//! - **Translation**: the entry pc goes through a per-hart fetch-page
+//!   micro-cache that is valid only while the hart's TLB generation is
+//!   unchanged, in which case the interpreter's TLB hit is replayed
+//!   (`hits += 1`, zero cycles). Any generation change (a data-side walk
+//!   inserted an entry, an `sfence.vma` flushed) falls back to the real
+//!   `mmu::translate`, replaying walk cycles, PTW events, and A/D updates
+//!   exactly. A mid-block physical-page change aborts the block.
+//! - **I-cache**: consecutive fetches from the same line replay the
+//!   interpreter's guaranteed L1I hit via `Cache::repeat_hit` (identical
+//!   tick/LRU/hit-counter evolution); line changes do a real
+//!   `fetch_timing`. Nothing but this hart's own fetches touches its L1I,
+//!   so a same-line repeat can never miss mid-block.
+//! - **Execution** goes through the same `exec::exec_decoded` as the
+//!   interpreter, followed by the same pc/instret/class-counter/charge
+//!   bookkeeping.
+//!
+//! # Invalidation
+//!
+//! A block snapshots the write generation of the physical page it decoded
+//! from ([`MemSys::page_gen`]) and the global I-cache epoch
+//! ([`MemSys::icache_epoch`]). Stores into the page (guest or host-side)
+//! bump the generation; `fence.i` bumps the epoch; either mismatch evicts
+//! the block at its next dispatch. `sfence.vma` and `satp` writes are
+//! caught by the entry re-translation (blocks never cache a stale VA→PA
+//! mapping across a dispatch).
+
+use super::engine::{Engine, EngineKind, EngineStats, Exit};
+use super::exec;
+use super::hart::{CoreModel, Hart, PrivLevel};
+use super::inst::{Inst, InstClass};
+use super::{decode, Trap};
+use crate::mem::{mmu, Access, MemSys, LINE};
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Cap on ops per block (straight-line runs longer than this split).
+const MAX_BLOCK_OPS: usize = 64;
+/// Cap on cached blocks; overflow clears the whole cache (keeps chain
+/// slot indices trivially valid: blocks are only replaced in place).
+const MAX_BLOCKS: usize = 8192;
+
+/// FNV-1a — cheap, deterministic hashing for the (space, pc) block key.
+#[derive(Default)]
+struct Fnv(u64);
+
+impl Hasher for Fnv {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf2_9ce4_8422_2325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        self.0 = h;
+    }
+}
+
+type FnvMap<K, V> = HashMap<K, V, BuildHasherDefault<Fnv>>;
+
+#[derive(Clone, Copy)]
+struct BlockOp {
+    inst: Inst,
+    pc: u64,
+    cls: InstClass,
+}
+
+struct Block {
+    /// Address-space key: 0 = physical (M-mode or bare satp),
+    /// `asid + 1` = paged user space.
+    space: u64,
+    /// Virtual entry pc.
+    va: u64,
+    /// Physical page the block was decoded from.
+    ppage: u64,
+    /// [`MemSys::page_gen`] of `ppage` at decode time.
+    gen: u32,
+    /// [`MemSys::icache_epoch`] at decode time.
+    epoch: u64,
+    ops: Vec<BlockOp>,
+    /// Superblock chain: slot of the block at the fall-through pc.
+    chain_ft: Option<usize>,
+    /// Superblock chain: (target pc, slot) of the last taken edge.
+    chain_tk: Option<(u64, usize)>,
+}
+
+impl Block {
+    fn fallthrough_va(&self) -> u64 {
+        self.va.wrapping_add(4 * self.ops.len() as u64)
+    }
+}
+
+/// Per-hart fetch-translation micro-cache: one (vpn → ppage) pair, valid
+/// while satp and the hart's TLB generation are unchanged.
+#[derive(Clone, Copy, Default)]
+struct FetchPage {
+    valid: bool,
+    vpn: u64,
+    ppage: u64,
+    satp: u64,
+    gen: u64,
+}
+
+/// How a block's straight-line run ended.
+enum BlockExit {
+    /// All ops retired; `h.pc` points at the successor.
+    Done,
+    /// Time slice exhausted before an op; `h.pc` points at it.
+    Limit,
+    /// An op trapped; `h.pc` points at it, nothing charged for it.
+    Trap(Trap),
+    /// The fetch mapping changed mid-block; re-dispatch at `h.pc`.
+    Remapped,
+}
+
+pub struct BlockEngine {
+    blocks: Vec<Block>,
+    map: FnvMap<(u64, u64), usize>,
+    fp: Vec<FetchPage>,
+    /// Line address of the hart's most recent I-fetch *within this run*
+    /// (host may flush/pollute L1I between runs, so it resets per run).
+    last_line: Vec<Option<u64>>,
+    stats: EngineStats,
+}
+
+fn is_terminator(i: &Inst) -> bool {
+    matches!(
+        i,
+        Inst::Jal { .. }
+            | Inst::Jalr { .. }
+            | Inst::Branch { .. }
+            | Inst::Ecall
+            | Inst::Ebreak
+            | Inst::Mret
+            | Inst::Wfi
+            | Inst::Fence
+            | Inst::FenceI
+            | Inst::SfenceVma { .. }
+            | Inst::Csr { .. }
+            | Inst::Illegal { .. }
+    )
+}
+
+/// Decode a basic block starting at (`va`, `pa0`). Host-side only: reads
+/// raw bytes straight from physical memory, no timing side effects.
+/// `None` when even the entry word is unreadable.
+fn build_block(ms: &MemSys, space: u64, va: u64, pa0: u64) -> Option<Block> {
+    let ppage = pa0 >> 12;
+    let mut ops = Vec::new();
+    let mut pc = va;
+    let mut pa = pa0;
+    loop {
+        let raw = match ms.phys.read_u32(pa) {
+            Some(r) => r,
+            None => {
+                if ops.is_empty() {
+                    return None;
+                }
+                break;
+            }
+        };
+        let inst = decode(raw);
+        let cls = inst.class();
+        let term = is_terminator(&inst);
+        ops.push(BlockOp { inst, pc, cls });
+        if term || ops.len() >= MAX_BLOCK_OPS {
+            break;
+        }
+        pc = pc.wrapping_add(4);
+        pa += 4;
+        if pa & 0xfff == 0 {
+            break; // blocks never span the page they were validated against
+        }
+    }
+    Some(Block {
+        space,
+        va,
+        ppage,
+        gen: ms.page_gen(ppage),
+        epoch: ms.icache_epoch(),
+        ops,
+        chain_ft: None,
+        chain_tk: None,
+    })
+}
+
+impl BlockEngine {
+    pub fn new(n_harts: usize) -> BlockEngine {
+        BlockEngine {
+            blocks: Vec::new(),
+            map: FnvMap::default(),
+            fp: vec![FetchPage::default(); n_harts],
+            last_line: vec![None; n_harts],
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Translate the dispatch pc for fetch, interp-identically. Returns
+    /// (pa, cycles, tlb generation observed, entry present in TLB).
+    fn translate_entry(
+        &mut self,
+        h: &Hart,
+        ms: &mut MemSys,
+        paged: bool,
+        satp: mmu::Satp,
+    ) -> Result<(u64, u64, u64, bool), Trap> {
+        if !paged {
+            return Ok((h.pc, 0, 0, false));
+        }
+        let vpn = h.pc >> 12;
+        let fp = self.fp[h.id];
+        let gen = ms.tlbs[h.id].gen();
+        if fp.valid && fp.satp == h.csrs.satp && fp.vpn == vpn && fp.gen == gen {
+            // The TLB entry observed at `gen` is still in place (the
+            // generation counts every mutation): replay the interpreter's
+            // hit without the lookup.
+            ms.tlbs[h.id].hits += 1;
+            return Ok(((fp.ppage << 12) | (h.pc & 0xfff), 0, gen, true));
+        }
+        let (pa, c) = mmu::translate(ms, h.id, satp, true, h.pc, Access::Fetch)?;
+        let gen = ms.tlbs[h.id].gen();
+        // Superpage leaves are never inserted into the TLB — the
+        // interpreter re-walks them on every fetch, so they must not be
+        // cached here either.
+        let present = ms.tlbs[h.id].peek(vpn);
+        self.fp[h.id] =
+            FetchPage { valid: present, vpn, ppage: pa >> 12, satp: h.csrs.satp, gen };
+        Ok((pa, c, gen, present))
+    }
+
+    /// Resolve the block slot for (`space`, `h.pc`): chain shortcut, map
+    /// lookup, or fresh build. Validates and rebuilds in place when the
+    /// page generation / epoch / entry mapping moved. `Err` = entry word
+    /// unreadable (instruction access fault, like the interpreter's fetch).
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_block(
+        &mut self,
+        prev_slot: &mut Option<usize>,
+        space: u64,
+        pc: u64,
+        pa0: u64,
+        ms: &MemSys,
+    ) -> Result<usize, Trap> {
+        // Superblock chain shortcut from the previous block.
+        let mut slot = None;
+        if let Some(p) = *prev_slot {
+            let pb = &self.blocks[p];
+            let cand = if pc == pb.fallthrough_va() {
+                pb.chain_ft
+            } else {
+                pb.chain_tk.and_then(|(va, s)| (va == pc).then_some(s))
+            };
+            if let Some(s) = cand {
+                let b = &self.blocks[s];
+                if b.space == space && b.va == pc {
+                    self.stats.chained += 1;
+                    slot = Some(s);
+                }
+            }
+        }
+        let (slot, fresh) = match slot.or_else(|| self.map.get(&(space, pc)).copied()) {
+            Some(s) => (s, false),
+            None => {
+                if self.blocks.len() >= MAX_BLOCKS {
+                    self.stats.evicted += self.blocks.len() as u64;
+                    self.blocks.clear();
+                    self.map.clear();
+                    *prev_slot = None;
+                }
+                let b = build_block(ms, space, pc, pa0).ok_or(Trap::InstAccessFault(pa0))?;
+                let s = self.blocks.len();
+                self.blocks.push(b);
+                self.map.insert((space, pc), s);
+                self.stats.blocks_built += 1;
+                (s, true)
+            }
+        };
+        let valid = {
+            let b = &self.blocks[slot];
+            b.ppage == pa0 >> 12 && b.epoch == ms.icache_epoch() && b.gen == ms.page_gen(b.ppage)
+        };
+        if !valid {
+            self.stats.evicted += 1;
+            self.blocks[slot] =
+                build_block(ms, space, pc, pa0).ok_or(Trap::InstAccessFault(pa0))?;
+            self.stats.blocks_built += 1;
+        } else if !fresh {
+            self.stats.block_hits += 1;
+        }
+        // Record the edge we just followed into the previous block's chain.
+        if let Some(p) = *prev_slot {
+            let ft = self.blocks[p].fallthrough_va();
+            let pb = &mut self.blocks[p];
+            if pc == ft {
+                pb.chain_ft = Some(slot);
+            } else {
+                pb.chain_tk = Some((pc, slot));
+            }
+        }
+        Ok(slot)
+    }
+}
+
+/// Execute one block's ops. `c_xlat0` is the already-paid entry
+/// translation cost (charged with op 0).
+#[allow(clippy::too_many_arguments)]
+fn run_block(
+    h: &mut Hart,
+    ms: &mut MemSys,
+    model: &CoreModel,
+    b: &Block,
+    last_line: &mut Option<u64>,
+    t_end: u64,
+    c_xlat0: u64,
+    mut tlb_gen: u64,
+    mut vpn_cached: bool,
+    paged: bool,
+) -> BlockExit {
+    let mut c_xlat = c_xlat0;
+    for (i, op) in b.ops.iter().enumerate() {
+        if i > 0 {
+            if h.time >= t_end {
+                h.pc = op.pc;
+                return BlockExit::Limit;
+            }
+            // Per-op fetch translation, replayed interp-identically: while
+            // the TLB generation is unchanged the entry is still present
+            // (same vpn — blocks never cross a page) and the interpreter
+            // would hit; otherwise re-translate for real, which replays
+            // any miss/walk cycle-exactly.
+            c_xlat = 0;
+            if paged {
+                if vpn_cached && ms.tlbs[h.id].gen() == tlb_gen {
+                    ms.tlbs[h.id].hits += 1;
+                } else {
+                    let satp = mmu::Satp(h.csrs.satp);
+                    match mmu::translate(ms, h.id, satp, true, op.pc, Access::Fetch) {
+                        Ok((pa, c)) => {
+                            if pa >> 12 != b.ppage {
+                                // Mapping changed under the block (e.g. a
+                                // PTE rewrite the walk now observes):
+                                // abandon and re-dispatch at this pc.
+                                h.pc = op.pc;
+                                return BlockExit::Remapped;
+                            }
+                            c_xlat = c;
+                            tlb_gen = ms.tlbs[h.id].gen();
+                            vpn_cached = ms.tlbs[h.id].peek(op.pc >> 12);
+                        }
+                        Err(t) => {
+                            h.pc = op.pc;
+                            return BlockExit::Trap(t);
+                        }
+                    }
+                }
+            }
+        }
+        // I-fetch timing: same line as the previous fetch replays the
+        // interpreter's guaranteed L1I hit without the way search.
+        let pa = (b.ppage << 12) | (op.pc & 0xfff);
+        let line = pa & !(LINE - 1);
+        let c_fetch = if *last_line == Some(line) {
+            ms.l1i[h.id].repeat_hit();
+            0
+        } else {
+            let c = ms.fetch_timing(h.id, pa);
+            *last_line = Some(line);
+            c
+        };
+        match exec::exec_decoded(h, ms, model, &op.inst, op.pc, op.cls) {
+            Ok((next, c_exec)) => {
+                h.pc = next;
+                h.instret += 1;
+                h.counters.class[op.cls as usize] += 1;
+                h.counters.retired += 1;
+                h.charge(c_xlat + c_fetch + c_exec);
+                if matches!(op.inst, Inst::FenceI) {
+                    // The op flushed this hart's L1I; the repeat-line
+                    // shortcut must not survive it.
+                    *last_line = None;
+                }
+            }
+            Err(t) => {
+                h.pc = op.pc;
+                return BlockExit::Trap(t);
+            }
+        }
+    }
+    BlockExit::Done
+}
+
+impl Engine for BlockEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Block
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    fn run(&mut self, h: &mut Hart, ms: &mut MemSys, model: &CoreModel, t_end: u64) -> Exit {
+        // The host may have flushed or polluted the L1I between runs; a
+        // real access on a still-hot line is state-identical to the
+        // shortcut, so resetting is always safe.
+        self.last_line[h.id] = None;
+        let mut prev_slot: Option<usize> = None;
+        loop {
+            if h.stop_fetch || h.waiting || h.time >= t_end {
+                return Exit::Limit;
+            }
+            if h.interrupt_pending && h.prv == PrivLevel::U {
+                return Exit::Interrupt;
+            }
+            let satp = mmu::Satp(h.csrs.satp);
+            let paged = h.prv == PrivLevel::U && !satp.bare();
+            let space = if paged { satp.asid() + 1 } else { 0 };
+
+            let (pa0, c_xlat0, tlb_gen, vpn_cached) =
+                match self.translate_entry(h, ms, paged, satp) {
+                    Ok(v) => v,
+                    Err(t) => return Exit::Trap(t),
+                };
+            if pa0 & 3 != 0 {
+                // The interpreter's fetch checks alignment after
+                // translation and before the read.
+                return Exit::Trap(Trap::InstAddrMisaligned(pa0));
+            }
+            let slot = match self.resolve_block(&mut prev_slot, space, h.pc, pa0, ms) {
+                Ok(s) => s,
+                Err(t) => return Exit::Trap(t),
+            };
+
+            let Self { blocks, last_line, .. } = self;
+            let b = &blocks[slot];
+            match run_block(
+                h,
+                ms,
+                model,
+                b,
+                &mut last_line[h.id],
+                t_end,
+                c_xlat0,
+                tlb_gen,
+                vpn_cached,
+                paged,
+            ) {
+                BlockExit::Done => prev_slot = Some(slot),
+                BlockExit::Remapped => prev_slot = None,
+                BlockExit::Limit => return Exit::Limit,
+                BlockExit::Trap(t) => return Exit::Trap(t),
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Execution-strategy seam: architectural state (`Hart` + `MemSys`) is
+//! separated from *how* instructions are retired. Two interchangeable
+//! engines ship: the single-step interpreter ([`InterpEngine`]) and the
+//! decoded basic-block engine ([`super::block::BlockEngine`]).
+//!
+//! The engine choice carries **zero timing semantics**: every cycle charge,
+//! counter, and memory-model event must evolve identically per retired
+//! instruction on both engines, so sweep reports are byte-identical across
+//! engines (the CI differential gate enforces this). Engines may differ
+//! only in host wall-clock.
+
+use super::exec;
+use super::hart::{CoreModel, Hart, PrivLevel};
+use super::Trap;
+use crate::mem::MemSys;
+
+/// Which execution engine drives the fast machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Single-step interpreter (one fetch/decode/execute per call).
+    Interp,
+    /// Decoded basic-block cache with superblock chaining.
+    #[default]
+    Block,
+}
+
+impl EngineKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::Interp => "interp",
+            EngineKind::Block => "block",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "interp" => Some(EngineKind::Interp),
+            "block" => Some(EngineKind::Block),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Why `Engine::run` returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exit {
+    /// Time slice exhausted, or the hart stalled (StopFetch/WFI).
+    Limit,
+    /// A pending machine interrupt must be taken (hart is in U-mode).
+    /// The caller clears the pending flag and performs the trap entry.
+    Interrupt,
+    /// An instruction trapped; pc is left at the faulting instruction and
+    /// no cycles were charged for it (the caller charges the flush).
+    Trap(Trap),
+}
+
+/// Host-side engine counters (diagnostics only — never part of the
+/// deterministic report surface).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Basic blocks decoded into the cache.
+    pub blocks_built: u64,
+    /// Dispatches served by an already-cached valid block.
+    pub block_hits: u64,
+    /// Dispatches that followed a superblock chain link (subset of hits).
+    pub chained: u64,
+    /// Blocks discarded because their page generation, I-cache epoch, or
+    /// entry translation no longer matched (plus capacity clears).
+    pub evicted: u64,
+}
+
+/// Execution strategy over one hart and the shared memory system.
+///
+/// Contract (mirrors the interpreter's per-instruction loop exactly):
+/// - return `Limit` as soon as `h.time >= t_end` or the hart is stalled;
+/// - return `Interrupt` *before* executing an instruction whenever
+///   `h.interrupt_pending && h.prv == U`;
+/// - on a trap, leave `h.pc` at the faulting instruction, charge nothing
+///   for it, and return `Trap`;
+/// - per retired instruction: update pc, bump `instret` and the class
+///   counters, and `charge` translate+fetch+execute cycles.
+pub trait Engine: Send {
+    fn kind(&self) -> EngineKind;
+
+    fn run(&mut self, h: &mut Hart, ms: &mut MemSys, model: &CoreModel, t_end: u64) -> Exit;
+
+    fn stats(&self) -> EngineStats {
+        EngineStats::default()
+    }
+}
+
+/// The original single-step interpreter, hoisted behind the trait.
+pub struct InterpEngine;
+
+impl Engine for InterpEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Interp
+    }
+
+    fn run(&mut self, h: &mut Hart, ms: &mut MemSys, model: &CoreModel, t_end: u64) -> Exit {
+        loop {
+            if h.stop_fetch || h.waiting || h.time >= t_end {
+                return Exit::Limit;
+            }
+            if h.interrupt_pending && h.prv == PrivLevel::U {
+                return Exit::Interrupt;
+            }
+            match exec::step(h, ms, model) {
+                Ok(cycles) => h.charge(cycles),
+                Err(trap) => return Exit::Trap(trap),
+            }
+        }
+    }
+}
+
+pub fn make_engine(kind: EngineKind, n_harts: usize) -> Box<dyn Engine> {
+    match kind {
+        EngineKind::Interp => Box::new(InterpEngine),
+        EngineKind::Block => Box::new(super::block::BlockEngine::new(n_harts)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for k in [EngineKind::Interp, EngineKind::Block] {
+            assert_eq!(EngineKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(EngineKind::parse("jit"), None);
+        assert_eq!(EngineKind::default(), EngineKind::Block);
+    }
+
+    #[test]
+    fn factory_returns_requested_kind() {
+        assert_eq!(make_engine(EngineKind::Interp, 1).kind(), EngineKind::Interp);
+        assert_eq!(make_engine(EngineKind::Block, 2).kind(), EngineKind::Block);
+    }
+}

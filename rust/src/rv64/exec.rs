@@ -28,10 +28,10 @@ pub fn step(h: &mut Hart, ms: &mut MemSys, model: &CoreModel) -> Result<u64, Tra
             (i, c)
         }
     };
-    let (next_pc, c_exec) = exec_decoded(h, ms, model, &inst, h.pc)?;
+    let cls = inst.class();
+    let (next_pc, c_exec) = exec_decoded(h, ms, model, &inst, h.pc, cls)?;
     h.pc = next_pc;
     h.instret += 1;
-    let cls = inst.class();
     h.counters.class[cls as usize] += 1;
     h.counters.retired += 1;
     Ok(c_xlat + c_fetch + c_exec)
@@ -50,22 +50,25 @@ pub fn exec_injected(h: &mut Hart, ms: &mut MemSys, model: &CoreModel, raw: u32)
     }
     debug_assert!(!inst.is_control_flow(), "Inject port carries non-branch instructions only");
     let saved_pc = h.pc;
-    let (_, cycles) = exec_decoded(h, ms, model, &inst, saved_pc)?;
+    let (_, cycles) = exec_decoded(h, ms, model, &inst, saved_pc, inst.class())?;
     h.pc = saved_pc;
     Ok(cycles + model.inject_drain)
 }
 
-/// Core execute. Returns (next_pc, cycles).
-fn exec_decoded(
+/// Core execute, shared by the single-step interpreter and the decoded
+/// block engine (`rv64::block`). `cls` is the instruction's class,
+/// precomputed by the caller (block ops classify once at decode time).
+/// Returns (next_pc, cycles).
+pub(crate) fn exec_decoded(
     h: &mut Hart,
     ms: &mut MemSys,
     model: &CoreModel,
     inst: &Inst,
     pc: u64,
+    cls: InstClass,
 ) -> Result<(u64, u64), Trap> {
     let user = h.prv == PrivLevel::U;
     let satp = mmu::Satp(h.csrs.satp);
-    let cls = inst.class();
     let mut cycles = model.base_cost[cls as usize];
     let mut next = pc.wrapping_add(4);
 
@@ -260,9 +263,10 @@ fn exec_decoded(
         }
         Inst::Fence => {}
         Inst::FenceI => {
-            // Synchronize the I-stream: flush this hart's I-cache and the
-            // host-side predecode array.
-            ms.l1i[h.id].flush();
+            // Synchronize the I-stream: flush this hart's I-cache, advance
+            // the decoded-block epoch, and drop the host-side predecode
+            // array.
+            ms.instr_sync(h.id);
             h.dcache.clear();
         }
         Inst::Ecall => {

@@ -10,14 +10,17 @@
 //! fast engine (FPGA stand-in) and the detailed cycle-stepped engine
 //! (RTL-simulation stand-in), so both modes run bit-identical semantics.
 
+pub mod block;
 pub mod csr;
 pub mod decode;
+pub mod engine;
 pub mod exec;
 pub mod fpu;
 pub mod hart;
 pub mod inst;
 
 pub use decode::decode;
+pub use engine::{Engine, EngineKind, EngineStats, Exit};
 pub use hart::{Hart, PrivLevel};
 pub use inst::Inst;
 

@@ -2,6 +2,7 @@
 
 use crate::iface::{CpuInterface, InjectResult};
 use crate::mem::MemSys;
+use crate::rv64::engine::{make_engine, Engine, EngineKind, EngineStats, Exit};
 use crate::rv64::exec;
 use crate::rv64::hart::{CoreModel, Hart, PrivLevel};
 use crate::rv64::Trap;
@@ -20,6 +21,8 @@ pub struct MachineConfig {
     pub core: CoreModel,
     /// Round-robin interleave quantum in cycles.
     pub quantum: u64,
+    /// Execution strategy (timing-neutral; see `rv64::engine`).
+    pub engine: EngineKind,
 }
 
 impl Default for MachineConfig {
@@ -30,6 +33,7 @@ impl Default for MachineConfig {
             clock_hz: 100_000_000,
             core: CoreModel::rocket(),
             quantum: 256,
+            engine: EngineKind::default(),
         }
     }
 }
@@ -56,6 +60,8 @@ pub struct Machine {
     pub total_instret: u64,
     /// Optional cap; `run_until` panics past it (runaway guard in tests).
     pub max_ticks: u64,
+    /// Execution strategy (interpreter or decoded-block cache).
+    engine: Box<dyn Engine>,
 }
 
 impl Machine {
@@ -77,6 +83,7 @@ impl Machine {
             exception_queue: VecDeque::new(),
             total_instret: 0,
             max_ticks: u64::MAX,
+            engine: make_engine(cfg.engine, cfg.n_harts),
         };
         m.ms
             .phys
@@ -117,7 +124,27 @@ impl Machine {
                 }
                 any = true;
                 while self.runnable(cpu) && self.harts[cpu].time < slice_end {
-                    self.step_hart(cpu);
+                    let before = self.harts[cpu].instret;
+                    let exit = self.engine.run(
+                        &mut self.harts[cpu],
+                        &mut self.ms,
+                        &self.model,
+                        slice_end,
+                    );
+                    self.total_instret += self.harts[cpu].instret - before;
+                    match exit {
+                        Exit::Limit => {}
+                        Exit::Interrupt => {
+                            self.harts[cpu].interrupt_pending = false;
+                            self.trap_to_controller(cpu, None);
+                        }
+                        Exit::Trap(trap) => {
+                            // Trap entry costs a pipeline flush either way.
+                            let flush = self.model.mispredict_penalty + 2;
+                            self.harts[cpu].charge(flush);
+                            self.trap_to_controller(cpu, Some(trap));
+                        }
+                    }
                 }
             }
             if !any {
@@ -141,29 +168,6 @@ impl Machine {
             }
         }
         !self.exception_queue.is_empty()
-    }
-
-    /// Single instruction step on one hart, handling traps/interrupts.
-    fn step_hart(&mut self, cpu: usize) {
-        // Pending machine interrupt? (optional Interrupt port / timer)
-        if self.harts[cpu].interrupt_pending && self.harts[cpu].prv == PrivLevel::U {
-            self.harts[cpu].interrupt_pending = false;
-            self.trap_to_controller(cpu, None);
-            return;
-        }
-        let h = &mut self.harts[cpu];
-        match exec::step(h, &mut self.ms, &self.model) {
-            Ok(cycles) => {
-                h.charge(cycles);
-                self.total_instret += 1;
-            }
-            Err(trap) => {
-                // Trap entry costs a pipeline flush either way.
-                let flush = self.model.mispredict_penalty + 2;
-                self.harts[cpu].charge(flush);
-                self.trap_to_controller(cpu, Some(trap));
-            }
-        }
     }
 
     /// Architectural trap entry + StopFetch + exception event enqueue.
@@ -200,6 +204,16 @@ impl Machine {
     /// Number of retired instructions across all harts.
     pub fn instret(&self) -> u64 {
         self.total_instret
+    }
+
+    pub fn engine_kind(&self) -> EngineKind {
+        self.engine.kind()
+    }
+
+    /// Host-side engine counters (block cache behaviour; all zero on the
+    /// interpreter). Diagnostics only — never part of report JSON.
+    pub fn engine_stats(&self) -> EngineStats {
+        self.engine.stats()
     }
 }
 

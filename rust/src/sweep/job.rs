@@ -5,6 +5,7 @@ use crate::baseline::{run_pk, run_pk_exe, PkConfig};
 use crate::coordinator::runtime::{run_elf, run_exe, Mode, RunConfig, RunResult};
 use crate::coordinator::target::{HostLatency, KernelCosts};
 use crate::rv64::hart::CoreModel;
+use crate::rv64::EngineKind;
 use std::path::PathBuf;
 
 /// FNV-1a over the scenario label — the stable identity hash that seeds
@@ -35,11 +36,19 @@ pub struct Job {
     /// each scenario owns an independent stream that does not depend on
     /// expansion position, filtering, or worker completion order.
     pub prng_seed: u64,
+    /// Engine-axis pin (`engines =` in the spec). Recorded in the label
+    /// as `+interp`/`+block` on the arm segment, so pinned scenarios have
+    /// distinct identities.
+    pub engine_pin: Option<EngineKind>,
+    /// Label-invisible engine selection (spec `engine =` key or CLI
+    /// `--engine`); see [`SweepSpec::engine_override`].
+    pub engine_override: Option<EngineKind>,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
 
 impl Job {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         workload: WorkloadSpec,
@@ -47,6 +56,7 @@ impl Job {
         harts: usize,
         core: String,
         seed: u64,
+        engine_pin: Option<EngineKind>,
         spec: &SweepSpec,
     ) -> Job {
         let mut job = Job {
@@ -57,6 +67,8 @@ impl Job {
             core,
             seed,
             prng_seed: 0,
+            engine_pin,
+            engine_override: spec.engine_override,
             max_target_seconds: spec.max_target_seconds,
             dram_size: spec.dram_size,
         };
@@ -65,16 +77,29 @@ impl Job {
     }
 
     /// Stable scenario identity, the join key for baseline comparisons:
-    /// `workload|arm|<harts>c|core|s<seed>`.
+    /// `workload|arm[+engine]|<harts>c|core|s<seed>`. The engine suffix
+    /// appears only for engine-axis pins, never for the label-invisible
+    /// override.
     pub fn label(&self) -> String {
+        let pin = match self.engine_pin {
+            Some(k) => format!("+{k}"),
+            None => String::new(),
+        };
         format!(
-            "{}|{}|{}c|{}|s{}",
+            "{}|{}{}|{}c|{}|s{}",
             self.workload.name,
             self.arm.label(),
+            pin,
             self.harts,
             self.core,
             self.seed
         )
+    }
+
+    /// The rv64 engine this job actually runs on: the label-invisible
+    /// override beats the axis pin beats the crate default.
+    pub fn engine(&self) -> EngineKind {
+        self.engine_override.or(self.engine_pin).unwrap_or_default()
     }
 
     fn mode(&self) -> Mode {
@@ -106,6 +131,7 @@ impl Job {
             collect_windows: false,
             htp_batching: true,
             seed: self.prng_seed,
+            engine: self.engine(),
         }
     }
 
@@ -115,6 +141,7 @@ impl Job {
             sim_threads,
             dram_size: self.dram_size,
             seed: self.prng_seed,
+            engine: self.engine(),
             ..Default::default()
         }
     }
@@ -232,6 +259,7 @@ mod tests {
             harts,
             "rocket".into(),
             0,
+            None,
             &spec,
         )
     }
@@ -267,6 +295,7 @@ mod tests {
             1,
             "rocket".into(),
             0,
+            None,
             &spec,
         );
         let out = run_job(&j);

@@ -6,6 +6,7 @@
 //! INI-subset format (see [`SweepSpec::from_config`]).
 
 use crate::fase::transport::TransportSpec;
+use crate::rv64::EngineKind;
 use crate::util::config::Config;
 
 /// One experimental arm: which stack executes the scenario. The engine
@@ -191,6 +192,15 @@ pub struct SweepSpec {
     /// Seed axis (replication with different randomness); `[0]` = one
     /// replicate.
     pub seeds: Vec<u64>,
+    /// Engine axis (`engines = interp, block`): pins each scenario to one
+    /// rv64 execution engine and records the pin in the label (`+interp` /
+    /// `+block` on the arm segment). Empty = one unpinned job per cell.
+    pub engines: Vec<EngineKind>,
+    /// Label-*invisible* engine selection (`engine =` key, CLI
+    /// `--engine`): every non-pinned job runs on this engine but labels do
+    /// not change, so two reports that differ only in override must be
+    /// byte-identical — the CI cross-engine differential gate.
+    pub engine_override: Option<EngineKind>,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -205,6 +215,8 @@ impl SweepSpec {
             harts: vec![1],
             cores: vec!["rocket".into()],
             seeds: vec![0],
+            engines: Vec::new(),
+            engine_override: None,
             max_target_seconds: 3000.0,
             dram_size: 1 << 31,
         }
@@ -216,27 +228,36 @@ impl SweepSpec {
     /// label, not the positional id), so filtered reports stay comparable
     /// to full baselines.
     pub fn expand(&self, filter: Option<&str>) -> Vec<super::job::Job> {
+        // Engine axis: no pins = one unpinned job per cell.
+        let pins: Vec<Option<EngineKind>> = if self.engines.is_empty() {
+            vec![None]
+        } else {
+            self.engines.iter().copied().map(Some).collect()
+        };
         let mut jobs = Vec::new();
         for w in &self.workloads {
             for arm in &self.arms {
-                for &harts in &self.harts {
-                    for core in &self.cores {
-                        for &seed in &self.seeds {
-                            let job = super::job::Job::new(
-                                jobs.len(),
-                                w.clone(),
-                                arm.clone(),
-                                harts,
-                                core.clone(),
-                                seed,
-                                self,
-                            );
-                            if let Some(f) = filter {
-                                if !job.label().contains(f) {
-                                    continue;
+                for &pin in &pins {
+                    for &harts in &self.harts {
+                        for core in &self.cores {
+                            for &seed in &self.seeds {
+                                let job = super::job::Job::new(
+                                    jobs.len(),
+                                    w.clone(),
+                                    arm.clone(),
+                                    harts,
+                                    core.clone(),
+                                    seed,
+                                    pin,
+                                    self,
+                                );
+                                if let Some(f) = filter {
+                                    if !job.label().contains(f) {
+                                        continue;
+                                    }
                                 }
+                                jobs.push(job);
                             }
-                            jobs.push(job);
                         }
                     }
                 }
@@ -299,6 +320,15 @@ impl SweepSpec {
         };
         spec.harts = parse_nums("harts", &[1])?.into_iter().map(|v| v as usize).collect();
         spec.seeds = parse_nums("seeds", &[0])?;
+        spec.engines = cfg
+            .list_or(sec, "engines", &[])
+            .iter()
+            .map(|e| EngineKind::parse(e).ok_or_else(|| format!("bad engine {e:?}")))
+            .collect::<Result<_, _>>()?;
+        if let Some(e) = cfg.get(sec, "engine") {
+            spec.engine_override =
+                Some(EngineKind::parse(e).ok_or_else(|| format!("bad engine {e:?}"))?);
+        }
         let cores = cfg.list_or(sec, "cores", &[]);
         if !cores.is_empty() {
             spec.cores = cores;
@@ -380,6 +410,39 @@ mod tests {
         assert_eq!(filtered[0].label(), all[4].label());
         assert_eq!(filtered[0].prng_seed, all[4].prng_seed);
         assert_eq!(filtered[0].id, 0);
+    }
+
+    #[test]
+    fn engine_axis_pins_labels_and_override_stays_invisible() {
+        let spec = SweepSpec::parse(
+            "[sweep]\nworkloads = spin:10\narms = fullsys\nengines = interp, block\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(spec.engines, vec![EngineKind::Interp, EngineKind::Block]);
+        let jobs = spec.expand(None);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].label(), "spin:10|fullsys+interp|1c|rocket|s0");
+        assert_eq!(jobs[1].label(), "spin:10|fullsys+block|1c|rocket|s0");
+        assert_ne!(jobs[0].prng_seed, jobs[1].prng_seed);
+        assert_eq!(jobs[0].engine(), EngineKind::Interp);
+        assert_eq!(jobs[1].engine(), EngineKind::Block);
+
+        let ov = SweepSpec::parse(
+            "[sweep]\nworkloads = spin:10\narms = fullsys\nengine = interp\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(ov.engine_override, Some(EngineKind::Interp));
+        let jobs = ov.expand(None);
+        assert_eq!(jobs.len(), 1);
+        // Label-invisible: identity (and PRNG stream) unchanged by override.
+        assert_eq!(jobs[0].label(), "spin:10|fullsys|1c|rocket|s0");
+        assert_eq!(jobs[0].engine(), EngineKind::Interp);
+
+        let bad = "[sweep]\nworkloads = spin:1\narms = fullsys\n";
+        assert!(SweepSpec::parse(&format!("{bad}engines = jit\n"), "x").is_err());
+        assert!(SweepSpec::parse(&format!("{bad}engine = jit\n"), "x").is_err());
     }
 
     #[test]

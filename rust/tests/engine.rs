@@ -1,0 +1,197 @@
+//! Cross-engine equivalence tests (DESIGN.md §Engine).
+//!
+//! The interpreter and the decoded basic-block engine must be
+//! architecturally *and* cycle-identical: same registers, same hart time,
+//! same retired-instruction counts, byte-identical sweep reports. These
+//! tests also pin down the invalidation rules — stores into cached code
+//! plus `fence.i`, and `sfence.vma` across an ASID remap.
+
+use fase::iface::CpuInterface;
+use fase::mem::mmu::{Satp, PTE_A, PTE_R, PTE_U, PTE_V, PTE_X};
+use fase::rv64::csr;
+use fase::rv64::decode::encode;
+use fase::rv64::hart::PrivLevel;
+use fase::rv64::EngineKind;
+use fase::soc::machine::DRAM_BASE;
+use fase::soc::{Machine, MachineConfig};
+use fase::sweep::{run_sweep, Arm, SweepSpec, SynthKind, WorkloadSpec};
+
+const ECALL: u32 = 0x0000_0073;
+
+/// jal rd, off — pc-relative byte offset (the controller's encoder set
+/// only covers injected sequences, so tests encode jumps themselves).
+fn jal(rd: u8, off: i64) -> u32 {
+    let v = off as u32;
+    0x6f | ((rd as u32) << 7)
+        | (((v >> 20) & 1) << 31)
+        | (((v >> 1) & 0x3ff) << 21)
+        | (((v >> 11) & 1) << 20)
+        | (((v >> 12) & 0xff) << 12)
+}
+
+/// jalr rd, off(rs1)
+fn jalr(rd: u8, rs1: u8, off: i32) -> u32 {
+    ((off as u32 & 0xfff) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0x67
+}
+
+fn machine(kind: EngineKind) -> Machine {
+    Machine::new(MachineConfig {
+        n_harts: 1,
+        dram_size: 8 << 20,
+        engine: kind,
+        ..Default::default()
+    })
+}
+
+fn write_prog(m: &mut Machine, at: u64, words: &[u32]) {
+    for (i, w) in words.iter().enumerate() {
+        m.ms.phys.write_n(at + 4 * i as u64, 4, *w as u64);
+    }
+}
+
+/// Self-modifying code: call a subroutine (caching its block), patch both
+/// of its instruction words with one sd, fence.i, call it again. The
+/// second call must execute the rewritten code, and both engines must end
+/// in the identical architectural state at the identical hart time.
+fn run_smc(kind: EngineKind) -> ([u64; 32], u64, u64) {
+    let mut m = machine(kind);
+    let main = DRAM_BASE + 0x1000;
+    let target = main + 0x40;
+    write_prog(&mut m, main, &[
+        jal(1, 0x40),          // call target (block gets cached)
+        encode::sd(9, 8, 0),   // patch target's two instruction words
+        encode::fence_i(),
+        jal(1, 0x34),          // call target again (0x40 - 0xc)
+        encode::self_loop(),
+    ]);
+    write_prog(&mut m, target, &[encode::addi(6, 6, 1), jalr(0, 1, 0)]);
+    m.harts[0].regs[8] = target;
+    m.harts[0].regs[9] = ((jalr(0, 1, 0) as u64) << 32) | encode::addi(6, 6, 100) as u64;
+    m.harts[0].pc = main;
+    m.harts[0].stop_fetch = false;
+    m.run_until(200_000);
+    if kind == EngineKind::Block {
+        let s = m.engine_stats();
+        assert!(s.blocks_built >= 5, "five distinct blocks plus a rebuild: {s:?}");
+        assert!(s.evicted >= 1, "the patched block must be evicted: {s:?}");
+        assert!(s.block_hits >= 1, "the self-loop must hit the cache: {s:?}");
+    }
+    let h = &m.harts[0];
+    (h.regs, h.time, h.instret)
+}
+
+#[test]
+fn smc_store_plus_fence_i_executes_rewritten_code_on_both_engines() {
+    let interp = run_smc(EngineKind::Interp);
+    let block = run_smc(EngineKind::Block);
+    assert_eq!(interp.0[6], 101, "first call adds 1, patched call adds 100");
+    assert_eq!(interp, block, "engines diverged in registers, time, or instret");
+}
+
+const VA: u64 = 0x4000_0000;
+
+/// Build the mmu-test-style 3-level SV39 table mapping one 4K page.
+fn map_page(m: &mut Machine, root: u64, va: u64, pa: u64, flags: u64) {
+    let l2 = root + 0x1000;
+    let l1 = root + 0x2000;
+    m.ms.phys.write_u64(root + ((va >> 30) & 0x1ff) * 8, ((l2 >> 12) << 10) | PTE_V);
+    m.ms.phys.write_u64(l2 + ((va >> 21) & 0x1ff) * 8, ((l1 >> 12) << 10) | PTE_V);
+    m.ms.phys.write_u64(l1 + ((va >> 12) & 0x1ff) * 8, ((pa >> 12) << 10) | flags);
+}
+
+/// Paged SMC via the page tables: run user code at VA, remap VA to a
+/// different physical page under a new ASID (then again under the same
+/// ASID) with `sfence.vma` executed through the inject port, and check
+/// that every pass fetches through the *current* translation.
+fn run_remap(kind: EngineKind) -> ([u64; 32], u64, u64) {
+    let mut m = machine(kind);
+    let root = DRAM_BASE + 0x10_0000;
+    let pa1 = DRAM_BASE + 0x20_0000;
+    let pa2 = DRAM_BASE + 0x21_0000;
+    let flags = PTE_V | PTE_R | PTE_X | PTE_U | PTE_A;
+    write_prog(&mut m, pa1, &[encode::addi(5, 5, 1), ECALL]);
+    write_prog(&mut m, pa2, &[encode::addi(5, 5, 2), ECALL]);
+    map_page(&mut m, root, VA, pa1, flags);
+    m.harts[0].csrs.satp = Satp::make(8, 1, root >> 12).0;
+    m.harts[0].prv = PrivLevel::U;
+    m.harts[0].pc = VA;
+    m.harts[0].stop_fetch = false;
+
+    assert!(m.run_until_exception(10_000_000));
+    assert!(m.pop_exception().is_some());
+    assert_eq!(m.harts[0].csrs.mcause, 8, "user ecall expected");
+    assert_eq!(m.harts[0].regs[5], 1);
+
+    // Remap VA -> pa2 and switch to ASID 2; flush via injected sfence.vma.
+    let leaf = root + 0x2000 + ((VA >> 12) & 0x1ff) * 8;
+    m.ms.phys.write_u64(leaf, ((pa2 >> 12) << 10) | flags);
+    m.reg_write(0, 1, Satp::make(8, 2, root >> 12).0);
+    m.inject(0, encode::csrrw(0, csr::SATP, 1));
+    m.inject(0, encode::sfence_vma());
+    m.reg_write(0, 1, VA);
+    m.inject(0, encode::csrrw(0, csr::MEPC, 1));
+    m.inject(0, encode::mret());
+    m.set_stop_fetch(0, false);
+    assert!(m.run_until_exception(20_000_000));
+    assert!(m.pop_exception().is_some());
+    assert_eq!(m.harts[0].regs[5], 3, "ASID remap must fetch the new page");
+
+    // Same-ASID PTE rewrite back to pa1 + sfence.vma.
+    m.ms.phys.write_u64(leaf, ((pa1 >> 12) << 10) | flags);
+    m.inject(0, encode::sfence_vma());
+    m.reg_write(0, 1, VA);
+    m.inject(0, encode::csrrw(0, csr::MEPC, 1));
+    m.inject(0, encode::mret());
+    m.set_stop_fetch(0, false);
+    assert!(m.run_until_exception(30_000_000));
+    assert!(m.pop_exception().is_some());
+    assert_eq!(m.harts[0].regs[5], 4, "sfence.vma must drop the stale translation");
+
+    let h = &m.harts[0];
+    (h.regs, h.time, h.instret)
+}
+
+#[test]
+fn sfence_vma_asid_remap_agrees_across_engines() {
+    let interp = run_remap(EngineKind::Interp);
+    let block = run_remap(EngineKind::Block);
+    assert_eq!(interp, block, "engines diverged in registers, time, or instret");
+}
+
+/// Run the lockstep matrix (spin/storm/memtouch x fase-loopback/fullsys x
+/// 1,2 harts) on one engine via the label-invisible override and return
+/// the pretty-printed report plus per-scenario retired counts.
+fn lockstep_sweep(kind: EngineKind) -> (String, Vec<u64>) {
+    let mut spec = SweepSpec::new("lockstep");
+    spec.seed = 0x5EED;
+    spec.dram_size = 64 << 20;
+    spec.max_target_seconds = 30.0;
+    spec.workloads = vec![
+        WorkloadSpec::synth(SynthKind::Spin { iters: 300 }),
+        WorkloadSpec::synth(SynthKind::Storm { calls: 24 }),
+        WorkloadSpec::synth(SynthKind::MemTouch { pages: 16 }),
+    ];
+    spec.arms = vec![
+        Arm::Fase {
+            transport: fase::fase::transport::TransportSpec::Loopback,
+            hfutex: true,
+            ideal_latency: false,
+        },
+        Arm::FullSys,
+    ];
+    spec.harts = vec![1, 2];
+    spec.engine_override = Some(kind);
+    let out = run_sweep(&spec, 2, None, false);
+    assert!(out.errors().is_empty(), "sweep errors on {kind}: {:?}", out.errors());
+    let retired = out.outcomes.iter().map(|o| o.result.instret).collect();
+    (out.to_json().to_string_pretty(), retired)
+}
+
+#[test]
+fn engines_produce_byte_identical_sweep_reports() {
+    let (report_i, retired_i) = lockstep_sweep(EngineKind::Interp);
+    let (report_b, retired_b) = lockstep_sweep(EngineKind::Block);
+    assert!(retired_i.iter().sum::<u64>() > 0, "workloads must retire instructions");
+    assert_eq!(retired_i, retired_b, "retired counts must match per scenario");
+    assert!(report_i == report_b, "sweep reports must be byte-identical across engines");
+}
