@@ -1,0 +1,252 @@
+//! Linear-sweep disassembly and CFG construction (DESIGN.md §Analysis).
+//!
+//! The pass decodes every 32-bit word of the executable segments with the
+//! engines' own decoder, then carves basic blocks with a worklist walk
+//! from the entry point. Block cut rules mirror the dynamic decoded-block
+//! cache (terminator, 64-op cap, page edge) so the discovered entries
+//! line up with what the engine would build at dispatch time. Blocks may
+//! overlap — a jump into the middle of one starts another — exactly like
+//! the dynamic cache, which keys blocks by entry pc only.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::elfio::read::Executable;
+use crate::rv64::decode::decode;
+use crate::rv64::Inst;
+
+/// Mirrors the dynamic engine's per-block op cap (`rv64::block`).
+pub const MAX_BLOCK_OPS: usize = 64;
+
+/// Why a basic block ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Term {
+    /// `jal` — direct jump (a call when rd != 0).
+    Jump,
+    /// `jalr` — indirect jump; target unknowable statically.
+    Indirect,
+    /// Conditional branch: taken + fallthrough edges.
+    Branch,
+    /// `ecall` — a syscall site; execution resumes at pc+4.
+    Ecall,
+    /// `ebreak` or an illegal encoding — traps, no static successor.
+    Trap,
+    /// System instruction the engine also cuts on (csr, fences, wfi,
+    /// mret); all but mret fall through.
+    Sys,
+    /// Op-cap, page-edge, or end-of-image split.
+    Cut,
+}
+
+/// One statically discovered basic block.
+#[derive(Debug, Clone, Copy)]
+pub struct BasicBlock {
+    /// Entry VA — the prewarm key.
+    pub va: u64,
+    /// Number of 32-bit ops, terminator included.
+    pub len: u32,
+    /// VA of the last op (the `ecall` pc for `Term::Ecall` blocks).
+    pub end_pc: u64,
+    pub term: Term,
+    /// Statically known taken-edge target (jal/branch).
+    pub taken: Option<u64>,
+    /// Fallthrough / return-continuation target.
+    pub fallthrough: Option<u64>,
+}
+
+/// The control-flow graph plus the raw disassembly it was carved from.
+#[derive(Debug, Clone)]
+pub struct Cfg {
+    pub entry: u64,
+    /// Every decoded word of the executable segments: pc → (raw, inst).
+    /// Zero-filled tails (memsz past filesz) are not instructions and
+    /// are excluded.
+    pub insts: BTreeMap<u64, (u32, Inst)>,
+    /// Reachable blocks, va-ascending.
+    pub blocks: Vec<BasicBlock>,
+    /// Block entry pcs. The a7 def-use walk refuses to step backward
+    /// past a leader without finding a definition (join point).
+    pub leaders: BTreeSet<u64>,
+    /// `jalr` pcs — the indirect-jump frontier the static pass cannot
+    /// follow (targets only discoverable at run time).
+    pub indirect: Vec<u64>,
+    /// Reachable words that decode to `Illegal`: (pc, raw).
+    pub illegal: Vec<(u64, u32)>,
+    /// Writable+executable segments (page-aligned va, page count) —
+    /// self-modifying-code risk for the `page_gen` invalidation path.
+    pub wx_segments: Vec<(u64, u64)>,
+    /// Distinct instruction pcs covered by some reachable block.
+    pub insts_reached: u64,
+}
+
+impl Cfg {
+    /// Total decoded words across executable segments.
+    pub fn insts_total(&self) -> u64 {
+        self.insts.len() as u64
+    }
+
+    /// Fraction of decoded words reachable from the entry point.
+    pub fn coverage(&self) -> f64 {
+        if self.insts.is_empty() {
+            0.0
+        } else {
+            self.insts_reached as f64 / self.insts.len() as f64
+        }
+    }
+}
+
+/// Disassemble `exe` and build the reachable CFG from its entry point.
+pub fn build(exe: &Executable) -> Cfg {
+    let mut insts: BTreeMap<u64, (u32, Inst)> = BTreeMap::new();
+    let mut wx_segments = Vec::new();
+    for seg in &exe.segments {
+        if !seg.executable() {
+            continue;
+        }
+        if seg.writable() {
+            let pages = ((seg.vaddr & 0xfff) + seg.memsz).div_ceil(4096);
+            wx_segments.push((seg.vaddr & !0xfff, pages));
+        }
+        let mut off = 0usize;
+        while off + 4 <= seg.data.len() {
+            let raw = u32::from_le_bytes(seg.data[off..off + 4].try_into().unwrap());
+            insts.insert(seg.vaddr + off as u64, (raw, decode(raw)));
+            off += 4;
+        }
+    }
+
+    let mut blocks: BTreeMap<u64, BasicBlock> = BTreeMap::new();
+    let mut indirect: BTreeSet<u64> = BTreeSet::new();
+    let mut illegal: BTreeSet<(u64, u32)> = BTreeSet::new();
+    let mut queue: VecDeque<u64> = VecDeque::from([exe.entry]);
+    while let Some(va) = queue.pop_front() {
+        if blocks.contains_key(&va) || !insts.contains_key(&va) {
+            continue;
+        }
+        let b = carve(&insts, va, &mut indirect, &mut illegal);
+        // Out-of-image targets (e.g. the kernel's signal trampoline)
+        // stay as recorded edges; the queue simply skips them.
+        if let Some(t) = b.taken {
+            queue.push_back(t);
+        }
+        if let Some(f) = b.fallthrough {
+            queue.push_back(f);
+        }
+        blocks.insert(va, b);
+    }
+
+    let mut reached: BTreeSet<u64> = BTreeSet::new();
+    for b in blocks.values() {
+        for i in 0..u64::from(b.len) {
+            reached.insert(b.va + 4 * i);
+        }
+    }
+
+    Cfg {
+        entry: exe.entry,
+        leaders: blocks.keys().copied().collect(),
+        blocks: blocks.into_values().collect(),
+        insts,
+        indirect: indirect.into_iter().collect(),
+        illegal: illegal.into_iter().collect(),
+        wx_segments,
+        insts_reached: reached.len() as u64,
+    }
+}
+
+/// Carve one block starting at `va`, mirroring the dynamic cut rules.
+fn carve(
+    insts: &BTreeMap<u64, (u32, Inst)>,
+    va: u64,
+    indirect: &mut BTreeSet<u64>,
+    illegal: &mut BTreeSet<(u64, u32)>,
+) -> BasicBlock {
+    let mut pc = va;
+    let mut len = 0u32;
+    loop {
+        let (raw, inst) = insts[&pc];
+        len += 1;
+        let done = |taken: Option<u64>, ft: Option<u64>, term: Term| BasicBlock {
+            va,
+            len,
+            end_pc: pc,
+            term,
+            taken,
+            fallthrough: ft,
+        };
+        match inst {
+            Inst::Jal { rd, imm } => {
+                // rd != 0 is a call: assume the return continuation at
+                // pc+4 is eventually reached.
+                let ft = (rd != 0).then(|| pc + 4);
+                return done(Some(pc.wrapping_add(imm as u64)), ft, Term::Jump);
+            }
+            Inst::Jalr { rd, .. } => {
+                indirect.insert(pc);
+                let ft = (rd != 0).then(|| pc + 4);
+                return done(None, ft, Term::Indirect);
+            }
+            Inst::Branch { imm, .. } => {
+                return done(Some(pc.wrapping_add(imm as u64)), Some(pc + 4), Term::Branch);
+            }
+            Inst::Ecall => return done(None, Some(pc + 4), Term::Ecall),
+            Inst::Ebreak => return done(None, Some(pc + 4), Term::Trap),
+            Inst::Mret => return done(None, None, Term::Sys),
+            Inst::Wfi | Inst::Fence | Inst::FenceI | Inst::SfenceVma { .. } | Inst::Csr { .. } => {
+                return done(None, Some(pc + 4), Term::Sys);
+            }
+            Inst::Illegal { .. } => {
+                illegal.insert((pc, raw));
+                return done(None, None, Term::Trap);
+            }
+            _ => {}
+        }
+        let next = pc + 4;
+        if len as usize >= MAX_BLOCK_OPS || next & 0xfff == 0 || !insts.contains_key(&next) {
+            return done(None, Some(next), Term::Cut);
+        }
+        pc = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::synth;
+    use crate::sweep::SynthKind;
+
+    #[test]
+    fn spin_cfg_covers_every_instruction() {
+        let exe = synth::build(SynthKind::Spin { iters: 10 });
+        let cfg = build(&exe);
+        assert_eq!(cfg.entry, exe.entry);
+        assert!(cfg.blocks.len() >= 3, "loop head, body, exit: {:?}", cfg.blocks);
+        assert_eq!(cfg.insts_reached, cfg.insts_total(), "spin is fully reachable");
+        assert!((cfg.coverage() - 1.0).abs() < 1e-12);
+        assert!(cfg.illegal.is_empty() && cfg.indirect.is_empty());
+        assert!(cfg.wx_segments.is_empty(), "synth text is R+X only");
+    }
+
+    #[test]
+    fn storm_cfg_finds_both_ecall_blocks() {
+        let exe = synth::build(SynthKind::Storm { calls: 8 });
+        let cfg = build(&exe);
+        let ecalls: Vec<_> = cfg.blocks.iter().filter(|b| b.term == Term::Ecall).collect();
+        assert_eq!(ecalls.len(), 2, "getpid loop + exit: {ecalls:?}");
+        // Every block entry is a leader, and the branch has both edges.
+        let br = cfg.blocks.iter().find(|b| b.term == Term::Branch).expect("loop branch");
+        assert!(br.taken.is_some() && br.fallthrough.is_some());
+        for b in &cfg.blocks {
+            assert!(cfg.leaders.contains(&b.va));
+        }
+    }
+
+    #[test]
+    fn block_cut_rules_bound_length() {
+        let exe = synth::build(SynthKind::MemTouch { pages: 4 });
+        let cfg = build(&exe);
+        for b in &cfg.blocks {
+            assert!(b.len as usize <= MAX_BLOCK_OPS);
+            assert_eq!(b.end_pc, b.va + 4 * (u64::from(b.len) - 1));
+        }
+    }
+}

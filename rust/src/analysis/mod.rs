@@ -1,0 +1,133 @@
+//! §Analysis — ahead-of-run static analysis of the guest binary.
+//!
+//! FASE's premise is catching problems *before* full SoC/OS bring-up, yet
+//! the emulator normally discovers everything about a guest — its basic
+//! blocks, its syscall surface, its unsupported instructions — only by
+//! executing it. This pass runs between load and execution (DESIGN.md
+//! §Analysis): it linearly disassembles the executable ELF segments with
+//! the same [`crate::rv64::decode`] the engines use, builds a CFG, and
+//! derives three products:
+//!
+//! 1. a **syscall-site inventory** — every reachable `ecall` with the
+//!    syscall number recovered by a backward def-use walk of `a7`,
+//!    cross-checked against the `SYSCALLS` registry so unimplemented
+//!    syscalls and per-site ArgSpec prefetch hints surface before the run;
+//! 2. a **block-cache prewarm set** — the statically discovered block
+//!    entries, handed to the engine so the first pass over hot code skips
+//!    decode misses (architecturally invisible: only `EngineStats` move);
+//! 3. a **guest audit report** — illegal opcodes, writable+executable
+//!    segments (self-modifying-code risk), and coverage stats — emitted
+//!    as a versioned byte-stable JSON document.
+
+pub mod cfg;
+pub mod report;
+pub mod syscalls;
+
+pub use cfg::{BasicBlock, Cfg, Term};
+pub use report::{report_json, summary_json, ANALYSIS_SCHEMA};
+pub use syscalls::SyscallSite;
+
+use crate::elfio::read::Executable;
+
+/// When (and how hard) the static pass runs. Label-invisible in sweeps,
+/// like the engine override: turning it on must never move a gated
+/// metric, only attach report members and `EngineStats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AnalysisMode {
+    /// No static pass (the default).
+    #[default]
+    Off,
+    /// Run the pass and attach the audit summary to reports.
+    Report,
+    /// `Report` plus hand the statically discovered blocks to the
+    /// engine's decoded-block cache ahead of execution.
+    Prewarm,
+}
+
+impl AnalysisMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            AnalysisMode::Off => "off",
+            AnalysisMode::Report => "report",
+            AnalysisMode::Prewarm => "prewarm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AnalysisMode> {
+        match s {
+            "off" => Some(AnalysisMode::Off),
+            "report" => Some(AnalysisMode::Report),
+            "prewarm" => Some(AnalysisMode::Prewarm),
+            _ => None,
+        }
+    }
+
+    /// Does this mode run the static pass at all?
+    pub fn enabled(self) -> bool {
+        self != AnalysisMode::Off
+    }
+
+    /// Does this mode feed the block-cache prewarm set to the engine?
+    pub fn prewarms(self) -> bool {
+        self == AnalysisMode::Prewarm
+    }
+}
+
+impl std::fmt::Display for AnalysisMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Everything the static pass learned about one guest image.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub cfg: Cfg,
+    /// Reachable `ecall` sites, pc-ascending.
+    pub sites: Vec<SyscallSite>,
+}
+
+impl Analysis {
+    /// Sites whose recovered number is not in the `SYSCALLS` registry —
+    /// the run would hit ENOSYS there.
+    pub fn unimplemented(&self) -> impl Iterator<Item = &SyscallSite> {
+        self.sites.iter().filter(|s| s.nr.is_some() && !s.implemented)
+    }
+
+    /// Sites where the backward a7 walk gave up (indirect or
+    /// cross-block number — see DESIGN.md §Analysis for the limits).
+    pub fn unknown_nr(&self) -> impl Iterator<Item = &SyscallSite> {
+        self.sites.iter().filter(|s| s.nr.is_none())
+    }
+
+    /// Block entry VAs for the engine prewarm set (every CFG block is
+    /// reachable-by-construction), ascending.
+    pub fn prewarm_vas(&self) -> impl Iterator<Item = u64> + '_ {
+        self.cfg.blocks.iter().map(|b| b.va)
+    }
+}
+
+/// Run the full static pass over one loaded image: disassemble, build
+/// the CFG from the entry point, inventory the syscall sites.
+pub fn analyze(exe: &Executable) -> Analysis {
+    let cfg = cfg::build(exe);
+    let sites = syscalls::inventory(&cfg);
+    Analysis { cfg, sites }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels_round_trip() {
+        for m in [AnalysisMode::Off, AnalysisMode::Report, AnalysisMode::Prewarm] {
+            assert_eq!(AnalysisMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(AnalysisMode::parse("warm"), None);
+        assert_eq!(AnalysisMode::default(), AnalysisMode::Off);
+        assert!(!AnalysisMode::Off.enabled());
+        assert!(AnalysisMode::Report.enabled() && !AnalysisMode::Report.prewarms());
+        assert!(AnalysisMode::Prewarm.prewarms());
+    }
+}

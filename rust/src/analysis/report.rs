@@ -1,0 +1,126 @@
+//! Versioned, byte-stable JSON emission for the guest audit report
+//! (`fase analyze --json`) and the compact per-scenario summary embedded
+//! in sweep reports.
+
+use super::{Analysis, SyscallSite};
+use crate::util::json::Json;
+
+/// Bump on any member add/remove/reorder of [`report_json`].
+pub const ANALYSIS_SCHEMA: i64 = 1;
+
+/// Full audit document. Members in fixed order, deterministic values
+/// only — the same image always produces byte-identical text.
+pub fn report_json(a: &Analysis, guest: &str) -> Json {
+    let sites: Vec<Json> = a.sites.iter().map(site_json).collect();
+    let unimpl: Vec<Json> = a
+        .unimplemented()
+        .map(|s| {
+            Json::Obj(vec![
+                ("pc".into(), Json::u64(s.pc)),
+                ("nr".into(), Json::u64(s.nr.unwrap_or(0))),
+            ])
+        })
+        .collect();
+    let unknown: Vec<Json> = a.unknown_nr().map(|s| Json::u64(s.pc)).collect();
+    let indirect: Vec<Json> = a.cfg.indirect.iter().map(|&pc| Json::u64(pc)).collect();
+    let illegal: Vec<Json> = a
+        .cfg
+        .illegal
+        .iter()
+        .map(|&(pc, raw)| {
+            Json::Obj(vec![
+                ("pc".into(), Json::u64(pc)),
+                ("raw".into(), Json::u64(u64::from(raw))),
+            ])
+        })
+        .collect();
+    let wx: Vec<Json> = a
+        .cfg
+        .wx_segments
+        .iter()
+        .map(|&(va, pages)| {
+            Json::Obj(vec![
+                ("va".into(), Json::u64(va)),
+                ("pages".into(), Json::u64(pages)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::Int(ANALYSIS_SCHEMA)),
+        ("guest".into(), Json::str(guest)),
+        ("entry".into(), Json::u64(a.cfg.entry)),
+        ("blocks".into(), Json::u64(a.cfg.blocks.len() as u64)),
+        ("insts".into(), Json::u64(a.cfg.insts_total())),
+        ("insts_reached".into(), Json::u64(a.cfg.insts_reached)),
+        ("coverage".into(), Json::f64(a.cfg.coverage())),
+        ("syscall_sites".into(), Json::Arr(sites)),
+        ("unimplemented".into(), Json::Arr(unimpl)),
+        ("unknown_nr".into(), Json::Arr(unknown)),
+        ("indirect_sites".into(), Json::Arr(indirect)),
+        ("illegal".into(), Json::Arr(illegal)),
+        ("wx_segments".into(), Json::Arr(wx)),
+    ])
+}
+
+fn site_json(s: &SyscallSite) -> Json {
+    Json::Obj(vec![
+        ("pc".into(), Json::u64(s.pc)),
+        ("nr".into(), s.nr.map_or(Json::Null, Json::u64)),
+        ("name".into(), s.name.map_or(Json::Null, Json::str)),
+        ("argmask".into(), s.argmask.map_or(Json::Null, |m| Json::u64(u64::from(m)))),
+        ("implemented".into(), Json::Bool(s.implemented)),
+    ])
+}
+
+/// Compact per-scenario summary attached under a sweep job's "analysis"
+/// member. A pure function of the workload image — identical across
+/// engines, worker counts and analysis modes — so the determinism,
+/// cross-engine and perf gates (which flatten only "metrics") never see
+/// it move.
+pub fn summary_json(a: &Analysis) -> Json {
+    let mut nrs: Vec<u64> = a.unimplemented().filter_map(|s| s.nr).collect();
+    nrs.sort_unstable();
+    nrs.dedup();
+    Json::Obj(vec![
+        ("blocks".into(), Json::u64(a.cfg.blocks.len() as u64)),
+        ("insts".into(), Json::u64(a.cfg.insts_total())),
+        ("insts_reached".into(), Json::u64(a.cfg.insts_reached)),
+        ("syscall_sites".into(), Json::u64(a.sites.len() as u64)),
+        ("unknown_nr".into(), Json::u64(a.unknown_nr().count() as u64)),
+        ("unimplemented".into(), Json::Arr(nrs.into_iter().map(Json::u64).collect())),
+        ("indirect_sites".into(), Json::u64(a.cfg.indirect.len() as u64)),
+        ("illegal".into(), Json::u64(a.cfg.illegal.len() as u64)),
+        ("wx_segments".into(), Json::u64(a.cfg.wx_segments.len() as u64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::sweep::synth;
+    use crate::sweep::SynthKind;
+    use crate::util::json::parse;
+
+    #[test]
+    fn report_is_byte_stable_and_parseable() {
+        let exe = synth::build(SynthKind::Storm { calls: 8 });
+        let t1 = report_json(&analyze(&exe), "storm:8").to_string_pretty();
+        let t2 = report_json(&analyze(&exe), "storm:8").to_string_pretty();
+        assert_eq!(t1, t2, "analysis report must be byte-stable");
+        let doc = parse(&t1).expect("report must round-trip through the parser");
+        assert_eq!(doc.get("schema").and_then(Json::as_u64), Some(ANALYSIS_SCHEMA as u64));
+        assert_eq!(doc.get("guest").and_then(Json::as_str), Some("storm:8"));
+        assert_eq!(doc.get("syscall_sites").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn summary_counts_probe_unimplemented() {
+        let a = analyze(&synth::build(SynthKind::Probe { calls: 2 }));
+        let s = summary_json(&a);
+        let un = s.get("unimplemented").and_then(Json::as_arr).unwrap();
+        assert_eq!(un.len(), 1);
+        assert_eq!(un[0], Json::Int(283));
+        assert!(s.get("syscall_sites").and_then(Json::as_u64).unwrap() >= 3);
+    }
+}

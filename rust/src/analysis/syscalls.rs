@@ -1,0 +1,228 @@
+//! Syscall-site inventory: recover each `ecall`'s syscall number with a
+//! backward def-use walk of `a7` (x17) and cross-check the `SYSCALLS`
+//! registry, so unimplemented syscalls and per-site ArgSpec prefetch
+//! hints surface before the run starts (DESIGN.md §Analysis).
+
+use super::cfg::{Cfg, Term};
+use crate::coordinator::syscall::lookup;
+use crate::rv64::inst::AluOp;
+use crate::rv64::Inst;
+
+/// Walk cap — mirrors the block op cap; compilers place the `li a7, nr`
+/// within a handful of instructions of the `ecall`.
+pub const MAX_WALK: usize = 64;
+
+/// One reachable `ecall` and what the static pass knows about it.
+#[derive(Debug, Clone, Copy)]
+pub struct SyscallSite {
+    /// VA of the `ecall` instruction.
+    pub pc: u64,
+    /// Recovered syscall number; `None` if the a7 walk gave up.
+    pub nr: Option<u64>,
+    /// Registry name when the number is implemented.
+    pub name: Option<&'static str>,
+    /// ArgSpec prefetch mask from the registry (bit i = argument
+    /// register a_i the coordinator fetches ahead of dispatch).
+    pub argmask: Option<u8>,
+    /// Whether the recovered number has a registered handler; a `false`
+    /// with `nr` known means the run would hit ENOSYS here.
+    pub implemented: bool,
+}
+
+/// Inventory every reachable `ecall` site, pc-ascending.
+pub fn inventory(cfg: &Cfg) -> Vec<SyscallSite> {
+    let mut pcs: Vec<u64> =
+        cfg.blocks.iter().filter(|b| b.term == Term::Ecall).map(|b| b.end_pc).collect();
+    pcs.sort_unstable();
+    pcs.dedup(); // overlapping blocks can share one ecall
+    pcs.into_iter().map(|pc| site(cfg, pc)).collect()
+}
+
+fn site(cfg: &Cfg, pc: u64) -> SyscallSite {
+    let nr = recover_a7(cfg, pc).and_then(|v| u64::try_from(v).ok());
+    let def = nr.and_then(lookup);
+    SyscallSite {
+        pc,
+        nr,
+        name: def.map(|d| d.name),
+        argmask: def.map(|d| d.argmask),
+        implemented: def.is_some(),
+    }
+}
+
+/// Backward def-use walk of `a7` from an `ecall` pc.
+///
+/// Recognises the two idioms compilers emit — `addi a7, x0, nr` and
+/// `lui a7, hi` + `addi a7, a7, lo` — along the linear run of
+/// instructions feeding the `ecall`. Soundness limits (all give up with
+/// `None`, never guess): any other instruction defining x17, crossing a
+/// control-flow terminator, stepping backward past a block leader
+/// without a definition (join point — the value is path-dependent), or
+/// exceeding [`MAX_WALK`] steps. A definition found *at* a leader still
+/// resolves: the defining instruction executes on every path.
+fn recover_a7(cfg: &Cfg, ecall_pc: u64) -> Option<i64> {
+    let mut lo: i64 = 0;
+    let mut pc = ecall_pc;
+    for _ in 0..MAX_WALK {
+        pc = pc.checked_sub(4)?;
+        let (_, inst) = *cfg.insts.get(&pc)?;
+        match inst {
+            Inst::OpImm { op: AluOp::Add, rd: 17, rs1: 0, imm } => return Some(imm + lo),
+            Inst::Lui { rd: 17, imm } => return Some(imm + lo),
+            Inst::OpImm { op: AluOp::Add, rd: 17, rs1: 17, imm } if lo == 0 => {
+                lo = imm;
+                if cfg.leaders.contains(&pc) {
+                    return None;
+                }
+            }
+            _ => {
+                if x_def(&inst) == Some(17) || is_barrier(&inst) {
+                    return None;
+                }
+                if cfg.leaders.contains(&pc) {
+                    return None;
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The x-register an instruction may define. Conservative: FP writes
+/// whose rd actually names an f-register are still reported — the walk
+/// only uses this to give up, never to trust a value.
+fn x_def(i: &Inst) -> Option<u8> {
+    match *i {
+        Inst::Lui { rd, .. }
+        | Inst::Auipc { rd, .. }
+        | Inst::Jal { rd, .. }
+        | Inst::Jalr { rd, .. }
+        | Inst::Load { rd, .. }
+        | Inst::OpImm { rd, .. }
+        | Inst::Op { rd, .. }
+        | Inst::MulDiv { rd, .. }
+        | Inst::Lr { rd, .. }
+        | Inst::Sc { rd, .. }
+        | Inst::Amo { rd, .. }
+        | Inst::FLoad { rd, .. }
+        | Inst::Fp { rd, .. }
+        | Inst::Fcvt { rd, .. }
+        | Inst::Csr { rd, .. } => Some(rd),
+        _ => None,
+    }
+}
+
+/// Control transfers and traps the walk refuses to cross backward.
+fn is_barrier(i: &Inst) -> bool {
+    matches!(
+        i,
+        Inst::Jal { .. }
+            | Inst::Jalr { .. }
+            | Inst::Branch { .. }
+            | Inst::Ecall
+            | Inst::Ebreak
+            | Inst::Mret
+            | Inst::Wfi
+            | Inst::Illegal { .. }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::sweep::synth;
+    use crate::sweep::SynthKind;
+
+    #[test]
+    fn storm_sites_resolve_getpid_and_exit_group() {
+        let a = analyze(&synth::build(SynthKind::Storm { calls: 8 }));
+        assert_eq!(a.sites.len(), 2, "{:?}", a.sites);
+        let getpid = a.sites.iter().find(|s| s.nr == Some(172)).expect("getpid site");
+        assert_eq!(getpid.name, Some("getpid"));
+        assert_eq!(getpid.argmask, Some(0));
+        assert!(getpid.implemented);
+        let exit = a.sites.iter().find(|s| s.nr == Some(94)).expect("exit_group site");
+        assert_eq!(exit.name, Some("exit_group"));
+        assert_eq!(exit.argmask, Some(0b1), "exit_group prefetches a0");
+        assert_eq!(a.unknown_nr().count(), 0);
+        assert_eq!(a.unimplemented().count(), 0);
+    }
+
+    #[test]
+    fn probe_flags_the_deliberately_unimplemented_syscall() {
+        let a = analyze(&synth::build(SynthKind::Probe { calls: 4 }));
+        let bad: Vec<_> = a.unimplemented().collect();
+        assert_eq!(bad.len(), 1, "{:?}", a.sites);
+        assert_eq!(bad[0].nr, Some(283), "membarrier is not in the registry");
+        assert_eq!(bad[0].name, None);
+        assert!(a.sites.iter().any(|s| s.nr == Some(172) && s.implemented));
+    }
+
+    #[test]
+    fn walk_gives_up_at_a_join_point_instead_of_guessing() {
+        // Hand-build: branch over two different a7 defs joining at the
+        // ecall — the number is path-dependent, the walk must refuse.
+        use crate::elfio::read::{Executable, Segment};
+        use crate::rv64::decode::encode;
+        let bne = |rs1: u8, rs2: u8, off: i32| -> u32 {
+            let v = off as u32;
+            0x63u32
+                | (1 << 12)
+                | ((rs1 as u32) << 15)
+                | ((rs2 as u32) << 20)
+                | (((v >> 12) & 1) << 31)
+                | (((v >> 5) & 0x3f) << 25)
+                | (((v >> 1) & 0xf) << 8)
+                | (((v >> 11) & 1) << 7)
+        };
+        let words: Vec<u32> = vec![
+            bne(10, 0, 12),           // 0x0: if a0 != 0 skip to 0xc
+            encode::addi(17, 0, 172), // 0x4: a7 = getpid
+            encode::self_loop(),      // 0x8: placeholder jal x0, 0
+            encode::addi(17, 0, 94),  // 0xc: a7 = exit_group (leader)
+            0x0000_0073,              // 0x10: ecall — a7 ambiguous? no:
+                                      //   def at 0xc is AT the leader
+        ];
+        let data: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        let exe = Executable {
+            entry: 0x10000,
+            segments: vec![Segment {
+                vaddr: 0x10000,
+                memsz: data.len() as u64,
+                flags: 0x1 | 0x4, // PF_X | PF_R
+                data,
+            }],
+            symbols: Vec::new(),
+        };
+        let a = analyze(&exe);
+        // The def at 0xc sits at the bne target (a leader) right before
+        // the ecall: executes on every path, so it resolves.
+        let site = a.sites.iter().find(|s| s.pc == 0x10010).expect("ecall site");
+        assert_eq!(site.nr, Some(94));
+
+        // Now move the ecall one slot later with a join in between: the
+        // instruction before the ecall is a non-def at a leader.
+        let words2: Vec<u32> = vec![
+            encode::addi(17, 0, 172), // 0x0: a7 = getpid
+            bne(10, 0, 8),            // 0x4: join-maker: 0xc is a leader
+            encode::addi(17, 0, 94),  // 0x8: a7 = exit_group (one path)
+            encode::addi(5, 5, 1),    // 0xc: leader, not an a7 def
+            0x0000_0073,              // 0x10: ecall — path-dependent a7
+        ];
+        let data2: Vec<u8> = words2.iter().flat_map(|w| w.to_le_bytes()).collect();
+        let exe2 = Executable {
+            entry: 0x10000,
+            segments: vec![Segment {
+                vaddr: 0x10000,
+                memsz: data2.len() as u64,
+                flags: 0x1 | 0x4,
+                data: data2,
+            }],
+            symbols: Vec::new(),
+        };
+        let a2 = analyze(&exe2);
+        let site2 = a2.sites.iter().find(|s| s.pc == 0x10010).expect("ecall site");
+        assert_eq!(site2.nr, None, "join point must not be guessed through");
+    }
+}

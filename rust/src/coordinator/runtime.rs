@@ -7,6 +7,7 @@ use super::sched::{Scheduler, TState, Tid};
 use super::syscall::{self, Flow, Wait};
 use super::target::{DirectTarget, ExcInfo, FaseTarget, HostLatency, KernelCosts, TargetOps};
 use super::vm::{AddressSpace, PageAlloc, VmError};
+use crate::analysis::AnalysisMode;
 use crate::elfio::read::Executable;
 use crate::fase::transport::TransportSpec;
 use crate::perf::recorder::Context;
@@ -52,6 +53,12 @@ pub struct RunConfig {
     /// Execution engine for the fast machine. Timing-neutral: engines
     /// must produce identical metrics and may differ only in wall-clock.
     pub engine: EngineKind,
+    /// Ahead-of-run static analysis (DESIGN.md §Analysis). `report`
+    /// runs the pass for its audit products only; `prewarm` additionally
+    /// hands the statically discovered blocks to the engine as their
+    /// pages become mapped. Architecturally invisible either way — the
+    /// report surface never changes, only `EngineStats` move.
+    pub analysis: AnalysisMode,
 }
 
 impl Default for RunConfig {
@@ -74,6 +81,7 @@ impl Default for RunConfig {
             htp_batching: true,
             seed: 0xFA5E,
             engine: EngineKind::default(),
+            analysis: AnalysisMode::default(),
         }
     }
 }
@@ -339,6 +347,10 @@ pub struct Runtime {
     /// Per-CPU last-sample UTick for window extraction.
     last_utick: Vec<u64>,
     windows: Vec<WindowSample>,
+    /// Statically discovered block entries awaiting prewarm, keyed by
+    /// vpn (DESIGN.md §Analysis). Drained as the loader / fault path
+    /// maps their pages; empty unless `cfg.analysis` prewarms.
+    prewarm_pending: BTreeMap<u64, Vec<u64>>,
 }
 
 #[derive(Debug)]
@@ -427,7 +439,15 @@ impl Runtime {
             pid: 100,
             prng: Prng::stream(cfg.seed, 0x5EED),
         };
-        Runtime { cfg, target, k, load: None, last_utick: vec![0; n], windows: Vec::new() }
+        Runtime {
+            cfg,
+            target,
+            k,
+            load: None,
+            last_utick: vec![0; n],
+            windows: Vec::new(),
+            prewarm_pending: BTreeMap::new(),
+        }
     }
 
     /// Load the workload ELF and create the main thread.
@@ -452,7 +472,43 @@ impl Runtime {
         let tid = self.k.sched.spawn(ctx);
         debug_assert_eq!(tid, super::sched::MAIN_TID);
         self.load = Some(out);
+        if self.cfg.analysis.prewarms() {
+            // Static pass between load and execution: bucket the CFG's
+            // block entries by page, then offer whatever the loader
+            // already mapped. Lazily loaded pages are offered later,
+            // from the fault path, as they appear.
+            let a = crate::analysis::analyze(exe);
+            for va in a.prewarm_vas() {
+                self.prewarm_pending.entry(va >> 12).or_default().push(va);
+            }
+            self.drain_prewarm();
+        }
         Ok(())
+    }
+
+    /// Offer pending statically discovered blocks whose pages are now
+    /// mapped to the engine (called after load and after each serviced
+    /// page fault). Host-side only — no target traffic, no cycle
+    /// charges, only `EngineStats` move. A page is dropped from the
+    /// pending set once offered, whether or not the engine accepted
+    /// (the interpreter always refuses).
+    fn drain_prewarm(&mut self) {
+        if self.prewarm_pending.is_empty() {
+            return;
+        }
+        let space = crate::mem::mmu::Satp(self.k.vm.satp()).asid() + 1;
+        let mut done: Vec<u64> = Vec::new();
+        for (&vpn, vas) in &self.prewarm_pending {
+            let Some(info) = self.k.vm.pages.get(&vpn) else { continue };
+            let m = self.target.machine_mut();
+            for &va in vas {
+                m.prewarm_block(space, va, (info.ppn << 12) | (va & 0xfff));
+            }
+            done.push(vpn);
+        }
+        for vpn in done {
+            self.prewarm_pending.remove(&vpn);
+        }
     }
 
     pub fn load_path(&mut self, path: &std::path::Path, argv: &[String], envp: &[String]) -> Result<(), RunError> {
@@ -630,6 +686,9 @@ impl Runtime {
             let is_write = exc.cause == 15;
             match self.k.vm.handle_fault(self.target.as_mut(), cpu, &mut self.k.alloc, exc.tval, is_write) {
                 Ok(_) => {
+                    // Newly mapped pages may carry statically discovered
+                    // blocks (lazy image loading) — offer them now.
+                    self.drain_prewarm();
                     self.k.sched.resume_current(self.target.as_mut(), cpu, exc.epc);
                     Ok(())
                 }

@@ -2,6 +2,7 @@
 //!
 //! See DESIGN.md for the architecture and the hardware-substitution map.
 
+pub mod analysis;
 pub mod baseline;
 pub mod bench_support;
 pub mod coordinator;

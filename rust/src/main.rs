@@ -1,9 +1,11 @@
 //! fase — CLI entrypoint.
 //!
 //! Subcommands:
-//!   run   — execute a guest ELF under FASE or the full-system baseline
-//!   sweep — run a scenario-matrix sweep and emit a JSON report
-//!   info  — print target/ELF information
+//!   run     — execute a guest ELF under FASE or the full-system baseline
+//!   sweep   — run a scenario-matrix sweep and emit a JSON report
+//!   analyze — ahead-of-run static analysis of a guest (CFG, syscall
+//!             inventory, audit) without executing it
+//!   info    — print target/ELF information
 //!
 //! Example:
 //!   fase run artifacts/guests/hello.elf --cpus 2 --baud 921600 -- arg1
@@ -25,21 +27,29 @@ fn main() {
     match args.subcommand() {
         Some("run") => cmd_run(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("analyze") => cmd_analyze(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: fase <run|sweep|info> [options]");
+            eprintln!("usage: fase <run|sweep|analyze|info> [options]");
             eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N]");
             eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
             eprintln!("           [--core rocket|cva6] [--engine interp|block]");
+            eprintln!("           [--analysis off|report|prewarm]");
             eprintln!("           [--no-hfutex] [--no-batch]");
             eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
             eprintln!("           [--quiet] [--report] [--max-seconds S]");
             eprintln!("           [--ideal-latency] [-- guest args]");
             eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
-            eprintln!("           [--engine interp|block] [--filter SUBSTR]");
+            eprintln!("           [--engine interp|block] [--analysis off|report|prewarm]");
+            eprintln!("           [--filter SUBSTR]");
             eprintln!("           [--check-against baseline.json]");
             eprintln!("           [--compare-only report.json] [--require-baseline]");
             eprintln!("           [--list] [--quiet]");
+            eprintln!("  fase analyze <elf|spin:N|storm:N|memtouch:N|probe:N>");
+            eprintln!("           [--json report.json] [--strict] [--quiet]");
+            eprintln!("           static CFG + syscall-site inventory + audit, no");
+            eprintln!("           execution; --strict exits 1 on unimplemented");
+            eprintln!("           syscalls or illegal opcodes");
             std::process::exit(2);
         }
     }
@@ -49,6 +59,14 @@ fn engine_arg(args: &Args) -> EngineKind {
     let s = args.str_or("engine", EngineKind::default().label());
     EngineKind::parse(&s).unwrap_or_else(|| {
         eprintln!("unknown engine {s:?}; use interp or block");
+        std::process::exit(2);
+    })
+}
+
+fn analysis_arg(args: &Args) -> fase::analysis::AnalysisMode {
+    let s = args.str_or("analysis", fase::analysis::AnalysisMode::default().label());
+    fase::analysis::AnalysisMode::parse(&s).unwrap_or_else(|| {
+        eprintln!("unknown analysis mode {s:?}; use off, report or prewarm");
         std::process::exit(2);
     })
 }
@@ -87,6 +105,7 @@ fn build_config(args: &Args) -> RunConfig {
         htp_batching: !args.flag("no-batch"),
         seed: args.u64_or("seed", 0xFA5E),
         engine: engine_arg(args),
+        analysis: analysis_arg(args),
     }
 }
 
@@ -140,12 +159,13 @@ fn cmd_run(args: &Args) {
             res.instret as f64 / res.wall_seconds.max(1e-9) / 1e6
         );
         eprintln!(
-            "engine           : {} ({} blocks built, {} hits, {} chained, {} evicted)",
+            "engine           : {} ({} blocks built, {} hits, {} chained, {} evicted, {} prewarmed)",
             res.engine,
             res.engine_stats.blocks_built,
             res.engine_stats.block_hits,
             res.engine_stats.chained,
-            res.engine_stats.evicted
+            res.engine_stats.evicted,
+            res.engine_stats.prewarmed
         );
         eprintln!("transport        : {}", res.transport);
         eprintln!(
@@ -282,6 +302,11 @@ fn cmd_sweep(args: &Args) {
     if args.get("engine").is_some() {
         spec.engine_override = Some(engine_arg(args));
     }
+    // Equally label-invisible: the static-analysis mode attaches report
+    // members but never moves a gated metric.
+    if args.get("analysis").is_some() {
+        spec.analysis = analysis_arg(args);
+    }
     let filter = args.get("filter").map(str::to_string);
     if args.flag("list") {
         for job in spec.expand(filter.as_deref()) {
@@ -343,6 +368,88 @@ fn cmd_sweep(args: &Args) {
         run_gate(&doc, &baseline, args.flag("require-baseline"));
     }
     std::process::exit(if n_err > 0 { 1 } else { 0 });
+}
+
+/// `fase analyze` — run the static pass (DESIGN.md §Analysis) on a guest
+/// ELF or a synthetic workload atom, without executing anything.
+fn cmd_analyze(args: &Args) {
+    let rest = args.rest();
+    if rest.is_empty() {
+        eprintln!("fase analyze: missing target (guest ELF path or synth atom like storm:64)");
+        std::process::exit(2);
+    }
+    let target = &rest[0];
+    let exe = match fase::sweep::WorkloadSpec::parse(target) {
+        Some(w) => match w.kind {
+            fase::sweep::WorkloadKind::Synth(kind) => fase::sweep::synth::build(kind),
+            _ => {
+                eprintln!("fase analyze: workload {target:?} needs its guest ELF — pass the path");
+                std::process::exit(2);
+            }
+        },
+        None => match fase::elfio::read::Executable::load(std::path::Path::new(target)) {
+            Ok(exe) => exe,
+            Err(e) => {
+                eprintln!("fase analyze: {e}");
+                std::process::exit(1);
+            }
+        },
+    };
+    let a = fase::analysis::analyze(&exe);
+    let doc = fase::analysis::report_json(&a, target);
+    if let Some(path) = args.get("json") {
+        if let Err(e) = std::fs::write(path, doc.to_string_pretty()) {
+            eprintln!("fase analyze: cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("[analyze] report written to {path}");
+    }
+    let n_unimpl = a.unimplemented().count();
+    if !args.flag("quiet") {
+        println!("guest            : {target}");
+        println!("entry            : {:#x}", a.cfg.entry);
+        println!(
+            "blocks           : {} ({} instructions reached of {} decoded, {:.1}% coverage)",
+            a.cfg.blocks.len(),
+            a.cfg.insts_reached,
+            a.cfg.insts_total(),
+            100.0 * a.cfg.coverage()
+        );
+        println!("indirect jumps   : {}", a.cfg.indirect.len());
+        println!("illegal opcodes  : {}", a.cfg.illegal.len());
+        for (pc, raw) in &a.cfg.illegal {
+            println!("  {pc:#x}: raw {raw:#010x}");
+        }
+        println!("W+X segments     : {}", a.cfg.wx_segments.len());
+        for (va, pages) in &a.cfg.wx_segments {
+            println!("  {va:#x}: {pages} page(s) writable+executable (SMC risk)");
+        }
+        println!("syscall sites    : {}", a.sites.len());
+        for s in &a.sites {
+            match s.nr {
+                Some(nr) if s.implemented => {
+                    let mask = s.argmask.unwrap_or(0);
+                    let prefetch: Vec<String> = (0..6u8)
+                        .filter(|&i| mask & (1 << i) != 0)
+                        .map(|i| format!("a{i}"))
+                        .collect();
+                    println!(
+                        "  {:#x}: nr {nr} ({}) prefetch [{}]",
+                        s.pc,
+                        s.name.unwrap_or("?"),
+                        prefetch.join(" ")
+                    );
+                }
+                Some(nr) => println!("  {:#x}: nr {nr} UNIMPLEMENTED (run would hit ENOSYS)", s.pc),
+                None => println!("  {:#x}: a7 not recovered (indirect or cross-block)", s.pc),
+            }
+        }
+        if n_unimpl > 0 {
+            eprintln!("[analyze] {n_unimpl} syscall site(s) have no registered handler");
+        }
+    }
+    let strict_fail = args.flag("strict") && (n_unimpl > 0 || !a.cfg.illegal.is_empty());
+    std::process::exit(if strict_fail { 1 } else { 0 });
 }
 
 fn cmd_info(args: &Args) {

@@ -413,6 +413,27 @@ impl Engine for BlockEngine {
         self.stats
     }
 
+    /// Insert one statically discovered block ahead of execution
+    /// (DESIGN.md §Analysis). Uses the same `build_block` as dispatch —
+    /// raw physical reads only, no timing side effects — so a prewarmed
+    /// block is indistinguishable from a demand-decoded one except that
+    /// its first dispatch counts as a `block_hits` instead of a
+    /// `blocks_built`. Stale hints (page rewritten, cache full, entry
+    /// already present) are simply refused.
+    fn prewarm(&mut self, ms: &MemSys, space: u64, va: u64, pa0: u64) -> bool {
+        if self.blocks.len() >= MAX_BLOCKS || self.map.contains_key(&(space, va)) {
+            return false;
+        }
+        let Some(b) = build_block(ms, space, va, pa0) else {
+            return false;
+        };
+        let s = self.blocks.len();
+        self.blocks.push(b);
+        self.map.insert((space, va), s);
+        self.stats.prewarmed += 1;
+        true
+    }
+
     fn run(&mut self, h: &mut Hart, ms: &mut MemSys, model: &CoreModel, t_end: u64) -> Exit {
         // The host may have flushed or polluted the L1I between runs; a
         // real access on a still-hot line is state-identical to the

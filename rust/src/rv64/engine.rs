@@ -73,6 +73,10 @@ pub struct EngineStats {
     /// Blocks discarded because their page generation, I-cache epoch, or
     /// entry translation no longer matched (plus capacity clears).
     pub evicted: u64,
+    /// Blocks inserted ahead of execution by the static-analysis prewarm
+    /// pass (DESIGN.md §Analysis); their first dispatch is a hit instead
+    /// of a decode miss.
+    pub prewarmed: u64,
 }
 
 /// Execution strategy over one hart and the shared memory system.
@@ -92,6 +96,15 @@ pub trait Engine: Send {
 
     fn stats(&self) -> EngineStats {
         EngineStats::default()
+    }
+
+    /// Offer one statically discovered block entry (`va`, mapped at
+    /// `pa0` in translation space `space`) for pre-decoding ahead of the
+    /// run. Architecturally invisible: engines without a decoded cache
+    /// ignore the hint, and accepting it may only move `EngineStats`.
+    /// Returns whether a block was inserted.
+    fn prewarm(&mut self, _ms: &MemSys, _space: u64, _va: u64, _pa0: u64) -> bool {
+        false
     }
 }
 

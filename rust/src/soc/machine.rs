@@ -215,6 +215,14 @@ impl Machine {
     pub fn engine_stats(&self) -> EngineStats {
         self.engine.stats()
     }
+
+    /// Hand one statically discovered block entry to the engine
+    /// (block-cache prewarm, DESIGN.md §Analysis). Architecturally
+    /// invisible — only `EngineStats` may move; the interpreter ignores
+    /// the hint. Returns whether the engine inserted a block.
+    pub fn prewarm_block(&mut self, space: u64, va: u64, pa0: u64) -> bool {
+        self.engine.prewarm(&self.ms, space, va, pa0)
+    }
 }
 
 /// Paper Table I implementation for the simulated target.

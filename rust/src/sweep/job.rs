@@ -1,11 +1,14 @@
 //! One expanded sweep scenario and its execution.
 
 use super::spec::{Arm, SweepSpec, WorkloadKind, WorkloadSpec};
+use crate::analysis::AnalysisMode;
 use crate::baseline::{run_pk, run_pk_exe, PkConfig};
 use crate::coordinator::runtime::{run_elf, run_exe, Mode, RunConfig, RunResult};
 use crate::coordinator::target::{HostLatency, KernelCosts};
+use crate::elfio::read::Executable;
 use crate::rv64::hart::CoreModel;
 use crate::rv64::EngineKind;
+use crate::util::json::Json;
 use std::path::PathBuf;
 
 /// FNV-1a over the scenario label — the stable identity hash that seeds
@@ -43,6 +46,8 @@ pub struct Job {
     /// Label-invisible engine selection (spec `engine =` key or CLI
     /// `--engine`); see [`SweepSpec::engine_override`].
     pub engine_override: Option<EngineKind>,
+    /// Label-invisible static-analysis mode; see [`SweepSpec::analysis`].
+    pub analysis: AnalysisMode,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -69,6 +74,7 @@ impl Job {
             prng_seed: 0,
             engine_pin,
             engine_override: spec.engine_override,
+            analysis: spec.analysis,
             max_target_seconds: spec.max_target_seconds,
             dram_size: spec.dram_size,
         };
@@ -132,6 +138,7 @@ impl Job {
             htp_batching: true,
             seed: self.prng_seed,
             engine: self.engine(),
+            analysis: self.analysis,
         }
     }
 
@@ -155,6 +162,11 @@ pub struct JobOutcome {
     pub job: Job,
     pub result: RunResult,
     pub score: Option<f64>,
+    /// Ahead-of-run static-analysis summary ([`crate::analysis::summary_json`])
+    /// when the job's analysis mode is enabled. A pure function of the
+    /// workload image — never of the run — so it is identical across
+    /// engines, workers, and analysis modes.
+    pub analysis: Option<Json>,
 }
 
 impl JobOutcome {
@@ -164,7 +176,20 @@ impl JobOutcome {
 }
 
 fn error_outcome(job: &Job, msg: String) -> JobOutcome {
-    JobOutcome { job: job.clone(), result: RunResult::empty_with_error(msg), score: None }
+    JobOutcome {
+        job: job.clone(),
+        result: RunResult::empty_with_error(msg),
+        score: None,
+        analysis: None,
+    }
+}
+
+/// The per-job analysis attachment: `None` unless the mode is enabled.
+fn analysis_summary(job: &Job, exe: &Executable) -> Option<Json> {
+    if !job.analysis.enabled() {
+        return None;
+    }
+    Some(crate::analysis::summary_json(&crate::analysis::analyze(exe)))
 }
 
 /// Locate a cross-compiled guest ELF without exiting the process (the
@@ -188,6 +213,7 @@ pub fn run_job(job: &Job) -> JobOutcome {
     match &job.workload.kind {
         WorkloadKind::Synth(kind) => {
             let exe = super::synth::build(*kind);
+            let analysis = analysis_summary(job, &exe);
             let argv = vec![job.workload.name.clone()];
             let result = match &job.arm {
                 Arm::Pk { sim_threads } => run_pk_exe(
@@ -199,7 +225,7 @@ pub fn run_job(job: &Job) -> JobOutcome {
                 ),
                 _ => run_exe(job.run_config(core, true), &exe, &argv, &[]),
             };
-            JobOutcome { job: job.clone(), result, score: None }
+            JobOutcome { job: job.clone(), result, score: None, analysis }
         }
         WorkloadKind::Gapbs { bench, scale, trials } => {
             let elf = match find_guest_elf(bench) {
@@ -226,6 +252,11 @@ pub fn run_job(job: &Job) -> JobOutcome {
 }
 
 fn run_guest(job: &Job, core: CoreModel, elf: &std::path::Path, argv: Vec<String>) -> JobOutcome {
+    let analysis = if job.analysis.enabled() {
+        Executable::load(elf).ok().as_ref().and_then(|exe| analysis_summary(job, exe))
+    } else {
+        None
+    };
     let result = match &job.arm {
         Arm::Pk { sim_threads } => run_pk(
             job.pk_config(core, *sim_threads),
@@ -240,7 +271,7 @@ fn run_guest(job: &Job, core: CoreModel, elf: &std::path::Path, argv: Vec<String
         Some(prefix) if result.error.is_none() => result.parse_metric(prefix),
         _ => None,
     };
-    JobOutcome { job: job.clone(), result, score }
+    JobOutcome { job: job.clone(), result, score, analysis }
 }
 
 #[cfg(test)]

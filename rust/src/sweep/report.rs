@@ -51,6 +51,12 @@ fn job_json(o: &JobOutcome) -> Json {
         m.push(("exit_code".into(), Json::Int(o.result.exit_code.into())));
         m.push(("metrics".into(), o.result.metrics_json(o.score)));
     }
+    // Ahead-of-run analysis summary, when enabled. A sibling of "metrics",
+    // never inside it: the perf gate flattens only "metrics", so the
+    // attachment can come and go without moving any gated number.
+    if let Some(a) = &o.analysis {
+        m.push(("analysis".into(), a.clone()));
+    }
     Json::Obj(m)
 }
 
@@ -290,10 +296,11 @@ mod tests {
     use super::*;
     use crate::sweep::spec::{Arm, SweepSpec, SynthKind, WorkloadSpec};
 
-    fn tiny_outcomes() -> Vec<JobOutcome> {
+    fn outcomes_with(analysis: crate::analysis::AnalysisMode) -> Vec<JobOutcome> {
         let mut spec = SweepSpec::new("report-test");
         spec.dram_size = 64 << 20;
         spec.max_target_seconds = 30.0;
+        spec.analysis = analysis;
         spec.workloads = vec![WorkloadSpec::synth(SynthKind::Storm { calls: 4 })];
         spec.arms = vec![
             Arm::FullSys,
@@ -304,6 +311,10 @@ mod tests {
             },
         ];
         super::super::pool::run_jobs(&spec.expand(None), 2, false)
+    }
+
+    fn tiny_outcomes() -> Vec<JobOutcome> {
+        outcomes_with(crate::analysis::AnalysisMode::Off)
     }
 
     #[test]
@@ -328,6 +339,29 @@ mod tests {
         assert_eq!(gate.compared_jobs, 2);
         assert!(gate.compared_metrics > 10);
         assert!(gate.new_jobs.is_empty());
+    }
+
+    #[test]
+    fn analysis_attachment_appears_and_stays_gate_invisible() {
+        let base = report_json("report-test", 7, &tiny_outcomes());
+        let with = report_json(
+            "report-test",
+            7,
+            &outcomes_with(crate::analysis::AnalysisMode::Report),
+        );
+        let jobs = with.get("jobs").unwrap().as_arr().unwrap();
+        for j in jobs {
+            let a = j.get("analysis").expect("report mode attaches an analysis summary");
+            assert!(a.get("syscall_sites").unwrap().as_f64().unwrap() >= 1.0);
+        }
+        assert!(base.get("jobs").unwrap().as_arr().unwrap()[0].get("analysis").is_none());
+        // The attachment is a sibling of "metrics": the gate sees no
+        // difference in either direction.
+        for (cur, b) in [(&with, &base), (&base, &with)] {
+            let gate = check_against(cur, b).unwrap();
+            assert!(gate.passed(), "{:?}", gate.breaches);
+            assert_eq!(gate.compared_jobs, 2);
+        }
     }
 
     #[test]

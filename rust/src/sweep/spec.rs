@@ -5,6 +5,7 @@
 //! like `ci-smoke`), or loaded from a config file in the crate's
 //! INI-subset format (see [`SweepSpec::from_config`]).
 
+use crate::analysis::AnalysisMode;
 use crate::fase::transport::TransportSpec;
 use crate::rv64::EngineKind;
 use crate::util::config::Config;
@@ -89,6 +90,11 @@ pub enum SynthKind {
     /// Touch one word per page across a BSS region (page-fault / PageSet
     /// path), then exit: `memtouch:PAGES`.
     MemTouch { pages: u32 },
+    /// Syscall-surface probe: getpid xN, then one deliberately
+    /// unimplemented syscall (membarrier, nr 283) whose ENOSYS return the
+    /// guest ignores — exercises the analyzer's unimplemented-syscall
+    /// flagging: `probe:CALLS`.
+    Probe { calls: u32 },
 }
 
 #[derive(Debug, Clone)]
@@ -125,6 +131,7 @@ impl WorkloadSpec {
             SynthKind::Spin { iters } => format!("spin:{iters}"),
             SynthKind::Storm { calls } => format!("storm:{calls}"),
             SynthKind::MemTouch { pages } => format!("memtouch:{pages}"),
+            SynthKind::Probe { calls } => format!("probe:{calls}"),
         };
         WorkloadSpec { name, kind: WorkloadKind::Synth(kind) }
     }
@@ -158,6 +165,9 @@ impl WorkloadSpec {
             }
             "memtouch" => {
                 one_u32(&fields).map(|pages| WorkloadSpec::synth(SynthKind::MemTouch { pages }))
+            }
+            "probe" => {
+                one_u32(&fields).map(|calls| WorkloadSpec::synth(SynthKind::Probe { calls }))
             }
             "coremark" => one_u32(&fields).map(WorkloadSpec::coremark),
             "gapbs" => match fields.as_slice() {
@@ -201,6 +211,12 @@ pub struct SweepSpec {
     /// not change, so two reports that differ only in override must be
     /// byte-identical — the CI cross-engine differential gate.
     pub engine_override: Option<EngineKind>,
+    /// Label-invisible static-analysis mode (`analysis =` key, CLI
+    /// `--analysis`): `report` attaches the ahead-of-run analysis summary
+    /// to each job, `prewarm` additionally seeds the block cache. Like
+    /// `engine_override`, it never changes a scenario's identity, metrics,
+    /// or PRNG stream (DESIGN.md §Analysis).
+    pub analysis: AnalysisMode,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -217,6 +233,7 @@ impl SweepSpec {
             seeds: vec![0],
             engines: Vec::new(),
             engine_override: None,
+            analysis: AnalysisMode::default(),
             max_target_seconds: 3000.0,
             dram_size: 1 << 31,
         }
@@ -329,6 +346,10 @@ impl SweepSpec {
             spec.engine_override =
                 Some(EngineKind::parse(e).ok_or_else(|| format!("bad engine {e:?}"))?);
         }
+        if let Some(a) = cfg.get(sec, "analysis") {
+            spec.analysis =
+                AnalysisMode::parse(a).ok_or_else(|| format!("bad analysis mode {a:?}"))?;
+        }
         let cores = cfg.list_or(sec, "cores", &[]);
         if !cores.is_empty() {
             spec.cores = cores;
@@ -377,7 +398,9 @@ mod tests {
 
     #[test]
     fn workload_atoms_round_trip() {
-        for atom in ["spin:4000", "storm:64", "memtouch:48", "coremark:10", "gapbs:bfs:11:2"] {
+        for atom in
+            ["spin:4000", "storm:64", "memtouch:48", "probe:8", "coremark:10", "gapbs:bfs:11:2"]
+        {
             let w = WorkloadSpec::parse(atom).unwrap_or_else(|| panic!("parse {atom}"));
             assert_eq!(w.name, atom);
         }
@@ -443,6 +466,26 @@ mod tests {
         let bad = "[sweep]\nworkloads = spin:1\narms = fullsys\n";
         assert!(SweepSpec::parse(&format!("{bad}engines = jit\n"), "x").is_err());
         assert!(SweepSpec::parse(&format!("{bad}engine = jit\n"), "x").is_err());
+    }
+
+    #[test]
+    fn analysis_knob_parses_and_stays_label_invisible() {
+        let base = "[sweep]\nworkloads = spin:10\narms = fullsys\n";
+        let off = SweepSpec::parse(base, "x").unwrap();
+        assert_eq!(off.analysis, AnalysisMode::Off);
+
+        let warm = SweepSpec::parse(&format!("{base}analysis = prewarm\n"), "x").unwrap();
+        assert_eq!(warm.analysis, AnalysisMode::Prewarm);
+        let jobs_off = off.expand(None);
+        let jobs_warm = warm.expand(None);
+        // Label-invisible: identity and PRNG stream unchanged by the knob.
+        assert_eq!(jobs_off[0].label(), jobs_warm[0].label());
+        assert_eq!(jobs_off[0].prng_seed, jobs_warm[0].prng_seed);
+        assert_eq!(jobs_warm[0].analysis, AnalysisMode::Prewarm);
+
+        let rep = SweepSpec::parse(&format!("{base}analysis = report\n"), "x").unwrap();
+        assert_eq!(rep.analysis, AnalysisMode::Report);
+        assert!(SweepSpec::parse(&format!("{base}analysis = turbo\n"), "x").is_err());
     }
 
     #[test]

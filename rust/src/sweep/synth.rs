@@ -82,6 +82,19 @@ pub fn build(kind: SynthKind) -> Executable {
             code.push(bne(5, 0, -12));
             emit_exit(&mut code);
         }
+        SynthKind::Probe { calls } => {
+            // t0 = calls; do { getpid(); t0 -= 1 } while (t0 != 0);
+            // membarrier() — deliberately unimplemented (ENOSYS ignored);
+            // exit. Exercises the analyzer's unimplemented-syscall flag.
+            li(&mut code, 5, i64::from(calls.clamp(1, 1 << 20)));
+            code.push(encode::addi(17, 0, 172)); // a7 = getpid
+            code.push(ECALL);
+            code.push(encode::addi(5, 5, -1));
+            code.push(bne(5, 0, -12));
+            code.push(encode::addi(17, 0, 283)); // a7 = membarrier (ENOSYS)
+            code.push(ECALL);
+            emit_exit(&mut code);
+        }
         SynthKind::MemTouch { pages } => {
             // One store per page across the BSS region, then exit.
             let pages = u64::from(pages.clamp(1, 16 * 1024));
@@ -151,6 +164,21 @@ mod tests {
         assert_eq!(r.exit_code, 0);
         let total: u64 = r.syscall_counts.iter().map(|(_, c)| *c).sum();
         assert!(total >= 25, "expected >=25 syscalls, saw {total}: {:?}", r.syscall_counts);
+    }
+
+    #[test]
+    fn probe_survives_its_unimplemented_syscall() {
+        let r = run(SynthKind::Probe { calls: 8 });
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        // getpid x8 + membarrier (ENOSYS, ignored) + exit_group.
+        let total: u64 = r.syscall_counts.iter().map(|(_, c)| *c).sum();
+        assert!(total >= 10, "expected >=10 syscalls, saw {total}: {:?}", r.syscall_counts);
+        assert!(
+            r.syscall_counts.iter().any(|(name, _)| name == "sys283"),
+            "membarrier should surface under its fallback label: {:?}",
+            r.syscall_counts
+        );
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! Prewarm invisibility tests (DESIGN.md §Analysis).
+//!
+//! The static-analysis prewarm pass hands statically discovered blocks to
+//! the decoded-block engine ahead of execution. It must be architecturally
+//! *and* cycle-invisible: identical registers, hart time, retired counts
+//! and byte-identical sweep reports, with only `EngineStats` showing the
+//! first-pass decode misses it removed.
+
+use fase::analysis::AnalysisMode;
+use fase::coordinator::runtime::{run_exe, Mode, RunConfig, RunResult};
+use fase::coordinator::target::KernelCosts;
+use fase::rv64::EngineKind;
+use fase::sweep::{run_sweep, Arm, SweepSpec, SynthKind, WorkloadSpec};
+
+/// One full-system storm run on the block engine with eager image load,
+/// so the prewarm set is offered in one shot at load time.
+fn storm_run(analysis: AnalysisMode) -> RunResult {
+    let cfg = RunConfig {
+        mode: Mode::FullSys { costs: KernelCosts::default() },
+        dram_size: 64 << 20,
+        max_target_seconds: 30.0,
+        engine: EngineKind::Block,
+        analysis,
+        ..Default::default()
+    };
+    let exe = fase::sweep::synth::build(SynthKind::Storm { calls: 24 });
+    let r = run_exe(cfg, &exe, &["storm:24".to_string()], &[]);
+    assert_eq!(r.error, None, "{:?}", r.error);
+    assert_eq!(r.exit_code, 0);
+    r
+}
+
+#[test]
+fn prewarm_is_invisible_but_removes_first_pass_decode_misses() {
+    let cold = storm_run(AnalysisMode::Off);
+    let warm = storm_run(AnalysisMode::Prewarm);
+    // Architectural + timing surface: byte-identical.
+    assert_eq!(cold.ticks, warm.ticks);
+    assert_eq!(cold.instret, warm.instret);
+    assert_eq!(cold.uticks, warm.uticks);
+    assert_eq!(
+        cold.metrics_json(None).to_string_pretty(),
+        warm.metrics_json(None).to_string_pretty(),
+        "prewarm must not move any reported metric"
+    );
+    // Host-side stats are the only thing allowed to differ.
+    assert_eq!(cold.engine_stats.prewarmed, 0);
+    assert!(warm.engine_stats.prewarmed > 0, "{:?}", warm.engine_stats);
+    assert!(
+        warm.engine_stats.blocks_built < cold.engine_stats.blocks_built,
+        "prewarmed run must decode fewer blocks at runtime: cold {:?} warm {:?}",
+        cold.engine_stats,
+        warm.engine_stats
+    );
+}
+
+/// The tests/engine.rs lockstep matrix (spin/storm/memtouch x
+/// fase-loopback/fullsys x 1,2 harts = 12 scenarios), pinned to the block
+/// engine, parameterized by the label-invisible analysis mode. Sweep jobs
+/// load synthetic images lazily, so this also covers the fault-driven
+/// prewarm drain.
+fn lockstep_sweep(analysis: AnalysisMode) -> (String, Vec<u64>, u64, u64) {
+    let mut spec = SweepSpec::new("lockstep");
+    spec.seed = 0x5EED;
+    spec.dram_size = 64 << 20;
+    spec.max_target_seconds = 30.0;
+    spec.workloads = vec![
+        WorkloadSpec::synth(SynthKind::Spin { iters: 300 }),
+        WorkloadSpec::synth(SynthKind::Storm { calls: 24 }),
+        WorkloadSpec::synth(SynthKind::MemTouch { pages: 16 }),
+    ];
+    spec.arms = vec![
+        Arm::Fase {
+            transport: fase::fase::transport::TransportSpec::Loopback,
+            hfutex: true,
+            ideal_latency: false,
+        },
+        Arm::FullSys,
+    ];
+    spec.harts = vec![1, 2];
+    spec.engine_override = Some(EngineKind::Block);
+    spec.analysis = analysis;
+    let out = run_sweep(&spec, 2, None, false);
+    assert!(out.errors().is_empty(), "sweep errors at {analysis}: {:?}", out.errors());
+    assert_eq!(out.outcomes.len(), 12);
+    let retired = out.outcomes.iter().map(|o| o.result.instret).collect();
+    let prewarmed = out.outcomes.iter().map(|o| o.result.engine_stats.prewarmed).sum();
+    let built = out.outcomes.iter().map(|o| o.result.engine_stats.blocks_built).sum();
+    (out.to_json().to_string_pretty(), retired, prewarmed, built)
+}
+
+#[test]
+fn report_and_prewarm_sweeps_are_byte_identical() {
+    let (report_r, retired_r, prewarmed_r, built_r) = lockstep_sweep(AnalysisMode::Report);
+    let (report_p, retired_p, prewarmed_p, built_p) = lockstep_sweep(AnalysisMode::Prewarm);
+    assert!(retired_r.iter().sum::<u64>() > 0, "workloads must retire instructions");
+    assert_eq!(retired_r, retired_p, "retired counts must match per scenario");
+    assert!(
+        report_r == report_p,
+        "sweep reports must be byte-identical across analysis modes"
+    );
+    // Under lazy image loading the prewarm set drains as pages fault in.
+    assert_eq!(prewarmed_r, 0);
+    assert!(prewarmed_p > 0, "prewarm mode must seed the block cache");
+    assert!(
+        built_p < built_r,
+        "prewarm must reduce runtime block decodes ({built_p} vs {built_r})"
+    );
+}

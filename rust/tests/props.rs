@@ -12,6 +12,7 @@ use fase::fase::transport::BatchFrame;
 use fase::rv64::decode::encode;
 use fase::soc::machine::DRAM_BASE;
 use fase::soc::{Machine, MachineConfig};
+use fase::util::json::{parse, Json};
 use fase::util::propcheck::quick;
 use fase::util::prng::Prng;
 
@@ -454,6 +455,136 @@ fn prop_batch_wire_bytes_leq_individual() {
             return Err("saved_bytes disagrees with direct computation".into());
         }
         Ok(())
+    });
+}
+
+// ---- JSON tree properties (util/json.rs) ----
+
+/// An escape-heavy string: quotes, backslashes, control characters,
+/// multi-byte and non-BMP code points, mixed with plain ASCII.
+fn arb_string(rng: &mut Prng) -> String {
+    let mut s = String::new();
+    for _ in 0..rng.below(16) {
+        match rng.below(10) {
+            0 => s.push('"'),
+            1 => s.push('\\'),
+            2 => s.push('\n'),
+            3 => s.push('\t'),
+            // Control characters the writer must \u-escape (NUL included).
+            4 => s.push(char::from_u32(rng.below(0x20) as u32).unwrap()),
+            5 => s.push('é'),
+            6 => s.push('\u{1F600}'),
+            7 => s.push('/'),
+            _ => s.push((b'a' + rng.below(26) as u8) as char),
+        }
+    }
+    s
+}
+
+/// A finite float that is never negative zero (Display prints "-0" but
+/// the parser normalizes it to Int(0), so -0.0 is not text-stable and
+/// this crate never emits it).
+fn arb_float(rng: &mut Prng) -> f64 {
+    (rng.next_u64() as i32 as f64) / (1u64 << rng.below(20)) as f64
+}
+
+fn arb_json(rng: &mut Prng, depth: u64) -> Json {
+    let pick = if depth == 0 { rng.below(6) } else { rng.below(8) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool()),
+        2 => Json::Int(rng.next_u64() as i64),
+        3 => Json::u64(rng.next_u64()),
+        4 => Json::f64(arb_float(rng)),
+        5 => Json::Str(arb_string(rng)),
+        6 => Json::Arr((0..rng.below(5)).map(|_| arb_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}_{}", arb_string(rng)), arb_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Serialize -> parse -> re-serialize is a textual fixed point for any
+/// tree, and the parsed tree is a fixed point of parse itself. (The
+/// trees may differ once: Display prints Float(2.0) as "2", which parses
+/// back as Int(2) — but the *text* never changes, which is what the
+/// byte-identical determinism gates rely on.)
+#[test]
+fn prop_json_roundtrip_is_textual_fixed_point() {
+    quick("json textual fixed point", |rng: &mut Prng| {
+        let j = arb_json(rng, 4);
+        let text1 = j.to_string_pretty();
+        let back = parse(&text1).map_err(|e| format!("{e}\n{text1}"))?;
+        let text2 = back.to_string_pretty();
+        if text1 != text2 {
+            return Err(format!("text changed across a parse:\n{text1}\nvs\n{text2}"));
+        }
+        let again = parse(&text2).map_err(|e| e.to_string())?;
+        if again != back {
+            return Err("parse is not a fixed point".into());
+        }
+        Ok(())
+    });
+}
+
+/// Strings survive the writer's escaping and the parser's unescaping
+/// exactly, for any mix of quotes, backslashes, control characters and
+/// multi-byte code points.
+#[test]
+fn prop_json_escape_heavy_strings_roundtrip() {
+    quick("json string escapes", |rng: &mut Prng| {
+        let s = arb_string(rng);
+        let j = Json::Str(s.clone());
+        match parse(&j.to_string_pretty()) {
+            Ok(Json::Str(back)) if back == s => Ok(()),
+            Ok(other) => Err(format!("{s:?} came back as {other:?}")),
+            Err(e) => Err(format!("{s:?}: {e}")),
+        }
+    });
+}
+
+/// Deeply nested arrays round-trip (the parser recurses per level; the
+/// report never nests this far, so this is pure headroom).
+#[test]
+fn prop_json_deep_arrays_roundtrip() {
+    quick("json deep arrays", |rng: &mut Prng| {
+        let depth = 1 + rng.below(150);
+        let mut j = Json::Int(rng.next_u64() as i64);
+        for _ in 0..depth {
+            j = Json::Arr(vec![j]);
+        }
+        let text = j.to_string_pretty();
+        match parse(&text) {
+            Ok(back) if back == j => Ok(()),
+            Ok(_) => Err(format!("depth {depth}: tree changed")),
+            Err(e) => Err(format!("depth {depth}: {e}")),
+        }
+    });
+}
+
+/// Numeric variants keep their identity through a text round-trip: any
+/// i64 stays Int, any u64 above i64::MAX stays UInt, and floats with a
+/// fractional part stay Float with the exact same bits.
+#[test]
+fn prop_json_number_identity() {
+    quick("json number identity", |rng: &mut Prng| {
+        let i = rng.next_u64() as i64;
+        if parse(&Json::Int(i).to_string_pretty()).ok() != Some(Json::Int(i)) {
+            return Err(format!("i64 {i} did not survive"));
+        }
+        let u = (1u64 << 63) | rng.next_u64();
+        if parse(&Json::UInt(u).to_string_pretty()).ok() != Some(Json::UInt(u)) {
+            return Err(format!("u64 {u} did not survive"));
+        }
+        // odd / 2^k is always fractional, so Display keeps a '.' and the
+        // parser keeps it a Float.
+        let f = (rng.next_u64() as i32 | 1) as f64 / (1u64 << (1 + rng.below(8))) as f64;
+        match parse(&Json::Float(f).to_string_pretty()) {
+            Ok(Json::Float(back)) if back.to_bits() == f.to_bits() => Ok(()),
+            other => Err(format!("float {f} came back as {other:?}")),
+        }
     });
 }
 
