@@ -43,4 +43,34 @@ fn main() {
         format!("{:.1}", j.syscall("futex") / trials_f)
     });
     grid.render("Fig 16 — score error vs UART baud rate", &["bench", "T"], &rows);
+
+    // Outstanding-depth axis at the paper's reference baud: the pipelined
+    // HTP hides wire time behind guest execution, so channel stall falls
+    // monotonically with depth while the modeled score holds still.
+    let depths = [1u32, 2, 4];
+    let arm = Arm::fase_uart(921_600);
+    let mut dspec = SweepSpec::new("fig16-depth");
+    dspec.workloads = benches.iter().map(|b| WorkloadSpec::gapbs(b, scale, trials)).collect();
+    dspec.arms = vec![arm.clone()];
+    dspec.harts = vec![1, 2];
+    dspec.outstandings = depths.to_vec();
+    let ddoc = run_figure(&dspec).to_json();
+
+    let mut dgrid = Grid::new(&ddoc);
+    for &d in &depths {
+        dgrid = dgrid.col_at(&format!("chan_kt@o{d}"), &arm, d, |j, _| {
+            format!("{:.0}", j.metric("stall.channel_ticks") / 1e3)
+        });
+    }
+    dgrid = dgrid
+        .col_at("hidden_kt@o4", &arm, 4, |j, _| {
+            format!("{:.0}", j.metric_or("pipeline.hidden_ticks", 0.0) / 1e3)
+        })
+        .col_at("score@o1", &arm, 1, |j, _| format!("{:.5}", j.score()))
+        .col_at("score@o4", &arm, 4, |j, _| format!("{:.5}", j.score()));
+    dgrid.render(
+        "Fig 16b — channel stall (kticks) vs outstanding depth @921600",
+        &["bench", "T"],
+        &rows,
+    );
 }

@@ -107,4 +107,41 @@ fn main() {
         "Transport sweep — {bench}-2 score error vs full-system ({:.5})",
         score(fs)
     ));
+
+    // ---- outstanding-depth ablation (pipelined HTP, docs/htp-wire.md §5) ----
+    //
+    // Depth 1 is the serial stop-and-wait protocol (byte-identical
+    // reports); deeper windows trade a few tag bytes for hidden wire
+    // time, so channel stall decreases monotonically with depth.
+    let depths = [1u32, 2, 4];
+    let dw = WorkloadSpec::gapbs("bc", scale, trials);
+    let mut dspec = SweepSpec::new("htp-depth-sweep");
+    dspec.workloads = vec![dw.clone()];
+    dspec.arms = vec![arm.clone()];
+    dspec.harts = vec![2];
+    dspec.outstandings = depths.to_vec();
+    let ddoc = run_figure(&dspec).to_json();
+
+    let drows = vec![GridRow::new(vec!["bc-2".into()], &dw, 2)];
+    let mut dgrid = Grid::new(&ddoc);
+    for &d in &depths {
+        dgrid = dgrid.col_at(&format!("chan_stall@o{d}"), &arm, d, |j, _| {
+            format!("{:.0}", j.metric("stall.channel_ticks"))
+        });
+    }
+    dgrid
+        .col_at("tag_B@o4", &arm, 4, |j, _| {
+            format!("{:.0}", j.metric_or("pipeline.tag_bytes", 0.0))
+        })
+        .col_at("hidden@o4", &arm, 4, |j, _| {
+            format!("{:.0}", j.metric_or("pipeline.hidden_ticks", 0.0))
+        })
+        .col_at("peak@o4", &arm, 4, |j, _| {
+            format!("{:.0}", j.metric_or("pipeline.peak_outstanding", 0.0))
+        })
+        .render(
+            "HTP depth ablation — pipelined wire-time hiding (bc-2 @921600)",
+            &["workload"],
+            &drows,
+        );
 }

@@ -79,4 +79,37 @@ fn main() {
             &["workload"],
             &rows,
         );
+
+    // Outstanding-depth axis: pipelining overlaps the channel component
+    // with guest execution, so it must shrink as the window deepens while
+    // controller and runtime stay put (reports are byte-identical at o1).
+    let depths = [1u32, 2, 4];
+    let mut dspec = SweepSpec::new("table4-depth");
+    dspec.workloads = vec![w.clone()];
+    dspec.arms = vec![real.clone()];
+    dspec.harts = vec![1, 2, 4];
+    dspec.outstandings = depths.to_vec();
+    let ddoc = run_figure(&dspec).to_json();
+
+    let mut dgrid = Grid::new(&ddoc);
+    for &d in &depths {
+        dgrid = dgrid.col_at(&format!("channel@o{d}"), &real, d, move |j, _| {
+            per_iter(j.metric("stall.channel_ticks"))
+        });
+    }
+    dgrid = dgrid
+        .col_at("hidden@o4", &real, 4, move |j, _| {
+            per_iter(j.metric_or("pipeline.hidden_ticks", 0.0))
+        })
+        .col_at("credit_stall@o4", &real, 4, move |j, _| {
+            per_iter(j.metric_or("pipeline.credit_stall_ticks", 0.0))
+        })
+        .col_at("peak@o4", &real, 4, |j, _| {
+            format!("{:.0}", j.metric_or("pipeline.peak_outstanding", 0.0))
+        });
+    dgrid.render(
+        "Table IV — channel stall vs outstanding depth (BC @921600, per iteration)",
+        &["workload"],
+        &rows,
+    );
 }

@@ -105,6 +105,18 @@ impl Analysis {
     pub fn prewarm_vas(&self) -> impl Iterator<Item = u64> + '_ {
         self.cfg.blocks.iter().map(|b| b.va)
     }
+
+    /// Speculative argument-push hints for the pipelined HTP
+    /// (docs/htp-wire.md §5.4): `ecall` pc → declared `ArgSpec` mask,
+    /// for sites whose number was recovered to an implemented handler
+    /// with a non-empty mask. The controller reads exactly these
+    /// registers at trap time and pushes them on the report frame.
+    pub fn arg_hints(&self) -> std::collections::BTreeMap<u64, u8> {
+        self.sites
+            .iter()
+            .filter_map(|s| s.argmask.filter(|&m| m != 0).map(|m| (s.pc, m)))
+            .collect()
+    }
 }
 
 /// Run the full static pass over one loaded image: disassemble, build

@@ -301,6 +301,7 @@ pub fn run_pk_exe(
         htp_batching: true,
         seed: pk.seed,
         engine: pk.engine,
+        ..Default::default()
     };
     let target = Box::new(PkTarget::new(&pk));
     let mut rt = Runtime::with_target(cfg, target, false);

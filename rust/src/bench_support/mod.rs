@@ -131,7 +131,8 @@ pub fn run_coremark(arm: &Arm, iterations: u32, core: &str) -> GapbsRun {
 
 fn run_one(workload: WorkloadSpec, arm: &Arm, harts: usize, core: &str) -> GapbsRun {
     let spec = SweepSpec::new("bench");
-    let job = sweep::Job::new(0, workload, arm.clone(), harts, core.to_string(), 0, None, &spec);
+    let job =
+        sweep::Job::new(0, workload, arm.clone(), harts, core.to_string(), 0, None, None, &spec);
     let o = sweep::run_job(&job);
     if let Some(err) = &o.result.error {
         eprintln!("[bench] {} failed: {err}\n{}", o.job.label(), o.result.stderr);
@@ -242,20 +243,45 @@ impl JobView<'_> {
 /// Find one scenario cell in a report document (first match across the
 /// core/seed axes, like [`SweepOutcome::get`]).
 pub fn find_job<'a>(doc: &'a Json, workload: &str, arm: &str, harts: usize) -> Option<JobView<'a>> {
+    find_job_at(doc, workload, arm, harts, None)
+}
+
+/// [`find_job`] restricted to one outstanding-transaction depth (`None`
+/// keeps the legacy first-match behavior; reports written before the
+/// depth axis existed read as depth 1).
+pub fn find_job_at<'a>(
+    doc: &'a Json,
+    workload: &str,
+    arm: &str,
+    harts: usize,
+    outstanding: Option<u32>,
+) -> Option<JobView<'a>> {
     let jobs = doc.get("jobs")?.as_arr()?;
     let field = |j: &Json, k: &str| j.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    let depth = |j: &Json| j.get("outstanding").and_then(Json::as_u64).unwrap_or(1);
     jobs.iter()
         .find(|j| {
             field(j, "workload") == workload
                 && field(j, "arm") == arm
                 && j.get("harts").and_then(Json::as_u64) == Some(harts as u64)
+                && match outstanding {
+                    Some(d) => depth(j) == d as u64,
+                    None => true,
+                }
         })
         .map(|job| JobView { label: field(job, "label"), job })
 }
 
-fn find_job_or_exit<'a>(doc: &'a Json, workload: &str, arm: &str, harts: usize) -> JobView<'a> {
-    find_job(doc, workload, arm, harts).unwrap_or_else(|| {
-        eprintln!("[bench] missing report cell {workload}|{arm}|{harts}c");
+fn find_job_or_exit<'a>(
+    doc: &'a Json,
+    workload: &str,
+    arm: &str,
+    harts: usize,
+    outstanding: Option<u32>,
+) -> JobView<'a> {
+    find_job_at(doc, workload, arm, harts, outstanding).unwrap_or_else(|| {
+        let at = outstanding.map(|d| format!("+o{d}")).unwrap_or_default();
+        eprintln!("[bench] missing report cell {workload}|{arm}{at}|{harts}c");
         std::process::exit(1);
     })
 }
@@ -282,7 +308,7 @@ type CellFn<'a> = Box<dyn Fn(&JobView, Option<&JobView>) -> String + 'a>;
 pub struct Grid<'a> {
     doc: &'a Json,
     baseline: Option<String>,
-    cols: Vec<(String, String, CellFn<'a>)>,
+    cols: Vec<(String, String, Option<u32>, CellFn<'a>)>,
 }
 
 impl<'a> Grid<'a> {
@@ -303,7 +329,20 @@ impl<'a> Grid<'a> {
         arm: &Arm,
         cell: impl Fn(&JobView, Option<&JobView>) -> String + 'a,
     ) -> Self {
-        self.cols.push((header.to_string(), arm.label(), Box::new(cell)));
+        self.cols.push((header.to_string(), arm.label(), None, Box::new(cell)));
+        self
+    }
+
+    /// [`Grid::col`] pinned to one outstanding-transaction depth of the
+    /// arm (for sweeps that set the `outstandings` axis).
+    pub fn col_at(
+        mut self,
+        header: &str,
+        arm: &Arm,
+        outstanding: u32,
+        cell: impl Fn(&JobView, Option<&JobView>) -> String + 'a,
+    ) -> Self {
+        self.cols.push((header.to_string(), arm.label(), Some(outstanding), Box::new(cell)));
         self
     }
 
@@ -313,17 +352,16 @@ impl<'a> Grid<'a> {
         let headers: Vec<&str> = row_headers
             .iter()
             .copied()
-            .chain(self.cols.iter().map(|(h, _, _)| h.as_str()))
+            .chain(self.cols.iter().map(|(h, _, _, _)| h.as_str()))
             .collect();
         let mut tab = Table::new(&headers);
         for row in rows {
-            let base =
-                self.baseline.as_ref().map(|arm| {
-                    find_job_or_exit(self.doc, &row.workload, arm, row.harts)
-                });
+            let base = self.baseline.as_ref().map(|arm| {
+                find_job_or_exit(self.doc, &row.workload, arm, row.harts, None)
+            });
             let mut cells = row.label.clone();
-            for (_, arm, cell) in &self.cols {
-                let view = find_job_or_exit(self.doc, &row.workload, arm, row.harts);
+            for (_, arm, depth, cell) in &self.cols {
+                let view = find_job_or_exit(self.doc, &row.workload, arm, row.harts, *depth);
                 cells.push(cell(&view, base.as_ref()));
             }
             tab.row(cells);
@@ -344,7 +382,7 @@ pub fn render_breakdown(
     div: f64,
     title: &str,
 ) {
-    let view = find_job_or_exit(doc, &workload.name, &arm.label(), harts.max(1) as usize);
+    let view = find_job_or_exit(doc, &workload.name, &arm.label(), harts.max(1) as usize, None);
     let mut tab = Table::new(&headers);
     for (name, v) in view.obj(path) {
         tab.row(vec![name, format!("{:.1}", v / div)]);
@@ -482,6 +520,30 @@ mod tests {
         );
         assert!(find_job(&doc, "w", "fullsys", 4).is_none());
         assert!(find_job(&doc, "nope", "fullsys", 2).is_none());
+    }
+
+    #[test]
+    fn find_job_at_selects_outstanding_depth() {
+        let doc = crate::util::json::parse(
+            r#"{
+              "schema": 1, "jobs": [
+                {"label": "w|fase@loopback|2c|rocket|s0", "workload": "w",
+                 "arm": "fase@loopback", "harts": 2, "status": "ok",
+                 "metrics": {"ticks": 100}},
+                {"label": "w|fase@loopback+o2|2c|rocket|s0", "workload": "w",
+                 "arm": "fase@loopback", "outstanding": 2, "harts": 2, "status": "ok",
+                 "metrics": {"ticks": 90}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let at = |d| find_job_at(&doc, "w", "fase@loopback", 2, d);
+        // A job without the member reads as depth 1 (pre-axis reports).
+        assert_eq!(at(Some(1)).unwrap().metric("ticks"), 100.0);
+        assert_eq!(at(Some(2)).unwrap().metric("ticks"), 90.0);
+        assert!(at(Some(4)).is_none());
+        // None keeps the legacy first-match behavior.
+        assert_eq!(at(None).unwrap().metric("ticks"), 100.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::elfio::read::Executable;
 use crate::fase::transport::TransportSpec;
 use crate::perf::recorder::Context;
 use crate::perf::window::WindowSample;
-use crate::perf::{OverlapStats, StallBreakdown};
+use crate::perf::{OverlapStats, PipelineStats, StallBreakdown};
 use crate::rv64::hart::CoreModel;
 use crate::rv64::{EngineKind, EngineStats};
 use crate::soc::{Machine, MachineConfig};
@@ -59,6 +59,12 @@ pub struct RunConfig {
     /// pages become mapped. Architecturally invisible either way — the
     /// report surface never changes, only `EngineStats` move.
     pub analysis: AnalysisMode,
+    /// Outstanding-transaction depth for the pipelined HTP channel
+    /// (docs/htp-wire.md §5). 1 = the legacy serial stop-and-wait
+    /// protocol, byte-identical on the wire and in every report; deeper
+    /// values enable tagged frames, credit flow control and speculative
+    /// argument pushes on FASE targets (ignored by the fullsys baseline).
+    pub outstanding: u32,
 }
 
 impl Default for RunConfig {
@@ -82,6 +88,7 @@ impl Default for RunConfig {
             seed: 0xFA5E,
             engine: EngineKind::default(),
             analysis: AnalysisMode::default(),
+            outstanding: 1,
         }
     }
 }
@@ -200,6 +207,10 @@ pub struct RunResult {
     /// Host-side block-cache counters (all zero on the interpreter).
     /// Excluded from `metrics_json` for the same reason.
     pub engine_stats: EngineStats,
+    /// Pipelined-HTP occupancy/overlap tallies. All-zero (depth 1) runs
+    /// keep the legacy report shape: `metrics_json` emits a `pipeline`
+    /// member only at depth > 1, so serial reports stay byte-identical.
+    pub pipeline: PipelineStats,
 }
 
 impl RunResult {
@@ -252,6 +263,7 @@ impl RunResult {
             windows: Vec::new(),
             engine: "none".into(),
             engine_stats: EngineStats::default(),
+            pipeline: PipelineStats::default(),
         }
     }
 
@@ -335,6 +347,12 @@ impl RunResult {
         m.push(("context_switches".into(), Json::u64(self.context_switches)));
         m.push(("page_faults".into(), Json::u64(self.page_faults)));
         m.push(("peak_pages".into(), Json::u64(self.peak_pages)));
+        // Pipelined-HTP dimensions exist only when the knob is on: at
+        // depth 1 the member is absent so serial reports stay
+        // byte-identical to the pre-pipeline schema (CI gates this).
+        if self.pipeline.depth > 1 {
+            m.push(("pipeline".into(), self.pipeline.to_json()));
+        }
         Json::Obj(m)
     }
 }
@@ -405,6 +423,7 @@ impl Runtime {
             Mode::Fase { transport, hfutex, latency } => {
                 let mut t = FaseTarget::new(machine, transport, *hfutex, *latency);
                 t.batching = cfg.htp_batching;
+                t.set_outstanding(cfg.outstanding);
                 Box::new(t)
             }
             Mode::FullSys { costs } => Box::new(DirectTarget::new(machine, *costs)),
@@ -472,16 +491,25 @@ impl Runtime {
         let tid = self.k.sched.spawn(ctx);
         debug_assert_eq!(tid, super::sched::MAIN_TID);
         self.load = Some(out);
-        if self.cfg.analysis.prewarms() {
-            // Static pass between load and execution: bucket the CFG's
-            // block entries by page, then offer whatever the loader
-            // already mapped. Lazily loaded pages are offered later,
-            // from the fault path, as they appear.
+        // A pipelined channel (outstanding > 1) wants the static syscall
+        // inventory regardless of the analysis knob: the per-site ArgSpec
+        // hints drive the controller's speculative argument pushes.
+        let wants_hints = self.cfg.outstanding > 1;
+        if self.cfg.analysis.prewarms() || wants_hints {
             let a = crate::analysis::analyze(exe);
-            for va in a.prewarm_vas() {
-                self.prewarm_pending.entry(va >> 12).or_default().push(va);
+            if self.cfg.analysis.prewarms() {
+                // Static pass between load and execution: bucket the CFG's
+                // block entries by page, then offer whatever the loader
+                // already mapped. Lazily loaded pages are offered later,
+                // from the fault path, as they appear.
+                for va in a.prewarm_vas() {
+                    self.prewarm_pending.entry(va >> 12).or_default().push(va);
+                }
+                self.drain_prewarm();
             }
-            self.drain_prewarm();
+            if wants_hints {
+                self.target.set_arg_hints(a.arg_hints());
+            }
         }
         Ok(())
     }
@@ -894,6 +922,7 @@ impl Runtime {
             windows: std::mem::take(&mut self.windows),
             engine: engine_kind.label().to_string(),
             engine_stats,
+            pipeline: rec.pipeline,
         }
     }
 }

@@ -3,12 +3,13 @@
 
 use crate::fase::controller::{Controller, NextOutcome};
 use crate::fase::htp::{HfOp, Req, Resp};
-use crate::fase::transport::{BatchFrame, Transport, TransportSpec};
+use crate::fase::transport::{BatchFrame, Pipeline, ReorderQueue, Transport, TransportSpec};
 use crate::iface::CpuInterface;
 use crate::mem::LINE;
 use crate::perf::{Context, Recorder};
 use crate::soc::machine::CAUSE_MTIMER;
 use crate::soc::Machine;
+use std::collections::BTreeMap;
 
 /// Exception metadata returned by `Next`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,6 +165,14 @@ pub trait TargetOps {
     /// are free. No-op for direct-access targets.
     fn prefetch_args(&mut self, _cpu: usize, _mask: u8) {}
 
+    /// Install static per-site speculative-push hints (`ecall` pc →
+    /// declared `ArgSpec` mask, from ahead-of-run analysis): a pipelined
+    /// FASE target forwards them to the controller, which then pushes
+    /// the declared argument registers on the trap report itself
+    /// (docs/htp-wire.md §5.4). No-op everywhere else — at outstanding
+    /// depth 1 the wire protocol must stay byte-identical.
+    fn set_arg_hints(&mut self, _hints: BTreeMap<u64, u8>) {}
+
     /// Mode-specific overhead charged around guest-syscall handling.
     fn syscall_overhead(&mut self, cpu: usize, nr: u64);
     /// Mode-specific overhead charged around page-fault handling.
@@ -230,6 +239,11 @@ pub struct FaseTarget {
     /// HTP batching layer: coalesce multi-request operations into batch
     /// frames. Disable to model the one-request-per-transaction protocol.
     pub batching: bool,
+    /// Credit/tag pipelining layer (HTP v3, docs/htp-wire.md §5). Depth 1
+    /// is the legacy serial stop-and-wait protocol — every pipeline hook
+    /// is a no-op and the byte stream (and therefore the report) is
+    /// identical to the pre-pipeline target.
+    pub pipe: Pipeline,
     /// Cached a0..a7 (x10..x17) per cpu from a masked argument prefetch;
     /// valid only while that hart is stopped in the controller.
     arg_cache: Vec<[Option<u64>; 8]>,
@@ -250,13 +264,38 @@ impl FaseTarget {
             lat,
             rec,
             batching: true,
+            pipe: Pipeline::new(1, 0),
             arg_cache: vec![[None; 8]; n],
             trap_mark: TrapOverlap::new(n),
         }
     }
 
+    /// Negotiate the outstanding-transaction depth (default 1 = serial
+    /// HTP). The target-side skid buffer is sized per spare credit from
+    /// the transport's own 4 KiB transfer time, so a zero-latency channel
+    /// (loopback) banks nothing and hides nothing — only the speculative
+    /// argument pushes (which spare whole frames) still apply there.
+    pub fn set_outstanding(&mut self, n: u32) {
+        let skid = self.transport.tx_ticks(4096).max(self.transport.rx_ticks(4096));
+        self.pipe = Pipeline::new(n, skid);
+        self.rec.pipeline.depth = self.pipe.depth();
+    }
+
     fn host_ticks(&self, us: f64) -> u64 {
         (us * 1e-6 * self.m.clock_hz as f64) as u64
+    }
+
+    /// Fill the argument cache from a controller-initiated speculative
+    /// push and account its wire bytes (pipelined channels only).
+    fn apply_spec_push(&mut self, cpu: usize, mask: u8, vals: Vec<u64>, push_bytes: u64) {
+        self.rec.pipeline.spec_pushes += 1;
+        self.rec.pipeline.spec_push_bytes += push_bytes;
+        let mut it = vals.into_iter();
+        for i in 0..8 {
+            if mask & (1 << i) != 0 {
+                self.arg_cache[cpu][i] = it.next();
+            }
+        }
     }
 
     /// Run one framed HTP transaction — a single request or a coalesced
@@ -268,14 +307,22 @@ impl FaseTarget {
         let t0 = self.m.now;
         let batched = frame.is_batched();
         let streaming = self.transport.streaming();
+        let piped = self.pipe.enabled();
+        // Tagged framing (HTP v3): a [mark][tag] header on the request
+        // frame and on its completion — 2 extra wire bytes each way.
+        let (tag_tx, tag_rx): (u64, u64) = if piped { (2, 2) } else { (0, 0) };
         let tx = frame.wire_len();
         let tx_stream = frame.streaming_len();
         // On a streaming channel only the non-streaming head must arrive
         // before execution starts; burst channels land the whole frame.
         let head_bytes = if streaming { tx - tx_stream } else { tx };
-        let head_ticks =
-            self.transport.per_transaction_ticks() + self.transport.tx_ticks(head_bytes);
-        self.m.run_until(t0 + head_ticks);
+        let head_ticks = self.transport.per_transaction_ticks()
+            + self.transport.tx_ticks(head_bytes + tag_tx);
+        // Overlap budget banked by earlier frames' service windows hides
+        // part of this frame's wire time: the pre-issued tagged transfer
+        // already ran while the link would otherwise have idled.
+        let hidden_head = self.pipe.hide(head_ticks);
+        self.m.run_until(t0 + head_ticks - hidden_head);
         let (resps, stats) = self.ctl.execute_batch(&mut self.m, &frame.reqs);
         let ctl_cycles: u64 = stats.iter().map(|s| s.cycles).sum();
         let resp_stream: u64 = resps.iter().map(|r| r.streaming_len()).sum();
@@ -290,8 +337,9 @@ impl FaseTarget {
         self.m.run_until(t1);
         let rx = BatchFrame::resp_wire_len(&resps);
         let tail_bytes = if streaming { rx - resp_stream } else { rx };
-        let tail_ticks = self.transport.rx_ticks(tail_bytes);
-        self.m.run_until(t1 + tail_ticks);
+        let tail_ticks = self.transport.rx_ticks(tail_bytes + tag_rx);
+        let hidden_tail = self.pipe.hide(tail_ticks);
+        self.m.run_until(t1 + tail_ticks - hidden_tail);
         // Host access overhead, once per frame.
         let host = self.host_ticks(self.lat.per_request_us);
         let t2 = self.m.now + host;
@@ -301,7 +349,22 @@ impl FaseTarget {
         // the frame's channel time is apportioned by wire-byte share and
         // the frame itself counts as one transaction. Singletons — the
         // common case — skip the apportionment machinery.
-        let chan_total = head_ticks + body_chan + tail_ticks;
+        let chan_total = head_ticks + body_chan + tail_ticks - hidden_head - hidden_tail;
+        if piped {
+            // Windows the serial protocol exposes on the critical path:
+            // controller-execution surplus over the streamed body, the
+            // host service latency, and one direction of the head/tail
+            // pair (a full-duplex link moves them concurrently across
+            // adjacent frames). Spare credits let later pre-issued frames
+            // overlap them, discounted by the sliding-window efficiency.
+            self.pipe
+                .bank(ctl_cycles.saturating_sub(body_chan) + host + head_ticks.min(tail_ticks));
+            let _tag = self.pipe.alloc_tag();
+            self.rec.pipeline.tagged_frames += 1;
+            self.rec.pipeline.tag_bytes += tag_tx + tag_rx;
+            self.rec.pipeline.hidden_ticks += hidden_head + hidden_tail;
+            self.rec.pipeline.credit_stall_ticks += chan_total;
+        }
         if !batched {
             self.rec.record_request(
                 frame.reqs[0].kind(),
@@ -388,21 +451,35 @@ impl TargetOps for FaseTarget {
             if !self.m.run_until_exception(t_max) {
                 return None;
             }
+            let piped = self.pipe.enabled();
+            let (tag_tx, tag_rx): (u64, u64) = if piped { (2, 2) } else { (0, 0) };
             // `Next` request goes out before the event is consumed.
             let req_ticks = self.transport.per_transaction_ticks()
-                + self.transport.tx_ticks(Req::Next.wire_len());
+                + self.transport.tx_ticks(Req::Next.wire_len() + tag_tx);
             match self.ctl.next_event(&mut self.m) {
-                Some(NextOutcome::Report { resp, stats }) => {
-                    let resp_ticks = self.transport.rx_ticks(resp.wire_len());
+                Some(NextOutcome::Report { resp, stats, spec_args }) => {
+                    // A speculative ArgPush rides the completion burst
+                    // (pipelined channels only).
+                    let push_bytes = if piped {
+                        spec_args
+                            .as_ref()
+                            .map(|(m, _)| 3 + 8 * m.count_ones() as u64)
+                            .unwrap_or(0)
+                    } else {
+                        0
+                    };
+                    let resp_ticks =
+                        self.transport.rx_ticks(resp.wire_len() + tag_rx + push_bytes);
+                    let hidden = self.pipe.hide(req_ticks + resp_ticks);
                     let host = self.host_ticks(self.lat.per_request_us);
-                    let t =
-                        self.m.now + req_ticks + stats.cycles + resp_ticks + host;
+                    let t = self.m.now + req_ticks + stats.cycles + resp_ticks + host
+                        - hidden;
                     self.m.run_until(t);
                     self.rec.record_request(
                         Req::Next.kind(),
                         Req::Next.wire_len(),
                         resp.wire_len(),
-                        req_ticks + resp_ticks,
+                        req_ticks + resp_ticks - hidden,
                         stats.cycles,
                         stats.reg_ops,
                         stats.injects,
@@ -410,7 +487,20 @@ impl TargetOps for FaseTarget {
                     self.rec.record_transaction();
                     self.rec.record_runtime_stall(host);
                     if let Resp::Exception { cpu, cause, epc, tval, nr, at } = resp {
-                        return Some(ExcInfo { cpu: cpu as usize, cause, epc, tval, at, nr });
+                        let cpu = cpu as usize;
+                        if piped {
+                            self.pipe
+                                .bank(stats.cycles + host + req_ticks.min(resp_ticks));
+                            self.rec.pipeline.tagged_frames += 1;
+                            self.rec.pipeline.tag_bytes += tag_tx + tag_rx;
+                            self.rec.pipeline.hidden_ticks += hidden;
+                            self.rec.pipeline.credit_stall_ticks +=
+                                req_ticks + resp_ticks - hidden;
+                            if let Some((mask, vals)) = spec_args {
+                                self.apply_spec_push(cpu, mask, vals, push_bytes);
+                            }
+                        }
+                        return Some(ExcInfo { cpu, cause, epc, tval, at, nr });
                     }
                     unreachable!("next_event reports only exceptions");
                 }
@@ -433,27 +523,72 @@ impl TargetOps for FaseTarget {
         // per-transaction host charge is not (the host's Next is already
         // armed). This is what lets one hart's syscall service overlap
         // the *reporting* of other harts' traps.
+        //
+        // At depth > 1 the streamed reports are tagged frames: each is
+        // issued in FIFO order against an rx credit, completions may
+        // interleave on the wire, and the reorder queue retires them in
+        // issue order — so the runtime's completion queue observes the
+        // exact deterministic ordering of the serial protocol.
+        let piped = self.pipe.enabled();
+        let (tag_tx, tag_rx): (u64, u64) = if piped { (2, 2) } else { (0, 0) };
         let mut out = Vec::new();
+        let mut reorder: ReorderQueue<ExcInfo> = ReorderQueue::new();
         loop {
             match self.ctl.next_event(&mut self.m) {
-                Some(NextOutcome::Report { resp, stats }) => {
+                Some(NextOutcome::Report { resp, stats, spec_args }) => {
+                    let push_bytes = if piped {
+                        spec_args
+                            .as_ref()
+                            .map(|(m, _)| 3 + 8 * m.count_ones() as u64)
+                            .unwrap_or(0)
+                    } else {
+                        0
+                    };
                     let req_ticks = self.transport.per_transaction_ticks()
-                        + self.transport.tx_ticks(Req::Next.wire_len());
-                    let resp_ticks = self.transport.rx_ticks(resp.wire_len());
-                    let t = self.m.now + req_ticks + stats.cycles + resp_ticks;
+                        + self.transport.tx_ticks(Req::Next.wire_len() + tag_tx);
+                    let resp_ticks =
+                        self.transport.rx_ticks(resp.wire_len() + tag_rx + push_bytes);
+                    let hidden = self.pipe.hide(req_ticks + resp_ticks);
+                    let t = self.m.now + req_ticks + stats.cycles + resp_ticks - hidden;
                     self.m.run_until(t);
                     self.rec.record_request(
                         Req::Next.kind(),
                         Req::Next.wire_len(),
                         resp.wire_len(),
-                        req_ticks + resp_ticks,
+                        req_ticks + resp_ticks - hidden,
                         stats.cycles,
                         stats.reg_ops,
                         stats.injects,
                     );
                     self.rec.record_transaction();
                     if let Resp::Exception { cpu, cause, epc, tval, nr, at } = resp {
-                        out.push(ExcInfo { cpu: cpu as usize, cause, epc, tval, at, nr });
+                        let cpu = cpu as usize;
+                        let info = ExcInfo { cpu, cause, epc, tval, at, nr };
+                        if piped {
+                            self.pipe.bank(stats.cycles + req_ticks.min(resp_ticks));
+                            self.rec.pipeline.tagged_frames += 1;
+                            self.rec.pipeline.tag_bytes += tag_tx + tag_rx;
+                            self.rec.pipeline.hidden_ticks += hidden;
+                            self.rec.pipeline.credit_stall_ticks +=
+                                req_ticks + resp_ticks - hidden;
+                            if let Some((mask, vals)) = spec_args {
+                                self.apply_spec_push(cpu, mask, vals, push_bytes);
+                            }
+                            // The pool bounds in-flight reports: retire
+                            // the oldest (it has completed — credits free
+                            // in issue order) before issuing past depth.
+                            while !self.pipe.rx.try_acquire() {
+                                let retired =
+                                    reorder.retire().expect("outstanding frames retire");
+                                out.push(retired);
+                                self.pipe.rx.release();
+                            }
+                            let tag = self.pipe.alloc_tag();
+                            reorder.issue(tag);
+                            reorder.complete(tag, info);
+                        } else {
+                            out.push(info);
+                        }
                     } else {
                         unreachable!("next_event reports only exceptions");
                     }
@@ -465,6 +600,15 @@ impl TargetOps for FaseTarget {
                 }
                 None => break,
             }
+        }
+        while let Some(info) = reorder.retire() {
+            out.push(info);
+            self.pipe.rx.release();
+        }
+        if piped {
+            self.rec.pipeline.peak_outstanding =
+                self.rec.pipeline.peak_outstanding.max(self.pipe.rx.peak as u64);
+            self.rec.pipeline.credit_waits = self.pipe.rx.waits + self.pipe.tx.waits;
         }
         out
     }
@@ -571,6 +715,15 @@ impl TargetOps for FaseTarget {
         }
         if !chunk.is_empty() {
             self.transact_frame(BatchFrame::new(cpu as u8, chunk));
+        }
+    }
+
+    fn set_arg_hints(&mut self, hints: BTreeMap<u64, u8>) {
+        // Speculative pushes only exist on the pipelined channel; at
+        // depth 1 installing hints would change nothing, but keeping the
+        // controller hint-free there makes the invariant self-evident.
+        if self.pipe.enabled() {
+            self.ctl.set_arg_hints(hints);
         }
     }
 

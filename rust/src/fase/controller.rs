@@ -12,6 +12,7 @@ use crate::iface::{CpuInterface, InjectResult};
 use crate::rv64::csr;
 use crate::rv64::decode::encode;
 use crate::soc::Machine;
+use std::collections::BTreeMap;
 
 /// Futex syscall constants the Next-FSM filter logic recognises.
 const SYS_FUTEX: u64 = 98;
@@ -40,8 +41,11 @@ impl ExecStats {
 
 /// Outcome of draining one exception event in the Next FSM.
 pub enum NextOutcome {
-    /// Exception reported to the host.
-    Report { resp: Resp, stats: ExecStats },
+    /// Exception reported to the host. `spec_args` is the speculative
+    /// argument push for a hinted ecall site (`(argmask, values)` in
+    /// ascending bit order) that rides the report on a pipelined channel
+    /// as an `ArgPush` frame — `None` when no hint matched.
+    Report { resp: Resp, stats: ExecStats, spec_args: Option<(u8, Vec<u64>)> },
     /// Redundant futex wake handled locally by HFutex — nothing sent.
     Filtered { stats: ExecStats },
 }
@@ -53,6 +57,10 @@ pub struct Controller {
     pub parse_cycles: u64,
     /// Total wakes filtered (Fig 17 metric).
     pub filtered_wakes: u64,
+    /// Statically predicted ArgSpec per ecall site (`pc` of the ecall →
+    /// declared argument-register mask), installed by the host from the
+    /// PR 7 analysis when the channel is pipelined.
+    site_hints: BTreeMap<u64, u8>,
 }
 
 impl Controller {
@@ -62,7 +70,17 @@ impl Controller {
             hfutex_enabled,
             parse_cycles: 8,
             filtered_wakes: 0,
+            site_hints: BTreeMap::new(),
         }
+    }
+
+    /// Install per-site ArgSpec hints (static analysis, PR 7): for an
+    /// `ecall` at `pc`, the handler's declared argument-register mask.
+    /// With a hint installed the Next FSM reads those registers at trap
+    /// time and the report carries a speculative push so a pipelined
+    /// host skips its argument-prefetch round-trip entirely.
+    pub fn set_arg_hints(&mut self, hints: BTreeMap<u64, u8>) {
+        self.site_hints = hints;
     }
 
     // ---- Reg-port staging helpers ----
@@ -348,9 +366,28 @@ impl Controller {
                 }
             }
         }
+        // Speculative ArgPush (HTP v3): a hinted ecall site's declared
+        // argument registers are read here — while the hart is already
+        // stopped — and shipped with the report, costed like any other
+        // Reg-port traffic. Zero-argument hints push nothing.
+        let mut spec_args = None;
+        if cause == 8 {
+            if let Some(&mask) = self.site_hints.get(&epc) {
+                if mask != 0 {
+                    let mut vals = Vec::with_capacity(mask.count_ones() as usize);
+                    for i in 0..8u8 {
+                        if mask & (1 << i) != 0 {
+                            vals.push(self.reg_read(m, cpu, 10 + i, &mut st));
+                        }
+                    }
+                    spec_args = Some((mask, vals));
+                }
+            }
+        }
         Some(NextOutcome::Report {
             resp: Resp::Exception { cpu: cpu as u8, cause, epc, tval, nr: a7, at: ev.at },
             stats: st,
+            spec_args,
         })
     }
 
@@ -489,6 +526,39 @@ mod tests {
         m.harts[1].utick = 55;
         let (r, _) = c.execute(&mut m, &Req::UTick { cpu: 1 });
         assert_eq!(r, Resp::Word(55));
+    }
+
+    #[test]
+    fn hinted_ecall_site_pushes_declared_args() {
+        let (mut m, mut c) = mk();
+        let code = BASE + 0x4000;
+        let prog = [
+            encode::addi(10, 0, 41), // a0 = 41
+            encode::addi(17, 0, 94), // a7 = exit_group
+            0x0000_0073u32,          // ecall
+        ];
+        for (i, w) in prog.iter().enumerate() {
+            m.ms.phys.write_n(code + 4 * i as u64, 4, *w as u64);
+        }
+        let ecall_pc = code + 8;
+        c.set_arg_hints([(ecall_pc, 0b1u8)].into_iter().collect());
+        c.execute(&mut m, &Req::Redirect { cpu: 0, pc: code, switch: false });
+        assert!(m.run_until_exception(1_000_000));
+        match c.next_event(&mut m).unwrap() {
+            NextOutcome::Report { spec_args, stats, .. } => {
+                assert_eq!(spec_args, Some((0b1, vec![41])), "a0 pushed speculatively");
+                assert!(stats.reg_ops > 0);
+            }
+            _ => panic!("expected report"),
+        }
+        // Without a hint (or with a zero mask) nothing is pushed.
+        c.set_arg_hints(BTreeMap::new());
+        c.execute(&mut m, &Req::Redirect { cpu: 0, pc: code, switch: false });
+        assert!(m.run_until_exception(2_000_000));
+        match c.next_event(&mut m).unwrap() {
+            NextOutcome::Report { spec_args, .. } => assert_eq!(spec_args, None),
+            _ => panic!("expected report"),
+        }
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! Wire format: requests are `[op:1][cpu:1][payload]`, responses are
 //! `[status:1][payload]`. 64-bit fields travel as 8 LE bytes, register
 //! indices as 1 byte, pages as 4096 raw bytes.
+//!
+//! Lead-byte space: plain request ops are < 0x80; `0x80 | n` with
+//! `n in 2..=127` introduces a coalesced batch frame
+//! (`fase::transport::batch`); the two remaining values are the
+//! pipelined-HTP frame marks [`CREDIT_MARK`] (0x80) and [`TAG_MARK`]
+//! (0x81). The normative protocol spec, including the version history of
+//! these encodings, lives in `docs/htp-wire.md`.
 
 /// Host-side HFutex mask maintenance operations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -463,6 +470,196 @@ impl Resp {
     }
 }
 
+// ---------------- pipelined-HTP frames (tags + credits) ----------------
+//
+// HTP v3 (docs/htp-wire.md §5): when the host negotiates `outstanding > 1`
+// it stops using plain request/response framing and wraps every
+// transaction in a tagged frame so completions can return out of order.
+// Flow control is credit-based: the target owns a per-direction credit
+// pool sized to the negotiated depth and tops the host up either by
+// piggybacking on a tagged response or with a standalone grant frame.
+
+/// Lead byte of a standalone credit-grant frame (target → host).
+pub const CREDIT_MARK: u8 = 0x80;
+
+/// Lead byte of a tagged frame (either direction).
+pub const TAG_MARK: u8 = 0x81;
+
+/// Set in the tag byte of a target→host tagged frame to mark a
+/// controller-initiated push ([`ArgPush`]) rather than the completion of
+/// a host-issued transaction; the low 7 bits then carry the hart index.
+pub const TAG_PUSH: u8 = 0x80;
+
+/// A host-issued request carrying an outstanding-transaction tag:
+/// `[0x81][tag][op][cpu][payload]`. Tags are host-allocated from `0x00..=
+/// 0x7f` (the high bit is reserved for [`ArgPush`] frames) and may
+/// complete out of order; the reorder queue in
+/// `fase::transport::pipeline` restores issue order at retirement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaggedReq {
+    pub tag: u8,
+    pub req: Req,
+}
+
+/// The tagged completion of a host-issued transaction:
+/// `[0x81][tag][status][payload]`. Every completion implicitly returns
+/// its tag's credit to the host (piggybacked grant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaggedResp {
+    pub tag: u8,
+    pub resp: Resp,
+}
+
+/// Standalone credit grant (target → host): `[0x80][credits]`. Used when
+/// the target frees credits with no completion to piggyback them on
+/// (e.g. after the host drains a deep queue at once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CreditGrant {
+    pub credits: u8,
+}
+
+/// Controller-initiated speculative argument push (target → host):
+/// `[0x81][0x80|cpu][mask][8 LE bytes × popcount(mask)]`. When the host
+/// has installed a per-site ArgSpec hint (static analysis, PR 7), the
+/// controller reads the declared argument registers at trap time and
+/// ships them unsolicited alongside the Exception report, saving the
+/// host's batched prefetch round-trip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgPush {
+    pub cpu: u8,
+    /// Bit `i` set ⇒ `vals` carries argument register `a<i>`; values
+    /// appear in ascending bit order.
+    pub mask: u8,
+    pub vals: Vec<u64>,
+}
+
+/// Any frame the target can send on a pipelined channel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TargetFrame {
+    Resp(TaggedResp),
+    Push(ArgPush),
+    Credit(CreditGrant),
+}
+
+impl TaggedReq {
+    pub fn wire_len(&self) -> u64 {
+        2 + self.req.wire_len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        debug_assert!(self.tag < TAG_PUSH, "request tags are 7-bit");
+        let mut out = Vec::with_capacity(self.wire_len() as usize);
+        out.push(TAG_MARK);
+        out.push(self.tag);
+        out.extend_from_slice(&self.req.encode());
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Option<(TaggedReq, usize)> {
+        if *b.first()? != TAG_MARK {
+            return None;
+        }
+        let tag = *b.get(1)?;
+        if tag >= TAG_PUSH {
+            return None; // push-marked tags are target→host only
+        }
+        let (req, n) = Req::decode(&b[2..])?;
+        Some((TaggedReq { tag, req }, n + 2))
+    }
+}
+
+impl TaggedResp {
+    pub fn wire_len(&self) -> u64 {
+        2 + self.resp.wire_len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        debug_assert!(self.tag < TAG_PUSH, "completion tags are 7-bit");
+        let mut out = Vec::with_capacity(self.wire_len() as usize);
+        out.push(TAG_MARK);
+        out.push(self.tag);
+        out.extend_from_slice(&self.resp.encode());
+        out
+    }
+}
+
+impl CreditGrant {
+    pub fn wire_len(&self) -> u64 {
+        2
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        vec![CREDIT_MARK, self.credits]
+    }
+}
+
+impl ArgPush {
+    /// `[mark][tag][mask]` + one 64-bit value per set mask bit.
+    pub fn wire_len(&self) -> u64 {
+        3 + 8 * self.mask.count_ones() as u64
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        debug_assert!(self.cpu < TAG_PUSH, "hart index is 7-bit");
+        debug_assert_eq!(self.vals.len(), self.mask.count_ones() as usize);
+        let mut out = Vec::with_capacity(self.wire_len() as usize);
+        out.push(TAG_MARK);
+        out.push(TAG_PUSH | self.cpu);
+        out.push(self.mask);
+        for v in &self.vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+}
+
+impl TargetFrame {
+    pub fn wire_len(&self) -> u64 {
+        match self {
+            TargetFrame::Resp(r) => r.wire_len(),
+            TargetFrame::Push(p) => p.wire_len(),
+            TargetFrame::Credit(c) => c.wire_len(),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            TargetFrame::Resp(r) => r.encode(),
+            TargetFrame::Push(p) => p.encode(),
+            TargetFrame::Credit(c) => c.encode(),
+        }
+    }
+
+    /// Decode one target→host frame; returns it and the bytes consumed.
+    pub fn decode(b: &[u8]) -> Option<(TargetFrame, usize)> {
+        match *b.first()? {
+            CREDIT_MARK => {
+                let credits = *b.get(1)?;
+                Some((TargetFrame::Credit(CreditGrant { credits }), 2))
+            }
+            TAG_MARK => {
+                let tag = *b.get(1)?;
+                if tag & TAG_PUSH != 0 {
+                    let cpu = tag & !TAG_PUSH;
+                    let mask = *b.get(2)?;
+                    let mut vals = Vec::with_capacity(mask.count_ones() as usize);
+                    for i in 0..mask.count_ones() as usize {
+                        let off = 3 + 8 * i;
+                        let bytes = b.get(off..off + 8)?;
+                        vals.push(u64::from_le_bytes(bytes.try_into().ok()?));
+                    }
+                    let n = 3 + 8 * vals.len();
+                    Some((TargetFrame::Push(ArgPush { cpu, mask, vals }), n))
+                } else {
+                    let (resp, n) = Resp::decode(&b[2..])?;
+                    Some((TargetFrame::Resp(TaggedResp { tag, resp }), n + 2))
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,5 +764,106 @@ mod tests {
         assert!(Req::decode(&[]).is_none());
         assert!(Resp::decode(&[]).is_none());
         assert!(Req::decode(&[0xee, 0]).is_none(), "unknown op");
+    }
+
+    #[test]
+    fn tagged_req_roundtrips_every_variant() {
+        let reqs = [
+            Req::Next,
+            Req::Redirect { cpu: 2, pc: 0x8000_1234, switch: true },
+            Req::RegR { cpu: 0, idx: 17 },
+            Req::RegW { cpu: 0, idx: 10, val: u64::MAX },
+            Req::MemW { cpu: 0, addr: 0x8000_0100, val: 7 },
+            Req::PageS { cpu: 0, ppn: 0x80001, val: 0 },
+            Req::HFutex { cpu: 1, op: HfOp::Add, addr: 0x700 },
+            Req::Tick,
+        ];
+        for (i, req) in reqs.into_iter().enumerate() {
+            let t = TaggedReq { tag: (i as u8 * 17) & 0x7f, req };
+            let e = t.encode();
+            assert_eq!(e.len() as u64, t.wire_len(), "{t:?}");
+            assert_eq!(e.len() as u64, 2 + t.req.wire_len(), "tag adds exactly 2 bytes");
+            let (back, n) = TaggedReq::decode(&e).expect("decode");
+            assert_eq!(n, e.len());
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn tagged_resp_and_credit_frames_roundtrip() {
+        let frames = [
+            TargetFrame::Resp(TaggedResp { tag: 0, resp: Resp::Ok }),
+            TargetFrame::Resp(TaggedResp { tag: 0x7f, resp: Resp::Word(0xdead_beef) }),
+            TargetFrame::Resp(TaggedResp {
+                tag: 3,
+                resp: Resp::Exception {
+                    cpu: 1,
+                    cause: 8,
+                    epc: 0x8000_0000,
+                    tval: 0,
+                    nr: 98,
+                    at: 0x5555,
+                },
+            }),
+            TargetFrame::Resp(TaggedResp { tag: 9, resp: Resp::Fault(5) }),
+            TargetFrame::Credit(CreditGrant { credits: 4 }),
+            TargetFrame::Push(ArgPush { cpu: 2, mask: 0, vals: vec![] }),
+            TargetFrame::Push(ArgPush { cpu: 0, mask: 0b101, vals: vec![7, u64::MAX] }),
+            TargetFrame::Push(ArgPush {
+                cpu: 5,
+                mask: 0xff,
+                vals: (0..8).map(|i| i * 0x1111).collect(),
+            }),
+        ];
+        for f in frames {
+            let e = f.encode();
+            assert_eq!(e.len() as u64, f.wire_len(), "{f:?}");
+            let (back, n) = TargetFrame::decode(&e).expect("decode");
+            assert_eq!(n, e.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn arg_push_wire_len_tracks_mask_popcount() {
+        // 3-byte header + 8 bytes per declared argument register.
+        assert_eq!(ArgPush { cpu: 0, mask: 0, vals: vec![] }.wire_len(), 3);
+        assert_eq!(ArgPush { cpu: 0, mask: 0b1, vals: vec![0] }.wire_len(), 11);
+        assert_eq!(
+            ArgPush { cpu: 0, mask: 0xff, vals: vec![0; 8] }.wire_len(),
+            3 + 64
+        );
+    }
+
+    #[test]
+    fn tagged_frames_do_not_collide_with_plain_or_batch_lead_bytes() {
+        // 0x80/0x81 are not plain ops and not valid batch counts
+        // (batch frames are 0x80|n with n >= 2), so a pipelined stream is
+        // unambiguous with both legacy framings.
+        assert!(Req::decode(&[TAG_MARK, 0]).is_none());
+        assert!(Req::decode(&[CREDIT_MARK, 0]).is_none());
+        let t = TaggedReq { tag: 5, req: Req::Next };
+        assert_eq!(t.encode()[0], 0x81);
+        assert_eq!(CreditGrant { credits: 1 }.encode()[0], 0x80);
+        // Push-marked tags are reserved in the host→target direction.
+        let mut push_tagged = t.encode();
+        push_tagged[1] = TAG_PUSH | 5;
+        assert!(TaggedReq::decode(&push_tagged).is_none());
+    }
+
+    #[test]
+    fn truncated_tagged_frames_decode_to_none() {
+        let t = TaggedReq { tag: 1, req: Req::MemW { cpu: 0, addr: 1, val: 2 } };
+        let e = t.encode();
+        for cut in [0, 1, 2, e.len() - 1] {
+            assert!(TaggedReq::decode(&e[..cut]).is_none(), "cut at {cut}");
+        }
+        let p = ArgPush { cpu: 1, mask: 0b11, vals: vec![1, 2] };
+        let e = p.encode();
+        for cut in [1, 2, e.len() - 1] {
+            assert!(TargetFrame::decode(&e[..cut]).is_none(), "cut at {cut}");
+        }
+        assert!(TargetFrame::decode(&[CREDIT_MARK]).is_none());
+        assert!(TargetFrame::decode(&[0x42]).is_none(), "plain status is not a frame");
     }
 }

@@ -21,11 +21,13 @@
 
 pub mod batch;
 pub mod loopback;
+pub mod pipeline;
 pub mod uart;
 pub mod xdma;
 
 pub use batch::BatchFrame;
 pub use loopback::LoopbackTransport;
+pub use pipeline::{Pipeline, ReorderQueue};
 pub use uart::{Uart, UartTransport};
 pub use xdma::PcieXdmaTransport;
 

@@ -1,0 +1,344 @@
+//! Pipelined-HTP timing layer: credit-based flow control with multiple
+//! outstanding tagged transactions per hart (docs/htp-wire.md §5).
+//!
+//! A [`Pipeline`] wraps any [`super::Transport`]'s tick model — it does
+//! not replace the transport, it tracks how much of the channel's wire
+//! time the negotiated outstanding depth can overlap with work the
+//! serial (depth-1) protocol exposes on the critical path:
+//!
+//! - **service windows** — host-runtime latency and controller execution
+//!   the link sits idle through under stop-and-wait; with spare credits
+//!   the host pre-issues the next tagged frames and their transfer
+//!   proceeds during the window;
+//! - **full-duplex overlap** — the tail (target→host) bytes of one
+//!   transaction and the head (host→target) bytes of the next travel in
+//!   opposite directions and share the link only under stop-and-wait.
+//!
+//! Both contributions scale with the classic sliding-window efficiency
+//! `1 - 1/d` for outstanding depth `d` (zero at `d = 1`, asymptotic to
+//! the full-overlap bound), and are capped by the target-side
+//! [`SkidBuffer`]: pre-issued frames land in a buffer sized in
+//! channel-ticks per spare credit, so a zero-latency transport (loopback)
+//! has nothing to bank and the knob is architecturally invisible there.
+//!
+//! At `depth = 1` every method is a no-op and the protocol byte stream
+//! is exactly the legacy serial HTP — reports must stay byte-identical,
+//! which CI enforces with the pipelined-vs-serial invisibility gate.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// Per-direction credit pool. The target grants `capacity` credits at
+/// negotiation; the host spends one per issued frame and earns it back
+/// at completion (piggybacked grant) or via a standalone
+/// [`super::super::htp::CreditGrant`].
+#[derive(Debug, Clone)]
+pub struct CreditCounter {
+    capacity: u32,
+    in_flight: u32,
+    /// High-water mark of concurrently outstanding frames.
+    pub peak: u32,
+    /// Issue attempts that found the pool empty (had to wait for a
+    /// completion first).
+    pub waits: u64,
+}
+
+impl CreditCounter {
+    pub fn new(capacity: u32) -> CreditCounter {
+        CreditCounter { capacity: capacity.max(1), in_flight: 0, peak: 0, waits: 0 }
+    }
+
+    /// Spend one credit; `false` (and a recorded wait) when none remain.
+    pub fn try_acquire(&mut self) -> bool {
+        if self.in_flight >= self.capacity {
+            self.waits += 1;
+            return false;
+        }
+        self.in_flight += 1;
+        self.peak = self.peak.max(self.in_flight);
+        true
+    }
+
+    /// Return one credit (frame completed/retired).
+    pub fn release(&mut self) {
+        debug_assert!(self.in_flight > 0, "credit release without acquire");
+        self.in_flight = self.in_flight.saturating_sub(1);
+    }
+
+    pub fn in_flight(&self) -> u32 {
+        self.in_flight
+    }
+}
+
+/// Target-side skid buffer: bounds how many channel-ticks of pre-issued
+/// frame data can be parked ahead of the controller. Sized per spare
+/// credit from the transport's own 4 KiB transfer time, so latency-free
+/// channels get a zero-capacity buffer and bank nothing.
+#[derive(Debug, Clone)]
+pub struct SkidBuffer {
+    capacity: u64,
+    level: u64,
+}
+
+impl SkidBuffer {
+    pub fn new(capacity: u64) -> SkidBuffer {
+        SkidBuffer { capacity, level: 0 }
+    }
+
+    /// Park up to `gain` ticks of overlap budget, saturating at capacity.
+    pub fn fill(&mut self, gain: u64) {
+        self.level = self.level.saturating_add(gain).min(self.capacity);
+    }
+
+    /// Consume up to `want` ticks of parked budget; returns the amount
+    /// actually drained.
+    pub fn drain(&mut self, want: u64) -> u64 {
+        let got = want.min(self.level);
+        self.level -= got;
+        got
+    }
+
+    pub fn level(&self) -> u64 {
+        self.level
+    }
+}
+
+/// Credit/tag pipelining state for one HTP channel.
+///
+/// Construction: `Pipeline::new(depth, skid_capacity_ticks)` where the
+/// skid capacity is the wrapped transport's 4 KiB transfer time (see
+/// `FaseTarget::set_outstanding`). Usage per framed transaction, in
+/// order: [`Pipeline::hide`] against the frame's wire ticks (consuming
+/// budget banked by *earlier* frames — causality), then
+/// [`Pipeline::bank`] with the windows this frame exposes.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    depth: u32,
+    skid: SkidBuffer,
+    next_tag: u8,
+    /// Host→target (request) credit pool.
+    pub tx: CreditCounter,
+    /// Target→host (completion) credit pool.
+    pub rx: CreditCounter,
+}
+
+impl Pipeline {
+    pub fn new(depth: u32, skid_capacity_ticks: u64) -> Pipeline {
+        let depth = depth.max(1);
+        let spare = (depth - 1) as u64;
+        Pipeline {
+            depth,
+            skid: SkidBuffer::new(skid_capacity_ticks.saturating_mul(spare)),
+            next_tag: 0,
+            tx: CreditCounter::new(depth),
+            rx: CreditCounter::new(depth),
+        }
+    }
+
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+
+    /// Whether tagged framing is in use (`depth > 1`). At depth 1 the
+    /// channel speaks the legacy serial protocol byte-for-byte.
+    pub fn enabled(&self) -> bool {
+        self.depth > 1
+    }
+
+    /// Allocate the next 7-bit transaction tag (wrapping; the credit
+    /// pool bounds outstanding frames well below the tag space).
+    pub fn alloc_tag(&mut self) -> u8 {
+        let t = self.next_tag;
+        self.next_tag = (self.next_tag + 1) & 0x7f;
+        t
+    }
+
+    /// Bank a service window of `window_ticks` during which spare
+    /// credits let pre-issued frames use the link, discounted by the
+    /// sliding-window efficiency `1 - 1/depth`.
+    pub fn bank(&mut self, window_ticks: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let d = self.depth as u64;
+        self.skid.fill(window_ticks.saturating_mul(d - 1) / d);
+    }
+
+    /// Overlap up to `wire_ticks` of channel time with previously banked
+    /// windows; returns the hidden amount (0 at depth 1).
+    pub fn hide(&mut self, wire_ticks: u64) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        self.skid.drain(wire_ticks)
+    }
+
+    /// Current parked overlap budget (test/debug visibility).
+    pub fn budget(&self) -> u64 {
+        self.skid.level()
+    }
+}
+
+/// Issue-order reorder queue: tagged completions may arrive out of
+/// order, retirement is strictly in issue order so every consumer above
+/// the transport observes the deterministic serial-HTP ordering.
+#[derive(Debug, Clone)]
+pub struct ReorderQueue<T> {
+    order: VecDeque<u8>,
+    done: BTreeMap<u8, T>,
+}
+
+impl<T> Default for ReorderQueue<T> {
+    fn default() -> Self {
+        ReorderQueue::new()
+    }
+}
+
+impl<T> ReorderQueue<T> {
+    pub fn new() -> ReorderQueue<T> {
+        ReorderQueue { order: VecDeque::new(), done: BTreeMap::new() }
+    }
+
+    /// Record a tag as issued; completions retire in issue order.
+    pub fn issue(&mut self, tag: u8) {
+        debug_assert!(!self.order.contains(&tag), "tag {tag} already outstanding");
+        self.order.push_back(tag);
+    }
+
+    /// Deliver the completion for an outstanding tag (any order).
+    pub fn complete(&mut self, tag: u8, item: T) {
+        debug_assert!(self.order.contains(&tag), "completion for unissued tag {tag}");
+        self.done.insert(tag, item);
+    }
+
+    /// Retire the oldest issued transaction if its completion has
+    /// arrived; `None` while the head of the issue order is still in
+    /// flight (even if younger tags have completed).
+    pub fn retire(&mut self) -> Option<T> {
+        let head = *self.order.front()?;
+        let item = self.done.remove(&head)?;
+        self.order.pop_front();
+        Some(item)
+    }
+
+    /// Issued-but-unretired transaction count.
+    pub fn outstanding(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_one_is_inert() {
+        let mut p = Pipeline::new(1, 1_000_000);
+        assert!(!p.enabled());
+        p.bank(10_000);
+        assert_eq!(p.budget(), 0);
+        assert_eq!(p.hide(5_000), 0);
+    }
+
+    #[test]
+    fn banked_windows_hide_wire_ticks_with_sliding_window_efficiency() {
+        // One 12k-tick service window per frame; hidden share grows as
+        // 1 - 1/d and never exceeds the window itself (the full-duplex
+        // overlap bound).
+        let window = 12_000u64;
+        let mut prev = 0u64;
+        for d in 2..=5u32 {
+            let mut p = Pipeline::new(d, u64::MAX / 8);
+            let mut hidden = 0;
+            for _ in 0..100 {
+                hidden += p.hide(80_000); // wire >> window: budget-bound
+                p.bank(window);
+            }
+            assert_eq!(hidden, 99 * (window * (d as u64 - 1) / d as u64));
+            assert!(hidden > prev, "depth {d} must hide strictly more");
+            assert!(hidden < 100 * window, "cannot hide more than the windows");
+            prev = hidden;
+        }
+    }
+
+    #[test]
+    fn skid_capacity_caps_the_bank() {
+        let mut p = Pipeline::new(2, 1_000); // cap = (d-1) * 1000
+        p.bank(100_000);
+        assert_eq!(p.budget(), 1_000);
+        p.bank(100_000);
+        assert_eq!(p.budget(), 1_000);
+        assert_eq!(p.hide(600), 600);
+        assert_eq!(p.budget(), 400);
+        // Zero-capacity skid (loopback): nothing ever banks.
+        let mut z = Pipeline::new(4, 0);
+        z.bank(100_000);
+        assert_eq!(z.hide(100), 0);
+    }
+
+    #[test]
+    fn hide_consumes_only_banked_budget() {
+        let mut p = Pipeline::new(2, u64::MAX / 8);
+        assert_eq!(p.hide(1_000), 0, "nothing banked yet");
+        p.bank(2_000); // banks 1000 at d=2
+        assert_eq!(p.hide(600), 600);
+        assert_eq!(p.hide(600), 400, "only the remainder");
+        assert_eq!(p.hide(600), 0);
+    }
+
+    #[test]
+    fn tags_wrap_within_seven_bits() {
+        let mut p = Pipeline::new(4, 0);
+        for i in 0..300u32 {
+            let t = p.alloc_tag();
+            assert_eq!(t as u32, i & 0x7f);
+            assert!(t < 0x80);
+        }
+    }
+
+    #[test]
+    fn credit_counter_tracks_occupancy_and_waits() {
+        let mut c = CreditCounter::new(2);
+        assert!(c.try_acquire());
+        assert!(c.try_acquire());
+        assert!(!c.try_acquire(), "pool exhausted");
+        assert_eq!(c.waits, 1);
+        assert_eq!(c.peak, 2);
+        c.release();
+        assert!(c.try_acquire());
+        assert_eq!(c.in_flight(), 2);
+    }
+
+    #[test]
+    fn reorder_queue_retires_in_issue_order_despite_ooo_completion() {
+        let mut q: ReorderQueue<&'static str> = ReorderQueue::new();
+        q.issue(0);
+        q.issue(1);
+        q.issue(2);
+        assert_eq!(q.outstanding(), 3);
+        // Completions arrive youngest-first.
+        q.complete(2, "c");
+        q.complete(1, "b");
+        assert_eq!(q.retire(), None, "head (tag 0) still in flight");
+        q.complete(0, "a");
+        assert_eq!(q.retire(), Some("a"));
+        assert_eq!(q.retire(), Some("b"));
+        assert_eq!(q.retire(), Some("c"));
+        assert_eq!(q.retire(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reorder_queue_handles_tag_reuse_after_retirement() {
+        let mut q: ReorderQueue<u32> = ReorderQueue::new();
+        q.issue(5);
+        q.complete(5, 1);
+        assert_eq!(q.retire(), Some(1));
+        q.issue(5); // tag freed by retirement, reusable
+        q.complete(5, 2);
+        assert_eq!(q.retire(), Some(2));
+    }
+}

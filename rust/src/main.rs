@@ -34,14 +34,14 @@ fn main() {
             eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N]");
             eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
             eprintln!("           [--core rocket|cva6] [--engine interp|block]");
-            eprintln!("           [--analysis off|report|prewarm]");
+            eprintln!("           [--analysis off|report|prewarm] [--outstanding N]");
             eprintln!("           [--no-hfutex] [--no-batch]");
             eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
             eprintln!("           [--quiet] [--report] [--max-seconds S]");
             eprintln!("           [--ideal-latency] [-- guest args]");
             eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
             eprintln!("           [--engine interp|block] [--analysis off|report|prewarm]");
-            eprintln!("           [--filter SUBSTR]");
+            eprintln!("           [--outstanding N] [--filter SUBSTR]");
             eprintln!("           [--check-against baseline.json]");
             eprintln!("           [--compare-only report.json] [--require-baseline]");
             eprintln!("           [--list] [--quiet]");
@@ -69,6 +69,17 @@ fn analysis_arg(args: &Args) -> fase::analysis::AnalysisMode {
         eprintln!("unknown analysis mode {s:?}; use off, report or prewarm");
         std::process::exit(2);
     })
+}
+
+/// Pipelined-HTP outstanding-transaction depth (docs/htp-wire.md §5):
+/// 1 = the legacy serial protocol, up to 127 (the 7-bit tag space).
+fn outstanding_arg(args: &Args) -> u32 {
+    let n = args.u64_or("outstanding", 1);
+    if !(1..=127).contains(&n) {
+        eprintln!("bad --outstanding {n}; want a depth in 1..=127");
+        std::process::exit(2);
+    }
+    n as u32
 }
 
 fn build_config(args: &Args) -> RunConfig {
@@ -106,6 +117,7 @@ fn build_config(args: &Args) -> RunConfig {
         seed: args.u64_or("seed", 0xFA5E),
         engine: engine_arg(args),
         analysis: analysis_arg(args),
+        outstanding: outstanding_arg(args),
     }
 }
 
@@ -306,6 +318,13 @@ fn cmd_sweep(args: &Args) {
     // members but never moves a gated metric.
     if args.get("analysis").is_some() {
         spec.analysis = analysis_arg(args);
+    }
+    // Label-invisible outstanding-depth selection. Unlike --engine it is
+    // not metric-invisible at depth > 1; at depth 1 the report must be
+    // byte-identical to an override-free run (CI's pipelined-vs-serial
+    // invisibility gate).
+    if args.get("outstanding").is_some() {
+        spec.outstanding_override = Some(outstanding_arg(args));
     }
     let filter = args.get("filter").map(str::to_string);
     if args.flag("list") {

@@ -6,5 +6,5 @@
 pub mod recorder;
 pub mod window;
 
-pub use recorder::{Context, OverlapStats, Recorder, StallBreakdown};
+pub use recorder::{Context, OverlapStats, PipelineStats, Recorder, StallBreakdown};
 pub use window::{WindowSample, NUM_FEATURES};

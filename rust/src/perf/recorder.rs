@@ -124,6 +124,54 @@ pub struct BatchStats {
     pub saved_bytes: u64,
 }
 
+/// Pipelined-HTP (tagged/credit, docs/htp-wire.md §5) occupancy and
+/// overlap accounting. All counters stay zero at `depth = 1`, where the
+/// channel speaks the legacy serial protocol byte-for-byte — the
+/// recorder surface (and hence every report) is unchanged there.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PipelineStats {
+    /// Negotiated outstanding-transaction depth (1 = serial stop-and-wait).
+    pub depth: u32,
+    /// Frames carried with tag headers (depth > 1 only).
+    pub tagged_frames: u64,
+    /// Tag/lead-byte framing overhead on the wire (both directions) —
+    /// tracked apart from `by_kind` like `BatchStats::header_bytes`.
+    pub tag_bytes: u64,
+    /// Channel ticks overlapped with banked service windows (the
+    /// pipelining win; subtracted from recorded channel stall).
+    pub hidden_ticks: u64,
+    /// Channel ticks the hart still stalled on framed transactions
+    /// after overlap — the residual fig16/table4 dimension.
+    pub credit_stall_ticks: u64,
+    /// Speculative `ArgPush` frames issued from static per-site hints.
+    pub spec_pushes: u64,
+    /// Bytes those pushes added to completion frames.
+    pub spec_push_bytes: u64,
+    /// High-water mark of concurrently outstanding tagged frames.
+    pub peak_outstanding: u64,
+    /// Issue attempts that found the credit pool empty.
+    pub credit_waits: u64,
+}
+
+impl PipelineStats {
+    /// Stable JSON form for sweep reports (member order is fixed). Only
+    /// emitted at depth > 1 — serial runs keep the legacy report shape.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(vec![
+            ("depth".into(), Json::u64(self.depth as u64)),
+            ("tagged_frames".into(), Json::u64(self.tagged_frames)),
+            ("tag_bytes".into(), Json::u64(self.tag_bytes)),
+            ("hidden_ticks".into(), Json::u64(self.hidden_ticks)),
+            ("credit_stall_ticks".into(), Json::u64(self.credit_stall_ticks)),
+            ("spec_pushes".into(), Json::u64(self.spec_pushes)),
+            ("spec_push_bytes".into(), Json::u64(self.spec_push_bytes)),
+            ("peak_outstanding".into(), Json::u64(self.peak_outstanding)),
+            ("credit_waits".into(), Json::u64(self.credit_waits)),
+        ])
+    }
+}
+
 #[derive(Default)]
 pub struct Recorder {
     pub by_kind: BTreeMap<ReqKind, KindStats>,
@@ -141,6 +189,8 @@ pub struct Recorder {
     pub transactions: u64,
     /// Batching-layer accounting.
     pub batch: BatchStats,
+    /// Pipelined-HTP (tags/credits) accounting; inert at depth 1.
+    pub pipeline: PipelineStats,
     /// Per-hart trap overlap accounting (indexed by cpu; grown on use).
     pub overlap: Vec<OverlapStats>,
     /// Label of the transport these tallies were recorded over.
@@ -239,6 +289,8 @@ impl Recorder {
     pub fn total_bytes(&self) -> u64 {
         self.by_kind.values().map(|k| k.tx_bytes + k.rx_bytes).sum::<u64>()
             + self.batch.header_bytes
+            + self.pipeline.tag_bytes
+            + self.pipeline.spec_push_bytes
     }
 
     pub fn total_requests(&self) -> u64 {
@@ -246,13 +298,15 @@ impl Recorder {
     }
 
     /// Reset the tallies (e.g. between measured iterations) keeping
-    /// context and transport identity.
+    /// context, transport identity and negotiated pipeline depth.
     pub fn reset(&mut self) {
         let ctx = self.ctx;
         let transport = std::mem::take(&mut self.transport);
+        let depth = self.pipeline.depth;
         *self = Recorder::new();
         self.ctx = ctx;
         self.transport = transport;
+        self.pipeline.depth = depth;
     }
 
     /// Bytes grouped by syscall-context label (Fig 13 right-hand grouping).

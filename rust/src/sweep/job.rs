@@ -48,6 +48,13 @@ pub struct Job {
     pub engine_override: Option<EngineKind>,
     /// Label-invisible static-analysis mode; see [`SweepSpec::analysis`].
     pub analysis: AnalysisMode,
+    /// Outstanding-depth axis pin (`outstandings =` in the spec).
+    /// Recorded in the label as `+oN` on the arm segment — depth changes
+    /// FASE timing, so pinned scenarios are distinct identities.
+    pub outstanding_pin: Option<u32>,
+    /// Label-invisible depth selection (spec `outstanding =` key or CLI
+    /// `--outstanding`); see [`SweepSpec::outstanding_override`].
+    pub outstanding_override: Option<u32>,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -62,6 +69,7 @@ impl Job {
         core: String,
         seed: u64,
         engine_pin: Option<EngineKind>,
+        outstanding_pin: Option<u32>,
         spec: &SweepSpec,
     ) -> Job {
         let mut job = Job {
@@ -75,6 +83,8 @@ impl Job {
             engine_pin,
             engine_override: spec.engine_override,
             analysis: spec.analysis,
+            outstanding_pin,
+            outstanding_override: spec.outstanding_override,
             max_target_seconds: spec.max_target_seconds,
             dram_size: spec.dram_size,
         };
@@ -83,19 +93,24 @@ impl Job {
     }
 
     /// Stable scenario identity, the join key for baseline comparisons:
-    /// `workload|arm[+engine]|<harts>c|core|s<seed>`. The engine suffix
-    /// appears only for engine-axis pins, never for the label-invisible
-    /// override.
+    /// `workload|arm[+engine][+oN]|<harts>c|core|s<seed>`. The engine and
+    /// outstanding-depth suffixes appear only for axis pins, never for
+    /// the label-invisible overrides.
     pub fn label(&self) -> String {
         let pin = match self.engine_pin {
             Some(k) => format!("+{k}"),
             None => String::new(),
         };
+        let opin = match self.outstanding_pin {
+            Some(n) => format!("+o{n}"),
+            None => String::new(),
+        };
         format!(
-            "{}|{}{}|{}c|{}|s{}",
+            "{}|{}{}{}|{}c|{}|s{}",
             self.workload.name,
             self.arm.label(),
             pin,
+            opin,
             self.harts,
             self.core,
             self.seed
@@ -106,6 +121,12 @@ impl Job {
     /// override beats the axis pin beats the crate default.
     pub fn engine(&self) -> EngineKind {
         self.engine_override.or(self.engine_pin).unwrap_or_default()
+    }
+
+    /// The pipelined-HTP outstanding depth this job runs at: override
+    /// beats axis pin beats the serial default (1).
+    pub fn outstanding(&self) -> u32 {
+        self.outstanding_override.or(self.outstanding_pin).unwrap_or(1)
     }
 
     fn mode(&self) -> Mode {
@@ -139,6 +160,7 @@ impl Job {
             seed: self.prng_seed,
             engine: self.engine(),
             analysis: self.analysis,
+            outstanding: self.outstanding(),
         }
     }
 
@@ -291,6 +313,7 @@ mod tests {
             "rocket".into(),
             0,
             None,
+            None,
             &spec,
         )
     }
@@ -326,6 +349,7 @@ mod tests {
             1,
             "rocket".into(),
             0,
+            None,
             None,
             &spec,
         );

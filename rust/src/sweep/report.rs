@@ -37,6 +37,7 @@ fn job_json(o: &JobOutcome) -> Json {
         ("workload".into(), Json::str(&o.job.workload.name)),
         ("arm".into(), Json::str(o.job.arm.label())),
         ("engine".into(), Json::str(o.job.arm.engine())),
+        ("outstanding".into(), Json::u64(o.job.outstanding() as u64)),
         ("harts".into(), Json::u64(o.job.harts as u64)),
         ("core".into(), Json::str(&o.job.core)),
         ("seed".into(), Json::u64(o.job.seed)),

@@ -217,6 +217,19 @@ pub struct SweepSpec {
     /// `engine_override`, it never changes a scenario's identity, metrics,
     /// or PRNG stream (DESIGN.md §Analysis).
     pub analysis: AnalysisMode,
+    /// Outstanding-depth axis (`outstandings = 1, 2, 4`): pins each
+    /// scenario to one pipelined-HTP depth and records the pin in the
+    /// label (`+oN` on the arm segment) — depth changes FASE timing, so
+    /// pinned scenarios are distinct identities with their own PRNG
+    /// streams. Empty = one unpinned (depth 1) job per cell.
+    pub outstandings: Vec<u32>,
+    /// Label-*invisible* depth selection (`outstanding =` key, CLI
+    /// `--outstanding`): applied to every non-pinned job without changing
+    /// its identity or PRNG stream. Unlike `engine_override` it is not
+    /// metric-invisible — depth > 1 legitimately moves stall metrics (and
+    /// adds the `pipeline` report member); at depth 1 reports must stay
+    /// byte-identical to an override-free run, which CI gates.
+    pub outstanding_override: Option<u32>,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -234,6 +247,8 @@ impl SweepSpec {
             engines: Vec::new(),
             engine_override: None,
             analysis: AnalysisMode::default(),
+            outstandings: Vec::new(),
+            outstanding_override: None,
             max_target_seconds: 3000.0,
             dram_size: 1 << 31,
         }
@@ -251,29 +266,38 @@ impl SweepSpec {
         } else {
             self.engines.iter().copied().map(Some).collect()
         };
+        // Outstanding-depth axis: no pins = one unpinned job per cell.
+        let opins: Vec<Option<u32>> = if self.outstandings.is_empty() {
+            vec![None]
+        } else {
+            self.outstandings.iter().copied().map(Some).collect()
+        };
         let mut jobs = Vec::new();
         for w in &self.workloads {
             for arm in &self.arms {
                 for &pin in &pins {
-                    for &harts in &self.harts {
-                        for core in &self.cores {
-                            for &seed in &self.seeds {
-                                let job = super::job::Job::new(
-                                    jobs.len(),
-                                    w.clone(),
-                                    arm.clone(),
-                                    harts,
-                                    core.clone(),
-                                    seed,
-                                    pin,
-                                    self,
-                                );
-                                if let Some(f) = filter {
-                                    if !job.label().contains(f) {
-                                        continue;
+                    for &opin in &opins {
+                        for &harts in &self.harts {
+                            for core in &self.cores {
+                                for &seed in &self.seeds {
+                                    let job = super::job::Job::new(
+                                        jobs.len(),
+                                        w.clone(),
+                                        arm.clone(),
+                                        harts,
+                                        core.clone(),
+                                        seed,
+                                        pin,
+                                        opin,
+                                        self,
+                                    );
+                                    if let Some(f) = filter {
+                                        if !job.label().contains(f) {
+                                            continue;
+                                        }
                                     }
+                                    jobs.push(job);
                                 }
-                                jobs.push(job);
                             }
                         }
                     }
@@ -349,6 +373,20 @@ impl SweepSpec {
         if let Some(a) = cfg.get(sec, "analysis") {
             spec.analysis =
                 AnalysisMode::parse(a).ok_or_else(|| format!("bad analysis mode {a:?}"))?;
+        }
+        let parse_depth = |v: &str| -> Result<u32, String> {
+            crate::util::cli::parse_u64(v)
+                .filter(|&n| n >= 1 && n <= 127)
+                .map(|n| n as u32)
+                .ok_or_else(|| format!("bad outstanding depth {v:?} (want 1..=127)"))
+        };
+        spec.outstandings = cfg
+            .list_or(sec, "outstandings", &[])
+            .iter()
+            .map(|v| parse_depth(v))
+            .collect::<Result<_, _>>()?;
+        if let Some(o) = cfg.get(sec, "outstanding") {
+            spec.outstanding_override = Some(parse_depth(o)?);
         }
         let cores = cfg.list_or(sec, "cores", &[]);
         if !cores.is_empty() {
@@ -466,6 +504,40 @@ mod tests {
         let bad = "[sweep]\nworkloads = spin:1\narms = fullsys\n";
         assert!(SweepSpec::parse(&format!("{bad}engines = jit\n"), "x").is_err());
         assert!(SweepSpec::parse(&format!("{bad}engine = jit\n"), "x").is_err());
+    }
+
+    #[test]
+    fn outstanding_axis_pins_labels_and_override_stays_invisible() {
+        let spec = SweepSpec::parse(
+            "[sweep]\nworkloads = storm:8\narms = fase@uart:921600\noutstandings = 1, 2, 4\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(spec.outstandings, vec![1, 2, 4]);
+        let jobs = spec.expand(None);
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].label(), "storm:8|fase@uart:921600+o1|1c|rocket|s0");
+        assert_eq!(jobs[1].label(), "storm:8|fase@uart:921600+o2|1c|rocket|s0");
+        assert_eq!(jobs[2].label(), "storm:8|fase@uart:921600+o4|1c|rocket|s0");
+        assert_ne!(jobs[0].prng_seed, jobs[1].prng_seed);
+        assert_eq!(jobs[0].outstanding(), 1);
+        assert_eq!(jobs[2].outstanding(), 4);
+
+        let ov = SweepSpec::parse(
+            "[sweep]\nworkloads = storm:8\narms = fase@uart:921600\noutstanding = 2\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(ov.outstanding_override, Some(2));
+        let jobs = ov.expand(None);
+        assert_eq!(jobs.len(), 1);
+        // Label-invisible: identity (and PRNG stream) unchanged by override.
+        assert_eq!(jobs[0].label(), "storm:8|fase@uart:921600|1c|rocket|s0");
+        assert_eq!(jobs[0].outstanding(), 2);
+
+        let bad = "[sweep]\nworkloads = storm:8\narms = fullsys\n";
+        assert!(SweepSpec::parse(&format!("{bad}outstandings = 0\n"), "x").is_err());
+        assert!(SweepSpec::parse(&format!("{bad}outstanding = 200\n"), "x").is_err());
     }
 
     #[test]

@@ -1,0 +1,85 @@
+//! Pipelined-HTP integration tests (docs/htp-wire.md §5, DESIGN.md
+//! §Transport).
+//!
+//! Depth 1 must keep the legacy serial protocol byte-for-byte — no tag
+//! overhead, no `pipeline` report member. Deeper windows trade a few tag
+//! bytes for hidden wire time, so the storm workload's channel stall must
+//! fall *strictly* as the window deepens, while the architectural surface
+//! (retired instructions, user ticks) holds still.
+
+use fase::coordinator::runtime::{run_exe, Mode, RunConfig, RunResult};
+use fase::coordinator::target::HostLatency;
+use fase::fase::transport::TransportSpec;
+use fase::sweep::SynthKind;
+
+fn storm_at(transport: TransportSpec, outstanding: u32) -> RunResult {
+    let cfg = RunConfig {
+        mode: Mode::Fase { transport, hfutex: true, latency: HostLatency::default() },
+        dram_size: 64 << 20,
+        max_target_seconds: 60.0,
+        outstanding,
+        ..Default::default()
+    };
+    let exe = fase::sweep::synth::build(SynthKind::Storm { calls: 24 });
+    let r = run_exe(cfg, &exe, &["storm:24".to_string()], &[]);
+    assert_eq!(r.error, None, "o{outstanding}: {:?}", r.error);
+    assert_eq!(r.exit_code, 0, "o{outstanding}");
+    r
+}
+
+#[test]
+fn depth_one_is_the_legacy_serial_protocol() {
+    let r = storm_at(TransportSpec::uart(921_600), 1);
+    // No tagged framing, no hidden time, no credit machinery at depth 1.
+    assert_eq!(r.pipeline.depth, 1);
+    assert_eq!(r.pipeline.tagged_frames, 0);
+    assert_eq!(r.pipeline.tag_bytes, 0);
+    assert_eq!(r.pipeline.hidden_ticks, 0);
+    assert_eq!(r.pipeline.spec_pushes, 0);
+    // ... and the report keeps the pre-pipelining shape: no `pipeline`
+    // member (the CI invisibility gate diffs whole report files on this).
+    let json = r.metrics_json(None).to_string_pretty();
+    assert!(!json.contains("\"pipeline\""), "depth-1 report grew a pipeline member:\n{json}");
+}
+
+#[test]
+fn channel_stall_strictly_decreases_with_depth() {
+    let runs: Vec<RunResult> =
+        [1u32, 2, 4].iter().map(|&d| storm_at(TransportSpec::uart(921_600), d)).collect();
+    let stalls: Vec<u64> = runs.iter().map(|r| r.stall.channel_ticks).collect();
+    assert!(
+        stalls[0] > stalls[1] && stalls[1] > stalls[2],
+        "channel stall must fall strictly with depth 1 -> 2 -> 4: {stalls:?}"
+    );
+    // Total target time follows the stall down.
+    assert!(runs[0].ticks > runs[2].ticks, "{} !> {}", runs[0].ticks, runs[2].ticks);
+    // Deeper windows hide more wire time and carry real tag overhead.
+    assert!(runs[1].pipeline.hidden_ticks > 0);
+    assert!(runs[2].pipeline.hidden_ticks >= runs[1].pipeline.hidden_ticks);
+    assert!(runs[1].pipeline.tagged_frames > 0);
+    assert!(runs[1].pipeline.tag_bytes > 0);
+    // Pipelining moves stall, never the architectural surface.
+    for r in &runs[1..] {
+        assert_eq!(r.instret, runs[0].instret, "retired count moved at depth {}", r.pipeline.depth);
+        assert_eq!(r.uticks, runs[0].uticks, "user ticks moved at depth {}", r.pipeline.depth);
+    }
+    // The report grows a `pipeline` member only once the window opens.
+    let json = runs[2].metrics_json(None).to_string_pretty();
+    assert!(json.contains("\"pipeline\""), "depth-4 report lacks the pipeline member:\n{json}");
+    assert!(json.contains("\"depth\": 4"), "{json}");
+}
+
+#[test]
+fn loopback_has_no_wire_time_to_hide() {
+    // Loopback transfers cost zero channel ticks, so there is no wire
+    // time to overlap: the skid buffer banks nothing and nothing hides.
+    // Speculative argument pushes may still spare whole frames (and their
+    // per-request host latency), so target time can only improve.
+    let serial = storm_at(TransportSpec::Loopback, 1);
+    let piped = storm_at(TransportSpec::Loopback, 4);
+    assert_eq!(serial.stall.channel_ticks, 0);
+    assert_eq!(piped.stall.channel_ticks, 0);
+    assert_eq!(piped.pipeline.hidden_ticks, 0);
+    assert_eq!(serial.instret, piped.instret);
+    assert!(piped.ticks <= serial.ticks, "{} > {}", piped.ticks, serial.ticks);
+}
