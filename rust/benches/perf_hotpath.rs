@@ -3,8 +3,9 @@
 //!   and PJRT timing-model batch throughput vs the native mirror.
 
 use fase::bench_support::*;
-use fase::coordinator::target::{FaseTarget, HostLatency, TargetOps};
-use fase::mem::MemLatency;
+use fase::coordinator::runtime::{run_exe, Mode, RunConfig};
+use fase::coordinator::target::{FaseTarget, HostLatency, KernelCosts, TargetOps};
+use fase::mem::{LsuMode, MemLatency};
 use fase::perf::window::{TimingCoeffs, WindowSample, NUM_FEATURES};
 use fase::rv64::decode::encode;
 use fase::rv64::hart::CoreModel;
@@ -12,6 +13,7 @@ use fase::rv64::EngineKind;
 use fase::soc::detailed::DetailedEngine;
 use fase::soc::machine::DRAM_BASE;
 use fase::soc::{Machine, MachineConfig};
+use fase::sweep::{synth, SynthKind};
 use fase::util::prng::Prng;
 use std::time::Instant;
 
@@ -110,6 +112,50 @@ fn main() {
         tab.row(vec![
             "prewarm decode misses (1 hart)".into(),
             format!("{} built at runtime vs {} prewarmed", s.blocks_built, s.prewarmed),
+        ]);
+    }
+
+    // LSU fast path (DESIGN.md §LSU fast path): paged memory-heavy
+    // workloads end-to-end through the full-system stack, slow vs fast.
+    // Reports are byte-identical across modes; only host MIPS moves.
+    for (name, kind) in [
+        ("memtouch:2048", SynthKind::MemTouch { pages: 2048 }),
+        ("stride:2048:64", SynthKind::Stride { pages: 2048, stride: 64 }),
+    ] {
+        let mut mips = [0.0f64; 2];
+        for (li, lsu) in [LsuMode::Slow, LsuMode::Fast].into_iter().enumerate() {
+            let exe = synth::build(kind);
+            let cfg = RunConfig {
+                mode: Mode::FullSys { costs: KernelCosts::default() },
+                dram_size: 64 << 20,
+                preload_image: false,
+                preload_pages: 4,
+                max_target_seconds: 120.0,
+                lsu,
+                ..Default::default()
+            };
+            let r = run_exe(cfg, &exe, &[name.to_string()], &[]);
+            assert_eq!(r.error, None, "{name} under {lsu}: {:?}", r.error);
+            mips[li] = r.instret as f64 / r.wall_seconds.max(1e-9) / 1e6;
+            tab.row(vec![
+                format!("LSU {name} MIPS ({lsu})"),
+                format!("{:.1}", mips[li]),
+            ]);
+            if lsu == LsuMode::Fast {
+                let fp = r.fastpath;
+                let rate = 100.0 * fp.hits as f64 / (fp.hits + fp.fills).max(1) as f64;
+                tab.row(vec![
+                    format!("LSU {name} fast-path hit rate"),
+                    format!(
+                        "{rate:.1}% ({} hits, {} fills, {} spills)",
+                        fp.hits, fp.fills, fp.spills
+                    ),
+                ]);
+            }
+        }
+        tab.row(vec![
+            format!("LSU fast/slow speedup ({name})"),
+            format!("{:.2}x", mips[1] / mips[0].max(1e-9)),
         ]);
     }
 

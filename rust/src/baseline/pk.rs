@@ -72,6 +72,7 @@ impl PkTarget {
             core: cfg.core.clone(),
             quantum: 64,
             engine: cfg.engine,
+            ..Default::default()
         });
         let mut e = DetailedEngine::with_netlist(m, cfg.dram_skew, cfg.netlist_size, cfg.sim_threads);
         boot(&mut e, cfg.boot_instructions);

@@ -10,6 +10,7 @@ use super::vm::{AddressSpace, PageAlloc, VmError};
 use crate::analysis::AnalysisMode;
 use crate::elfio::read::Executable;
 use crate::fase::transport::TransportSpec;
+use crate::mem::{FastPathStats, LsuMode};
 use crate::perf::recorder::Context;
 use crate::perf::window::WindowSample;
 use crate::perf::{OverlapStats, PipelineStats, StallBreakdown};
@@ -59,6 +60,10 @@ pub struct RunConfig {
     /// pages become mapped. Architecturally invisible either way — the
     /// report surface never changes, only `EngineStats` move.
     pub analysis: AnalysisMode,
+    /// LSU strategy for the fast machine (DESIGN.md §LSU fast path).
+    /// Timing-neutral like `engine`: both modes must produce identical
+    /// metrics and may differ only in wall-clock.
+    pub lsu: LsuMode,
     /// Outstanding-transaction depth for the pipelined HTP channel
     /// (docs/htp-wire.md §5). 1 = the legacy serial stop-and-wait
     /// protocol, byte-identical on the wire and in every report; deeper
@@ -88,6 +93,7 @@ impl Default for RunConfig {
             seed: 0xFA5E,
             engine: EngineKind::default(),
             analysis: AnalysisMode::default(),
+            lsu: LsuMode::default(),
             outstanding: 1,
         }
     }
@@ -207,6 +213,9 @@ pub struct RunResult {
     /// Host-side block-cache counters (all zero on the interpreter).
     /// Excluded from `metrics_json` for the same reason.
     pub engine_stats: EngineStats,
+    /// Host-side LSU fast-path counters (all zero in slow mode).
+    /// Excluded from `metrics_json` for the same reason.
+    pub fastpath: FastPathStats,
     /// Pipelined-HTP occupancy/overlap tallies. All-zero (depth 1) runs
     /// keep the legacy report shape: `metrics_json` emits a `pipeline`
     /// member only at depth > 1, so serial reports stay byte-identical.
@@ -263,6 +272,7 @@ impl RunResult {
             windows: Vec::new(),
             engine: "none".into(),
             engine_stats: EngineStats::default(),
+            fastpath: FastPathStats::default(),
             pipeline: PipelineStats::default(),
         }
     }
@@ -417,6 +427,7 @@ impl Runtime {
             core: cfg.core.clone(),
             quantum: 256,
             engine: cfg.engine,
+            lsu: cfg.lsu,
         };
         let machine = Machine::new(mcfg);
         let target: Box<dyn TargetOps> = match &cfg.mode {
@@ -876,9 +887,11 @@ impl Runtime {
         let instret = self.target.machine().instret();
         let engine_kind = self.target.machine().engine_kind();
         let engine_stats = self.target.machine().engine_stats();
+        let fastpath = self.target.machine().lsu_stats();
         let filtered = self.target.filtered_wakes();
         let rec = self.target.recorder();
         rec.engine = engine_stats;
+        rec.fastpath = fastpath;
         let bytes_by_kind = rec
             .by_kind
             .iter()
@@ -922,6 +935,7 @@ impl Runtime {
             windows: std::mem::take(&mut self.windows),
             engine: engine_kind.label().to_string(),
             engine_stats,
+            fastpath,
             pipeline: rec.pipeline,
         }
     }

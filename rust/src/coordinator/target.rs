@@ -926,10 +926,7 @@ impl DirectTarget {
     }
 
     fn pollute(&mut self, cpu: usize) {
-        let d = self.k.pollute_denom;
-        self.m.ms.tlbs[cpu].pollute(1, d);
-        self.m.ms.l1d[cpu].pollute(1, d);
-        self.m.ms.l1i[cpu].pollute(1, d);
+        self.m.ms.host_pollute(cpu, 1, self.k.pollute_denom);
     }
 
     /// Deliver pending timer interrupts (round-robin across running cores).
@@ -1042,8 +1039,7 @@ impl TargetOps for DirectTarget {
     }
     fn mem_w(&mut self, cpu: usize, paddr: u64, val: u64) {
         // Kernel stores go through the cache hierarchy too.
-        let line = paddr & !(LINE - 1);
-        self.m.ms.l1d[cpu].access(line, true);
+        self.m.ms.host_line_access(cpu, paddr, true);
         self.m.ms.phys.write_u64(paddr, val);
         self.m.ms.note_phys_write(paddr, 8);
     }
@@ -1054,7 +1050,7 @@ impl TargetOps for DirectTarget {
         }
         for l in 0..64 {
             let line = base + l * LINE;
-            self.m.ms.l1d[cpu].access(line, true);
+            self.m.ms.host_line_access(cpu, line, true);
             self.m.ms.l2.access(line, true);
         }
         self.m.ms.note_phys_write(base, 4096);
@@ -1067,8 +1063,8 @@ impl TargetOps for DirectTarget {
             self.m.ms.phys.write_u64(d + i * 8, v);
         }
         for l in 0..64 {
-            self.m.ms.l1d[cpu].access(s + l * LINE, false);
-            self.m.ms.l1d[cpu].access(d + l * LINE, true);
+            self.m.ms.host_line_access(cpu, s + l * LINE, false);
+            self.m.ms.host_line_access(cpu, d + l * LINE, true);
         }
         self.m.ms.note_phys_write(d, 4096);
         self.kernel_work(cpu, 1200);
@@ -1087,7 +1083,7 @@ impl TargetOps for DirectTarget {
             .expect("page in range")
             .copy_from_slice(data);
         for l in 0..64 {
-            self.m.ms.l1d[cpu].access((ppn << 12) + l * LINE, true);
+            self.m.ms.host_line_access(cpu, (ppn << 12) + l * LINE, true);
         }
         self.m.ms.note_phys_write(ppn << 12, 4096);
         self.kernel_work(cpu, 900);

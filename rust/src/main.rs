@@ -16,6 +16,7 @@
 use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
 use fase::coordinator::target::{HostLatency, KernelCosts};
 use fase::fase::transport::TransportSpec;
+use fase::mem::LsuMode;
 use fase::rv64::hart::CoreModel;
 use fase::rv64::EngineKind;
 use fase::util::cli::Args;
@@ -35,17 +36,17 @@ fn main() {
             eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
             eprintln!("           [--core rocket|cva6] [--engine interp|block]");
             eprintln!("           [--analysis off|report|prewarm] [--outstanding N]");
-            eprintln!("           [--no-hfutex] [--no-batch]");
+            eprintln!("           [--lsu slow|fast] [--no-hfutex] [--no-batch]");
             eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
             eprintln!("           [--quiet] [--report] [--max-seconds S]");
             eprintln!("           [--ideal-latency] [-- guest args]");
             eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
             eprintln!("           [--engine interp|block] [--analysis off|report|prewarm]");
-            eprintln!("           [--outstanding N] [--filter SUBSTR]");
+            eprintln!("           [--lsu slow|fast] [--outstanding N] [--filter SUBSTR]");
             eprintln!("           [--check-against baseline.json]");
             eprintln!("           [--compare-only report.json] [--require-baseline]");
             eprintln!("           [--list] [--quiet]");
-            eprintln!("  fase analyze <elf|spin:N|storm:N|memtouch:N|probe:N>");
+            eprintln!("  fase analyze <elf|spin:N|storm:N|memtouch:N|stride:P:S|probe:N>");
             eprintln!("           [--json report.json] [--strict] [--quiet]");
             eprintln!("           static CFG + syscall-site inventory + audit, no");
             eprintln!("           execution; --strict exits 1 on unimplemented");
@@ -67,6 +68,17 @@ fn analysis_arg(args: &Args) -> fase::analysis::AnalysisMode {
     let s = args.str_or("analysis", fase::analysis::AnalysisMode::default().label());
     fase::analysis::AnalysisMode::parse(&s).unwrap_or_else(|| {
         eprintln!("unknown analysis mode {s:?}; use off, report or prewarm");
+        std::process::exit(2);
+    })
+}
+
+/// LSU mode (DESIGN.md §LSU fast path): `fast` (default) lets
+/// state-invariant accesses replay through the per-hart fast-path cache,
+/// `slow` forces the full translate + timing path. Metric-invisible.
+fn lsu_arg(args: &Args) -> LsuMode {
+    let s = args.str_or("lsu", LsuMode::default().label());
+    LsuMode::parse(&s).unwrap_or_else(|| {
+        eprintln!("unknown lsu mode {s:?}; use slow or fast");
         std::process::exit(2);
     })
 }
@@ -117,6 +129,7 @@ fn build_config(args: &Args) -> RunConfig {
         seed: args.u64_or("seed", 0xFA5E),
         engine: engine_arg(args),
         analysis: analysis_arg(args),
+        lsu: lsu_arg(args),
         outstanding: outstanding_arg(args),
     }
 }
@@ -178,6 +191,10 @@ fn cmd_run(args: &Args) {
             res.engine_stats.chained,
             res.engine_stats.evicted,
             res.engine_stats.prewarmed
+        );
+        eprintln!(
+            "lsu fast path    : {} hits, {} fills, {} spills, {} epoch flushes",
+            res.fastpath.hits, res.fastpath.fills, res.fastpath.spills, res.fastpath.epoch_flushes
         );
         eprintln!("transport        : {}", res.transport);
         eprintln!(
@@ -318,6 +335,11 @@ fn cmd_sweep(args: &Args) {
     // members but never moves a gated metric.
     if args.get("analysis").is_some() {
         spec.analysis = analysis_arg(args);
+    }
+    // Label-invisible LSU-mode selection: `--lsu slow` vs `fast` reports
+    // must be byte-identical (the CI LSU differential gate).
+    if args.get("lsu").is_some() {
+        spec.lsu_override = Some(lsu_arg(args));
     }
     // Label-invisible outstanding-depth selection. Unlike --engine it is
     // not metric-invisible at depth > 1; at depth 1 the report must be

@@ -1,0 +1,249 @@
+//! Softmmu-style per-hart LSU fast path (DESIGN.md §LSU fast path).
+//!
+//! A direct-mapped VA→PA micro-cache consulted *before* `mmu::translate`
+//! on the load/store/fetch hot paths. Entries live in three separate
+//! views — read, write, fetch — so the permission check collapses into
+//! the entry compare: a view is only ever filled from a slow-path
+//! translate that already passed `check_perm` for that access kind.
+//!
+//! The contract is strict state-invariance: a fast hit may be taken only
+//! when the replayed state evolution (TLB hit counter, L1D/L1I MRU-way
+//! `repeat_hit`, zero extra cycles, no events, no coherence traffic) is
+//! provably identical to what the slow path would have done. Everything
+//! else — TLB-missing pages, superpages, non-MRU lines, page-crossing
+//! and MMIO accesses, LR/SC/AMO — falls through to the classic path.
+//! `MemSys` enforces the conditions; this module only holds the entry
+//! arrays, the per-hart MRU/exclusivity bookkeeping, and the epoch-based
+//! wholesale invalidation used by the shootdown edges.
+
+use std::fmt;
+
+/// Entries per view (direct-mapped over the low VPN bits).
+pub const FP_ENTRIES: usize = 64;
+
+/// LSU strategy: `Slow` is the classic translate-every-access path,
+/// `Fast` (the default) consults the fast path first. Label-invisible
+/// like `EngineKind`: reports must be byte-identical across modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LsuMode {
+    Slow,
+    #[default]
+    Fast,
+}
+
+impl LsuMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            LsuMode::Slow => "slow",
+            LsuMode::Fast => "fast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LsuMode> {
+        match s {
+            "slow" => Some(LsuMode::Slow),
+            "fast" => Some(LsuMode::Fast),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for LsuMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Host-side LSU fast-path counters (diagnostics only — never part of
+/// the deterministic report surface, mirroring `EngineStats`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FastPathStats {
+    /// Accesses served entirely by the fast path.
+    pub hits: u64,
+    /// Entries installed by the slow path (promote-on-reuse for data).
+    pub fills: u64,
+    /// Fills that displaced a live entry mapping a different page.
+    pub spills: u64,
+    /// Wholesale epoch invalidations (sfence.vma, fence.i, pollution).
+    pub epoch_flushes: u64,
+}
+
+/// Which view an entry lives in (one per access kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum View {
+    Read,
+    Write,
+    Fetch,
+}
+
+/// Outcome of a fill attempt, for stats accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fill {
+    /// The identical translation was already cached.
+    Present,
+    /// Installed into an empty (or stale-epoch) slot.
+    Filled,
+    /// Installed over a live entry for a different page.
+    Spilled,
+}
+
+#[derive(Clone, Copy, Default)]
+struct FpEntry {
+    vpn: u64,
+    ppn: u64,
+    flags: u8,
+    epoch: u32,
+    valid: bool,
+}
+
+/// One hart's fast-path state: the three translation views plus the
+/// MRU-line bookkeeping that gates cache-counter replay.
+pub struct HartLsu {
+    read: Vec<FpEntry>,
+    write: Vec<FpEntry>,
+    fetch: Vec<FpEntry>,
+    /// Current epoch; entries from older epochs are dead. Bumping this
+    /// is the O(1) wholesale flush the shootdown edges use.
+    epoch: u32,
+    /// Last D-line this hart accessed through the timed slow path — the
+    /// line `Cache::repeat_hit` on its L1D is valid for. Cleared when a
+    /// coherence invalidation or a host-side access moves the MRU way.
+    pub mru: Option<u64>,
+    /// D-line this hart holds exclusively: its last slow store's
+    /// coherence scan invalidated every other copy and cleared every
+    /// other hart's reservation on it, and nothing has touched it since.
+    /// A fast store may skip the scan only on this line.
+    pub excl: Option<u64>,
+    /// Last I-line fetched (L1I `repeat_hit` validity), per the block
+    /// engine's rule: only the hart's own fetches touch its L1I.
+    pub iline: Option<u64>,
+}
+
+impl HartLsu {
+    pub fn new() -> HartLsu {
+        HartLsu {
+            read: vec![FpEntry::default(); FP_ENTRIES],
+            write: vec![FpEntry::default(); FP_ENTRIES],
+            fetch: vec![FpEntry::default(); FP_ENTRIES],
+            epoch: 1, // entries default to epoch 0: born invalid
+            mru: None,
+            excl: None,
+            iline: None,
+        }
+    }
+
+    fn view(&self, view: View) -> &[FpEntry] {
+        match view {
+            View::Read => &self.read,
+            View::Write => &self.write,
+            View::Fetch => &self.fetch,
+        }
+    }
+
+    fn view_mut(&mut self, view: View) -> &mut [FpEntry] {
+        match view {
+            View::Read => &mut self.read,
+            View::Write => &mut self.write,
+            View::Fetch => &mut self.fetch,
+        }
+    }
+
+    /// Cached `(ppn, flags)` for `vpn` in `view`, if live. The caller
+    /// must still revalidate the pair against the hart's TLB so that a
+    /// same-VPN remap behind our back can never serve a stale page.
+    #[inline]
+    pub fn get(&self, view: View, vpn: u64) -> Option<(u64, u8)> {
+        let e = &self.view(view)[(vpn as usize) & (FP_ENTRIES - 1)];
+        (e.valid && e.epoch == self.epoch && e.vpn == vpn).then_some((e.ppn, e.flags))
+    }
+
+    /// Install a translation the slow path just validated for `view`.
+    pub fn fill(&mut self, view: View, vpn: u64, ppn: u64, flags: u8) -> Fill {
+        let epoch = self.epoch;
+        let e = &mut self.view_mut(view)[(vpn as usize) & (FP_ENTRIES - 1)];
+        let outcome = if e.valid && e.epoch == epoch {
+            if e.vpn == vpn && e.ppn == ppn && e.flags == flags {
+                return Fill::Present;
+            }
+            Fill::Spilled
+        } else {
+            Fill::Filled
+        };
+        *e = FpEntry { vpn, ppn, flags, epoch, valid: true };
+        outcome
+    }
+
+    /// O(1) wholesale invalidation of every translation view.
+    pub fn bump_epoch(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Wrapped into the default-entry epoch: scrub so stale
+            // entries cannot resurrect (once per 2^32 flushes).
+            for v in [View::Read, View::Write, View::Fetch] {
+                for e in self.view_mut(v) {
+                    e.valid = false;
+                }
+            }
+            self.epoch = 1;
+        }
+    }
+}
+
+impl Default for HartLsu {
+    fn default() -> Self {
+        HartLsu::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels_round_trip() {
+        for m in [LsuMode::Slow, LsuMode::Fast] {
+            assert_eq!(LsuMode::parse(m.label()), Some(m));
+            assert_eq!(format!("{m}"), m.label());
+        }
+        assert_eq!(LsuMode::parse("warp"), None);
+        assert_eq!(LsuMode::default(), LsuMode::Fast);
+    }
+
+    #[test]
+    fn fill_get_and_views_are_independent() {
+        let mut l = HartLsu::new();
+        assert_eq!(l.get(View::Read, 0x40), None);
+        assert_eq!(l.fill(View::Read, 0x40, 0x999, 0x1f), Fill::Filled);
+        assert_eq!(l.get(View::Read, 0x40), Some((0x999, 0x1f)));
+        assert_eq!(l.get(View::Write, 0x40), None, "views are separate");
+        assert_eq!(l.get(View::Fetch, 0x40), None);
+        assert_eq!(l.fill(View::Read, 0x40, 0x999, 0x1f), Fill::Present);
+    }
+
+    #[test]
+    fn conflicting_vpns_spill() {
+        let mut l = HartLsu::new();
+        assert_eq!(l.fill(View::Write, 0x0, 1, 0xff), Fill::Filled);
+        // Same direct-mapped slot (index = vpn & 63), different page.
+        assert_eq!(l.fill(View::Write, FP_ENTRIES as u64, 2, 0xff), Fill::Spilled);
+        assert_eq!(l.get(View::Write, 0x0), None);
+        assert_eq!(l.get(View::Write, FP_ENTRIES as u64), Some((2, 0xff)));
+        // Same slot, same vpn, different translation: also a spill.
+        assert_eq!(l.fill(View::Write, FP_ENTRIES as u64, 3, 0xff), Fill::Spilled);
+    }
+
+    #[test]
+    fn epoch_bump_kills_every_view_in_o1() {
+        let mut l = HartLsu::new();
+        l.fill(View::Read, 1, 10, 0xff);
+        l.fill(View::Write, 2, 20, 0xff);
+        l.fill(View::Fetch, 3, 30, 0xff);
+        l.bump_epoch();
+        assert_eq!(l.get(View::Read, 1), None);
+        assert_eq!(l.get(View::Write, 2), None);
+        assert_eq!(l.get(View::Fetch, 3), None);
+        // Refill after the flush works (new epoch stamped).
+        assert_eq!(l.fill(View::Read, 1, 10, 0xff), Fill::Filled);
+        assert_eq!(l.get(View::Read, 1), Some((10, 0xff)));
+    }
+}

@@ -8,6 +8,7 @@
 //! convert to cycles through the core cost model.
 
 pub mod cache;
+pub mod fastpath;
 pub mod mmu;
 pub mod phys;
 pub mod tlb;
@@ -15,8 +16,12 @@ pub mod tlb;
 use crate::rv64::inst::Width;
 use crate::rv64::Trap;
 use cache::{Cache, CacheConfig};
+use fastpath::{Fill, HartLsu, View};
+use mmu::Satp;
 use phys::PhysMem;
 use tlb::Tlb;
+
+pub use fastpath::{FastPathStats, LsuMode};
 
 /// Memory access type, for permission checks and fault causes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +92,13 @@ pub struct MemSys {
     /// this is the whole invalidation contract for cached decodes.
     icache_epoch: u64,
     dram_base: u64,
+    /// LSU strategy (DESIGN.md §LSU fast path). `Fast` consults the
+    /// per-hart softmmu-style views before `mmu::translate`; `Slow` is
+    /// the classic path. State-invariant: reports are byte-identical.
+    lsu: LsuMode,
+    /// Per-hart fast-path state (translation views + MRU bookkeeping).
+    fp: Vec<HartLsu>,
+    fp_stats: FastPathStats,
 }
 
 pub const LINE: u64 = 64;
@@ -108,11 +120,26 @@ impl MemSys {
             code_gen: vec![0; (dram_size >> 12) as usize],
             icache_epoch: 0,
             dram_base,
+            lsu: LsuMode::default(),
+            fp: (0..n_harts).map(|_| HartLsu::new()).collect(),
+            fp_stats: FastPathStats::default(),
         }
     }
 
     pub fn n_harts(&self) -> usize {
         self.n_harts
+    }
+
+    pub fn set_lsu(&mut self, mode: LsuMode) {
+        self.lsu = mode;
+    }
+
+    pub fn lsu(&self) -> LsuMode {
+        self.lsu
+    }
+
+    pub fn fastpath_stats(&self) -> FastPathStats {
+        self.fp_stats
     }
 
     /// Timing for a cacheable access by `hart`. Returns extra cycles beyond
@@ -136,16 +163,25 @@ impl MemSys {
             }
         }
         // Cross-core coherence: a write to a line present in another hart's
-        // L1D forces an invalidation round-trip.
-        if write {
+        // L1D forces an invalidation round-trip. Single-hart runs have no
+        // other copies or reservations to scan by construction.
+        if write && self.n_harts > 1 {
             let mut invalidated = false;
             for h in 0..self.n_harts {
-                if h != hart && self.l1d[h].probe_invalidate(line) {
-                    invalidated = true;
-                    self.evt[hart].coherence_inval += 1;
-                }
-                // Any store clobbers other harts' LR reservations on the line.
                 if h != hart {
+                    if self.l1d[h].probe_invalidate(line) {
+                        invalidated = true;
+                        self.evt[hart].coherence_inval += 1;
+                        // The invalidated way may be h's MRU way; its
+                        // repeat_hit shortcut is no longer valid.
+                        if self.fp[h].mru == Some(line) {
+                            self.fp[h].mru = None;
+                        }
+                    }
+                    if self.fp[h].excl == Some(line) {
+                        self.fp[h].excl = None;
+                    }
+                    // Any store clobbers other harts' LR reservations on the line.
                     if let Some(r) = self.resv[h] {
                         if r == line {
                             self.resv[h] = None;
@@ -155,6 +191,25 @@ impl MemSys {
             }
             if invalidated {
                 cycles += self.lat.coherence;
+            }
+        } else if !write && !fetch && self.n_harts > 1 {
+            // A read pulls a copy into this hart's L1D: no other hart may
+            // keep skipping the coherence scan on this line.
+            for h in 0..self.n_harts {
+                if h != hart && self.fp[h].excl == Some(line) {
+                    self.fp[h].excl = None;
+                }
+            }
+        }
+        // MRU bookkeeping for the fast path: this line is now the one
+        // `repeat_hit` is valid for, and after a store's scan no other
+        // copy or foreign reservation of it exists.
+        if fetch {
+            self.fp[hart].iline = Some(line);
+        } else {
+            self.fp[hart].mru = Some(line);
+            if write {
+                self.fp[hart].excl = Some(line);
             }
         }
         cycles
@@ -209,9 +264,206 @@ impl MemSys {
         Ok(cycles)
     }
 
+    /// State-invariance gate shared by the fast data paths: the access
+    /// must stay inside one DRAM line (no MMIO, no page/line crossing)
+    /// and hit the hart's MRU L1D way, and the cached translation must
+    /// still be the TLB's current one (so a same-VPN remap can never
+    /// serve a stale page). Returns the physical address on pass.
+    #[inline]
+    fn fp_data_check(&self, hart: usize, view: View, va: u64, n: u64) -> Option<u64> {
+        let vpn = va >> 12;
+        let (ppn, flags) = self.fp[hart].get(view, vpn)?;
+        let pa = (ppn << 12) | (va & 0xfff);
+        if (pa & (LINE - 1)) + n > LINE || pa < self.dram_base {
+            return None;
+        }
+        if self.fp[hart].mru != Some(pa & !(LINE - 1)) {
+            return None;
+        }
+        if self.tlbs[hart].probe_entry(vpn) != Some((ppn, flags)) {
+            return None;
+        }
+        Some(pa)
+    }
+
+    /// Replay the state evolution of a slow-path TLB-hit + L1D-hit access:
+    /// one TLB hit, one MRU-way re-reference, zero extra cycles, no events.
+    #[inline]
+    fn fp_data_replay(&mut self, hart: usize) {
+        self.tlbs[hart].hits += 1;
+        self.l1d[hart].repeat_hit();
+        self.fp_stats.hits += 1;
+    }
+
+    /// Install the TLB's current translation for `vpn` into `view` —
+    /// only ever called right after the slow path validated the access
+    /// kind, so the view's permission check is the fill itself.
+    #[inline]
+    fn fp_fill(&mut self, hart: usize, view: View, vpn: u64) {
+        if let Some((ppn, flags)) = self.tlbs[hart].probe_entry(vpn) {
+            match self.fp[hart].fill(view, vpn, ppn, flags) {
+                Fill::Present => {}
+                Fill::Filled => self.fp_stats.fills += 1,
+                Fill::Spilled => {
+                    self.fp_stats.fills += 1;
+                    self.fp_stats.spills += 1;
+                }
+            }
+        }
+    }
+
+    /// VA load through the LSU: fast path when provably state-invariant,
+    /// the classic translate+load otherwise. Returns (value, cycles).
+    pub fn vload(
+        &mut self,
+        hart: usize,
+        satp: Satp,
+        user: bool,
+        va: u64,
+        width: Width,
+    ) -> Result<(u64, u64), Trap> {
+        let paged = user && !satp.bare();
+        if paged && self.lsu == LsuMode::Fast {
+            if let Some(pa) = self.fp_data_check(hart, View::Read, va, width.bytes()) {
+                if let Some(val) = self.phys.read_n(pa, width.bytes()) {
+                    self.fp_data_replay(hart);
+                    return Ok((val, 0));
+                }
+            }
+        }
+        let hits0 = self.tlbs[hart].hits;
+        let (pa, c_xlat) = mmu::translate(self, hart, satp, user, va, Access::Load)?;
+        let (val, c_mem) = self.load(hart, pa, width)?;
+        // Promote on reuse: data views fill only from TLB-hit translates,
+        // so streaming once-per-page traffic never churns the views.
+        if paged && self.lsu == LsuMode::Fast && self.tlbs[hart].hits != hits0 {
+            self.fp_fill(hart, View::Read, va >> 12);
+        }
+        Ok((val, c_xlat + c_mem))
+    }
+
+    /// VA store through the LSU; same contract as [`vload`](Self::vload).
+    /// A fast store still writes physical memory and bumps the page's
+    /// write generation (the SMC/decoded-block contract), and skips the
+    /// coherence scan only on a line this hart holds exclusively.
+    pub fn vstore(
+        &mut self,
+        hart: usize,
+        satp: Satp,
+        user: bool,
+        va: u64,
+        width: Width,
+        val: u64,
+    ) -> Result<u64, Trap> {
+        let paged = user && !satp.bare();
+        if paged && self.lsu == LsuMode::Fast {
+            if let Some(pa) = self.fp_data_check(hart, View::Write, va, width.bytes()) {
+                let excl_ok = self.n_harts == 1 || self.fp[hart].excl == Some(pa & !(LINE - 1));
+                if excl_ok && self.phys.write_n(pa, width.bytes(), val) {
+                    self.note_phys_write(pa, width.bytes() as u64);
+                    self.fp_data_replay(hart);
+                    return Ok(0);
+                }
+            }
+        }
+        let hits0 = self.tlbs[hart].hits;
+        let (pa, c_xlat) = mmu::translate(self, hart, satp, user, va, Access::Store)?;
+        let c_mem = self.store(hart, pa, width, val)?;
+        if paged && self.lsu == LsuMode::Fast && self.tlbs[hart].hits != hits0 {
+            self.fp_fill(hart, View::Write, va >> 12);
+        }
+        Ok(c_xlat + c_mem)
+    }
+
+    /// Instruction-side translate with the fetch-view fast path. Unlike
+    /// the data views this fills from any TLB-backed translate (hit or
+    /// walk-insert) — the block engine re-translates every op, so the
+    /// first slow pass must already arm the replay. Superpage leaves are
+    /// never TLB-resident and therefore never cached here.
+    pub fn ifetch_translate(
+        &mut self,
+        hart: usize,
+        satp: Satp,
+        user: bool,
+        va: u64,
+    ) -> Result<(u64, u64), Trap> {
+        if !user || satp.bare() {
+            return Ok((va, 0));
+        }
+        let vpn = va >> 12;
+        if self.lsu == LsuMode::Fast {
+            if let Some((ppn, flags)) = self.fp[hart].get(View::Fetch, vpn) {
+                if self.tlbs[hart].probe_entry(vpn) == Some((ppn, flags)) {
+                    self.tlbs[hart].hits += 1;
+                    self.fp_stats.hits += 1;
+                    return Ok(((ppn << 12) | (va & 0xfff), 0));
+                }
+            }
+        }
+        let (pa, c_xlat) = mmu::translate(self, hart, satp, user, va, Access::Fetch)?;
+        if self.lsu == LsuMode::Fast {
+            self.fp_fill(hart, View::Fetch, vpn);
+        }
+        Ok((pa, c_xlat))
+    }
+
+    /// I-fetch timing with the MRU-line replay: a fetch on the line of
+    /// the hart's previous fetch is a guaranteed L1I hit (only the
+    /// hart's own fetches touch its L1I), replayed via `repeat_hit`.
+    #[inline]
+    pub fn ifetch_timing(&mut self, hart: usize, paddr: u64) -> u64 {
+        if self.lsu == LsuMode::Fast && self.fp[hart].iline == Some(paddr & !(LINE - 1)) {
+            self.l1i[hart].repeat_hit();
+            self.fp_stats.hits += 1;
+            return 0;
+        }
+        self.fetch_timing(hart, paddr)
+    }
+
+    /// Host-side (untimed) D-line touch — loader pokes, HTP `MemW`, page
+    /// ops. Moves the cache's internal MRU way, so the hart's repeat
+    /// shortcuts and store exclusivity are conservatively dropped, and
+    /// no other hart may keep store-exclusivity on the touched line.
+    pub fn host_line_access(&mut self, cpu: usize, paddr: u64, write: bool) {
+        let line = paddr & !(LINE - 1);
+        self.l1d[cpu].access(line, write);
+        self.fp[cpu].mru = None;
+        self.fp[cpu].excl = None;
+        for h in 0..self.n_harts {
+            if h != cpu && self.fp[h].excl == Some(line) {
+                self.fp[h].excl = None;
+            }
+        }
+    }
+
+    /// Host-side kernel-noise pollution (full-system baseline): TLB and
+    /// both L1s lose a deterministic fraction of entries, which may
+    /// include any way the fast path's shortcuts point at.
+    pub fn host_pollute(&mut self, cpu: usize, num: u32, den: u32) {
+        self.tlbs[cpu].pollute(num, den);
+        self.l1d[cpu].pollute(num, den);
+        self.l1i[cpu].pollute(num, den);
+        let f = &mut self.fp[cpu];
+        f.mru = None;
+        f.excl = None;
+        f.iline = None;
+        f.bump_epoch();
+        self.fp_stats.epoch_flushes += 1;
+    }
+
     /// Set an LR reservation for `hart` on the line containing `paddr`.
     pub fn set_reservation(&mut self, hart: usize, paddr: u64) {
-        self.resv[hart] = Some(paddr & !(LINE - 1));
+        let line = paddr & !(LINE - 1);
+        if self.n_harts > 1 {
+            // A fast store skips the slow path's reservation-clearing scan,
+            // so no other hart may keep skipping it on a reserved line.
+            for h in 0..self.n_harts {
+                if h != hart && self.fp[h].excl == Some(line) {
+                    self.fp[h].excl = None;
+                }
+            }
+        }
+        self.resv[hart] = Some(line);
     }
 
     /// Check-and-consume the reservation; true if still valid.
@@ -221,9 +473,13 @@ impl MemSys {
         ok
     }
 
-    /// Flush a hart's TLB (sfence.vma).
+    /// Flush a hart's TLB (sfence.vma). The fast-path translation views
+    /// die with it (epoch bump; the TLB revalidation would catch stale
+    /// entries anyway, but the epoch keeps the shootdown edge explicit).
     pub fn flush_tlb(&mut self, hart: usize) {
         self.tlbs[hart].flush();
+        self.fp[hart].bump_epoch();
+        self.fp_stats.epoch_flushes += 1;
     }
 
     /// Record a write of `len` bytes at physical `paddr` that did not go
@@ -257,8 +513,13 @@ impl MemSys {
 
     /// `fence.i` semantics for `hart`: flush its L1I and advance the
     /// global instruction-cache epoch (invalidates all decoded blocks).
+    /// The flush kills the way the I-line shortcut points at, so the
+    /// shortcut dies with it.
     pub fn instr_sync(&mut self, hart: usize) {
         self.l1i[hart].flush();
+        self.fp[hart].iline = None;
+        self.fp[hart].bump_epoch();
+        self.fp_stats.epoch_flushes += 1;
         self.icache_epoch = self.icache_epoch.wrapping_add(1);
     }
 

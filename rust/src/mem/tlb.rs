@@ -52,6 +52,16 @@ impl Tlb {
         e.valid && e.vpn == vpn
     }
 
+    /// Counter-free value probe: the cached `(ppn, flags)` for `vpn`, if
+    /// present. The LSU fast path revalidates its entries against this
+    /// on every fast attempt — a boolean presence check could not detect
+    /// a same-VPN re-insert with a different translation.
+    #[inline]
+    pub fn probe_entry(&self, vpn: u64) -> Option<(u64, u8)> {
+        let e = &self.entries[(vpn & self.mask) as usize];
+        (e.valid && e.vpn == vpn).then_some((e.ppn, e.flags))
+    }
+
     #[inline]
     pub fn insert(&mut self, vpn: u64, ppn: u64, flags: u8) {
         self.gen = self.gen.wrapping_add(1);
@@ -112,6 +122,18 @@ mod tests {
         let g2 = t.gen();
         t.pollute(1, 2);
         assert_ne!(t.gen(), g2);
+    }
+
+    #[test]
+    fn probe_entry_is_counter_free_and_value_exact() {
+        let mut t = Tlb::new(4);
+        assert_eq!(t.probe_entry(0x10), None);
+        t.insert(0x10, 0x999, 0x1f);
+        assert_eq!(t.probe_entry(0x10), Some((0x999, 0x1f)));
+        // Same-VPN re-insert with a different translation is visible.
+        t.insert(0x10, 0x777, 0x0f);
+        assert_eq!(t.probe_entry(0x10), Some((0x777, 0x0f)));
+        assert_eq!((t.hits, t.misses), (0, 0), "probes never count");
     }
 
     #[test]

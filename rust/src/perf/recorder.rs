@@ -6,6 +6,7 @@
 //! exactly the two groupings Fig 13 plots.
 
 use crate::fase::htp::ReqKind;
+use crate::mem::FastPathStats;
 use crate::rv64::EngineStats;
 use std::collections::BTreeMap;
 
@@ -199,6 +200,9 @@ pub struct Recorder {
     /// snapshotted from the machine at collection time. Host-side
     /// diagnostics only — never part of the deterministic report surface.
     pub engine: EngineStats,
+    /// LSU fast-path counters, snapshotted from the machine at collection
+    /// time. Host-side diagnostics only, like `engine`.
+    pub fastpath: FastPathStats,
     ctx: Context,
 }
 

@@ -10,15 +10,16 @@
 //!
 //! The engine must be cycle- and counter-identical to the interpreter (see
 //! `engine.rs`). Per op it therefore replicates the interpreter's
-//! fetch path precisely:
+//! fetch path precisely, through the same shared LSU helpers
+//! ([`MemSys::ifetch_translate`], [`MemSys::ifetch_timing`]) the
+//! interpreter uses:
 //!
-//! - **Translation**: the entry pc goes through a per-hart fetch-page
-//!   micro-cache that is valid only while the hart's TLB generation is
-//!   unchanged, in which case the interpreter's TLB hit is replayed
-//!   (`hits += 1`, zero cycles). Any generation change (a data-side walk
-//!   inserted an entry, an `sfence.vma` flushed) falls back to the real
-//!   `mmu::translate`, replaying walk cycles, PTW events, and A/D updates
-//!   exactly. A mid-block physical-page change aborts the block.
+//! - **Translation**: each op's pc goes through the LSU fetch view
+//!   (DESIGN.md §LSU fast path). In fast mode a still-valid cached
+//!   translation replays the interpreter's TLB hit (`hits += 1`, zero
+//!   cycles); anything else — and all of slow mode — is a real
+//!   `mmu::translate`, replaying walk cycles, PTW events, and A/D
+//!   updates exactly. A mid-block physical-page change aborts the block.
 //! - **I-cache**: consecutive fetches from the same line replay the
 //!   interpreter's guaranteed L1I hit via `Cache::repeat_hit` (identical
 //!   tick/LRU/hit-counter evolution); line changes do a real
@@ -43,7 +44,7 @@ use super::exec;
 use super::hart::{CoreModel, Hart, PrivLevel};
 use super::inst::{Inst, InstClass};
 use super::{decode, Trap};
-use crate::mem::{mmu, Access, MemSys, LINE};
+use crate::mem::{mmu, MemSys};
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -105,17 +106,6 @@ impl Block {
     }
 }
 
-/// Per-hart fetch-translation micro-cache: one (vpn → ppage) pair, valid
-/// while satp and the hart's TLB generation are unchanged.
-#[derive(Clone, Copy, Default)]
-struct FetchPage {
-    valid: bool,
-    vpn: u64,
-    ppage: u64,
-    satp: u64,
-    gen: u64,
-}
-
 /// How a block's straight-line run ended.
 enum BlockExit {
     /// All ops retired; `h.pc` points at the successor.
@@ -131,10 +121,6 @@ enum BlockExit {
 pub struct BlockEngine {
     blocks: Vec<Block>,
     map: FnvMap<(u64, u64), usize>,
-    fp: Vec<FetchPage>,
-    /// Line address of the hart's most recent I-fetch *within this run*
-    /// (host may flush/pollute L1I between runs, so it resets per run).
-    last_line: Vec<Option<u64>>,
     stats: EngineStats,
 }
 
@@ -199,48 +185,15 @@ fn build_block(ms: &MemSys, space: u64, va: u64, pa0: u64) -> Option<Block> {
     })
 }
 
-impl BlockEngine {
-    pub fn new(n_harts: usize) -> BlockEngine {
-        BlockEngine {
-            blocks: Vec::new(),
-            map: FnvMap::default(),
-            fp: vec![FetchPage::default(); n_harts],
-            last_line: vec![None; n_harts],
-            stats: EngineStats::default(),
-        }
+impl Default for BlockEngine {
+    fn default() -> Self {
+        BlockEngine::new()
     }
+}
 
-    /// Translate the dispatch pc for fetch, interp-identically. Returns
-    /// (pa, cycles, tlb generation observed, entry present in TLB).
-    fn translate_entry(
-        &mut self,
-        h: &Hart,
-        ms: &mut MemSys,
-        paged: bool,
-        satp: mmu::Satp,
-    ) -> Result<(u64, u64, u64, bool), Trap> {
-        if !paged {
-            return Ok((h.pc, 0, 0, false));
-        }
-        let vpn = h.pc >> 12;
-        let fp = self.fp[h.id];
-        let gen = ms.tlbs[h.id].gen();
-        if fp.valid && fp.satp == h.csrs.satp && fp.vpn == vpn && fp.gen == gen {
-            // The TLB entry observed at `gen` is still in place (the
-            // generation counts every mutation): replay the interpreter's
-            // hit without the lookup.
-            ms.tlbs[h.id].hits += 1;
-            return Ok(((fp.ppage << 12) | (h.pc & 0xfff), 0, gen, true));
-        }
-        let (pa, c) = mmu::translate(ms, h.id, satp, true, h.pc, Access::Fetch)?;
-        let gen = ms.tlbs[h.id].gen();
-        // Superpage leaves are never inserted into the TLB — the
-        // interpreter re-walks them on every fetch, so they must not be
-        // cached here either.
-        let present = ms.tlbs[h.id].peek(vpn);
-        self.fp[h.id] =
-            FetchPage { valid: present, vpn, ppage: pa >> 12, satp: h.csrs.satp, gen };
-        Ok((pa, c, gen, present))
+impl BlockEngine {
+    pub fn new() -> BlockEngine {
+        BlockEngine { blocks: Vec::new(), map: FnvMap::default(), stats: EngineStats::default() }
     }
 
     /// Resolve the block slot for (`space`, `h.pc`): chain shortcut, map
@@ -318,17 +271,13 @@ impl BlockEngine {
 
 /// Execute one block's ops. `c_xlat0` is the already-paid entry
 /// translation cost (charged with op 0).
-#[allow(clippy::too_many_arguments)]
 fn run_block(
     h: &mut Hart,
     ms: &mut MemSys,
     model: &CoreModel,
     b: &Block,
-    last_line: &mut Option<u64>,
     t_end: u64,
     c_xlat0: u64,
-    mut tlb_gen: u64,
-    mut vpn_cached: bool,
     paged: bool,
 ) -> BlockExit {
     let mut c_xlat = c_xlat0;
@@ -338,50 +287,37 @@ fn run_block(
                 h.pc = op.pc;
                 return BlockExit::Limit;
             }
-            // Per-op fetch translation, replayed interp-identically: while
-            // the TLB generation is unchanged the entry is still present
-            // (same vpn — blocks never cross a page) and the interpreter
-            // would hit; otherwise re-translate for real, which replays
-            // any miss/walk cycle-exactly.
+            // Per-op fetch translation through the shared LSU fetch view:
+            // in fast mode a still-valid cached entry replays the
+            // interpreter's TLB hit; anything else (and all of slow mode)
+            // re-translates for real, replaying any miss/walk
+            // cycle-exactly.
             c_xlat = 0;
             if paged {
-                if vpn_cached && ms.tlbs[h.id].gen() == tlb_gen {
-                    ms.tlbs[h.id].hits += 1;
-                } else {
-                    let satp = mmu::Satp(h.csrs.satp);
-                    match mmu::translate(ms, h.id, satp, true, op.pc, Access::Fetch) {
-                        Ok((pa, c)) => {
-                            if pa >> 12 != b.ppage {
-                                // Mapping changed under the block (e.g. a
-                                // PTE rewrite the walk now observes):
-                                // abandon and re-dispatch at this pc.
-                                h.pc = op.pc;
-                                return BlockExit::Remapped;
-                            }
-                            c_xlat = c;
-                            tlb_gen = ms.tlbs[h.id].gen();
-                            vpn_cached = ms.tlbs[h.id].peek(op.pc >> 12);
-                        }
-                        Err(t) => {
+                let satp = mmu::Satp(h.csrs.satp);
+                match ms.ifetch_translate(h.id, satp, true, op.pc) {
+                    Ok((pa, c)) => {
+                        if pa >> 12 != b.ppage {
+                            // Mapping changed under the block (e.g. a
+                            // PTE rewrite the walk now observes):
+                            // abandon and re-dispatch at this pc.
                             h.pc = op.pc;
-                            return BlockExit::Trap(t);
+                            return BlockExit::Remapped;
                         }
+                        c_xlat = c;
+                    }
+                    Err(t) => {
+                        h.pc = op.pc;
+                        return BlockExit::Trap(t);
                     }
                 }
             }
         }
-        // I-fetch timing: same line as the previous fetch replays the
-        // interpreter's guaranteed L1I hit without the way search.
+        // I-fetch timing: the MRU-line replay lives in `ifetch_timing`
+        // (fast mode); slow mode's real access on the still-hot line is
+        // state-identical, just slower on the host.
         let pa = (b.ppage << 12) | (op.pc & 0xfff);
-        let line = pa & !(LINE - 1);
-        let c_fetch = if *last_line == Some(line) {
-            ms.l1i[h.id].repeat_hit();
-            0
-        } else {
-            let c = ms.fetch_timing(h.id, pa);
-            *last_line = Some(line);
-            c
-        };
+        let c_fetch = ms.ifetch_timing(h.id, pa);
         match exec::exec_decoded(h, ms, model, &op.inst, op.pc, op.cls) {
             Ok((next, c_exec)) => {
                 h.pc = next;
@@ -389,11 +325,6 @@ fn run_block(
                 h.counters.class[op.cls as usize] += 1;
                 h.counters.retired += 1;
                 h.charge(c_xlat + c_fetch + c_exec);
-                if matches!(op.inst, Inst::FenceI) {
-                    // The op flushed this hart's L1I; the repeat-line
-                    // shortcut must not survive it.
-                    *last_line = None;
-                }
             }
             Err(t) => {
                 h.pc = op.pc;
@@ -435,10 +366,6 @@ impl Engine for BlockEngine {
     }
 
     fn run(&mut self, h: &mut Hart, ms: &mut MemSys, model: &CoreModel, t_end: u64) -> Exit {
-        // The host may have flushed or polluted the L1I between runs; a
-        // real access on a still-hot line is state-identical to the
-        // shortcut, so resetting is always safe.
-        self.last_line[h.id] = None;
         let mut prev_slot: Option<usize> = None;
         loop {
             if h.stop_fetch || h.waiting || h.time >= t_end {
@@ -451,11 +378,10 @@ impl Engine for BlockEngine {
             let paged = h.prv == PrivLevel::U && !satp.bare();
             let space = if paged { satp.asid() + 1 } else { 0 };
 
-            let (pa0, c_xlat0, tlb_gen, vpn_cached) =
-                match self.translate_entry(h, ms, paged, satp) {
-                    Ok(v) => v,
-                    Err(t) => return Exit::Trap(t),
-                };
+            let (pa0, c_xlat0) = match ms.ifetch_translate(h.id, satp, paged, h.pc) {
+                Ok(v) => v,
+                Err(t) => return Exit::Trap(t),
+            };
             if pa0 & 3 != 0 {
                 // The interpreter's fetch checks alignment after
                 // translation and before the read.
@@ -466,20 +392,8 @@ impl Engine for BlockEngine {
                 Err(t) => return Exit::Trap(t),
             };
 
-            let Self { blocks, last_line, .. } = self;
-            let b = &blocks[slot];
-            match run_block(
-                h,
-                ms,
-                model,
-                b,
-                &mut last_line[h.id],
-                t_end,
-                c_xlat0,
-                tlb_gen,
-                vpn_cached,
-                paged,
-            ) {
+            let b = &self.blocks[slot];
+            match run_block(h, ms, model, b, t_end, c_xlat0, paged) {
                 BlockExit::Done => prev_slot = Some(slot),
                 BlockExit::Remapped => prev_slot = None,
                 BlockExit::Limit => return Exit::Limit,

@@ -132,10 +132,10 @@ impl Engine for InterpEngine {
     }
 }
 
-pub fn make_engine(kind: EngineKind, n_harts: usize) -> Box<dyn Engine> {
+pub fn make_engine(kind: EngineKind, _n_harts: usize) -> Box<dyn Engine> {
     match kind {
         EngineKind::Interp => Box::new(InterpEngine),
-        EngineKind::Block => Box::new(super::block::BlockEngine::new(n_harts)),
+        EngineKind::Block => Box::new(super::block::BlockEngine::new()),
     }
 }
 

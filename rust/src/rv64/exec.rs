@@ -16,11 +16,12 @@ use crate::mem::{mmu, Access, MemSys};
 pub fn step(h: &mut Hart, ms: &mut MemSys, model: &CoreModel) -> Result<u64, Trap> {
     let user = h.prv == PrivLevel::U;
     let satp = mmu::Satp(h.csrs.satp);
-    let (ppc, c_xlat) = mmu::translate(ms, h.id, satp, user, h.pc, Access::Fetch)?;
+    let (ppc, c_xlat) = ms.ifetch_translate(h.id, satp, user, h.pc)?;
     // Decoded-instruction cache skips host-side decode work only; the
-    // target-timing I-cache access is charged either way.
+    // target-timing I-cache access is charged either way (with the LSU
+    // fast path's same-line replay when the line did not change).
     let (inst, c_fetch) = match h.dcache.get(ppc) {
-        Some(i) => (i, ms.fetch_timing(h.id, ppc)),
+        Some(i) => (i, ms.ifetch_timing(h.id, ppc)),
         None => {
             let (raw, c) = ms.fetch(h.id, ppc)?;
             let i = decode(raw);
@@ -121,8 +122,7 @@ pub(crate) fn exec_decoded(
         }
         Inst::Load { width, signed, rd, rs1, imm } => {
             let va = h.reg(rs1).wrapping_add(imm as u64);
-            let pa = xlate!(va, Access::Load);
-            let (mut val, c) = ms.load(h.id, pa, width)?;
+            let (mut val, c) = ms.vload(h.id, satp, user, va, width)?;
             cycles += c;
             if signed {
                 val = sign_extend(val, width);
@@ -131,8 +131,7 @@ pub(crate) fn exec_decoded(
         }
         Inst::Store { width, rs1, rs2, imm } => {
             let va = h.reg(rs1).wrapping_add(imm as u64);
-            let pa = xlate!(va, Access::Store);
-            cycles += ms.store(h.id, pa, width, h.reg(rs2))?;
+            cycles += ms.vstore(h.id, satp, user, va, width, h.reg(rs2))?;
         }
         Inst::OpImm { op, rd, rs1, imm } => {
             h.set_reg(rd, alu(op, h.reg(rs1), imm as u64));
@@ -183,17 +182,15 @@ pub(crate) fn exec_decoded(
         }
         Inst::FLoad { dbl, rd, rs1, imm } => {
             let va = h.reg(rs1).wrapping_add(imm as u64);
-            let pa = xlate!(va, Access::Load);
             let w = if dbl { Width::D } else { Width::W };
-            let (val, c) = ms.load(h.id, pa, w)?;
+            let (val, c) = ms.vload(h.id, satp, user, va, w)?;
             cycles += c;
             h.fregs[rd as usize] = if dbl { val } else { 0xffff_ffff_0000_0000 | val };
         }
         Inst::FStore { dbl, rs1, rs2, imm } => {
             let va = h.reg(rs1).wrapping_add(imm as u64);
-            let pa = xlate!(va, Access::Store);
             let w = if dbl { Width::D } else { Width::W };
-            cycles += ms.store(h.id, pa, w, h.fregs[rs2 as usize])?;
+            cycles += ms.vstore(h.id, satp, user, va, w, h.fregs[rs2 as usize])?;
         }
         Inst::Fp { op, dbl, rd, rs1, rs2 } => {
             fp_op(h, op, dbl, rd, rs1, rs2);

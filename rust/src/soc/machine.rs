@@ -1,7 +1,7 @@
 //! The fast-engine target machine (FPGA stand-in).
 
 use crate::iface::{CpuInterface, InjectResult};
-use crate::mem::MemSys;
+use crate::mem::{FastPathStats, LsuMode, MemSys};
 use crate::rv64::engine::{make_engine, Engine, EngineKind, EngineStats, Exit};
 use crate::rv64::exec;
 use crate::rv64::hart::{CoreModel, Hart, PrivLevel};
@@ -23,6 +23,8 @@ pub struct MachineConfig {
     pub quantum: u64,
     /// Execution strategy (timing-neutral; see `rv64::engine`).
     pub engine: EngineKind,
+    /// LSU strategy (timing-neutral; see `mem::fastpath`).
+    pub lsu: LsuMode,
 }
 
 impl Default for MachineConfig {
@@ -34,6 +36,7 @@ impl Default for MachineConfig {
             core: CoreModel::rocket(),
             quantum: 256,
             engine: EngineKind::default(),
+            lsu: LsuMode::default(),
         }
     }
 }
@@ -67,7 +70,8 @@ pub struct Machine {
 impl Machine {
     pub fn new(cfg: MachineConfig) -> Machine {
         let mut harts: Vec<Hart> = (0..cfg.n_harts).map(Hart::new).collect();
-        let ms = MemSys::new(cfg.n_harts, DRAM_BASE, cfg.dram_size);
+        let mut ms = MemSys::new(cfg.n_harts, DRAM_BASE, cfg.dram_size);
+        ms.set_lsu(cfg.lsu);
         // The paper redirects the interrupt vector to a simple infinite
         // loop; we reserve the first DRAM word for that stub.
         for h in &mut harts {
@@ -214,6 +218,12 @@ impl Machine {
     /// interpreter). Diagnostics only — never part of report JSON.
     pub fn engine_stats(&self) -> EngineStats {
         self.engine.stats()
+    }
+
+    /// Host-side LSU fast-path counters (all zero in slow mode).
+    /// Diagnostics only — never part of report JSON.
+    pub fn lsu_stats(&self) -> FastPathStats {
+        self.ms.fastpath_stats()
     }
 
     /// Hand one statically discovered block entry to the engine

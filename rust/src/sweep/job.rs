@@ -6,6 +6,7 @@ use crate::baseline::{run_pk, run_pk_exe, PkConfig};
 use crate::coordinator::runtime::{run_elf, run_exe, Mode, RunConfig, RunResult};
 use crate::coordinator::target::{HostLatency, KernelCosts};
 use crate::elfio::read::Executable;
+use crate::mem::LsuMode;
 use crate::rv64::hart::CoreModel;
 use crate::rv64::EngineKind;
 use crate::util::json::Json;
@@ -48,6 +49,9 @@ pub struct Job {
     pub engine_override: Option<EngineKind>,
     /// Label-invisible static-analysis mode; see [`SweepSpec::analysis`].
     pub analysis: AnalysisMode,
+    /// Label-invisible LSU mode (spec `lsu =` key or CLI `--lsu`); see
+    /// [`SweepSpec::lsu_override`].
+    pub lsu_override: Option<LsuMode>,
     /// Outstanding-depth axis pin (`outstandings =` in the spec).
     /// Recorded in the label as `+oN` on the arm segment — depth changes
     /// FASE timing, so pinned scenarios are distinct identities.
@@ -83,6 +87,7 @@ impl Job {
             engine_pin,
             engine_override: spec.engine_override,
             analysis: spec.analysis,
+            lsu_override: spec.lsu_override,
             outstanding_pin,
             outstanding_override: spec.outstanding_override,
             max_target_seconds: spec.max_target_seconds,
@@ -129,6 +134,12 @@ impl Job {
         self.outstanding_override.or(self.outstanding_pin).unwrap_or(1)
     }
 
+    /// The LSU mode this job runs with: override beats the crate default
+    /// (fast).
+    pub fn lsu(&self) -> LsuMode {
+        self.lsu_override.unwrap_or_default()
+    }
+
     fn mode(&self) -> Mode {
         match &self.arm {
             Arm::Fase { transport, hfutex, ideal_latency } => Mode::Fase {
@@ -160,6 +171,7 @@ impl Job {
             seed: self.prng_seed,
             engine: self.engine(),
             analysis: self.analysis,
+            lsu: self.lsu(),
             outstanding: self.outstanding(),
         }
     }

@@ -7,6 +7,7 @@
 
 use crate::analysis::AnalysisMode;
 use crate::fase::transport::TransportSpec;
+use crate::mem::LsuMode;
 use crate::rv64::EngineKind;
 use crate::util::config::Config;
 
@@ -90,6 +91,12 @@ pub enum SynthKind {
     /// Touch one word per page across a BSS region (page-fault / PageSet
     /// path), then exit: `memtouch:PAGES`.
     MemTouch { pages: u32 },
+    /// Strided store sweep over a BSS region: one store every `stride`
+    /// bytes across `pages` pages, then exit: `stride:PAGES:STRIDE`.
+    /// Unlike `memtouch` it revisits pages at sub-page granularity, so it
+    /// exercises the TLB-hit (LSU fast-path) regime rather than the
+    /// page-fault path.
+    Stride { pages: u32, stride: u32 },
     /// Syscall-surface probe: getpid xN, then one deliberately
     /// unimplemented syscall (membarrier, nr 283) whose ENOSYS return the
     /// guest ignores — exercises the analyzer's unimplemented-syscall
@@ -131,6 +138,7 @@ impl WorkloadSpec {
             SynthKind::Spin { iters } => format!("spin:{iters}"),
             SynthKind::Storm { calls } => format!("storm:{calls}"),
             SynthKind::MemTouch { pages } => format!("memtouch:{pages}"),
+            SynthKind::Stride { pages, stride } => format!("stride:{pages}:{stride}"),
             SynthKind::Probe { calls } => format!("probe:{calls}"),
         };
         WorkloadSpec { name, kind: WorkloadKind::Synth(kind) }
@@ -146,7 +154,7 @@ impl WorkloadSpec {
     }
 
     /// Parse a workload atom: `spin:N`, `storm:N`, `memtouch:N`,
-    /// `coremark:N`, `gapbs:BENCH:SCALE[:TRIALS]`.
+    /// `stride:P:S`, `coremark:N`, `gapbs:BENCH:SCALE[:TRIALS]`.
     pub fn parse(s: &str) -> Option<WorkloadSpec> {
         let s = s.trim();
         let mut parts = s.split(':');
@@ -166,6 +174,13 @@ impl WorkloadSpec {
             "memtouch" => {
                 one_u32(&fields).map(|pages| WorkloadSpec::synth(SynthKind::MemTouch { pages }))
             }
+            "stride" => match fields.as_slice() {
+                [p, s] => Some(WorkloadSpec::synth(SynthKind::Stride {
+                    pages: p.trim().parse().ok()?,
+                    stride: s.trim().parse().ok()?,
+                })),
+                _ => None,
+            },
             "probe" => {
                 one_u32(&fields).map(|calls| WorkloadSpec::synth(SynthKind::Probe { calls }))
             }
@@ -217,6 +232,14 @@ pub struct SweepSpec {
     /// `engine_override`, it never changes a scenario's identity, metrics,
     /// or PRNG stream (DESIGN.md §Analysis).
     pub analysis: AnalysisMode,
+    /// Label-*invisible* LSU mode (`lsu =` key, CLI `--lsu`): `slow`
+    /// forces every memory access through the full translate + timing
+    /// path, `fast` (the default) lets state-invariant accesses replay
+    /// through the per-hart fast-path cache. Like `engine_override` it is
+    /// metric-invisible by construction — two reports that differ only in
+    /// this knob must be byte-identical, which CI gates with `cmp`
+    /// (DESIGN.md §LSU fast path).
+    pub lsu_override: Option<LsuMode>,
     /// Outstanding-depth axis (`outstandings = 1, 2, 4`): pins each
     /// scenario to one pipelined-HTP depth and records the pin in the
     /// label (`+oN` on the arm segment) — depth changes FASE timing, so
@@ -247,6 +270,7 @@ impl SweepSpec {
             engines: Vec::new(),
             engine_override: None,
             analysis: AnalysisMode::default(),
+            lsu_override: None,
             outstandings: Vec::new(),
             outstanding_override: None,
             max_target_seconds: 3000.0,
@@ -374,6 +398,10 @@ impl SweepSpec {
             spec.analysis =
                 AnalysisMode::parse(a).ok_or_else(|| format!("bad analysis mode {a:?}"))?;
         }
+        if let Some(l) = cfg.get(sec, "lsu") {
+            spec.lsu_override =
+                Some(LsuMode::parse(l).ok_or_else(|| format!("bad lsu mode {l:?}"))?);
+        }
         let parse_depth = |v: &str| -> Result<u32, String> {
             crate::util::cli::parse_u64(v)
                 .filter(|&n| n >= 1 && n <= 127)
@@ -436,15 +464,22 @@ mod tests {
 
     #[test]
     fn workload_atoms_round_trip() {
-        for atom in
-            ["spin:4000", "storm:64", "memtouch:48", "probe:8", "coremark:10", "gapbs:bfs:11:2"]
-        {
+        for atom in [
+            "spin:4000",
+            "storm:64",
+            "memtouch:48",
+            "stride:16:64",
+            "probe:8",
+            "coremark:10",
+            "gapbs:bfs:11:2",
+        ] {
             let w = WorkloadSpec::parse(atom).unwrap_or_else(|| panic!("parse {atom}"));
             assert_eq!(w.name, atom);
         }
         assert_eq!(WorkloadSpec::parse("gapbs:tc:9").unwrap().name, "gapbs:tc:9:2");
         assert!(WorkloadSpec::parse("spin").is_none());
         assert!(WorkloadSpec::parse("spin:x").is_none());
+        assert!(WorkloadSpec::parse("stride:16").is_none());
         assert!(WorkloadSpec::parse("warp:1").is_none());
     }
 
@@ -558,6 +593,27 @@ mod tests {
         let rep = SweepSpec::parse(&format!("{base}analysis = report\n"), "x").unwrap();
         assert_eq!(rep.analysis, AnalysisMode::Report);
         assert!(SweepSpec::parse(&format!("{base}analysis = turbo\n"), "x").is_err());
+    }
+
+    #[test]
+    fn lsu_knob_parses_and_stays_label_invisible() {
+        let base = "[sweep]\nworkloads = stride:8:64\narms = fullsys\n";
+        let dflt = SweepSpec::parse(base, "x").unwrap();
+        assert_eq!(dflt.lsu_override, None);
+
+        let slow = SweepSpec::parse(&format!("{base}lsu = slow\n"), "x").unwrap();
+        assert_eq!(slow.lsu_override, Some(LsuMode::Slow));
+        let jobs_dflt = dflt.expand(None);
+        let jobs_slow = slow.expand(None);
+        // Label-invisible: identity and PRNG stream unchanged by the knob.
+        assert_eq!(jobs_dflt[0].label(), jobs_slow[0].label());
+        assert_eq!(jobs_dflt[0].prng_seed, jobs_slow[0].prng_seed);
+        assert_eq!(jobs_dflt[0].lsu(), LsuMode::Fast);
+        assert_eq!(jobs_slow[0].lsu(), LsuMode::Slow);
+
+        let fast = SweepSpec::parse(&format!("{base}lsu = fast\n"), "x").unwrap();
+        assert_eq!(fast.lsu_override, Some(LsuMode::Fast));
+        assert!(SweepSpec::parse(&format!("{base}lsu = warp\n"), "x").is_err());
     }
 
     #[test]

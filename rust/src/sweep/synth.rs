@@ -108,6 +108,25 @@ pub fn build(kind: SynthKind) -> Executable {
             code.push(bne(5, 0, -12));
             emit_exit(&mut code);
         }
+        SynthKind::Stride { pages, stride } => {
+            // One store every `stride` bytes across the BSS region, then
+            // exit. Sub-page strides revisit each page many times, the
+            // TLB-hit regime the LSU fast path targets; strides >= 4096
+            // degenerate to memtouch. The stride is forced 8-byte aligned
+            // so no store straddles a cache line or page.
+            let pages = u64::from(pages.clamp(1, 16 * 1024));
+            let stride = u64::from(stride.clamp(8, 1 << 20)) & !7;
+            let iters = (pages * PAGE / stride).max(1);
+            data_pages = pages;
+            code.push(encode::lui(6, (DATA_VA >> 12) as u32)); // t1 = buf
+            li(&mut code, 7, stride as i64); // t2 = stride
+            li(&mut code, 5, iters as i64); // t0 = iters
+            code.push(encode::sd(5, 6, 0));
+            code.push(add(6, 6, 7));
+            code.push(encode::addi(5, 5, -1));
+            code.push(bne(5, 0, -12));
+            emit_exit(&mut code);
+        }
     }
     let text: Vec<u8> = code.iter().flat_map(|w| w.to_le_bytes()).collect();
     let mut segments = vec![Segment {
@@ -187,6 +206,16 @@ mod tests {
         assert_eq!(r.error, None, "{:?}", r.error);
         assert_eq!(r.exit_code, 0);
         assert!(r.page_faults >= 64 / 8, "expected faults over 64 pages, got {}", r.page_faults);
+    }
+
+    #[test]
+    fn stride_retires_one_store_per_stride() {
+        let r = run(SynthKind::Stride { pages: 16, stride: 64 });
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        // 16 pages / 64 B = 1024 stores, 4 instructions per iteration.
+        assert!(r.instret >= 4 * 1024, "expected >=4096 retired, got {}", r.instret);
+        assert!(r.page_faults >= 16 / 8, "expected faults over 16 pages, got {}", r.page_faults);
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! LSU fast-path equivalence tests (DESIGN.md §LSU fast path).
+//!
+//! The softmmu-style fast path must be *state-invariant*: every counter,
+//! cycle count, and byte of memory evolves exactly as on the slow path —
+//! the only difference is host time. These tests drive both modes over
+//! identical access scripts at the MemSys level, check the bypass edges
+//! (line crossing, out-of-DRAM, shootdowns), prove a fast store still
+//! honors the SMC write-generation contract end-to-end on the block
+//! engine, and pin the whole thing down with a byte-identical 12-scenario
+//! sweep.
+
+use fase::mem::mmu::{Satp, PTE_A, PTE_D, PTE_R, PTE_U, PTE_V, PTE_W, PTE_X};
+use fase::mem::{LsuMode, MemEvents, MemSys};
+use fase::rv64::decode::encode;
+use fase::rv64::hart::PrivLevel;
+use fase::rv64::inst::Width;
+use fase::soc::machine::DRAM_BASE;
+use fase::soc::{Machine, MachineConfig};
+use fase::sweep::{run_sweep, Arm, SweepSpec, SynthKind, WorkloadSpec};
+
+const VA: u64 = 0x4000_0000;
+const RW: u64 = PTE_V | PTE_R | PTE_W | PTE_U | PTE_A | PTE_D;
+const RO: u64 = PTE_V | PTE_R | PTE_U | PTE_A;
+const RWX: u64 = PTE_V | PTE_R | PTE_W | PTE_X | PTE_U | PTE_A | PTE_D;
+
+/// Root of the mmu-test-style 3-level SV39 table: the level-2 and level-1
+/// tables live in the two pages after `root`, so every mapping must share
+/// the root and mid-level indexes of `VA` (one 2 MiB region — plenty).
+const ROOT: u64 = DRAM_BASE + 0x10_0000;
+
+fn map_page(ms: &mut MemSys, va: u64, pa: u64, flags: u64) {
+    let l2 = ROOT + 0x1000;
+    let l1 = ROOT + 0x2000;
+    ms.phys.write_u64(ROOT + ((va >> 30) & 0x1ff) * 8, ((l2 >> 12) << 10) | PTE_V);
+    ms.phys.write_u64(l2 + ((va >> 21) & 0x1ff) * 8, ((l1 >> 12) << 10) | PTE_V);
+    ms.phys.write_u64(l1 + ((va >> 12) & 0x1ff) * 8, ((pa >> 12) << 10) | flags);
+}
+
+fn satp() -> Satp {
+    Satp::make(8, 1, ROOT >> 12)
+}
+
+fn sys(mode: LsuMode, n_harts: usize) -> MemSys {
+    let mut ms = MemSys::new(n_harts, DRAM_BASE, 8 << 20);
+    ms.set_lsu(mode);
+    map_page(&mut ms, VA, DRAM_BASE + 0x20_0000, RW);
+    map_page(&mut ms, VA + 0x1000, DRAM_BASE + 0x20_1000, RO);
+    map_page(&mut ms, VA + 0x2000, DRAM_BASE + 0x20_2000, RWX);
+    ms
+}
+
+fn events(e: &MemEvents) -> (u64, u64, u64, u64, u64, u64) {
+    (e.l1i_miss, e.l1d_miss, e.l2_miss, e.tlb_miss, e.ptw_accesses, e.coherence_inval)
+}
+
+/// One scripted access sequence covering the fast-hit regime (repeat
+/// same-line traffic), the promote-on-reuse fills, read-only pages,
+/// line-crossing accesses, instruction fetches, cross-hart coherence and
+/// LR/SC reservations. Returns every observable: per-op values and
+/// cycles, then the final counter state.
+fn drive(ms: &mut MemSys) -> Vec<u64> {
+    let s = satp();
+    let mut t: Vec<u64> = Vec::new();
+    let ld = |ms: &mut MemSys, h: usize, va: u64, w: Width, t: &mut Vec<u64>| {
+        let (v, c) = ms.vload(h, s, true, va, w).unwrap();
+        t.push(v);
+        t.push(c);
+    };
+    let st = |ms: &mut MemSys, h: usize, va: u64, w: Width, v: u64, t: &mut Vec<u64>| {
+        t.push(ms.vstore(h, s, true, va, w, v).unwrap());
+    };
+    // Hart 0 warms a line, then re-hits it: walk, TLB-hit fill, fast hits.
+    st(ms, 0, VA + 8, Width::D, 0x1111, &mut t);
+    st(ms, 0, VA + 16, Width::D, 0x2222, &mut t);
+    st(ms, 0, VA + 24, Width::D, 0x3333, &mut t);
+    ld(ms, 0, VA + 8, Width::D, &mut t);
+    ld(ms, 0, VA + 16, Width::W, &mut t);
+    // Misaligned but line-contained, then a line-crossing store (bypass,
+    // charged as two line accesses in both modes).
+    ld(ms, 0, VA + 18, Width::W, &mut t);
+    st(ms, 0, VA + 60, Width::D, 0x4444, &mut t);
+    st(ms, 0, VA + 60, Width::D, 0x5555, &mut t);
+    // Read-only page: loads fill the read view, re-hit the same line.
+    ld(ms, 1, VA + 0x1000, Width::D, &mut t);
+    ld(ms, 1, VA + 0x1008, Width::D, &mut t);
+    ld(ms, 1, VA + 0x1008, Width::D, &mut t);
+    // A store to the RO page must fault identically in both modes.
+    t.push(ms.vstore(1, s, true, VA + 0x1010, Width::D, 1).is_err() as u64);
+    // Cross-hart: hart 1 reads hart 0's hot line (pulls a copy, drops
+    // hart 0's exclusivity), hart 0 stores again (coherence scan), then
+    // re-enters the fast regime.
+    ld(ms, 1, VA + 8, Width::D, &mut t);
+    st(ms, 0, VA + 8, Width::D, 0x6666, &mut t);
+    st(ms, 0, VA + 8, Width::D, 0x7777, &mut t);
+    // LR/SC: hart 1 reserves the line, hart 0's store must kill it.
+    let pa = DRAM_BASE + 0x20_0000;
+    ms.set_reservation(1, pa);
+    st(ms, 0, VA + 32, Width::D, 0x8888, &mut t);
+    t.push(ms.check_reservation(1, pa) as u64);
+    // Instruction side: translate + timing, re-hitting lines and pcs.
+    for va in [VA + 0x2000, VA + 0x2004, VA + 0x2004, VA + 0x2040, VA + 0x2008] {
+        let (pa, c) = ms.ifetch_translate(0, s, true, va).unwrap();
+        t.push(pa);
+        t.push(c);
+        t.push(ms.ifetch_timing(0, pa));
+    }
+    // Shootdown edge: flush hart 0, then rebuild the fast state.
+    ms.flush_tlb(0);
+    st(ms, 0, VA + 8, Width::D, 0x9999, &mut t);
+    st(ms, 0, VA + 8, Width::D, 0xaaaa, &mut t);
+    // Final observables: counters and a physical readback.
+    for h in 0..ms.n_harts() {
+        let (a, b, c, d, e, f) = events(&ms.evt[h]);
+        t.extend([a, b, c, d, e, f]);
+        t.push(ms.tlbs[h].hits);
+        t.push(ms.tlbs[h].misses);
+    }
+    for off in [8u64, 16, 24, 32, 56, 60] {
+        t.push(ms.phys.read_u64(DRAM_BASE + 0x20_0000 + off).unwrap());
+    }
+    t.push(ms.page_gen((DRAM_BASE + 0x20_0000) >> 12) as u64);
+    t
+}
+
+#[test]
+fn fast_and_slow_traces_are_identical() {
+    let mut slow = sys(LsuMode::Slow, 2);
+    let mut fast = sys(LsuMode::Fast, 2);
+    let ts = drive(&mut slow);
+    let tf = drive(&mut fast);
+    assert_eq!(ts, tf, "fast path changed an architectural observable");
+    assert_eq!(slow.fastpath_stats().hits, 0, "slow mode must never take the fast path");
+    let st = fast.fastpath_stats();
+    assert!(st.hits > 0, "script never exercised the fast path: {st:?}");
+    assert!(st.fills > 0, "TLB-hit accesses must fill the views: {st:?}");
+    assert!(st.epoch_flushes >= 1, "flush_tlb must bump the epoch: {st:?}");
+}
+
+#[test]
+fn crossing_and_out_of_dram_accesses_bypass_the_fast_path() {
+    let mut ms = sys(LsuMode::Fast, 1);
+    // Line-crossing stores: even repeated, they must never fast-hit.
+    for v in 0..4 {
+        ms.vstore(0, satp(), true, VA + 60, Width::D, v).unwrap();
+    }
+    assert_eq!(ms.fastpath_stats().hits, 0, "crossing stores must stay on the slow path");
+    // Same line, contained: third access onward replays.
+    for v in 0..4 {
+        ms.vstore(0, satp(), true, VA + 8, Width::D, v).unwrap();
+    }
+    assert!(ms.fastpath_stats().hits >= 2, "contained same-line stores must fast-hit");
+    // A page mapped below DRAM (device space) is rejected by the check
+    // and faults identically on the slow path.
+    map_page(&mut ms, VA + 0x3000, 0x1000, RW);
+    assert!(ms.vload(0, satp(), true, VA + 0x3000, Width::D).is_err());
+    assert!(ms.vload(0, satp(), true, VA + 0x3000, Width::D).is_err());
+}
+
+#[test]
+fn sfence_flush_prevents_stale_fast_translations() {
+    let mut ms = sys(LsuMode::Fast, 1);
+    let s = satp();
+    // Enter the fast regime on VA -> pa1.
+    for v in 0..3 {
+        ms.vstore(0, s, true, VA + 8, Width::D, v).unwrap();
+    }
+    let hits0 = ms.fastpath_stats().hits;
+    assert!(hits0 >= 1);
+    // Remap VA to a different physical page and sfence. The next store
+    // must walk the new table and land in the new page.
+    let pa2 = DRAM_BASE + 0x30_0000;
+    map_page(&mut ms, VA, pa2, RW);
+    ms.flush_tlb(0);
+    ms.vstore(0, s, true, VA + 8, Width::D, 0xfeed).unwrap();
+    assert_eq!(ms.phys.read_u64(pa2 + 8), Some(0xfeed), "store must follow the remap");
+    assert_eq!(
+        ms.phys.read_u64(DRAM_BASE + 0x20_0000 + 8),
+        Some(2),
+        "old page keeps its pre-remap value"
+    );
+}
+
+const ECALL: u32 = 0x0000_0073;
+
+/// jal rd, off — pc-relative byte offset.
+fn jal(rd: u8, off: i64) -> u32 {
+    let v = off as u32;
+    0x6f | ((rd as u32) << 7)
+        | (((v >> 20) & 1) << 31)
+        | (((v >> 1) & 0x3ff) << 21)
+        | (((v >> 11) & 1) << 20)
+        | (((v >> 12) & 0xff) << 12)
+}
+
+/// jalr rd, off(rs1)
+fn jalr(rd: u8, rs1: u8, off: i32) -> u32 {
+    ((off as u32 & 0xfff) << 20) | ((rs1 as u32) << 15) | ((rd as u32) << 7) | 0x67
+}
+
+fn write_prog(m: &mut Machine, at: u64, words: &[u32]) {
+    for (i, w) in words.iter().enumerate() {
+        m.ms.phys.write_n(at + 4 * i as u64, 4, *w as u64);
+    }
+}
+
+/// Paged self-modifying code with *no* fence.i: user code patches a
+/// subroutine through a writable alias of its physical page, with the
+/// patching store arranged to take the LSU fast path (same line, warmed
+/// write view). The fast store must still bump the page's write
+/// generation, so the block engine's gen revalidation evicts the stale
+/// decode and the second call runs the rewritten code.
+fn run_paged_smc(lsu: LsuMode) -> ([u64; 32], u64, u64) {
+    let mut m = Machine::new(MachineConfig {
+        n_harts: 1,
+        dram_size: 16 << 20,
+        lsu,
+        ..Default::default()
+    });
+    let root = DRAM_BASE + 0x10_0000;
+    let pa_main = DRAM_BASE + 0x20_0000;
+    let pa_tgt = DRAM_BASE + 0x20_1000;
+    let va_main = VA;
+    let va_tgt = VA + 0x2000;
+    let va_data = VA + 0x4000; // writable alias of pa_tgt
+    let xf = PTE_V | PTE_R | PTE_X | PTE_U | PTE_A;
+    let l2 = root + 0x1000;
+    let l1 = root + 0x2000;
+    let map = |m: &mut Machine, va: u64, pa: u64, flags: u64| {
+        m.ms.phys.write_u64(root + ((va >> 30) & 0x1ff) * 8, ((l2 >> 12) << 10) | PTE_V);
+        m.ms.phys.write_u64(l2 + ((va >> 21) & 0x1ff) * 8, ((l1 >> 12) << 10) | PTE_V);
+        m.ms.phys.write_u64(l1 + ((va >> 12) & 0x1ff) * 8, ((pa >> 12) << 10) | flags);
+    };
+    map(&mut m, va_main, pa_main, xf);
+    map(&mut m, va_tgt, pa_tgt, xf);
+    map(&mut m, va_data, pa_tgt, RW);
+    write_prog(&mut m, pa_main, &[
+        jal(1, 0x2000),        // call 1: t1 += 1 (block gets cached)
+        encode::sd(9, 8, 8),   // warm store: TLB walk, no fill
+        encode::sd(9, 8, 8),   // warm store: TLB hit, fills the write view
+        encode::sd(18, 8, 0),  // PATCH through the fast path (same line)
+        jal(1, 0x1ff0),        // call 2: must run the rewritten code
+        ECALL,
+    ]);
+    write_prog(&mut m, pa_tgt, &[encode::addi(6, 6, 1), jalr(0, 1, 0)]);
+    m.harts[0].regs[8] = va_data;
+    m.harts[0].regs[9] = 0x5a5a_5a5a; // warm-store filler (bytes 8..16, never executed)
+    m.harts[0].regs[18] = ((jalr(0, 1, 0) as u64) << 32) | encode::addi(6, 6, 100) as u64;
+    m.harts[0].csrs.satp = Satp::make(8, 1, root >> 12).0;
+    m.harts[0].prv = PrivLevel::U;
+    m.harts[0].pc = va_main;
+    m.harts[0].stop_fetch = false;
+    assert!(m.run_until_exception(10_000_000), "program must reach its ecall");
+    assert!(m.pop_exception().is_some());
+    assert_eq!(m.harts[0].csrs.mcause, 8, "user ecall expected");
+    if lsu == LsuMode::Fast {
+        assert!(m.lsu_stats().hits > 0, "patch script must exercise the fast path");
+        let s = m.engine_stats();
+        assert!(s.evicted >= 1, "gen bump must evict the stale block: {s:?}");
+    } else {
+        assert_eq!(m.lsu_stats().hits, 0);
+    }
+    let h = &m.harts[0];
+    (h.regs, h.time, h.instret)
+}
+
+#[test]
+fn fast_store_smc_evicts_blocks_without_fence_i() {
+    let slow = run_paged_smc(LsuMode::Slow);
+    let fast = run_paged_smc(LsuMode::Fast);
+    assert_eq!(fast.0[6], 101, "first call adds 1, patched call adds 100");
+    assert_eq!(slow, fast, "LSU modes diverged in registers, time, or instret");
+}
+
+/// Run the 12-scenario matrix (storm/memtouch/stride x fase-loopback/
+/// fullsys x 1,2 harts) under one LSU mode via the label-invisible
+/// override and return the pretty-printed report plus retired counts.
+fn lockstep_sweep(lsu: LsuMode) -> (String, Vec<u64>) {
+    let mut spec = SweepSpec::new("lsu-lockstep");
+    spec.seed = 0x5EED;
+    spec.dram_size = 64 << 20;
+    spec.max_target_seconds = 30.0;
+    spec.workloads = vec![
+        WorkloadSpec::synth(SynthKind::Storm { calls: 24 }),
+        WorkloadSpec::synth(SynthKind::MemTouch { pages: 16 }),
+        WorkloadSpec::synth(SynthKind::Stride { pages: 16, stride: 8 }),
+    ];
+    spec.arms = vec![
+        Arm::Fase {
+            transport: fase::fase::transport::TransportSpec::Loopback,
+            hfutex: true,
+            ideal_latency: false,
+        },
+        Arm::FullSys,
+    ];
+    spec.harts = vec![1, 2];
+    spec.lsu_override = Some(lsu);
+    let out = run_sweep(&spec, 2, None, false);
+    assert!(out.errors().is_empty(), "sweep errors under {lsu}: {:?}", out.errors());
+    let retired = out.outcomes.iter().map(|o| o.result.instret).collect();
+    (out.to_json().to_string_pretty(), retired)
+}
+
+#[test]
+fn lsu_modes_produce_byte_identical_sweep_reports() {
+    let (report_s, retired_s) = lockstep_sweep(LsuMode::Slow);
+    let (report_f, retired_f) = lockstep_sweep(LsuMode::Fast);
+    assert!(retired_s.iter().sum::<u64>() > 0, "workloads must retire instructions");
+    assert_eq!(retired_s, retired_f, "retired counts must match per scenario");
+    assert!(report_s == report_f, "sweep reports must be byte-identical across LSU modes");
+}
