@@ -1,0 +1,111 @@
+//! Serve throughput — board-pool session packing × HTP frame coalescing.
+//!
+//! Runs the `serve-throughput` builtin matrix (storm sessions packed
+//! 1/2/8 deep on one board, simultaneous and 200 µs-staggered arrivals,
+//! coalescing on/off) and renders modeled board occupancy. The headline
+//! gate: at ≥ 2 sessions per board, cross-session coalescing must merge
+//! frames (`merged_frames > 0`) and strictly reduce board ticks versus
+//! the serial replay — the bench exits nonzero otherwise, and CI runs it.
+//!
+//! Artifact: `BENCH_serve.json` (override path with FASE_BENCH_OUT) with
+//! per-cell board stats and modeled sessions/sec.
+
+use fase::bench_support::*;
+use fase::util::json::Json;
+
+/// Board clock: 100 MHz (ticks → seconds for the sessions/sec figure).
+const CLOCK_HZ: f64 = 100e6;
+
+fn main() {
+    let spec = fase::sweep::builtin("serve-throughput").expect("builtin spec");
+    let doc = run_figure(&spec).to_json();
+
+    let label = |sessions: u32, arrival: u64, coalesce: bool| {
+        format!(
+            "storm:64|fase@uart:921600+x{sessions}+a{arrival}+c{}|1c|rocket|s0",
+            u8::from(coalesce)
+        )
+    };
+    let cell = |l: &str| {
+        find_job_labeled(&doc, l).unwrap_or_else(|| {
+            eprintln!("[bench] missing serve cell {l}");
+            std::process::exit(1);
+        })
+    };
+
+    let mut tab = Table::new(&[
+        "sessions",
+        "arrival_us",
+        "board_kt(off)",
+        "board_kt(on)",
+        "saved",
+        "merged",
+        "peak",
+        "sessions/s(on)",
+    ]);
+    let mut artifact_cells = Vec::new();
+    let mut gate_failures = 0;
+    for &sessions in &[1u32, 2, 8] {
+        for &arrival in &[0u64, 200] {
+            let on = cell(&label(sessions, arrival, true));
+            let off = cell(&label(sessions, arrival, false));
+            let on_ticks = on.metric("coalesce.board_ticks");
+            let off_ticks = off.metric("coalesce.board_ticks");
+            let merged = on.metric("coalesce.merged_frames");
+            let peak = on.metric("coalesce.peak_occupancy");
+            let per_sec = sessions as f64 / (on_ticks / CLOCK_HZ).max(1e-12);
+            tab.row(vec![
+                sessions.to_string(),
+                arrival.to_string(),
+                format!("{:.1}", off_ticks / 1e3),
+                format!("{:.1}", on_ticks / 1e3),
+                pct((off_ticks - on_ticks) / off_ticks),
+                format!("{merged:.0}"),
+                format!("{peak:.0}"),
+                format!("{per_sec:.1}"),
+            ]);
+            artifact_cells.push(Json::Obj(vec![
+                ("sessions".into(), Json::u64(sessions as u64)),
+                ("arrival_us".into(), Json::u64(arrival)),
+                ("board_ticks_on".into(), Json::f64(on_ticks)),
+                ("board_ticks_off".into(), Json::f64(off_ticks)),
+                ("merged_frames".into(), Json::f64(merged)),
+                ("hidden_ticks".into(), Json::f64(on.metric("coalesce.hidden_ticks"))),
+                ("peak_occupancy".into(), Json::f64(peak)),
+                ("sessions_per_sec".into(), Json::f64(per_sec)),
+            ]));
+            // The acceptance gate: packing >= 2 sessions on a storm
+            // board must coalesce, and coalescing must strictly win.
+            if sessions >= 2 {
+                if merged <= 0.0 {
+                    eprintln!("[bench] GATE x{sessions}+a{arrival}: no frames merged");
+                    gate_failures += 1;
+                }
+                if on_ticks >= off_ticks {
+                    eprintln!(
+                        "[bench] GATE x{sessions}+a{arrival}: coalescing did not reduce \
+                         board ticks ({on_ticks} >= {off_ticks})"
+                    );
+                    gate_failures += 1;
+                }
+            }
+        }
+    }
+    tab.print("Serve throughput — session packing x frame coalescing (storm:64 @ uart:921600)");
+
+    let out = std::env::var("FASE_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let artifact = Json::Obj(vec![
+        ("schema".into(), Json::Int(1)),
+        ("bench".into(), Json::str("serve_throughput")),
+        ("cells".into(), Json::Arr(artifact_cells)),
+    ]);
+    if let Err(e) = std::fs::write(&out, artifact.to_string_pretty()) {
+        eprintln!("[bench] cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("\nwrote {out}");
+    if gate_failures > 0 {
+        eprintln!("[bench] {gate_failures} coalescing gate failure(s)");
+        std::process::exit(1);
+    }
+}

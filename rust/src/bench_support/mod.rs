@@ -272,6 +272,16 @@ pub fn find_job_at<'a>(
         .map(|job| JobView { label: field(job, "label"), job })
 }
 
+/// Find one scenario cell by its exact label — the lookup serve-axis
+/// grids need, where many cells share (workload, arm, harts) and differ
+/// only in their `+xN+aN+cB` pins.
+pub fn find_job_labeled<'a>(doc: &'a Json, label: &str) -> Option<JobView<'a>> {
+    let jobs = doc.get("jobs")?.as_arr()?;
+    jobs.iter()
+        .find(|j| j.get("label").and_then(Json::as_str) == Some(label))
+        .map(|job| JobView { label: label.to_string(), job })
+}
+
 fn find_job_or_exit<'a>(
     doc: &'a Json,
     workload: &str,

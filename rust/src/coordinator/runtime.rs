@@ -13,7 +13,7 @@ use crate::fase::transport::TransportSpec;
 use crate::mem::{FastPathStats, LsuMode};
 use crate::perf::recorder::Context;
 use crate::perf::window::WindowSample;
-use crate::perf::{OverlapStats, PipelineStats, StallBreakdown};
+use crate::perf::{CoalesceStats, FrameTrace, OverlapStats, PipelineStats, StallBreakdown};
 use crate::rv64::hart::CoreModel;
 use crate::rv64::{EngineKind, EngineStats};
 use crate::soc::{Machine, MachineConfig};
@@ -70,6 +70,16 @@ pub struct RunConfig {
     /// values enable tagged frames, credit flow control and speculative
     /// argument pushes on FASE targets (ignored by the fullsys baseline).
     pub outstanding: u32,
+    /// Bytes delivered to guest stdin via `Runtime::push_stdin`, at the
+    /// deterministic point where every hart is parked and a blocking
+    /// read waits — virtual time, not host arrival, decides delivery, so
+    /// reports stay byte-stable. Non-empty stdin arms
+    /// `FdTable::stdin_block` (reads park instead of returning EOF).
+    pub stdin: Vec<u8>,
+    /// Capture a per-transaction [`FrameTrace`] tape for the serve
+    /// layer's cross-session coalescing replay. Timing-neutral: only the
+    /// tape fills; the report surface never changes.
+    pub trace_frames: bool,
 }
 
 impl Default for RunConfig {
@@ -95,6 +105,8 @@ impl Default for RunConfig {
             analysis: AnalysisMode::default(),
             lsu: LsuMode::default(),
             outstanding: 1,
+            stdin: Vec::new(),
+            trace_frames: false,
         }
     }
 }
@@ -220,6 +232,16 @@ pub struct RunResult {
     /// keep the legacy report shape: `metrics_json` emits a `pipeline`
     /// member only at depth > 1, so serial reports stay byte-identical.
     pub pipeline: PipelineStats,
+    /// Per-transaction tape for cross-session coalescing replay, captured
+    /// only under `RunConfig::trace_frames`. Like `engine_stats`,
+    /// excluded from `metrics_json` — it is input to the serve replay,
+    /// not a metric.
+    pub frames: Vec<FrameTrace>,
+    /// Board-level coalescing tallies attached by the serve layer after
+    /// its replay. `None` for ordinary runs: `metrics_json` emits a
+    /// `coalesce` member only when present, so solo reports keep their
+    /// exact legacy bytes (the same pattern as `pipeline` at depth 1).
+    pub coalesce: Option<CoalesceStats>,
 }
 
 impl RunResult {
@@ -274,6 +296,8 @@ impl RunResult {
             engine_stats: EngineStats::default(),
             fastpath: FastPathStats::default(),
             pipeline: PipelineStats::default(),
+            frames: Vec::new(),
+            coalesce: None,
         }
     }
 
@@ -363,6 +387,13 @@ impl RunResult {
         if self.pipeline.depth > 1 {
             m.push(("pipeline".into(), self.pipeline.to_json()));
         }
+        // Board-level coalescing tallies are attached only to sweep jobs
+        // whose label pins a `sessions` axis (serve_throughput cells) —
+        // per-session serve reports never carry them, so a session's
+        // report stays byte-identical solo vs packed (CI gates this).
+        if let Some(c) = &self.coalesce {
+            m.push(("coalesce".into(), c.to_json()));
+        }
         Json::Obj(m)
     }
 }
@@ -379,6 +410,11 @@ pub struct Runtime {
     /// vpn (DESIGN.md §Analysis). Drained as the loader / fault path
     /// maps their pages; empty unless `cfg.analysis` prewarms.
     prewarm_pending: BTreeMap<u64, Vec<u64>>,
+    /// `RunConfig::stdin` bytes not yet delivered. Handed to
+    /// `push_stdin` at the deterministic all-parked point in `run` (see
+    /// the Deadlock arm), so delivery time is a function of the virtual
+    /// timeline alone.
+    pending_stdin: Option<Vec<u8>>,
 }
 
 #[derive(Debug)]
@@ -453,12 +489,20 @@ impl Runtime {
         let end_ppn = (dram_base + cfg.dram_size) >> 12;
         let mut alloc = PageAlloc::new(start_ppn, end_ppn);
         let vm = AddressSpace::new(target.as_mut(), 0, &mut alloc).expect("root PT alloc");
+        if cfg.trace_frames {
+            target.recorder().frame_trace = Some(Vec::new());
+        }
         let n = cfg.n_cpus;
+        let mut fds = FdTable::new(cfg.guest_root.clone(), cfg.echo_stdout);
+        // Configured stdin arms the blocking-read path: a guest read on
+        // the not-yet-delivered stream parks in the Pending table instead
+        // of seeing EOF.
+        fds.stdin_block = !cfg.stdin.is_empty();
         let k = Kernel {
             sched: Scheduler::new(n),
             vm,
             alloc,
-            fds: FdTable::new(cfg.guest_root.clone(), cfg.echo_stdout),
+            fds,
             heap_seg: 0,
             tramp_va: 0,
             exit_code: None,
@@ -469,6 +513,8 @@ impl Runtime {
             pid: 100,
             prng: Prng::stream(cfg.seed, 0x5EED),
         };
+        let pending_stdin =
+            if cfg.stdin.is_empty() { None } else { Some(cfg.stdin.clone()) };
         Runtime {
             cfg,
             target,
@@ -477,6 +523,7 @@ impl Runtime {
             last_utick: vec![0; n],
             windows: Vec::new(),
             prewarm_pending: BTreeMap::new(),
+            pending_stdin,
         }
     }
 
@@ -839,6 +886,23 @@ impl Runtime {
                     }
                     let anyone_running = self.k.sched.running.iter().any(|r| r.is_some());
                     if !anyone_running && self.k.sched.ready.is_empty() {
+                        // Deterministic stdin delivery: every hart is
+                        // parked, so if a blocking read waits and
+                        // configured stdin is pending, this is the
+                        // virtual-time point where the stream "arrives" —
+                        // a pure function of the guest's own progress.
+                        if self.pending_stdin.is_some()
+                            && self
+                                .k
+                                .pending
+                                .values()
+                                .any(|w| matches!(w, Wait::Read { .. }))
+                        {
+                            let data = self.pending_stdin.take().unwrap();
+                            self.push_stdin(&data);
+                            self.fill_cpus();
+                            continue;
+                        }
                         error = Some(RunError::Deadlock.to_string());
                         break;
                     }
@@ -904,6 +968,7 @@ impl Runtime {
             .map(|(nr, c)| (crate::perf::recorder::syscall_label(*nr), *c))
             .collect();
         let overlap = rec.overlap.clone();
+        let frames = rec.frame_trace.take().unwrap_or_default();
         RunResult {
             exit_code: self.k.exit_code.unwrap_or(0),
             error,
@@ -937,6 +1002,8 @@ impl Runtime {
             engine_stats,
             fastpath,
             pipeline: rec.pipeline,
+            frames,
+            coalesce: None,
         }
     }
 }

@@ -406,6 +406,7 @@ impl FaseTarget {
                 .record_batch_frame(n as u64, BatchFrame::REQ_HDR, frame.saved_bytes());
         }
         self.rec.record_transaction();
+        self.rec.trace_frame(self.m.now, chan_total, host, tx + rx);
         self.rec.record_runtime_stall(host);
         resps
     }
@@ -485,6 +486,12 @@ impl TargetOps for FaseTarget {
                         stats.injects,
                     );
                     self.rec.record_transaction();
+                    self.rec.trace_frame(
+                        self.m.now,
+                        req_ticks + resp_ticks - hidden,
+                        host,
+                        Req::Next.wire_len() + resp.wire_len(),
+                    );
                     self.rec.record_runtime_stall(host);
                     if let Resp::Exception { cpu, cause, epc, tval, nr, at } = resp {
                         let cpu = cpu as usize;
@@ -561,6 +568,14 @@ impl TargetOps for FaseTarget {
                         stats.injects,
                     );
                     self.rec.record_transaction();
+                    // Streamed reports ride the armed Next: no per-
+                    // transaction host charge, so the trace carries zero.
+                    self.rec.trace_frame(
+                        self.m.now,
+                        req_ticks + resp_ticks - hidden,
+                        0,
+                        Req::Next.wire_len() + resp.wire_len(),
+                    );
                     if let Resp::Exception { cpu, cause, epc, tval, nr, at } = resp {
                         let cpu = cpu as usize;
                         let info = ExcInfo { cpu, cause, epc, tval, at, nr };

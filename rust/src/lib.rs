@@ -13,6 +13,7 @@ pub mod mem;
 pub mod perf;
 pub mod runtime;
 pub mod rv64;
+pub mod serve;
 pub mod soc;
 pub mod sweep;
 pub mod util;

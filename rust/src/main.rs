@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   run     — execute a guest ELF under FASE or the full-system baseline
 //!   sweep   — run a scenario-matrix sweep and emit a JSON report
+//!   serve   — multi-tenant daemon: a board pool serving concurrent
+//!             sessions over TCP (docs/serve.md)
+//!   submit  — client for a running serve daemon
 //!   analyze — ahead-of-run static analysis of a guest (CFG, syscall
 //!             inventory, audit) without executing it
 //!   info    — print target/ELF information
@@ -12,6 +15,8 @@
 //!   fase run g.elf --mode fullsys --env OMP_NUM_THREADS=4
 //!   fase sweep --spec ci-smoke --jobs 8 --out report.json \
 //!              --check-against ci/baseline.json
+//!   fase serve --addr 127.0.0.1:9838 --boards 4 --max-sessions 16
+//!   fase submit 'echo:64|fase@uart:921600|1c|rocket|s0' --stdin in.txt
 
 use fase::coordinator::runtime::{run_elf, Mode, RunConfig};
 use fase::coordinator::target::{HostLatency, KernelCosts};
@@ -28,24 +33,34 @@ fn main() {
     match args.subcommand() {
         Some("run") => cmd_run(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: fase <run|sweep|analyze|info> [options]");
+            eprintln!("usage: fase <run|sweep|serve|submit|analyze|info> [options]");
             eprintln!("  fase run <elf> [--mode fase|fullsys|pk] [--cpus N]");
             eprintln!("           [--transport uart:BAUD|xdma|loopback] [--baud N]");
             eprintln!("           [--core rocket|cva6] [--engine interp|block]");
             eprintln!("           [--analysis off|report|prewarm] [--outstanding N]");
             eprintln!("           [--lsu slow|fast] [--no-hfutex] [--no-batch]");
             eprintln!("           [--lazy-image] [--preload N] [--env K=V]...");
-            eprintln!("           [--quiet] [--report] [--max-seconds S]");
-            eprintln!("           [--ideal-latency] [-- guest args]");
+            eprintln!("           [--stdin FILE|-] [--quiet] [--report]");
+            eprintln!("           [--max-seconds S] [--ideal-latency] [-- guest args]");
             eprintln!("  fase sweep [--spec ci-smoke|FILE] [--jobs N] [--out report.json]");
             eprintln!("           [--engine interp|block] [--analysis off|report|prewarm]");
             eprintln!("           [--lsu slow|fast] [--outstanding N] [--filter SUBSTR]");
             eprintln!("           [--check-against baseline.json]");
             eprintln!("           [--compare-only report.json] [--require-baseline]");
             eprintln!("           [--list] [--quiet]");
+            eprintln!("  fase serve [--addr HOST:PORT] [--boards N] [--max-sessions M]");
+            eprintln!("           [--queue N] [--no-coalesce] [--seed N] [--dram BYTES]");
+            eprintln!("           [--max-seconds S]");
+            eprintln!("           long-lived daemon: sessions are scenario atoms");
+            eprintln!("           (workload|arm|<harts>c|core|s<seed>) served over a");
+            eprintln!("           line protocol; see docs/serve.md");
+            eprintln!("  fase submit <atom> [--addr HOST:PORT] [--stdin FILE|-]");
+            eprintln!("           [--deadline-ms N] | --stats | --shutdown");
             eprintln!("  fase analyze <elf|spin:N|storm:N|memtouch:N|stride:P:S|probe:N>");
             eprintln!("           [--json report.json] [--strict] [--quiet]");
             eprintln!("           static CFG + syscall-site inventory + audit, no");
@@ -94,6 +109,27 @@ fn outstanding_arg(args: &Args) -> u32 {
     n as u32
 }
 
+/// `--stdin FILE` (or `-` for the host's own stdin): the byte stream the
+/// runtime delivers to the guest's blocking stdin at the deterministic
+/// all-parked point.
+fn stdin_arg(args: &Args) -> Vec<u8> {
+    match args.get("stdin") {
+        None => Vec::new(),
+        Some("-") => {
+            let mut buf = Vec::new();
+            if let Err(e) = std::io::Read::read_to_end(&mut std::io::stdin(), &mut buf) {
+                eprintln!("fase: cannot read stdin: {e}");
+                std::process::exit(2);
+            }
+            buf
+        }
+        Some(path) => std::fs::read(path).unwrap_or_else(|e| {
+            eprintln!("fase: cannot read --stdin file {path}: {e}");
+            std::process::exit(2);
+        }),
+    }
+}
+
 fn build_config(args: &Args) -> RunConfig {
     let mode = match args.str_or("mode", "fase").as_str() {
         "fullsys" => Mode::FullSys { costs: KernelCosts::default() },
@@ -131,6 +167,64 @@ fn build_config(args: &Args) -> RunConfig {
         analysis: analysis_arg(args),
         lsu: lsu_arg(args),
         outstanding: outstanding_arg(args),
+        stdin: stdin_arg(args),
+        trace_frames: false,
+    }
+}
+
+/// `fase serve` — the multi-tenant daemon (docs/serve.md).
+fn cmd_serve(args: &Args) {
+    let mut base = fase::sweep::SweepSpec::new("serve");
+    base.seed = args.u64_or("seed", 0xFA5E);
+    base.dram_size = args.u64_or("dram", 1 << 31);
+    base.max_target_seconds = args.f64_or("max-seconds", 600.0);
+    let cfg = fase::serve::ServeConfig {
+        addr: args.str_or("addr", "127.0.0.1:9838"),
+        boards: args.usize_or("boards", 1).max(1),
+        max_sessions: args.usize_or("max-sessions", 4).max(1),
+        queue_cap: args.usize_or("queue", 16),
+        coalesce: !args.flag("no-coalesce"),
+        base,
+    };
+    if let Err(e) = fase::serve::serve_blocking(cfg) {
+        eprintln!("fase serve: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// `fase submit` — run one session on (or control) a serve daemon.
+fn cmd_submit(args: &Args) {
+    let addr = args.str_or("addr", "127.0.0.1:9838");
+    if args.flag("shutdown") {
+        if let Err(e) = fase::serve::server::shutdown(&addr) {
+            eprintln!("fase submit: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
+    if args.flag("stats") {
+        match fase::serve::server::stats(&addr) {
+            Ok(json) => print!("{json}"),
+            Err(e) => {
+                eprintln!("fase submit: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    let rest = args.rest();
+    let Some(atom) = rest.first() else {
+        eprintln!("fase submit: missing session atom (workload|arm|<harts>c|core|s<seed>)");
+        std::process::exit(2);
+    };
+    let stdin = stdin_arg(args);
+    let deadline = args.u64_or("deadline-ms", 120_000);
+    match fase::serve::submit(&addr, atom, &stdin, deadline) {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("fase submit: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

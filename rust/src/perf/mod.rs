@@ -6,5 +6,7 @@
 pub mod recorder;
 pub mod window;
 
-pub use recorder::{Context, OverlapStats, PipelineStats, Recorder, StallBreakdown};
+pub use recorder::{
+    CoalesceStats, Context, FrameTrace, OverlapStats, PipelineStats, Recorder, StallBreakdown,
+};
 pub use window::{WindowSample, NUM_FEATURES};

@@ -173,6 +173,76 @@ impl PipelineStats {
     }
 }
 
+/// One wire round-trip captured on a session's private timeline for the
+/// serve layer's cross-session coalescing replay (serve/coalesce.rs).
+/// Recorded only when tracing is enabled (`RunConfig::trace_frames`) so
+/// ordinary runs pay nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameTrace {
+    /// Target tick the transaction completed at (session-local time).
+    pub at: u64,
+    /// Channel ticks the frame occupied the wire (head + body + tail,
+    /// after pipeline hiding).
+    pub chan_ticks: u64,
+    /// Per-transaction host service charge. Zero for streamed drain
+    /// reports, which ride an already-armed `Next` (docs/htp-wire.md §5).
+    pub host_ticks: u64,
+    /// Total wire bytes, both directions.
+    pub bytes: u64,
+}
+
+/// Per-board cross-session frame-coalescing tallies (DESIGN.md §Serve).
+/// Produced by the serve layer's deterministic board replay, never by a
+/// live recorder — attached to a session's `RunResult` only when the
+/// session ran under `fase serve`, so solo reports keep their bytes.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Sessions co-resident on the board during the replay.
+    pub sessions: u64,
+    /// Tagged frames the board carried across all sessions.
+    pub frames: u64,
+    /// Shared transport transactions those frames rode in.
+    pub transactions: u64,
+    /// Frames that joined an already-open transaction (frames −
+    /// transactions).
+    pub merged_frames: u64,
+    /// Host service charges saved by merging — cross-session hidden time.
+    pub hidden_ticks: u64,
+    /// Board makespan with coalescing applied.
+    pub board_ticks: u64,
+    /// Board makespan had every frame paid its own transaction
+    /// (coalescing off) — the comparison baseline.
+    pub serial_ticks: u64,
+    /// Total channel ticks across all frames (identical on/off: merging
+    /// shares host charges, never wire time).
+    pub chan_ticks: u64,
+    /// High-water mark of frames sharing one transaction.
+    pub peak_occupancy: u64,
+    /// Sessions that waited in the admission queue for a board slot.
+    pub admission_waits: u64,
+}
+
+impl CoalesceStats {
+    /// Stable JSON form for sweep reports (member order is fixed). Only
+    /// emitted for serve-packed sessions — solo reports keep the legacy
+    /// shape, like `PipelineStats` at depth 1.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(vec![
+            ("sessions".into(), Json::u64(self.sessions)),
+            ("frames".into(), Json::u64(self.frames)),
+            ("transactions".into(), Json::u64(self.transactions)),
+            ("merged_frames".into(), Json::u64(self.merged_frames)),
+            ("hidden_ticks".into(), Json::u64(self.hidden_ticks)),
+            ("board_ticks".into(), Json::u64(self.board_ticks)),
+            ("serial_ticks".into(), Json::u64(self.serial_ticks)),
+            ("chan_ticks".into(), Json::u64(self.chan_ticks)),
+            ("peak_occupancy".into(), Json::u64(self.peak_occupancy)),
+            ("admission_waits".into(), Json::u64(self.admission_waits)),
+        ])
+    }
+}
+
 #[derive(Default)]
 pub struct Recorder {
     pub by_kind: BTreeMap<ReqKind, KindStats>,
@@ -203,6 +273,10 @@ pub struct Recorder {
     /// LSU fast-path counters, snapshotted from the machine at collection
     /// time. Host-side diagnostics only, like `engine`.
     pub fastpath: FastPathStats,
+    /// Per-transaction trace for the serve layer's cross-session
+    /// coalescing replay. `None` (the default) disables capture — the
+    /// timing model is untouched either way, only this tape fills.
+    pub frame_trace: Option<Vec<FrameTrace>>,
     ctx: Context,
 }
 
@@ -263,6 +337,15 @@ impl Recorder {
         self.transactions += 1;
     }
 
+    /// Capture one wire transaction onto the coalescing tape. No-op
+    /// unless the serve layer (via `RunConfig::trace_frames`) enabled
+    /// capture — never perturbs timing or the report surface.
+    pub fn trace_frame(&mut self, at: u64, chan_ticks: u64, host_ticks: u64, bytes: u64) {
+        if let Some(t) = &mut self.frame_trace {
+            t.push(FrameTrace { at, chan_ticks, host_ticks, bytes });
+        }
+    }
+
     /// Record a coalesced frame's batching-layer numbers.
     pub fn record_batch_frame(&mut self, reqs: u64, header_bytes: u64, saved_bytes: u64) {
         self.batch.frames += 1;
@@ -302,15 +385,20 @@ impl Recorder {
     }
 
     /// Reset the tallies (e.g. between measured iterations) keeping
-    /// context, transport identity and negotiated pipeline depth.
+    /// context, transport identity, negotiated pipeline depth and
+    /// frame-trace enablement.
     pub fn reset(&mut self) {
         let ctx = self.ctx;
         let transport = std::mem::take(&mut self.transport);
         let depth = self.pipeline.depth;
+        let tracing = self.frame_trace.is_some();
         *self = Recorder::new();
         self.ctx = ctx;
         self.transport = transport;
         self.pipeline.depth = depth;
+        if tracing {
+            self.frame_trace = Some(Vec::new());
+        }
     }
 
     /// Bytes grouped by syscall-context label (Fig 13 right-hand grouping).

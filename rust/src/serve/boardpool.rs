@@ -1,0 +1,205 @@
+//! The board pool: N targets multiplexed over M >> N sessions.
+//!
+//! Admission control is a counting gate with a bounded wait queue:
+//! up to `max_sessions` sessions run concurrently, up to `queue_cap`
+//! more block waiting for a slot, and anything beyond that is rejected
+//! with a retry hint (`BUSY <retry_ms>` on the wire) — backpressure
+//! instead of unbounded queueing. Board *assignment* is a pure function
+//! of the session label (its FNV hash mod the board count), so which
+//! board a session's frames land on never depends on scheduling — the
+//! property that keeps per-board coalescing stats deterministic given
+//! the set of completed sessions.
+
+use super::coalesce::{self, SessionTrace};
+use crate::perf::FrameTrace;
+use crate::sweep::job::session_seed;
+use crate::util::json::Json;
+use std::sync::{Condvar, Mutex};
+
+/// Admission rejection: the run queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy {
+    /// Suggested client backoff before resubmitting.
+    pub retry_after_ms: u64,
+}
+
+struct State {
+    active: usize,
+    queued: usize,
+    /// Sessions that had to wait for a slot (the admission_waits stat).
+    waits: u64,
+    completed: u64,
+    /// Per-board tapes of completed sessions, replayed for STATS.
+    tapes: Vec<Vec<SessionTrace>>,
+}
+
+pub struct BoardPool {
+    boards: usize,
+    max_sessions: usize,
+    queue_cap: usize,
+    inner: Mutex<State>,
+    cv: Condvar,
+}
+
+/// A granted run slot. Dropping it frees the slot and wakes a waiter;
+/// [`BoardPool::record`] files the session's trace on its board first.
+pub struct BoardLease<'a> {
+    pool: &'a BoardPool,
+    /// The board this session's frames replay onto.
+    pub board: usize,
+}
+
+impl Drop for BoardLease<'_> {
+    fn drop(&mut self) {
+        let mut st = self.pool.inner.lock().unwrap();
+        st.active -= 1;
+        drop(st);
+        self.pool.cv.notify_one();
+    }
+}
+
+impl BoardPool {
+    pub fn new(boards: usize, max_sessions: usize, queue_cap: usize) -> BoardPool {
+        let boards = boards.max(1);
+        BoardPool {
+            boards,
+            max_sessions: max_sessions.max(1),
+            queue_cap,
+            inner: Mutex::new(State {
+                active: 0,
+                queued: 0,
+                waits: 0,
+                completed: 0,
+                tapes: vec![Vec::new(); boards],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deterministic label-keyed board assignment.
+    pub fn board_for(&self, label: &str) -> usize {
+        (session_seed(0, label) % self.boards as u64) as usize
+    }
+
+    /// Admit a session, blocking in the bounded queue if all slots are
+    /// busy. Returns [`Busy`] when the queue is full too.
+    pub fn admit(&self, label: &str) -> Result<BoardLease<'_>, Busy> {
+        let board = self.board_for(label);
+        let mut st = self.inner.lock().unwrap();
+        if st.active >= self.max_sessions {
+            if st.queued >= self.queue_cap {
+                return Err(Busy { retry_after_ms: 50 });
+            }
+            st.queued += 1;
+            st.waits += 1;
+            while st.active >= self.max_sessions {
+                st = self.cv.wait(st).unwrap();
+            }
+            st.queued -= 1;
+        }
+        st.active += 1;
+        Ok(BoardLease { pool: self, board })
+    }
+
+    /// File a completed session's frame trace on its board. Arrival
+    /// offsets are all zero: daemon stats are a function of the *set* of
+    /// completed sessions, never of wall-clock arrival order.
+    pub fn record(&self, lease: &BoardLease<'_>, label: String, frames: Vec<FrameTrace>) {
+        let mut st = self.inner.lock().unwrap();
+        st.completed += 1;
+        st.tapes[lease.board].push(SessionTrace { label, start: 0, frames });
+    }
+
+    /// Sessions that had to wait for a slot so far.
+    pub fn waits(&self) -> u64 {
+        self.inner.lock().unwrap().waits
+    }
+
+    /// Currently queued sessions (test hook for the admission path).
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().queued
+    }
+
+    /// Replay every board's tape and assemble the STATS document.
+    pub fn stats_json(&self, coalesce: bool) -> Json {
+        let st = self.inner.lock().unwrap();
+        let mut boards = Vec::new();
+        for tape in &st.tapes {
+            let mut tape: Vec<SessionTrace> = tape.clone();
+            tape.sort_by(|a, b| a.label.cmp(&b.label));
+            let mut s = coalesce::replay(&tape, coalesce);
+            s.admission_waits = st.waits;
+            boards.push(s.to_json());
+        }
+        Json::Obj(vec![
+            ("boards".into(), Json::Arr(boards)),
+            ("sessions_completed".into(), Json::u64(st.completed)),
+            ("admission_waits".into(), Json::u64(st.waits)),
+            ("coalesce".into(), Json::Bool(coalesce)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn board_assignment_is_stable_and_in_range() {
+        let p = BoardPool::new(4, 8, 8);
+        let b = p.board_for("echo:64|fullsys|1c|rocket|s0");
+        assert_eq!(b, p.board_for("echo:64|fullsys|1c|rocket|s0"));
+        assert!(b < 4);
+    }
+
+    #[test]
+    fn queue_full_is_busy_not_a_hang() {
+        let p = BoardPool::new(1, 1, 0);
+        let lease = p.admit("a").unwrap();
+        assert_eq!(p.admit("b").err(), Some(Busy { retry_after_ms: 50 }));
+        drop(lease);
+        assert!(p.admit("b").is_ok());
+    }
+
+    #[test]
+    fn m_plus_first_session_queues_then_completes_when_a_slot_frees() {
+        // Capacity 1, queue 4: the second session must wait in the
+        // admission queue and proceed — not error — once the first
+        // session's lease drops.
+        let p = BoardPool::new(1, 1, 4);
+        let second_ran = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let first = p.admit("first").unwrap();
+            s.spawn(|| {
+                let lease = p.admit("second").unwrap();
+                second_ran.store(true, Ordering::SeqCst);
+                p.record(&lease, "second".into(), Vec::new());
+            });
+            // Wait until the second session is visibly parked in the queue.
+            while p.queued() == 0 {
+                std::thread::yield_now();
+            }
+            assert!(!second_ran.load(Ordering::SeqCst));
+            drop(first); // free the slot; the waiter takes it
+        });
+        assert!(second_ran.load(Ordering::SeqCst));
+        assert_eq!(p.waits(), 1);
+        assert_eq!(p.queued(), 0);
+    }
+
+    #[test]
+    fn stats_replay_each_board_deterministically() {
+        let p = BoardPool::new(2, 4, 4);
+        let a = p.admit("a").unwrap();
+        p.record(
+            &a,
+            "a".into(),
+            vec![FrameTrace { at: 0, chan_ticks: 10, host_ticks: 50, bytes: 8 }],
+        );
+        drop(a);
+        let j = p.stats_json(true);
+        assert_eq!(j.get("sessions_completed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("boards").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,218 @@
+//! Cross-session HTP frame coalescing: a deterministic post-hoc replay.
+//!
+//! Sessions run on private timelines — that is what makes their reports
+//! byte-identical solo or packed (DESIGN.md §Serve). Board sharing is
+//! therefore modeled *after* the runs: each session's captured
+//! [`FrameTrace`] tape is replayed onto a shared board clock, and frames
+//! from different sessions whose transmissions overlap merge into one
+//! transport transaction. A merged transaction carries every member's
+//! wire bytes (channel time is physical and always paid) but one host
+//! round-trip charge — the per-request fixed cost PR 8's tag window
+//! exists to amortize. The replay is a pure function of the trace set:
+//! events sort by (board time, session label, sequence), never by any
+//! scheduler state, so stats are byte-stable at any worker count.
+
+use crate::perf::{CoalesceStats, FrameTrace};
+
+/// Frames per merged transaction, bounded by the 7-bit HTP tag window
+/// (tag 0 is reserved for the serial path).
+pub const TAG_WINDOW: u64 = 127;
+
+/// One completed session's contribution to a board replay.
+#[derive(Debug, Clone)]
+pub struct SessionTrace {
+    /// Stable session label — the deterministic tie-breaker.
+    pub label: String,
+    /// Board-clock tick at which the session arrived (its frame times
+    /// are offsets from this).
+    pub start: u64,
+    pub frames: Vec<FrameTrace>,
+}
+
+/// One flattened replay event.
+struct Event<'a> {
+    at: u64,
+    label: &'a str,
+    seq: usize,
+    chan: u64,
+    host: u64,
+}
+
+/// Replay a set of session traces onto one board clock.
+///
+/// With `coalesce` off every frame is a transaction of its own and pays
+/// channel + host serially. With it on, a frame arriving before the
+/// current transaction's wire transmission has finished joins it (up to
+/// [`TAG_WINDOW`] members); the transaction pays the *maximum* host
+/// charge among its members, so `hidden_ticks` — the saved host charges —
+/// is exactly `serial_ticks`'s charge total minus the coalesced one.
+/// `serial_ticks` is always the uncoalesced makespan, so the on/off
+/// saving is readable from a single replay.
+pub fn replay(traces: &[SessionTrace], coalesce: bool) -> CoalesceStats {
+    let mut events: Vec<Event> = Vec::new();
+    for t in traces {
+        for (seq, f) in t.frames.iter().enumerate() {
+            events.push(Event {
+                at: t.start.saturating_add(f.at),
+                label: &t.label,
+                seq,
+                chan: f.chan_ticks,
+                host: f.host_ticks,
+            });
+        }
+    }
+    events.sort_by(|a, b| (a.at, a.label, a.seq).cmp(&(b.at, b.label, b.seq)));
+
+    let chan_ticks: u64 = events.iter().map(|e| e.chan).sum();
+    let host_total: u64 = events.iter().map(|e| e.host).sum();
+
+    // Serial (uncoalesced) makespan: every frame is its own transaction.
+    let mut serial = 0u64;
+    for e in &events {
+        serial = serial.max(e.at) + e.chan + e.host;
+    }
+
+    let mut stats = CoalesceStats {
+        sessions: traces.len() as u64,
+        frames: events.len() as u64,
+        transactions: events.len() as u64,
+        merged_frames: 0,
+        hidden_ticks: 0,
+        board_ticks: serial,
+        serial_ticks: serial,
+        chan_ticks,
+        peak_occupancy: u64::from(!events.is_empty()),
+        admission_waits: 0,
+    };
+    if !coalesce || events.is_empty() {
+        return stats;
+    }
+
+    // Coalesced pass: greedy window merge. A transaction stays open
+    // while its wire transmission runs; frames arriving inside that
+    // window append their bytes (extending the window) until the tag
+    // budget is spent. The host charge is paid once, on close.
+    let mut board = 0u64;
+    let mut transactions = 0u64;
+    let mut charged_host = 0u64;
+    let mut peak = 0u64;
+    let mut open: Option<(u64, u64)> = None; // (host_max, occupancy)
+    let mut window_end = 0u64;
+    for e in &events {
+        match &mut open {
+            Some((host_max, occ)) if e.at <= window_end && *occ < TAG_WINDOW => {
+                board += e.chan;
+                window_end = board;
+                *host_max = (*host_max).max(e.host);
+                *occ += 1;
+                peak = peak.max(*occ);
+            }
+            _ => {
+                if let Some((host_max, _)) = open.take() {
+                    board += host_max;
+                    charged_host += host_max;
+                }
+                board = board.max(e.at) + e.chan;
+                window_end = board;
+                open = Some((e.host, 1));
+                peak = peak.max(1);
+                transactions += 1;
+            }
+        }
+    }
+    if let Some((host_max, _)) = open {
+        board += host_max;
+        charged_host += host_max;
+    }
+    stats.transactions = transactions;
+    stats.merged_frames = stats.frames - transactions;
+    stats.hidden_ticks = host_total - charged_host;
+    stats.board_ticks = board;
+    stats.peak_occupancy = peak;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(at: u64, chan: u64, host: u64) -> FrameTrace {
+        FrameTrace { at, chan_ticks: chan, host_ticks: host, bytes: 8 }
+    }
+
+    fn session(label: &str, start: u64, frames: Vec<FrameTrace>) -> SessionTrace {
+        SessionTrace { label: label.into(), start, frames }
+    }
+
+    #[test]
+    fn empty_replay_is_all_zeros() {
+        let s = replay(&[], true);
+        assert_eq!(s.frames, 0);
+        assert_eq!(s.board_ticks, 0);
+        assert_eq!(s.peak_occupancy, 0);
+    }
+
+    #[test]
+    fn solo_session_coalesces_nothing_new_across_gaps() {
+        // Frames far apart: each transaction closes before the next
+        // arrives, so on == off.
+        let t = vec![session("a", 0, vec![frame(0, 10, 50), frame(1000, 10, 50)])];
+        let on = replay(&t, true);
+        let off = replay(&t, false);
+        assert_eq!(on.merged_frames, 0);
+        assert_eq!(on.board_ticks, off.board_ticks);
+        assert_eq!(on.hidden_ticks, 0);
+    }
+
+    #[test]
+    fn overlapping_sessions_merge_and_strictly_save() {
+        // Two sessions issuing at the same instants: every pair of
+        // frames overlaps on the wire, so half the host charges vanish.
+        let mk = |label: &str| {
+            session(label, 0, vec![frame(0, 10, 50), frame(5, 10, 50), frame(12, 10, 50)])
+        };
+        let t = vec![mk("a"), mk("b")];
+        let on = replay(&t, true);
+        let off = replay(&t, false);
+        assert_eq!(off.transactions, 6);
+        assert!(on.transactions < 6, "overlapping frames must merge");
+        assert!(on.merged_frames > 0);
+        assert!(on.board_ticks < off.board_ticks, "{} !< {}", on.board_ticks, off.board_ticks);
+        assert_eq!(on.serial_ticks, off.board_ticks);
+        assert!(on.hidden_ticks > 0);
+        assert!(on.peak_occupancy >= 2);
+        // Channel time is physical: identical either way.
+        assert_eq!(on.chan_ticks, off.chan_ticks);
+    }
+
+    #[test]
+    fn replay_is_order_independent() {
+        let a = session("a", 0, vec![frame(0, 10, 50), frame(40, 10, 50)]);
+        let b = session("b", 3, vec![frame(0, 10, 50)]);
+        let fwd = replay(&[a.clone(), b.clone()], true);
+        let rev = replay(&[b, a], true);
+        assert_eq!(fwd.board_ticks, rev.board_ticks);
+        assert_eq!(fwd.merged_frames, rev.merged_frames);
+        assert_eq!(fwd.hidden_ticks, rev.hidden_ticks);
+    }
+
+    #[test]
+    fn tag_window_caps_a_transaction() {
+        // 200 frames all at t=0 with zero channel time would merge into
+        // one unbounded transaction; the 127-tag window forces a split.
+        let frames: Vec<FrameTrace> = (0..200).map(|_| frame(0, 0, 10)).collect();
+        let s = replay(&[session("a", 0, frames)], true);
+        assert_eq!(s.transactions, 2);
+        assert_eq!(s.peak_occupancy, TAG_WINDOW);
+    }
+
+    #[test]
+    fn arrival_offsets_shift_sessions_apart() {
+        // A huge stagger separates the sessions entirely: no merges
+        // across the gap.
+        let mk = |label: &str, start: u64| session(label, start, vec![frame(0, 10, 50)]);
+        let s = replay(&[mk("a", 0), mk("b", 1_000_000)], true);
+        assert_eq!(s.merged_frames, 0);
+        assert_eq!(s.board_ticks, s.serial_ticks);
+    }
+}

@@ -1,0 +1,148 @@
+//! Multi-tenant serving: a board pool multiplexing many concurrent
+//! sessions, with cross-session HTP frame coalescing (DESIGN.md §Serve).
+//!
+//! The layer has four parts:
+//!
+//! * [`session`] — one session: an isolated `Runtime` + address space
+//!   with a label-keyed PRNG stream, run on a private timeline.
+//! * [`coalesce`] — the deterministic board replay that merges
+//!   overlapping frames from co-resident sessions into shared transport
+//!   transactions (one host charge per merged transaction).
+//! * [`boardpool`] — N boards, M >> N sessions: label-keyed board
+//!   assignment, counting-gate admission with a bounded queue.
+//! * [`server`] — the `fase serve` TCP daemon and `fase submit` client.
+//!
+//! Determinism contract: a session's report depends only on (base spec,
+//! session label, stdin) — board packing shifts *when* a session runs,
+//! never *what* it computes, because sharing is modeled by replaying
+//! captured frame traces after the fact rather than by interleaving live
+//! machines. The serve-axis sweep cells (`sessions`/`arrivals`/
+//! `coalesces`, `+xN+aN+cB` labels) reuse the same replay via
+//! [`run_batch_job`].
+
+pub mod boardpool;
+pub mod coalesce;
+pub mod server;
+pub mod session;
+
+pub use boardpool::{BoardLease, BoardPool, Busy};
+pub use coalesce::{replay, SessionTrace, TAG_WINDOW};
+pub use server::{serve_blocking, start, submit, ServeConfig, ServerHandle};
+pub use session::{Session, SessionOutcome};
+
+use crate::coordinator::runtime::{run_exe, RunResult};
+use crate::elfio::read::Executable;
+use crate::rv64::hart::CoreModel;
+use crate::sweep::job::{session_seed, Job};
+
+/// Target clock ticks per microsecond (the 100 MHz HTP clock) — converts
+/// the arrival-axis stagger into board-clock offsets.
+const TICKS_PER_US: u64 = 100;
+
+/// Run a sessions-pinned sweep cell: N replica sessions of the same
+/// synthetic scenario packed on one board, arrivals staggered by the
+/// `+aN` pin, frames replayed through the coalescer per the `+cB` pin.
+///
+/// Replica `k` is the session labeled `<job label>#k` with the stream
+/// `session_seed(job.prng_seed, that label)` — a pure function of the
+/// cell identity, so the cell's report is byte-stable at any worker
+/// count. The returned result is replica 0's run annotated with the
+/// board's [`crate::perf::CoalesceStats`]; replica labels carry distinct
+/// seeds, so the board tallies are extra members on a distinct label,
+/// which keeps solo cells' gated metrics untouched.
+pub fn run_batch_job(job: &Job, core: CoreModel, exe: &Executable, argv: &[String]) -> RunResult {
+    let n = job.sessions() as usize;
+    let base_label = job.label();
+    let stagger = job.arrival_us() * TICKS_PER_US;
+    let mut traces = Vec::with_capacity(n);
+    let mut first: Option<RunResult> = None;
+    for k in 0..n {
+        let label = format!("{base_label}#{k}");
+        let mut cfg = job.run_config(core.clone(), true);
+        cfg.seed = session_seed(job.prng_seed, &label);
+        cfg.trace_frames = true;
+        let r = run_exe(cfg, exe, argv, &[]);
+        if r.error.is_some() {
+            return r; // one broken replica fails the whole cell
+        }
+        traces.push(SessionTrace { label, start: k as u64 * stagger, frames: r.frames.clone() });
+        if first.is_none() {
+            first = Some(r);
+        }
+    }
+    let stats = coalesce::replay(&traces, job.coalesce());
+    let mut result = first.expect("sessions() >= 1 ran at least one replica");
+    result.coalesce = Some(stats);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::{Arm, SweepSpec, SynthKind, WorkloadSpec};
+    use crate::sweep::{run_job, Job};
+
+    fn storm_cell(sessions: u32, arrival_us: u64, coalesce: bool) -> Job {
+        let mut spec = SweepSpec::new("serve-batch");
+        spec.seed = 0xFA5E;
+        spec.dram_size = 64 << 20;
+        spec.max_target_seconds = 30.0;
+        let mut job = Job::new(
+            0,
+            WorkloadSpec::synth(SynthKind::Storm { calls: 64 }),
+            Arm::fase_uart(921_600),
+            1,
+            "rocket".into(),
+            0,
+            None,
+            None,
+            &spec,
+        );
+        job.set_serve_pins(Some(sessions), Some(arrival_us), Some(coalesce), &spec);
+        job
+    }
+
+    #[test]
+    fn batch_cell_attaches_board_stats_and_coalescing_saves_ticks() {
+        let on = run_job(&storm_cell(4, 0, true));
+        let off = run_job(&storm_cell(4, 0, false));
+        assert!(on.ok(), "{:?}", on.result.error);
+        assert!(off.ok(), "{:?}", off.result.error);
+        let s_on = on.result.coalesce.as_ref().expect("board stats attach");
+        let s_off = off.result.coalesce.as_ref().expect("board stats attach");
+        assert_eq!(s_on.sessions, 4);
+        assert_eq!(s_on.frames, s_off.frames);
+        assert!(s_on.merged_frames > 0, "storm x4 must overlap on the wire");
+        assert!(
+            s_on.board_ticks < s_off.board_ticks,
+            "coalescing must strictly reduce board ticks: {} !< {}",
+            s_on.board_ticks,
+            s_off.board_ticks
+        );
+        assert_eq!(s_off.board_ticks, s_off.serial_ticks);
+        assert!(s_on.hidden_ticks > 0);
+    }
+
+    #[test]
+    fn packing_never_changes_a_replicas_own_metrics() {
+        // The pinned cell's own run (replica 0) must match a direct solo
+        // run with the same label-derived stream: packing is replay-only.
+        let job = storm_cell(2, 100, true);
+        let out = run_job(&job);
+        assert!(out.ok());
+        let core = crate::rv64::hart::CoreModel::by_name("rocket").unwrap();
+        let exe = crate::sweep::synth::build(SynthKind::Storm { calls: 64 });
+        let mut cfg = job.run_config(core, true);
+        cfg.seed = session_seed(job.prng_seed, &format!("{}#0", job.label()));
+        cfg.trace_frames = true;
+        let solo = crate::coordinator::runtime::run_exe(
+            cfg,
+            &exe,
+            &[job.workload.name.clone()],
+            &[],
+        );
+        assert_eq!(out.result.ticks, solo.ticks);
+        assert_eq!(out.result.instret, solo.instret);
+        assert_eq!(out.result.frames, solo.frames);
+    }
+}

@@ -1,0 +1,324 @@
+//! The `fase serve` daemon: a line-oriented TCP control surface over the
+//! board pool, plus the `fase submit` client (docs/serve.md).
+//!
+//! Protocol (one request per connection, ASCII header lines, raw bodies):
+//!
+//! ```text
+//! -> RUN <label> <stdin_len>\n<stdin bytes>
+//! <- OK <label> <report_len>\n<report bytes>     session ran
+//! <- BUSY <retry_ms>\n                           queue full, back off
+//! <- ERR <message>\n                             bad atom / run error
+//!
+//! -> STATS\n
+//! <- OK stats <len>\n<json>                      per-board coalescing stats
+//!
+//! -> SHUTDOWN\n
+//! <- OK bye\n                                    daemon drains and exits
+//! ```
+//!
+//! Every session runs to completion inside its connection's thread; the
+//! reply carries the canonical per-session report bytes, which are a
+//! pure function of (base spec, label [, stdin]) — never of what else
+//! the daemon is running. That is the property the CI smoke `cmp`-gates.
+
+use super::boardpool::BoardPool;
+use super::session::Session;
+use crate::sweep::spec::SweepSpec;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Daemon configuration (`fase serve` flags).
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (tests, CI).
+    pub addr: String,
+    pub boards: usize,
+    pub max_sessions: usize,
+    /// Admission queue bound; beyond it clients get `BUSY`.
+    pub queue_cap: usize,
+    /// Whether board replays coalesce cross-session frames.
+    pub coalesce: bool,
+    /// Base spec sessions derive their config from (seed, dram,
+    /// max_seconds — the axes a label does not carry).
+    pub base: SweepSpec,
+}
+
+impl ServeConfig {
+    pub fn new(base: SweepSpec) -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            boards: 1,
+            max_sessions: 4,
+            queue_cap: 16,
+            coalesce: true,
+            base,
+        }
+    }
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    pool: BoardPool,
+    stop: AtomicBool,
+    /// The listener's bound address (the self-connect shutdown nudge).
+    addr: SocketAddr,
+}
+
+/// A running daemon. The listener thread exits after `SHUTDOWN` (or
+/// [`ServerHandle::shutdown`]); in-flight sessions finish first because
+/// each runs on its own connection thread joined via scoped ownership.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Ask the daemon to stop and wait for the listener to exit.
+    pub fn shutdown(mut self) {
+        let _ = shutdown(&self.addr.to_string());
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn stats(&self) -> Result<String, String> {
+        stats(&self.addr.to_string())
+    }
+}
+
+/// Fetch a running daemon's per-board coalescing stats (`fase submit
+/// --stats`).
+pub fn stats(addr: &str) -> Result<String, String> {
+    match submit_raw(addr, "STATS\n", &[])? {
+        Reply::Ok { body, .. } => Ok(body),
+        other => Err(format!("unexpected STATS reply: {other:?}")),
+    }
+}
+
+/// Ask a running daemon to drain and exit (`fase submit --shutdown`).
+pub fn shutdown(addr: &str) -> Result<(), String> {
+    submit_raw(addr, "SHUTDOWN\n", &[]).map(|_| ())
+}
+
+/// Bind and start serving in background threads.
+pub fn start(cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        pool: BoardPool::new(cfg.boards, cfg.max_sessions, cfg.queue_cap),
+        cfg,
+        stop: AtomicBool::new(false),
+        addr,
+    });
+    let accept = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let mut workers = Vec::new();
+            for conn in listener.incoming() {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let shared = Arc::clone(&shared);
+                workers.push(std::thread::spawn(move || handle(stream, &shared)));
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        })
+    };
+    Ok(ServerHandle { addr, accept: Some(accept) })
+}
+
+/// Serve until shutdown (the `fase serve` CLI entry: blocks forever).
+pub fn serve_blocking(cfg: ServeConfig) -> std::io::Result<()> {
+    let mut h = start(cfg)?;
+    println!("LISTENING {}", h.addr);
+    if let Some(t) = h.accept.take() {
+        let _ = t.join();
+    }
+    Ok(())
+}
+
+fn handle(mut stream: TcpStream, shared: &Shared) {
+    let peer = stream.try_clone();
+    let mut reader = BufReader::new(match peer {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_err() {
+        return;
+    }
+    let line = line.trim_end();
+    let reply = |stream: &mut TcpStream, head: String, body: &[u8]| {
+        let _ = stream.write_all(head.as_bytes());
+        let _ = stream.write_all(body);
+        let _ = stream.flush();
+    };
+    if line == "SHUTDOWN" {
+        shared.stop.store(true, Ordering::SeqCst);
+        reply(&mut stream, "OK bye\n".into(), &[]);
+        // Self-connect to unblock the accept loop if we were the only
+        // connection in flight.
+        let _ = TcpStream::connect(shared.addr);
+        return;
+    }
+    if line == "STATS" {
+        let body = shared.pool.stats_json(shared.cfg.coalesce).to_string_pretty();
+        reply(&mut stream, format!("OK stats {}\n", body.len()), body.as_bytes());
+        return;
+    }
+    let Some(rest) = line.strip_prefix("RUN ") else {
+        reply(&mut stream, format!("ERR bad request {line:?}\n"), &[]);
+        return;
+    };
+    let (label, stdin_len) = match rest.rsplit_once(' ') {
+        Some((l, n)) => match n.parse::<usize>() {
+            Ok(n) if n <= 1 << 20 => (l.to_string(), n),
+            _ => {
+                reply(&mut stream, format!("ERR bad stdin length {n:?}\n"), &[]);
+                return;
+            }
+        },
+        None => (rest.to_string(), 0),
+    };
+    let mut stdin = vec![0u8; stdin_len];
+    if reader.read_exact(&mut stdin).is_err() {
+        reply(&mut stream, "ERR short stdin body\n".into(), &[]);
+        return;
+    }
+    let session = match Session::parse(&label, &shared.cfg.base) {
+        Ok(s) => s.with_stdin(stdin),
+        Err(e) => {
+            reply(&mut stream, format!("ERR {e}\n"), &[]);
+            return;
+        }
+    };
+    let lease = match shared.pool.admit(&label) {
+        Ok(l) => l,
+        Err(busy) => {
+            reply(&mut stream, format!("BUSY {}\n", busy.retry_after_ms), &[]);
+            return;
+        }
+    };
+    let out = session.run();
+    shared.pool.record(&lease, out.label.clone(), out.outcome.result.frames.clone());
+    drop(lease);
+    reply(
+        &mut stream,
+        format!("OK {} {}\n", out.label, out.report.len()),
+        out.report.as_bytes(),
+    );
+}
+
+/// A parsed daemon reply.
+#[derive(Debug)]
+pub enum Reply {
+    Ok { label: String, body: String },
+    Busy { retry_after_ms: u64 },
+    Err(String),
+}
+
+fn submit_raw(addr: &str, request: &str, body: &[u8]) -> Result<Reply, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.write_all(request.as_bytes()).map_err(|e| e.to_string())?;
+    stream.write_all(body).map_err(|e| e.to_string())?;
+    stream.flush().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut head = String::new();
+    reader.read_line(&mut head).map_err(|e| e.to_string())?;
+    let head = head.trim_end();
+    if let Some(ms) = head.strip_prefix("BUSY ") {
+        return Ok(Reply::Busy { retry_after_ms: ms.parse().unwrap_or(50) });
+    }
+    if let Some(msg) = head.strip_prefix("ERR ") {
+        return Ok(Reply::Err(msg.to_string()));
+    }
+    let Some(rest) = head.strip_prefix("OK ") else {
+        return Err(format!("malformed reply header {head:?}"));
+    };
+    let (label, len) = match rest.rsplit_once(' ') {
+        Some((l, n)) => (l.to_string(), n.parse::<usize>().map_err(|e| e.to_string())?),
+        None => (rest.to_string(), 0),
+    };
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+    Ok(Reply::Ok { label, body: String::from_utf8_lossy(&body).into_owned() })
+}
+
+/// Submit one session and return its report bytes. Retries `BUSY`
+/// replies (honoring the daemon's backoff hint) until `deadline_ms`
+/// elapses; protocol-level `ERR` replies are terminal.
+pub fn submit(addr: &str, label: &str, stdin: &[u8], deadline_ms: u64) -> Result<String, String> {
+    let request = format!("RUN {label} {}\n", stdin.len());
+    let mut waited = 0u64;
+    loop {
+        match submit_raw(addr, &request, stdin)? {
+            Reply::Ok { body, .. } => return Ok(body),
+            Reply::Err(e) => return Err(e),
+            Reply::Busy { retry_after_ms } => {
+                if waited >= deadline_ms {
+                    return Err(format!("daemon busy after {waited}ms"));
+                }
+                std::thread::sleep(std::time::Duration::from_millis(retry_after_ms));
+                waited += retry_after_ms;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> SweepSpec {
+        let mut spec = SweepSpec::new("serve");
+        spec.seed = 0xFA5E;
+        spec.dram_size = 64 << 20;
+        spec.max_target_seconds = 30.0;
+        spec
+    }
+
+    #[test]
+    fn daemon_serves_a_session_and_shuts_down() {
+        let h = start(ServeConfig::new(base())).unwrap();
+        let addr = h.addr.to_string();
+        let report =
+            submit(&addr, "echo:32|fase@loopback|1c|rocket|s0", b"hi", 5_000).unwrap();
+        assert!(report.contains("\"label\": \"echo:32|fase@loopback|1c|rocket|s0\""));
+        assert!(report.contains("\"status\": \"ok\""));
+        let stats = h.stats().unwrap();
+        assert!(stats.contains("\"sessions_completed\": 1"), "{stats}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn bad_atoms_come_back_as_protocol_errors() {
+        let h = start(ServeConfig::new(base())).unwrap();
+        let addr = h.addr.to_string();
+        let err = submit(&addr, "not-a-label", &[], 1_000).unwrap_err();
+        assert!(err.contains("bad"), "{err}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn full_queue_is_busy_and_submit_retries_through_it() {
+        // One slot, zero queue: a long spin session holds the slot while
+        // a second submit spins on BUSY until the slot frees.
+        let mut cfg = ServeConfig::new(base());
+        cfg.max_sessions = 1;
+        cfg.queue_cap = 0;
+        let h = start(cfg).unwrap();
+        let addr = h.addr.to_string();
+        std::thread::scope(|s| {
+            let a = s.spawn(|| submit(&addr, "spin:2000000|fullsys|1c|rocket|s0", &[], 30_000));
+            let b = s.spawn(|| submit(&addr, "spin:10|fullsys|1c|rocket|s1", &[], 30_000));
+            assert!(a.join().unwrap().is_ok());
+            assert!(b.join().unwrap().is_ok());
+        });
+        h.shutdown();
+    }
+}

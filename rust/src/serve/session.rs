@@ -1,0 +1,192 @@
+//! One serve session: an isolated guest run with its own `Runtime`,
+//! address space and PRNG stream, identified by a stable label.
+//!
+//! A session *is* a sweep scenario — its atom is the scenario label
+//! grammar (`workload|arm|<harts>c|core|s<seed>`) and its PRNG stream is
+//! the same label-keyed derivation sweep jobs use. That shared identity
+//! is the determinism contract: a session's report is a pure function of
+//! (daemon base spec, session label), so the same atom submitted solo,
+//! packed 16-deep, or spread across boards produces byte-identical
+//! report bytes (docs/serve.md).
+
+use crate::coordinator::runtime::{run_elf, run_exe, RunResult};
+use crate::rv64::hart::CoreModel;
+use crate::sweep::job::{find_guest_elf, JobOutcome};
+use crate::sweep::report::job_report_json;
+use crate::sweep::spec::{Arm, SweepSpec, WorkloadKind, WorkloadSpec};
+use crate::sweep::{synth, Job};
+
+/// A parsed, runnable session.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub job: Job,
+    /// Bytes delivered to the guest's blocking stdin at the
+    /// deterministic all-parked point (`Runtime::push_stdin`).
+    pub stdin: Vec<u8>,
+}
+
+/// A completed session: the full outcome plus the canonical report bytes
+/// clients receive (and CI `cmp`-gates against solo runs).
+pub struct SessionOutcome {
+    pub label: String,
+    pub outcome: JobOutcome,
+    pub report: String,
+}
+
+impl Session {
+    /// Parse a session atom against the daemon's base spec. The atom is
+    /// a full scenario label; the round trip through [`Job::label`] must
+    /// be exact, so axis-pin suffixes (`+block`, `+o8`, `+x4`, ...) are
+    /// rejected — serve sessions are always solo scenarios.
+    pub fn parse(atom: &str, base: &SweepSpec) -> Result<Session, String> {
+        let parts: Vec<&str> = atom.trim().split('|').collect();
+        let [workload, arm, harts, core, seed] = parts.as_slice() else {
+            return Err(format!(
+                "bad session atom {atom:?}: want workload|arm|<harts>c|core|s<seed>"
+            ));
+        };
+        let workload = WorkloadSpec::parse(workload)
+            .ok_or_else(|| format!("bad workload atom {workload:?}"))?;
+        let arm = Arm::parse(arm).ok_or_else(|| format!("bad arm {arm:?}"))?;
+        if matches!(arm, Arm::Pk { .. }) {
+            return Err("pk arms are not servable (detached cycle-stepped runs only)".into());
+        }
+        let harts: usize = harts
+            .strip_suffix('c')
+            .and_then(|n| n.parse().ok())
+            .filter(|&n| (1..=64).contains(&n))
+            .ok_or_else(|| format!("bad hart count {harts:?}: want 1c..64c"))?;
+        let seed: u64 = seed
+            .strip_prefix('s')
+            .and_then(|n| n.parse().ok())
+            .ok_or_else(|| format!("bad seed {seed:?}: want s<N>"))?;
+        let job = Job::new(0, workload, arm, harts, core.to_string(), seed, None, None, base);
+        if job.label() != atom.trim() {
+            return Err(format!(
+                "session atom {atom:?} is not canonical (parsed back as {:?})",
+                job.label()
+            ));
+        }
+        Ok(Session { job, stdin: Vec::new() })
+    }
+
+    pub fn with_stdin(mut self, stdin: Vec<u8>) -> Session {
+        self.stdin = stdin;
+        self
+    }
+
+    pub fn label(&self) -> String {
+        self.job.label()
+    }
+
+    /// Run the session to completion on a private timeline, frame trace
+    /// armed for the board replay.
+    pub fn run(&self) -> SessionOutcome {
+        let result = run_session(&self.job, &self.stdin);
+        let score = match self.job.workload.metric_prefix() {
+            Some(prefix) if result.error.is_none() => result.parse_metric(prefix),
+            _ => None,
+        };
+        let outcome = JobOutcome { job: self.job.clone(), result, score, analysis: None };
+        let report = session_report(&outcome);
+        SessionOutcome { label: self.job.label(), outcome, report }
+    }
+}
+
+/// The canonical per-session report bytes: exactly the job object a
+/// sweep report would contain for the same scenario, pretty-printed.
+/// Frame traces and board stats never appear (the trace is invisible to
+/// metrics and `coalesce` attaches only to sessions-pinned sweep cells),
+/// which is what keeps these bytes packing-invariant.
+pub fn session_report(outcome: &JobOutcome) -> String {
+    job_report_json(outcome).to_string_pretty()
+}
+
+/// Execute a session's job with stdin and frame tracing threaded in —
+/// the serve-layer sibling of `sweep::run_job` for the non-PK arms.
+pub(crate) fn run_session(job: &Job, stdin: &[u8]) -> RunResult {
+    let Some(core) = CoreModel::by_name(&job.core) else {
+        return RunResult::empty_with_error(format!("unknown core model {:?}", job.core));
+    };
+    let (synth, argv) = match &job.workload.kind {
+        WorkloadKind::Synth(_) => (true, vec![job.workload.name.clone()]),
+        WorkloadKind::Gapbs { bench, scale, trials } => (
+            false,
+            vec![bench.clone(), scale.to_string(), job.harts.to_string(), trials.to_string()],
+        ),
+        WorkloadKind::Coremark { iters } => {
+            (false, vec!["coremark".to_string(), iters.to_string()])
+        }
+    };
+    let mut cfg = job.run_config(core, synth);
+    cfg.stdin = stdin.to_vec();
+    cfg.trace_frames = true;
+    match &job.workload.kind {
+        WorkloadKind::Synth(kind) => run_exe(cfg, &synth::build(*kind), &argv, &[]),
+        _ => match find_guest_elf(&argv[0]) {
+            Ok(elf) => run_elf(cfg, &elf, &argv, &[]),
+            Err(e) => RunResult::empty_with_error(e),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> SweepSpec {
+        let mut spec = SweepSpec::new("serve");
+        spec.seed = 0xFA5E;
+        spec.dram_size = 64 << 20;
+        spec.max_target_seconds = 30.0;
+        spec
+    }
+
+    #[test]
+    fn atom_round_trips_through_parse() {
+        let s = Session::parse("echo:64|fase@uart:921600|1c|rocket|s3", &base()).unwrap();
+        assert_eq!(s.label(), "echo:64|fase@uart:921600|1c|rocket|s3");
+        assert_eq!(s.job.seed, 3);
+        assert_eq!(s.job.harts, 1);
+    }
+
+    #[test]
+    fn bad_atoms_are_rejected() {
+        let b = base();
+        for atom in [
+            "echo:64",                                  // not a full label
+            "nope:1|fullsys|1c|rocket|s0",              // unknown workload
+            "spin:10|warp@9|1c|rocket|s0",              // unknown arm
+            "spin:10|pk-4t|1c|rocket|s0",               // PK not servable
+            "spin:10|fullsys|0c|rocket|s0",             // bad harts
+            "spin:10|fullsys|1c|rocket|zz",             // bad seed
+            "spin:10|fullsys+block|1c|rocket|s0",       // pins rejected
+            " spin:10 |fullsys|1c|rocket|s0",           // non-canonical
+        ] {
+            assert!(Session::parse(atom, &b).is_err(), "{atom:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn session_stream_is_a_pure_function_of_its_label() {
+        let b = base();
+        let a = Session::parse("spin:10|fullsys|1c|rocket|s0", &b).unwrap();
+        let a2 = Session::parse("spin:10|fullsys|1c|rocket|s0", &b).unwrap();
+        let c = Session::parse("spin:10|fullsys|1c|rocket|s1", &b).unwrap();
+        assert_eq!(a.job.prng_seed, a2.job.prng_seed);
+        assert_ne!(a.job.prng_seed, c.job.prng_seed);
+    }
+
+    #[test]
+    fn echo_session_runs_with_stdin_and_reports() {
+        let s = Session::parse("echo:64|fase@uart:921600|1c|rocket|s0", &base())
+            .unwrap()
+            .with_stdin(b"ping".to_vec());
+        let out = s.run();
+        assert!(out.outcome.ok(), "{:?}", out.outcome.result.error);
+        assert_eq!(out.outcome.result.stdout, "ping");
+        assert!(!out.outcome.result.frames.is_empty(), "frame trace must be armed");
+        assert!(out.report.contains("\"label\": \"echo:64|fase@uart:921600|1c|rocket|s0\""));
+        assert!(!out.report.contains("coalesce"), "per-session reports never carry board stats");
+    }
+}

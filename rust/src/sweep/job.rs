@@ -12,6 +12,14 @@ use crate::rv64::EngineKind;
 use crate::util::json::Json;
 use std::path::PathBuf;
 
+/// Derive the PRNG seed a session runs with from (base seed, stable
+/// session label) — the same label-keyed scheme sweep jobs use, shared
+/// with the serve layer so a session's stream (and hence its report) is
+/// a pure function of its label no matter how it was packed.
+pub fn session_seed(base: u64, label: &str) -> u64 {
+    base ^ fnv1a(label)
+}
+
 /// FNV-1a over the scenario label — the stable identity hash that seeds
 /// each job's independent PRNG stream.
 fn fnv1a(s: &str) -> u64 {
@@ -59,6 +67,16 @@ pub struct Job {
     /// Label-invisible depth selection (spec `outstanding =` key or CLI
     /// `--outstanding`); see [`SweepSpec::outstanding_override`].
     pub outstanding_override: Option<u32>,
+    /// Serve session-count axis pin (`sessions =` in the spec, `+xN` in
+    /// the label): the scenario runs as N replica sessions packed on one
+    /// board through the serve layer; see [`SweepSpec::sessions`].
+    pub sessions_pin: Option<u32>,
+    /// Serve arrival-stagger axis pin in microseconds (`arrivals =` in
+    /// the spec, `+aN` in the label); see [`SweepSpec::arrivals`].
+    pub arrival_pin: Option<u64>,
+    /// Serve frame-coalescing axis pin (`coalesces =` in the spec,
+    /// `+c1`/`+c0` in the label); see [`SweepSpec::coalesces`].
+    pub coalesce_pin: Option<bool>,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -90,6 +108,9 @@ impl Job {
             lsu_override: spec.lsu_override,
             outstanding_pin,
             outstanding_override: spec.outstanding_override,
+            sessions_pin: None,
+            arrival_pin: None,
+            coalesce_pin: None,
             max_target_seconds: spec.max_target_seconds,
             dram_size: spec.dram_size,
         };
@@ -97,10 +118,29 @@ impl Job {
         job
     }
 
+    /// Apply the serve-axis pins (sessions × arrival × coalesce) after
+    /// construction and recompute the PRNG seed — the pins are part of
+    /// the label, so a pinned scenario owns a distinct identity and
+    /// stream (fnv1a stays private to this module).
+    pub fn set_serve_pins(
+        &mut self,
+        sessions: Option<u32>,
+        arrival_us: Option<u64>,
+        coalesce: Option<bool>,
+        spec: &SweepSpec,
+    ) {
+        self.sessions_pin = sessions;
+        self.arrival_pin = arrival_us;
+        self.coalesce_pin = coalesce;
+        self.prng_seed = spec.seed ^ fnv1a(&self.label());
+    }
+
+
     /// Stable scenario identity, the join key for baseline comparisons:
-    /// `workload|arm[+engine][+oN]|<harts>c|core|s<seed>`. The engine and
-    /// outstanding-depth suffixes appear only for axis pins, never for
-    /// the label-invisible overrides.
+    /// `workload|arm[+engine][+oN][+xN][+aN][+cB]|<harts>c|core|s<seed>`.
+    /// The engine, outstanding-depth and serve (sessions/arrival/coalesce)
+    /// suffixes appear only for axis pins, never for the label-invisible
+    /// overrides.
     pub fn label(&self) -> String {
         let pin = match self.engine_pin {
             Some(k) => format!("+{k}"),
@@ -110,12 +150,23 @@ impl Job {
             Some(n) => format!("+o{n}"),
             None => String::new(),
         };
+        let mut serve = String::new();
+        if let Some(n) = self.sessions_pin {
+            serve.push_str(&format!("+x{n}"));
+        }
+        if let Some(us) = self.arrival_pin {
+            serve.push_str(&format!("+a{us}"));
+        }
+        if let Some(c) = self.coalesce_pin {
+            serve.push_str(if c { "+c1" } else { "+c0" });
+        }
         format!(
-            "{}|{}{}{}|{}c|{}|s{}",
+            "{}|{}{}{}{}|{}c|{}|s{}",
             self.workload.name,
             self.arm.label(),
             pin,
             opin,
+            serve,
             self.harts,
             self.core,
             self.seed
@@ -140,6 +191,23 @@ impl Job {
         self.lsu_override.unwrap_or_default()
     }
 
+    /// How many replica sessions this job packs on one board (1 = an
+    /// ordinary solo run that never touches the serve layer).
+    pub fn sessions(&self) -> u32 {
+        self.sessions_pin.unwrap_or(1)
+    }
+
+    /// Arrival stagger between successive replica sessions, in target
+    /// microseconds.
+    pub fn arrival_us(&self) -> u64 {
+        self.arrival_pin.unwrap_or(0)
+    }
+
+    /// Whether the board replay coalesces co-resident sessions' frames.
+    pub fn coalesce(&self) -> bool {
+        self.coalesce_pin.unwrap_or(true)
+    }
+
     fn mode(&self) -> Mode {
         match &self.arm {
             Arm::Fase { transport, hfutex, ideal_latency } => Mode::Fase {
@@ -154,8 +222,9 @@ impl Job {
 
     /// RunConfig for the non-PK arms. Synthetic workloads load lazily
     /// with a small fault-preload window so they exercise the page-fault
-    /// path even at tiny sizes.
-    fn run_config(&self, core: CoreModel, synth: bool) -> RunConfig {
+    /// path even at tiny sizes. `pub(crate)` for the serve layer, which
+    /// derives per-session configs from it.
+    pub(crate) fn run_config(&self, core: CoreModel, synth: bool) -> RunConfig {
         RunConfig {
             mode: self.mode(),
             n_cpus: self.harts,
@@ -173,6 +242,8 @@ impl Job {
             analysis: self.analysis,
             lsu: self.lsu(),
             outstanding: self.outstanding(),
+            stdin: Vec::new(),
+            trace_frames: false,
         }
     }
 
@@ -257,6 +328,17 @@ pub fn run_job(job: &Job) -> JobOutcome {
                     &[],
                     job.max_target_seconds,
                 ),
+                // Any serve pin routes the cell through the serve layer:
+                // N replica sessions packed on one board, session 0's
+                // result annotated with the board's coalescing tallies
+                // (a +x1 cell is a one-session board, so every pinned
+                // cell carries the `coalesce` member benches read).
+                _ if job.sessions_pin.is_some()
+                    || job.arrival_pin.is_some()
+                    || job.coalesce_pin.is_some() =>
+                {
+                    crate::serve::run_batch_job(job, core.clone(), &exe, &argv)
+                }
                 _ => run_exe(job.run_config(core, true), &exe, &argv, &[]),
             };
             JobOutcome { job: job.clone(), result, score: None, analysis }

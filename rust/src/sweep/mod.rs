@@ -41,10 +41,35 @@ cores = rocket
 seeds = 0
 ";
 
+/// The multi-tenant serving matrix: a syscall-storm scenario packed
+/// 1/2/8 sessions deep on one board, at simultaneous and 200 µs-staggered
+/// arrivals, with cross-session frame coalescing on and off — the
+/// `serve_throughput` bench and CI serve-smoke grid (DESIGN.md §Serve).
+pub const SERVE_THROUGHPUT: &str = "\
+# serve-throughput — the board-pool packing + frame-coalescing matrix
+[sweep]
+name = serve-throughput
+seed = 0xFA5E
+max_seconds = 120
+dram = 256m
+workloads = storm:64
+arms = fase@uart:921600
+harts = 1
+cores = rocket
+seeds = 0
+sessions = 1, 2, 8
+arrivals = 0, 200
+coalesces = on, off
+";
+
 /// Resolve a built-in spec by name.
 pub fn builtin(name: &str) -> Option<SweepSpec> {
     match name {
         "ci-smoke" => Some(SweepSpec::parse(CI_SMOKE, "ci-smoke").expect("ci-smoke spec parses")),
+        "serve-throughput" => Some(
+            SweepSpec::parse(SERVE_THROUGHPUT, "serve-throughput")
+                .expect("serve-throughput spec parses"),
+        ),
         _ => None,
     }
 }
@@ -102,6 +127,16 @@ mod tests {
         // 3 workloads x 3 arms x 2 hart counts
         assert_eq!(jobs.len(), 18);
         assert!(builtin("no-such-spec").is_none());
+    }
+
+    #[test]
+    fn serve_throughput_builtin_parses_and_expands() {
+        let spec = builtin("serve-throughput").unwrap();
+        assert_eq!(spec.name, "serve-throughput");
+        let jobs = spec.expand(None);
+        // 3 session counts x 2 arrivals x 2 coalesce modes
+        assert_eq!(jobs.len(), 12);
+        assert!(jobs.iter().all(|j| j.label().contains("+x")));
     }
 
     #[test]

@@ -6,8 +6,27 @@
 //! indexed by job id — so the report is byte-identical at any `--jobs`.
 
 use super::job::{run_job, Job, JobOutcome};
+use crate::coordinator::runtime::RunResult;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Convert a caught panic payload into a job error outcome, so one
+/// panicking scenario reports like any other failed cell instead of
+/// poisoning its slot mutex and sinking the whole sweep with the opaque
+/// "every job slot filled" panic.
+fn panic_outcome(job: &Job, payload: Box<dyn std::any::Any + Send>) -> JobOutcome {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into());
+    JobOutcome {
+        job: job.clone(),
+        result: RunResult::empty_with_error(format!("scenario panicked: {msg}")),
+        score: None,
+        analysis: None,
+    }
+}
 
 /// Run all jobs on `workers` threads; results come back in job order
 /// (by id), never completion order.
@@ -27,7 +46,11 @@ pub fn run_jobs(jobs: &[Job], workers: usize, progress: bool) -> Vec<JobOutcome>
                 if i >= n {
                     break;
                 }
-                let out = run_job(&jobs[i]);
+                // A panicking scenario must not poison its slot mutex:
+                // catch it and file an error outcome in job order.
+                let out =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(&jobs[i])))
+                        .unwrap_or_else(|p| panic_outcome(&jobs[i], p));
                 if progress {
                     let k = done.fetch_add(1, Ordering::Relaxed) + 1;
                     let status = if out.ok() {
@@ -73,5 +96,23 @@ mod tests {
             assert_eq!(a.result.ticks, b.result.ticks);
             assert_eq!(a.result.instret, b.result.instret);
         }
+    }
+
+    #[test]
+    fn a_panicking_scenario_becomes_an_error_outcome() {
+        let mut spec = SweepSpec::new("panic-test");
+        spec.workloads = vec![WorkloadSpec::synth(SynthKind::Spin { iters: 10 })];
+        spec.arms = vec![Arm::FullSys];
+        let jobs = spec.expand(None);
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // keep test output clean
+        let payload =
+            std::panic::catch_unwind(|| panic!("boom {}", 42)).expect_err("must panic");
+        std::panic::set_hook(prev);
+        let out = panic_outcome(&jobs[0], payload);
+        assert!(!out.ok());
+        let err = out.result.error.as_deref().unwrap();
+        assert!(err.contains("panicked") && err.contains("boom 42"), "{err}");
+        assert_eq!(out.job.label(), jobs[0].label());
     }
 }

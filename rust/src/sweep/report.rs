@@ -31,6 +31,13 @@ fn default_tolerances() -> Json {
     ])
 }
 
+/// The report object for one job — public as the canonical per-session
+/// report the serve layer hands to clients, so a served session's bytes
+/// are exactly what a sweep report would contain for the same scenario.
+pub fn job_report_json(o: &JobOutcome) -> Json {
+    job_json(o)
+}
+
 fn job_json(o: &JobOutcome) -> Json {
     let mut m: Vec<(String, Json)> = vec![
         ("label".into(), Json::str(o.job.label())),

@@ -102,6 +102,11 @@ pub enum SynthKind {
     /// guest ignores — exercises the analyzer's unimplemented-syscall
     /// flagging: `probe:CALLS`.
     Probe { calls: u32 },
+    /// Blocking-read echo: read `bytes` from stdin (parking until the
+    /// stream arrives — the `FdTable::stdin_block` / `Runtime::push_stdin`
+    /// path) and write them back to stdout, then exit: `echo:BYTES`.
+    /// The serve session-isolation tests key on it.
+    Echo { bytes: u32 },
 }
 
 #[derive(Debug, Clone)]
@@ -140,6 +145,7 @@ impl WorkloadSpec {
             SynthKind::MemTouch { pages } => format!("memtouch:{pages}"),
             SynthKind::Stride { pages, stride } => format!("stride:{pages}:{stride}"),
             SynthKind::Probe { calls } => format!("probe:{calls}"),
+            SynthKind::Echo { bytes } => format!("echo:{bytes}"),
         };
         WorkloadSpec { name, kind: WorkloadKind::Synth(kind) }
     }
@@ -154,7 +160,8 @@ impl WorkloadSpec {
     }
 
     /// Parse a workload atom: `spin:N`, `storm:N`, `memtouch:N`,
-    /// `stride:P:S`, `coremark:N`, `gapbs:BENCH:SCALE[:TRIALS]`.
+    /// `stride:P:S`, `probe:N`, `echo:N`, `coremark:N`,
+    /// `gapbs:BENCH:SCALE[:TRIALS]`.
     pub fn parse(s: &str) -> Option<WorkloadSpec> {
         let s = s.trim();
         let mut parts = s.split(':');
@@ -184,6 +191,7 @@ impl WorkloadSpec {
             "probe" => {
                 one_u32(&fields).map(|calls| WorkloadSpec::synth(SynthKind::Probe { calls }))
             }
+            "echo" => one_u32(&fields).map(|bytes| WorkloadSpec::synth(SynthKind::Echo { bytes })),
             "coremark" => one_u32(&fields).map(WorkloadSpec::coremark),
             "gapbs" => match fields.as_slice() {
                 [bench, scale] => {
@@ -253,6 +261,24 @@ pub struct SweepSpec {
     /// adds the `pipeline` report member); at depth 1 reports must stay
     /// byte-identical to an override-free run, which CI gates.
     pub outstanding_override: Option<u32>,
+    /// Session-count axis (`sessions = 1, 2, 8`): pins each scenario to
+    /// run as N replica sessions packed on one board through the serve
+    /// layer (`+xN` on the arm segment). Each replica is a full isolated
+    /// Runtime with its own label-derived PRNG stream; the job's report
+    /// carries session 0's result plus the board's `coalesce` member.
+    /// Empty = one ordinary solo job per cell.
+    pub sessions: Vec<u32>,
+    /// Session arrival-stagger axis in target microseconds
+    /// (`arrivals = 0, 200`): replica k enters the board replay k·N µs
+    /// after replica 0 (`+aN` on the arm segment). Only meaningful with a
+    /// `sessions` pin. Empty = simultaneous arrival.
+    pub arrivals: Vec<u64>,
+    /// Cross-session frame-coalescing axis (`coalesces = on, off`,
+    /// `+c1`/`+c0` on the arm segment): whether co-resident sessions'
+    /// tagged frames merge into shared transport transactions in the
+    /// board replay. Off models serial board sharing — the comparison
+    /// baseline the serve_throughput bench gates on. Empty = on.
+    pub coalesces: Vec<bool>,
     pub max_target_seconds: f64,
     pub dram_size: u64,
 }
@@ -273,6 +299,9 @@ impl SweepSpec {
             lsu_override: None,
             outstandings: Vec::new(),
             outstanding_override: None,
+            sessions: Vec::new(),
+            arrivals: Vec::new(),
+            coalesces: Vec::new(),
             max_target_seconds: 3000.0,
             dram_size: 1 << 31,
         }
@@ -296,31 +325,60 @@ impl SweepSpec {
         } else {
             self.outstandings.iter().copied().map(Some).collect()
         };
+        // Serve axes (sessions × arrival stagger × coalesce): no pins =
+        // one ordinary solo job per cell.
+        let spins: Vec<Option<u32>> = if self.sessions.is_empty() {
+            vec![None]
+        } else {
+            self.sessions.iter().copied().map(Some).collect()
+        };
+        let apins: Vec<Option<u64>> = if self.arrivals.is_empty() {
+            vec![None]
+        } else {
+            self.arrivals.iter().copied().map(Some).collect()
+        };
+        let cpins: Vec<Option<bool>> = if self.coalesces.is_empty() {
+            vec![None]
+        } else {
+            self.coalesces.iter().copied().map(Some).collect()
+        };
         let mut jobs = Vec::new();
         for w in &self.workloads {
             for arm in &self.arms {
                 for &pin in &pins {
                     for &opin in &opins {
-                        for &harts in &self.harts {
-                            for core in &self.cores {
-                                for &seed in &self.seeds {
-                                    let job = super::job::Job::new(
-                                        jobs.len(),
-                                        w.clone(),
-                                        arm.clone(),
-                                        harts,
-                                        core.clone(),
-                                        seed,
-                                        pin,
-                                        opin,
-                                        self,
-                                    );
-                                    if let Some(f) = filter {
-                                        if !job.label().contains(f) {
-                                            continue;
+                        for &spin in &spins {
+                            for &apin in &apins {
+                                for &cpin in &cpins {
+                                    for &harts in &self.harts {
+                                        for core in &self.cores {
+                                            for &seed in &self.seeds {
+                                                let mut job = super::job::Job::new(
+                                                    jobs.len(),
+                                                    w.clone(),
+                                                    arm.clone(),
+                                                    harts,
+                                                    core.clone(),
+                                                    seed,
+                                                    pin,
+                                                    opin,
+                                                    self,
+                                                );
+                                                if spin.is_some()
+                                                    || apin.is_some()
+                                                    || cpin.is_some()
+                                                {
+                                                    job.set_serve_pins(spin, apin, cpin, self);
+                                                }
+                                                if let Some(f) = filter {
+                                                    if !job.label().contains(f) {
+                                                        continue;
+                                                    }
+                                                }
+                                                jobs.push(job);
+                                            }
                                         }
                                     }
-                                    jobs.push(job);
                                 }
                             }
                         }
@@ -416,6 +474,34 @@ impl SweepSpec {
         if let Some(o) = cfg.get(sec, "outstanding") {
             spec.outstanding_override = Some(parse_depth(o)?);
         }
+        spec.sessions = cfg
+            .list_or(sec, "sessions", &[])
+            .iter()
+            .map(|v| {
+                crate::util::cli::parse_u64(v)
+                    .filter(|&n| n >= 1 && n <= 64)
+                    .map(|n| n as u32)
+                    .ok_or_else(|| format!("bad sessions value {v:?} (want 1..=64)"))
+            })
+            .collect::<Result<_, _>>()?;
+        spec.arrivals = cfg
+            .list_or(sec, "arrivals", &[])
+            .iter()
+            .map(|v| {
+                crate::util::cli::parse_u64(v)
+                    .filter(|&n| n <= 1_000_000)
+                    .ok_or_else(|| format!("bad arrival value {v:?} (want 0..=1000000 us)"))
+            })
+            .collect::<Result<_, _>>()?;
+        spec.coalesces = cfg
+            .list_or(sec, "coalesces", &[])
+            .iter()
+            .map(|v| match v.trim() {
+                "on" | "true" | "1" => Ok(true),
+                "off" | "false" | "0" => Ok(false),
+                _ => Err(format!("bad coalesce value {v:?} (want on/off)")),
+            })
+            .collect::<Result<_, _>>()?;
         let cores = cfg.list_or(sec, "cores", &[]);
         if !cores.is_empty() {
             spec.cores = cores;
@@ -470,6 +556,7 @@ mod tests {
             "memtouch:48",
             "stride:16:64",
             "probe:8",
+            "echo:64",
             "coremark:10",
             "gapbs:bfs:11:2",
         ] {
@@ -573,6 +660,45 @@ mod tests {
         let bad = "[sweep]\nworkloads = storm:8\narms = fullsys\n";
         assert!(SweepSpec::parse(&format!("{bad}outstandings = 0\n"), "x").is_err());
         assert!(SweepSpec::parse(&format!("{bad}outstanding = 200\n"), "x").is_err());
+    }
+
+    #[test]
+    fn serve_axes_pin_labels_with_distinct_streams() {
+        let spec = SweepSpec::parse(
+            "[sweep]\nworkloads = storm:8\narms = fase@uart:921600\n\
+             sessions = 1, 8\narrivals = 0, 200\ncoalesces = on, off\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(spec.sessions, vec![1, 8]);
+        assert_eq!(spec.arrivals, vec![0, 200]);
+        assert_eq!(spec.coalesces, vec![true, false]);
+        let jobs = spec.expand(None);
+        assert_eq!(jobs.len(), 8);
+        assert_eq!(jobs[0].label(), "storm:8|fase@uart:921600+x1+a0+c1|1c|rocket|s0");
+        assert_eq!(jobs[1].label(), "storm:8|fase@uart:921600+x1+a0+c0|1c|rocket|s0");
+        assert_eq!(jobs[7].label(), "storm:8|fase@uart:921600+x8+a200+c0|1c|rocket|s0");
+        // Every pinned cell owns a distinct identity and PRNG stream.
+        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.prng_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 8);
+        assert_eq!(jobs[7].sessions(), 8);
+        assert_eq!(jobs[7].arrival_us(), 200);
+        assert!(!jobs[7].coalesce());
+        // Unpinned specs produce solo jobs with serve defaults.
+        let solo = SweepSpec::parse("[sweep]\nworkloads = storm:8\narms = fullsys\n", "x")
+            .unwrap()
+            .expand(None);
+        assert_eq!(solo[0].label(), "storm:8|fullsys|1c|rocket|s0");
+        assert_eq!(solo[0].sessions(), 1);
+        assert!(solo[0].coalesce());
+
+        let bad = "[sweep]\nworkloads = storm:8\narms = fullsys\n";
+        assert!(SweepSpec::parse(&format!("{bad}sessions = 0\n"), "x").is_err());
+        assert!(SweepSpec::parse(&format!("{bad}sessions = 65\n"), "x").is_err());
+        assert!(SweepSpec::parse(&format!("{bad}arrivals = 2000000\n"), "x").is_err());
+        assert!(SweepSpec::parse(&format!("{bad}coalesces = maybe\n"), "x").is_err());
     }
 
     #[test]

@@ -108,6 +108,24 @@ pub fn build(kind: SynthKind) -> Executable {
             code.push(bne(5, 0, -12));
             emit_exit(&mut code);
         }
+        SynthKind::Echo { bytes } => {
+            // read(0, buf, N) — parks on blocking stdin until the host
+            // pushes the stream — then write(1, buf, n_read) and exit.
+            // The end-to-end surface for `FdTable::stdin_block` /
+            // `Runtime::push_stdin` and the serve session bridge.
+            let bytes = u64::from(bytes.clamp(1, 1 << 20));
+            data_pages = bytes.div_ceil(PAGE);
+            code.push(encode::lui(11, (DATA_VA >> 12) as u32)); // a1 = buf
+            li(&mut code, 12, bytes as i64); // a2 = len
+            code.push(encode::addi(10, 0, 0)); // a0 = stdin
+            code.push(encode::addi(17, 0, 63)); // a7 = read
+            code.push(ECALL);
+            code.push(add(12, 10, 0)); // a2 = bytes read
+            code.push(encode::addi(10, 0, 1)); // a0 = stdout
+            code.push(encode::addi(17, 0, 64)); // a7 = write
+            code.push(ECALL);
+            emit_exit(&mut code);
+        }
         SynthKind::Stride { pages, stride } => {
             // One store every `stride` bytes across the BSS region, then
             // exit. Sub-page strides revisit each page many times, the
@@ -216,6 +234,30 @@ mod tests {
         // 16 pages / 64 B = 1024 stores, 4 instructions per iteration.
         assert!(r.instret >= 4 * 1024, "expected >=4096 retired, got {}", r.instret);
         assert!(r.page_faults >= 16 / 8, "expected faults over 16 pages, got {}", r.page_faults);
+    }
+
+    #[test]
+    fn echo_reads_blocking_stdin_and_writes_it_back() {
+        let exe = build(SynthKind::Echo { bytes: 64 });
+        let mut c = cfg();
+        c.stdin = b"hello echo session".to_vec();
+        let r = run_exe(c, &exe, &["synth".to_string()], &[]);
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        // The guest's read parked on empty stdin, the run loop delivered
+        // the configured stream at the deterministic all-parked point,
+        // and the short read (18 < 64) came back verbatim.
+        assert_eq!(r.stdout, "hello echo session");
+    }
+
+    #[test]
+    fn echo_without_stdin_sees_eof() {
+        // No configured stdin → stdin_block stays off → read returns 0
+        // and the guest writes nothing (EOF semantics, no deadlock).
+        let r = run(SynthKind::Echo { bytes: 64 });
+        assert_eq!(r.error, None, "{:?}", r.error);
+        assert_eq!(r.exit_code, 0);
+        assert_eq!(r.stdout, "");
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Serve-layer integration: session isolation, packing invariance and
+//! board-pool behavior through the real TCP daemon (docs/serve.md).
+//!
+//! The determinism contract under test: a session's report bytes are a
+//! pure function of (daemon base spec, session atom, stdin) — identical
+//! whether the session runs solo, packed 8-deep on one board, or spread
+//! across four boards.
+
+use fase::serve::{start, submit, ServeConfig};
+use fase::sweep::SweepSpec;
+
+fn base() -> SweepSpec {
+    let mut spec = SweepSpec::new("serve");
+    spec.seed = 0xFA5E;
+    spec.dram_size = 64 << 20;
+    spec.max_target_seconds = 30.0;
+    spec
+}
+
+fn cfg(boards: usize, max_sessions: usize) -> ServeConfig {
+    let mut c = ServeConfig::new(base());
+    c.boards = boards;
+    c.max_sessions = max_sessions;
+    c.queue_cap = 16;
+    c
+}
+
+fn atom(i: usize) -> String {
+    format!("echo:64|fase@uart:921600|1c|rocket|s{i}")
+}
+
+fn payload(i: usize) -> Vec<u8> {
+    format!("session {i}: {}", "x".repeat(i + 1)).into_bytes()
+}
+
+/// Run the 8 echo sessions against a fresh daemon, one at a time.
+fn run_serially(boards: usize) -> Vec<String> {
+    let h = start(cfg(boards, 1)).unwrap();
+    let addr = h.addr.to_string();
+    let reports =
+        (0..8).map(|i| submit(&addr, &atom(i), &payload(i), 60_000).unwrap()).collect();
+    h.shutdown();
+    reports
+}
+
+/// Run the 8 echo sessions against a fresh daemon, all at once.
+fn run_concurrently(boards: usize) -> Vec<String> {
+    let h = start(cfg(boards, 8)).unwrap();
+    let addr = h.addr.to_string();
+    let mut reports = vec![String::new(); 8];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let addr = addr.clone();
+                s.spawn(move || submit(&addr, &atom(i), &payload(i), 60_000).unwrap())
+            })
+            .collect();
+        for (i, t) in handles.into_iter().enumerate() {
+            reports[i] = t.join().unwrap();
+        }
+    });
+    h.shutdown();
+    reports
+}
+
+#[test]
+fn per_session_reports_are_byte_identical_solo_packed_and_multiboard() {
+    let solo = run_serially(1);
+    let packed = run_concurrently(1);
+    let spread = run_concurrently(4);
+    for i in 0..8 {
+        assert!(solo[i].contains(&format!("\"label\": \"{}\"", atom(i))));
+        assert!(solo[i].contains("\"status\": \"ok\""), "{}", solo[i]);
+        assert_eq!(solo[i], packed[i], "session {i}: solo vs 8-way on 1 board");
+        assert_eq!(solo[i], spread[i], "session {i}: solo vs 8-way on 4 boards");
+    }
+    // Distinct stdin payloads and seeds: no two sessions report alike.
+    for i in 1..8 {
+        assert_ne!(solo[0], solo[i], "sessions must be isolated, not copies");
+    }
+}
+
+#[test]
+fn board_stats_report_cross_session_coalescing() {
+    // Four syscall-storm sessions on one board: their frame tapes overlap
+    // heavily in the replay, so the daemon's STATS must show merged
+    // frames and a strictly sub-serial board makespan.
+    let h = start(cfg(1, 4)).unwrap();
+    let addr = h.addr.to_string();
+    for i in 0..4 {
+        let report =
+            submit(&addr, &format!("storm:64|fase@uart:921600|1c|rocket|s{i}"), &[], 60_000)
+                .unwrap();
+        assert!(report.contains("\"status\": \"ok\""), "{report}");
+    }
+    let stats = h.stats().unwrap();
+    let doc = fase::util::json::parse(&stats).unwrap();
+    assert_eq!(doc.get("sessions_completed").and_then(|v| v.as_f64()), Some(4.0));
+    let boards = doc.get("boards").unwrap().as_arr().unwrap();
+    assert_eq!(boards.len(), 1);
+    let b = &boards[0];
+    let num = |k: &str| b.get(k).and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(num("sessions"), 4.0);
+    assert!(num("frames") > 0.0);
+    assert!(num("merged_frames") > 0.0, "storm x4 on one board must coalesce: {stats}");
+    assert!(
+        num("board_ticks") < num("serial_ticks"),
+        "coalescing must strictly beat the serial replay: {stats}"
+    );
+    h.shutdown();
+}
